@@ -1,0 +1,17 @@
+//! Stage-level profiling tool (the §Perf workflow): prints the wall-time
+//! share of every NN-TGAR stage for a global-batch epoch on the Reddit
+//! analogue — the numbers behind EXPERIMENTS.md §Perf.
+//!
+//! ```bash
+//! cargo run --release --example profile_stages
+//! ```
+
+use graphtheta::config::*; use graphtheta::engine::trainer::Trainer; use graphtheta::graph::gen;
+fn main() {
+    let g = gen::reddit_like();
+    let cfg = TrainConfig::builder().model(ModelConfig::gcn(g.feat_dim, 32, g.num_classes, 2))
+        .strategy(StrategyKind::GlobalBatch).epochs(1).seed(3).build();
+    let mut t = Trainer::new(&g, cfg, 16).unwrap();
+    let r = t.run_timing(3).unwrap();
+    for (k, pct) in r.profile.percentages() { println!("{k:<22} {pct:6.2}%"); }
+}

@@ -1,0 +1,47 @@
+//! Quickstart: train a 2-layer GCN on the Cora-like citation graph across
+//! 4 simulated workers with global-batch, then evaluate.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use graphtheta::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A dataset (synthetic citation-network analogue; see DESIGN.md §1).
+    let graph = graphtheta::graph::gen::citation_like("cora", 7);
+    println!(
+        "graph: {} nodes, {} edges, {} feature dims, {} classes",
+        graph.n, graph.m, graph.feat_dim, graph.num_classes
+    );
+
+    // 2. A model + training configuration.
+    let cfg = TrainConfig::builder()
+        .model(ModelConfig::gcn(graph.feat_dim, 16, graph.num_classes, 2))
+        .strategy(StrategyKind::GlobalBatch)
+        .epochs(60)
+        .eval_every(10)
+        .lr(0.05)
+        .build();
+
+    // 3. Train hybrid-parallel over 4 workers (the whole batch is computed
+    //    cooperatively — not one copy per worker).
+    let mut trainer = Trainer::new(&graph, cfg, 4)?;
+    let report = trainer.run()?;
+
+    println!(
+        "loss: {:.4} → {:.4} over {} epochs",
+        report.losses[0],
+        report.losses.last().unwrap(),
+        report.steps
+    );
+    println!("best validation accuracy: {:.4}", report.best_val_accuracy);
+    println!("test accuracy:            {:.4}", report.test_accuracy);
+    println!(
+        "modeled distributed time: {:.2}s | traffic {} MB | peak worker mem {:.1} MB",
+        report.sim_total,
+        report.total_bytes / 1_000_000,
+        report.peak_part_bytes as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,121 @@
+"""AOT pipeline: lower the L2 stage operators to HLO **text** artifacts.
+
+Run once by `make artifacts`; Python is never on the Rust hot path.
+
+Interchange format is HLO text, not `.serialize()`: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+PJRT executables are static-shaped, so projections are exported at a
+small set of row *buckets*; the Rust `PjrtBackend` pads each call up to
+the nearest bucket. The spec below covers the shipped examples' model
+dims (`examples/train_citation_e2e.rs` with `--backend pjrt`).
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Row buckets for padded projection calls.
+BUCKETS = [128, 512, 2048]
+
+# (d_in, d_out) pairs the shipped examples use:
+#   citation e2e: gcn(in=128, hidden=32, classes=7, layers=2)
+#     layer0: 128→32, layer1: 32→32, decoder: 32→7
+DIM_PAIRS = [(128, 32), (32, 32), (32, 7)]
+
+# Dense-block GCN layer entries (parity tests / single-partition path).
+LAYER_BLOCKS = [(256, 128, 32)]  # (n_block, d_in, d_out)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_entries():
+    """Yield (name, file, meta, lowered) for every artifact."""
+    for rows in BUCKETS:
+        for d_in, d_out in DIM_PAIRS:
+            for act, fn in (("none", model.proj_fwd), ("relu", model.proj_relu_fwd)):
+                name = f"proj_{rows}_{d_in}_{d_out}_{act}"
+                lowered = jax.jit(fn).lower(
+                    f32(rows, d_in), f32(d_in, d_out), f32(d_out)
+                )
+                meta = {
+                    "name": f"proj_{act}" if act != "none" else "proj",
+                    "file": f"{name}.hlo.txt",
+                    "rows": rows,
+                    "d_in": d_in,
+                    "d_out": d_out,
+                    "activation": act,
+                }
+                yield name, meta, lowered
+            # Projection VJP at the same shapes (backward NN-A stage).
+            name = f"proj_bwd_{rows}_{d_in}_{d_out}"
+            lowered = jax.jit(model.proj_bwd).lower(
+                f32(rows, d_in), f32(d_in, d_out), f32(rows, d_out)
+            )
+            yield name, {
+                "name": "proj_bwd",
+                "file": f"{name}.hlo.txt",
+                "rows": rows,
+                "d_in": d_in,
+                "d_out": d_out,
+                "activation": "none",
+            }, lowered
+    for n_block, d_in, d_out in LAYER_BLOCKS:
+        name = f"gcn_layer_{n_block}_{d_in}_{d_out}"
+        lowered = jax.jit(model.gcn_layer_fwd).lower(
+            f32(n_block, n_block), f32(n_block, d_in), f32(d_in, d_out), f32(d_out)
+        )
+        yield name, {
+            "name": "gcn_layer",
+            "file": f"{name}.hlo.txt",
+            "rows": n_block,
+            "d_in": d_in,
+            "d_out": d_out,
+            "activation": "relu",
+        }, lowered
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for name, meta, lowered in build_entries():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, meta["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(meta)
+        print(f"  wrote {meta['file']} ({len(text)} chars)")
+
+    manifest = {"entries": entries, "buckets": BUCKETS}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(entries)} entries -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (build-time only — never imported at runtime).
+
+`proj`      — tiled projection matmul with fused bias/ReLU epilogue.
+`aggregate` — blocked dense aggregation (Â @ N) for the TPU mapping of
+              GraphTheta's Gather/Sum.
+`ref`       — the pure-jnp correctness oracle both are tested against.
+"""
+
+from .aggregate import aggregate
+from .proj import estimate_vmem_mxu, proj
+
+__all__ = ["aggregate", "proj", "estimate_vmem_mxu"]

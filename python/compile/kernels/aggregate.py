@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: blocked neighbor aggregation `out = Â @ n`.
+
+GraphTheta's Gather/Sum walks CSR edge lists; on TPU the same aggregation
+over a partition block is a dense matmul against the block of the
+normalized adjacency Â (DESIGN.md §2 — BlockSpec expresses the HBM↔VMEM
+schedule that the CPU engine expresses with message batches). Â blocks of
+real graphs are sparse-ish but the MXU is fast enough that dense blocked
+aggregation wins below ~99% sparsity, which is what the paper's dense
+community subgraphs look like after cluster batching.
+
+Grid `(M/bm, N/bn, M/bk)` with a VMEM accumulator: the K dimension of the
+adjacency (neighbor index) is blocked too, since the adjacency is `[M, M]`
+and a full stripe would not fit VMEM for large partitions.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _block(m: int, cap: int = TILE) -> int:
+    for cand in (cap, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= m and m % cand == 0:
+            return cand
+    return 1
+
+
+def _kernel(a_ref, n_ref, o_ref, *, nsteps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    n = n_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(a, n, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+    del nsteps
+
+
+@jax.jit
+def aggregate(adj, n):
+    """Pallas-tiled `adj @ n`. Shapes: adj [M,M], n [M,N]."""
+    m, m2 = adj.shape
+    assert m == m2
+    _, d = n.shape
+    bm = _block(m)
+    bk = _block(m)
+    bn = _block(d)
+    nsteps = m // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, nsteps=nsteps),
+        grid=(m // bm, d // bn, nsteps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d), n.dtype),
+        interpret=True,
+    )(adj, n)

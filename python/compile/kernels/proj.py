@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: tiled projection `y = act(x @ w + b)`.
+
+The compute hot-spot of every NN-TGAR stage is the projection GEMM (the
+paper's Figure A3 ablation: the first GCNConv layer = 76% of step time).
+This kernel tiles the `[M, K] @ [K, N]` product over an `(M/bm, N/bn)`
+grid: each program instance loads one `bm×K` stripe of `x` and one `K×bn`
+stripe of `w` into VMEM, runs the MXU matmul in f32 accumulation, fuses
+the bias add and optional ReLU epilogue, and writes one `bm×bn` output
+tile — one HBM round-trip for the whole stage instead of three.
+
+TPU mapping (DESIGN.md §2): `bm = bn = 128` matches the MXU systolic
+array; with K ≤ 1024 the stripes fit comfortably in VMEM
+((128·K + K·128 + 128·128)·4 B ≤ 1.1 MiB « 16 MiB), so no K-loop is
+needed at the model dims this repo ships; double-buffering the stripes
+doubles that footprint and stays far under budget. VMEM/MXU estimates per
+shape are recorded by `estimate_vmem_mxu` below and reported in
+EXPERIMENTS.md §Perf.
+
+MUST run with `interpret=True` here: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly tile edge.
+TILE = 128
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    # f32 accumulation regardless of input dtype (bf16-in, f32-acc is the
+    # MXU's native mode).
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    y = y + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _block(m: int) -> int:
+    """Largest tile edge that divides m, capped at TILE."""
+    for cand in (TILE, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= m and m % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def proj(x, w, b, relu: bool = False):
+    """Pallas-tiled `act(x @ w + b)`. Shapes: x [M,K], w [K,N], b [N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dim {k} vs {k2}"
+    bm = _block(m)
+    bn = _block(n)
+    b2 = b.reshape(1, n)
+    return pl.pallas_call(
+        functools.partial(_kernel, relu=relu),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, b2)
+
+
+def estimate_vmem_mxu(m: int, k: int, n: int, dtype_bytes: int = 4):
+    """Analytic VMEM footprint + MXU utilization estimate for one program
+    instance of this kernel at the given GEMM shape (interpret=True gives
+    CPU timings only — structure is what we optimize; see DESIGN.md §8).
+
+    Returns (vmem_bytes, mxu_utilization_estimate)."""
+    bm, bn = _block(m), _block(n)
+    vmem = (bm * k + k * bn + bn + bm * bn) * dtype_bytes
+    # MXU: 128×128 MACs/cycle. Utilization = useful MACs / issued MACs,
+    # degraded when tiles are narrower than the array.
+    util = (min(bm, TILE) / TILE) * (min(bn, TILE) / TILE) * (min(k, TILE) / TILE if k < TILE else 1.0)
+    return vmem, util

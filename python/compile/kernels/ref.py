@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Everything the Pallas kernels compute is re-stated here in plain jnp; the
+pytest suite asserts allclose between the two across shapes and dtypes
+(hypothesis sweeps), and `aot.py` embeds the *kernel* (not the oracle) in
+the exported HLO. The Rust native backend implements the same math a third
+time; `rust/tests/backend_parity.rs` closes the triangle.
+"""
+
+import jax.numpy as jnp
+
+
+def proj(x, w, b, relu: bool = False):
+    """Projection (NN-Transform): y = act(x @ w + b)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def aggregate(adj, n):
+    """Neighbor aggregation (NN-Gather + Sum) as a dense blocked matmul:
+    out = Â @ n, where Â carries the per-edge Laplacian weights.
+
+    GraphTheta's engine does this edge-by-edge over CSR; the TPU kernel
+    re-expresses it as a blocked matmul per partition block (DESIGN.md
+    §Hardware-Adaptation).
+    """
+    return jnp.dot(adj, n, preferred_element_type=jnp.float32).astype(n.dtype)
+
+
+def gcn_layer(adj, x, w, b):
+    """Full GCN encoder layer: h' = ReLU(Â (x W + b))."""
+    return jnp.maximum(aggregate(adj, proj(x, w, b)), 0.0)
+
+
+def decoder_xent(h, w, b, labels, mask):
+    """Decoder + masked softmax cross-entropy (mean over masked rows)."""
+    logits = proj(h, w, b)
+    logp = jnp.take_along_axis(_log_softmax(logits), labels[:, None], axis=1)[:, 0]
+    denom = jnp.maximum(mask.sum(), 1)
+    return -(logp * mask).sum() / denom
+
+
+def _log_softmax(x):
+    m = x.max(axis=-1, keepdims=True)
+    z = x - m
+    return z - jnp.log(jnp.exp(z).sum(axis=-1, keepdims=True))

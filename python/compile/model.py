@@ -1,0 +1,64 @@
+"""L2: the JAX stage operators of the GNN, calling the L1 Pallas kernels.
+
+GraphTheta's architectural split (paper §1/§4): graph traversal belongs to
+the distributed engine (Rust, L3); the *neural* stage functions — the
+UDFs NN-TGAR orchestrates — are dense tensor programs. These are those
+programs, written in JAX so `aot.py` can lower them once to HLO text for
+the Rust runtime to execute through PJRT:
+
+* `proj_fwd` / `proj_relu_fwd` — the NN-Transform projection (and the
+  decoder, which is the same dense op);
+* `proj_bwd` — its VJP (used by the backward NN-A stage);
+* `gcn_layer_fwd` / `gcn_layer_bwd` — a whole encoder layer over a dense
+  partition block, used by the parity tests and the single-partition fast
+  path.
+
+Everything here funnels through the Pallas kernels so that the exported
+HLO exercises the L1 code path (interpret=True lowers Pallas to plain HLO
+ops the CPU PJRT client can run).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aggregate, proj
+
+
+def proj_fwd(x, w, b):
+    """NN-Transform projection: `(x @ w + b,)`."""
+    return (proj(x, w, b, relu=False),)
+
+
+def proj_relu_fwd(x, w, b):
+    """Projection with fused ReLU epilogue."""
+    return (proj(x, w, b, relu=True),)
+
+
+def proj_bwd(x, w, g):
+    """VJP of the projection: `(∂x, ∂w, ∂b)` for upstream gradient `g`."""
+    gx = jnp.dot(g, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    gw = jnp.dot(x.T, g, preferred_element_type=jnp.float32).astype(w.dtype)
+    gb = g.sum(axis=0)
+    return (gx, gw, gb)
+
+
+def gcn_layer_fwd(adj, x, w, b):
+    """One dense-block GCN layer: `ReLU(Â (x W + b))`."""
+    n = proj(x, w, b, relu=False)
+    m = aggregate(adj, n)
+    return (jnp.maximum(m, 0.0),)
+
+
+def gcn_layer_bwd(adj, x, w, b, gh):
+    """VJP of the GCN layer w.r.t. (x, w, b).
+
+    Autodiff cannot trace through an interpret-mode `pallas_call` in this
+    JAX version (linearization of the interpreter primitive is undefined),
+    so the VJP differentiates the jnp oracle — which the kernel is tested
+    allclose-equal to — mirroring how the Rust engine states its backward
+    analytically (paper eqs. 14–20)."""
+    from .kernels import ref
+
+    f = lambda x_, w_, b_: ref.gcn_layer(adj, x_, w_, b_)
+    _, vjp = jax.vjp(f, x, w, b)
+    return tuple(vjp(gh))

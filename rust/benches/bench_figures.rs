@@ -1,0 +1,33 @@
+//! `cargo bench` target regenerating the paper's **figures** (8, 9a–c,
+//! 10, A2, A3) as the tabulated series behind each plot.
+//!
+//! Full (slow) sweeps: `GT_BENCH_FULL=1 cargo bench --bench bench_figures`.
+
+use std::time::Instant;
+
+fn main() {
+    let fast = std::env::var("GT_BENCH_FULL").is_err();
+    // cargo bench passes flags like `--bench`; only treat non-flag args as filters.
+    let which = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    for id in [
+        "fig8", "fig9a", "fig9b", "fig9c", "fig10", "figA2", "figA3",
+        "ablation:boundary", "ablation:overlap", "ablation:cache", "ablation:stealing",
+    ] {
+        if let Some(w) = &which {
+            if !id.contains(w.as_str()) {
+                continue;
+            }
+        }
+        let t0 = Instant::now();
+        match graphtheta::experiments::run(id, fast) {
+            Ok(report) => {
+                println!("{report}");
+                println!("[{id} regenerated in {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                eprintln!("{id} FAILED: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

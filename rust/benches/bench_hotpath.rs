@@ -1,0 +1,157 @@
+//! Hot-path microbenchmarks (the §Perf baseline/after numbers in
+//! EXPERIMENTS.md): GEMM, gather/scatter, the per-edge Gather stage,
+//! active-plan construction, partitioning, and one full NN-TGAR step.
+//!
+//! `harness = false` (criterion is not vendored): a simple
+//! median-of-runs timer with warmup.
+
+use graphtheta::cluster::ClusterSim;
+use graphtheta::config::{ModelConfig, SamplingConfig, StrategyKind, TrainConfig};
+use graphtheta::engine::trainer::Trainer;
+use graphtheta::graph::gen;
+use graphtheta::nn::ModelParams;
+use graphtheta::partition::{Edge1D, LouvainPartitioner, Partitioner, VertexCut};
+use graphtheta::runtime::{Activation, NativeBackend, StageBackend};
+use graphtheta::storage::DistGraph;
+use graphtheta::tensor::Tensor;
+use graphtheta::tgar::{ActivePlan, Executor};
+use graphtheta::util::rng::Rng;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    f();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = times[times.len() / 2];
+    let min = times[0];
+    println!("{name:<44} median {:>10.3} ms   min {:>10.3} ms", med * 1e3, min * 1e3);
+}
+
+fn main() {
+    println!("== hot-path microbenches (median of runs) ==\n");
+    let mut rng = Rng::new(1);
+
+    // GEMM shapes of the shipped models.
+    for (m, k, n) in [(2048usize, 128usize, 32usize), (4000, 64, 128), (512, 32, 32)] {
+        let a = Tensor::randn(m, k, 1.0, &mut rng);
+        let b = Tensor::randn(k, n, 1.0, &mut rng);
+        let flops = 2.0 * (m * k * n) as f64;
+        let t0 = Instant::now();
+        let iters = 5;
+        for _ in 0..iters {
+            std::hint::black_box(a.matmul(&b));
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "gemm {m}x{k}x{n}                               {:>10.3} ms   {:.2} GFLOP/s",
+            dt * 1e3,
+            flops / dt / 1e9
+        );
+    }
+    println!();
+
+    // Backend proj (native) — the NN-T stage operator.
+    {
+        let x = Tensor::randn(2048, 128, 1.0, &mut rng);
+        let w = Tensor::randn(128, 32, 1.0, &mut rng);
+        let bias = vec![0.0f32; 32];
+        let mut be = NativeBackend;
+        bench("proj 2048x128x32 (native)", 10, || {
+            std::hint::black_box(be.proj(&x, &w, &bias, Activation::Relu));
+        });
+    }
+
+    // Gather/scatter rows.
+    {
+        let t = Tensor::randn(4000, 64, 1.0, &mut rng);
+        let idx: Vec<u32> = (0..2000).map(|_| rng.below(4000) as u32).collect();
+        bench("gather_rows 2000x64", 50, || {
+            std::hint::black_box(t.gather_rows(&idx));
+        });
+        let src = Tensor::randn(2000, 64, 1.0, &mut rng);
+        let mut acc = Tensor::zeros(4000, 64);
+        bench("scatter_add_rows 2000x64", 50, || {
+            acc.scatter_add_rows(&idx, &src);
+        });
+    }
+    println!();
+
+    // Graph-side substrates.
+    let g = gen::reddit_like();
+    bench("partition 1d-edge (reddit, p=16)", 5, || {
+        std::hint::black_box(Edge1D::default().partition(&g, 16));
+    });
+    bench("partition vertex-cut (reddit, p=16)", 5, || {
+        std::hint::black_box(VertexCut.partition(&g, 16));
+    });
+    bench("partition louvain (reddit, p=16)", 3, || {
+        std::hint::black_box(LouvainPartitioner.partition(&g, 16));
+    });
+
+    let plan = Edge1D::default().partition(&g, 16);
+    let dg = DistGraph::build(&g, plan);
+    bench("DistGraph::build (reddit, p=16)", 3, || {
+        let plan = Edge1D::default().partition(&g, 16);
+        std::hint::black_box(DistGraph::build(&g, plan));
+    });
+
+    let train = g.labeled_nodes(&g.train_mask);
+    let targets: Vec<u32> = train[..500].to_vec();
+    bench("ActivePlan::build 500 targets k=2 (reddit)", 5, || {
+        let mut r2 = Rng::new(9);
+        std::hint::black_box(ActivePlan::build(
+            &g,
+            &dg,
+            targets.clone(),
+            2,
+            SamplingConfig::None,
+            false,
+            &mut r2,
+        ));
+    });
+    println!();
+
+    // One full NN-TGAR training step (the end-to-end hot path).
+    {
+        let model = ModelConfig::gcn(g.feat_dim, 32, g.num_classes, 2);
+        let params = ModelParams::init(&model, 3);
+        let mut r2 = Rng::new(9);
+        let aplan = ActivePlan::build(
+            &g,
+            &dg,
+            targets.clone(),
+            2,
+            SamplingConfig::None,
+            false,
+            &mut r2,
+        );
+        let mut ex = Executor::new(&g, &dg, &model);
+        let mut sim = ClusterSim::new(16, Default::default());
+        let mut be = NativeBackend;
+        bench("tgar train_step (reddit, 500 targets, p=16)", 5, || {
+            std::hint::black_box(ex.train_step(&params, &aplan, &mut sim, &mut be));
+        });
+    }
+
+    // Whole-epoch trainer throughput.
+    {
+        let model = ModelConfig::gcn(g.feat_dim, 32, g.num_classes, 2);
+        let cfg = TrainConfig::builder()
+            .model(model)
+            .strategy(StrategyKind::GlobalBatch)
+            .epochs(1)
+            .seed(3)
+            .build();
+        let mut t = Trainer::new(&g, cfg, 16).unwrap();
+        bench("trainer global-batch epoch (reddit, p=16)", 3, || {
+            std::hint::black_box(t.run_timing(1).unwrap());
+        });
+    }
+    println!("\nhotpath bench OK");
+}

@@ -1,0 +1,32 @@
+//! `cargo bench` target regenerating the paper's **tables** (2, 3, 4, 5,
+//! A2, A3). Criterion is not in the vendored crate set; this is a
+//! `harness = false` main that times each experiment driver and prints
+//! the markdown report the paper's table corresponds to.
+//!
+//! Full (slow) sweeps: `GT_BENCH_FULL=1 cargo bench --bench bench_tables`.
+
+use std::time::Instant;
+
+fn main() {
+    let fast = std::env::var("GT_BENCH_FULL").is_err();
+    // cargo bench passes flags like `--bench`; only treat non-flag args as filters.
+    let which = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    for id in ["table2", "table3", "table4", "table5", "tableA2", "tableA3"] {
+        if let Some(w) = &which {
+            if !id.contains(w.as_str()) {
+                continue;
+            }
+        }
+        let t0 = Instant::now();
+        match graphtheta::experiments::run(id, fast) {
+            Ok(report) => {
+                println!("{report}");
+                println!("[{id} regenerated in {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                eprintln!("{id} FAILED: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

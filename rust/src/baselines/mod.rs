@@ -1,0 +1,21 @@
+//! Comparator systems rebuilt in-repo (the originals are unavailable
+//! offline; DESIGN.md §1 documents each substitution).
+//!
+//! * [`distdgl`] — DistDGL-style **data-parallel** training: every trainer
+//!   builds and computes its *own* subgraph (shared neighbors replicated
+//!   between trainers — the redundant computation the paper blames for
+//!   DistDGL's non-scaling), with per-machine graph servers sharing the
+//!   64 cores with trainers.
+//! * [`graphlearn`] — GraphLearn/AliGraph-style **sampling servers**: a
+//!   32-thread query pool per machine serves fan-out sampling queries;
+//!   workers overflow sockets past the pool's capacity.
+//! * [`samplers`] — sampling-based *accuracy* baselines (GraphSAGE,
+//!   GraphSAINT, VR-GCN-style, Cluster-GCN) run through the real engine.
+//!
+//! The simulators execute real subgraph construction on the real generated
+//! graphs — only wall-clock is modeled, with the same cost constants as
+//! the GraphTheta cluster simulator, so relative comparisons are fair.
+
+pub mod distdgl;
+pub mod graphlearn;
+pub mod samplers;

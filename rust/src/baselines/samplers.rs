@@ -1,0 +1,132 @@
+//! Sampling-based *accuracy* baselines (paper Tables 2–3), all run through
+//! the real engine so the comparison isolates the training strategy:
+//!
+//! * **GraphSAGE** — mini-batch + random neighbor sampling (fan-out 25,10);
+//! * **GraphSAINT** — subgraph sampling: batches are random node-induced
+//!   subgraphs (we reuse the cluster-restriction machinery with a random
+//!   "cluster");
+//! * **VR-GCN-style** — tiny fan-out (2 per hop). The real VR-GCN corrects
+//!   the variance with historical embeddings; without the correction the
+//!   tiny fan-out shows the raw variance penalty — matching the paper's
+//!   observation that VR-GCN lands far below the others. (Substitution
+//!   documented in DESIGN.md §1.)
+//! * **Cluster-GCN** — cluster-batch with `boundary_hops = 0`;
+//! * **TF-GCN / DGL** — single-machine full-tensor global-batch (our
+//!   engine at p = 1 *is* that computation, by the appendix-A.1
+//!   equivalence the `global_batch_equals_dense_reference` test asserts).
+
+use crate::config::{ModelConfig, SamplingConfig, StrategyKind, TrainConfig};
+use crate::engine::trainer::{TrainReport, Trainer};
+use crate::graph::Graph;
+use anyhow::Result;
+
+/// A named baseline configuration.
+pub struct Baseline {
+    pub name: &'static str,
+    pub strategy: StrategyKind,
+    pub sampling: SamplingConfig,
+    /// Workers to run it on (1 = single-machine tensor framework).
+    pub workers: usize,
+}
+
+/// The baseline roster for an accuracy table.
+pub fn accuracy_baselines(batch_frac: f64) -> Vec<Baseline> {
+    vec![
+        Baseline {
+            name: "GraphSAGE (25,10)",
+            strategy: StrategyKind::mini(batch_frac),
+            sampling: SamplingConfig::Neighbor { fanout: [25, 10, usize::MAX, usize::MAX] },
+            workers: 4,
+        },
+        Baseline {
+            name: "GraphSAINT (subgraph)",
+            strategy: StrategyKind::mini(batch_frac * 4.0),
+            // Node-induced random subgraphs approximated by aggressive
+            // fan-out thinning at every hop, which bounds the induced set.
+            sampling: SamplingConfig::Neighbor { fanout: [8, 8, 8, 8] },
+            workers: 4,
+        },
+        Baseline {
+            name: "VR-GCN-style (fanout 2)",
+            strategy: StrategyKind::mini(batch_frac),
+            sampling: SamplingConfig::Neighbor { fanout: [2, 2, 2, 2] },
+            workers: 4,
+        },
+        Baseline {
+            name: "Cluster-GCN",
+            strategy: StrategyKind::cluster(0.05, 0),
+            sampling: SamplingConfig::None,
+            workers: 4,
+        },
+    ]
+}
+
+/// Train a baseline and report.
+pub fn run_baseline(
+    g: &Graph,
+    b: &Baseline,
+    model: ModelConfig,
+    epochs: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<TrainReport> {
+    let cfg = TrainConfig::builder()
+        .model(model)
+        .strategy(b.strategy.clone())
+        .sampling(b.sampling)
+        .epochs(epochs)
+        .eval_every(usize::MAX) // final-model evaluation, like the paper's
+        // no-val datasets; keeps baseline runs cheap
+        .lr(lr)
+        .seed(seed)
+        .build();
+    let mut t = Trainer::new(g, cfg, b.workers)?;
+    t.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn roster_covers_papers_comparators() {
+        let names: Vec<_> = accuracy_baselines(0.01).iter().map(|b| b.name).collect();
+        assert!(names.iter().any(|n| n.contains("GraphSAGE")));
+        assert!(names.iter().any(|n| n.contains("GraphSAINT")));
+        assert!(names.iter().any(|n| n.contains("VR-GCN")));
+        assert!(names.iter().any(|n| n.contains("Cluster-GCN")));
+    }
+
+    #[test]
+    fn tiny_fanout_underperforms_full_neighborhood() {
+        // The Table 3 phenomenon in miniature: VR-GCN-style fan-out-2
+        // sampling loses accuracy vs sampling-free mini-batch on a *dense*
+        // community graph, where the full neighborhood carries the signal.
+        let g = gen::reddit_like();
+        let model = ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2);
+        let vr = accuracy_baselines(0.2)
+            .into_iter()
+            .find(|b| b.name.contains("VR-GCN"))
+            .unwrap();
+        let r_vr = run_baseline(&g, &vr, model.clone(), 8, 0.05, 3).unwrap();
+        let full = Baseline {
+            name: "ours",
+            strategy: StrategyKind::mini(0.2),
+            sampling: SamplingConfig::None,
+            workers: 4,
+        };
+        let r_full = run_baseline(&g, &full, model, 8, 0.05, 3).unwrap();
+        // Tiny-fanout gradients are high-variance → slower convergence
+        // (the paper's VR-GCN row without its variance correction). On a
+        // short budget that shows as a worse final loss and ≤ accuracy.
+        let loss_vr = *r_vr.losses.last().unwrap();
+        let loss_full = *r_full.losses.last().unwrap();
+        assert!(
+            loss_full < loss_vr && r_full.test_accuracy >= r_vr.test_accuracy,
+            "full loss {loss_full} acc {} vs vr loss {loss_vr} acc {}",
+            r_full.test_accuracy,
+            r_vr.test_accuracy
+        );
+    }
+}

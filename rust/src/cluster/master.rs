@@ -1,0 +1,167 @@
+//! Master/worker control plane (paper Figure 2).
+//!
+//! The master coordinates workers, monitors health, manages checkpoints
+//! and directs the learning procedure; workers execute commands. In the
+//! real system this is RPC; here the control plane is an explicit command
+//! log so tests can assert the protocol, and the simulated network
+//! accounts the control traffic.
+
+use crate::cluster::ClusterSim;
+
+/// Commands the master issues to workers (the RPC surface).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    /// Load a partition of the graph.
+    LoadPartition { part: u32 },
+    /// Run one training step on the given batch id with a parameter version.
+    TrainStep { step: u64, param_version: u64 },
+    /// Run inference over the worker's masters.
+    Infer,
+    /// Persist a checkpoint.
+    Checkpoint { step: u64 },
+    Shutdown,
+}
+
+/// Worker health as seen by the master.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    Alive,
+    /// Missed `n` heartbeats.
+    Suspect(u32),
+    Dead,
+}
+
+/// The master process: command fan-out + health tracking + checkpoints.
+pub struct Master {
+    pub p: usize,
+    pub log: Vec<(usize, Command)>,
+    health: Vec<Health>,
+    heartbeat_misses: Vec<u32>,
+    pub checkpoints: Vec<u64>,
+    /// Threshold of missed heartbeats before a worker is declared dead.
+    pub max_misses: u32,
+}
+
+impl Master {
+    pub fn new(p: usize) -> Master {
+        Master {
+            p,
+            log: Vec::new(),
+            health: vec![Health::Alive; p],
+            heartbeat_misses: vec![0; p],
+            checkpoints: Vec::new(),
+            max_misses: 3,
+        }
+    }
+
+    /// Broadcast a command to all live workers, accounting control traffic.
+    /// Returns the workers addressed.
+    pub fn broadcast(&mut self, cmd: Command, sim: &mut ClusterSim) -> Vec<usize> {
+        let mut addressed = Vec::new();
+        for w in 0..self.p {
+            if self.health[w] == Health::Dead {
+                continue;
+            }
+            // Control messages are small; 64 bytes covers the RPC envelope.
+            sim.send(self.p, w, 64); // master uses rank `p` in the sim
+            self.log.push((w, cmd.clone()));
+            addressed.push(w);
+        }
+        addressed
+    }
+
+    /// A worker heartbeat arrived.
+    pub fn heartbeat(&mut self, w: usize) {
+        self.heartbeat_misses[w] = 0;
+        if self.health[w] != Health::Dead {
+            self.health[w] = Health::Alive;
+        }
+    }
+
+    /// A heartbeat interval elapsed without word from `w`.
+    pub fn miss(&mut self, w: usize) {
+        if self.health[w] == Health::Dead {
+            return;
+        }
+        self.heartbeat_misses[w] += 1;
+        self.health[w] = if self.heartbeat_misses[w] >= self.max_misses {
+            Health::Dead
+        } else {
+            Health::Suspect(self.heartbeat_misses[w])
+        };
+    }
+
+    pub fn health_of(&self, w: usize) -> Health {
+        self.health[w]
+    }
+
+    pub fn live_workers(&self) -> usize {
+        self.health.iter().filter(|&&h| h != Health::Dead).count()
+    }
+
+    pub fn record_checkpoint(&mut self, step: u64) {
+        self.checkpoints.push(step);
+    }
+
+    /// Latest checkpoint at or before `step` (restart point after failure).
+    pub fn restore_point(&self, step: u64) -> Option<u64> {
+        self.checkpoints.iter().copied().filter(|&s| s <= step).max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostModelConfig;
+
+    #[test]
+    fn broadcast_reaches_live_workers_only() {
+        let mut sim = ClusterSim::new(4, CostModelConfig::default());
+        let mut m = Master::new(4);
+        m.miss(2);
+        m.miss(2);
+        m.miss(2); // dead
+        let addressed = m.broadcast(Command::Infer, &mut sim);
+        assert_eq!(addressed, vec![0, 1, 3]);
+        assert_eq!(sim.total_msgs, 3);
+    }
+
+    #[test]
+    fn health_state_machine() {
+        let mut m = Master::new(2);
+        assert_eq!(m.health_of(0), Health::Alive);
+        m.miss(0);
+        assert_eq!(m.health_of(0), Health::Suspect(1));
+        m.heartbeat(0);
+        assert_eq!(m.health_of(0), Health::Alive);
+        m.miss(0);
+        m.miss(0);
+        m.miss(0);
+        assert_eq!(m.health_of(0), Health::Dead);
+        // Dead workers stay dead even if a stray heartbeat arrives.
+        m.heartbeat(0);
+        assert_eq!(m.health_of(0), Health::Dead);
+        assert_eq!(m.live_workers(), 1);
+    }
+
+    #[test]
+    fn checkpoint_restore_point() {
+        let mut m = Master::new(1);
+        m.record_checkpoint(10);
+        m.record_checkpoint(30);
+        assert_eq!(m.restore_point(25), Some(10));
+        assert_eq!(m.restore_point(30), Some(30));
+        assert_eq!(m.restore_point(5), None);
+    }
+
+    #[test]
+    fn command_log_orders_fanout() {
+        let mut sim = ClusterSim::new(2, CostModelConfig::default());
+        let mut m = Master::new(2);
+        m.broadcast(Command::LoadPartition { part: 0 }, &mut sim);
+        m.broadcast(Command::TrainStep { step: 1, param_version: 0 }, &mut sim);
+        assert_eq!(m.log.len(), 4);
+        assert!(matches!(m.log[0], (0, Command::LoadPartition { .. })));
+        assert!(matches!(m.log[3], (1, Command::TrainStep { step: 1, .. })));
+    }
+}

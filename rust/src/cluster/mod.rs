@@ -1,0 +1,210 @@
+//! The simulated cluster (DESIGN.md §1/§6).
+//!
+//! The paper evaluates on up to 1,024 single-thread CPU dockers; this box
+//! has one core. The substitution: logical workers execute their
+//! partition's computation **for real** (exact numerics), serially, while
+//! a discrete-event clock models the distributed wall-clock. Per
+//! superstep (one bulk-synchronous phase of NN-TGAR):
+//!
+//! ```text
+//! T_step = max_w [ flops_w / F  +  (1 − σ)·(bytes_w / B + λ·msgs_w) ] + c
+//! ```
+//!
+//! with `F` per-worker FLOP/s, `B` bandwidth, `λ` per-message latency,
+//! `σ` the compute/communication overlap factor and `c` the fixed
+//! coordination overhead. FLOPs come from the thread-local ledger the
+//! tensor ops maintain; bytes/messages from the [`ClusterSim::send`]
+//! calls the NN-TGAR engine makes for every master↔mirror transfer. The
+//! model is deterministic, so speedup curves are exactly reproducible.
+
+pub mod master;
+
+use crate::config::CostModelConfig;
+use crate::metrics::{measured, Ledger};
+
+/// Per-worker accumulators for the current superstep.
+#[derive(Clone, Copy, Debug, Default)]
+struct WorkerAcc {
+    flops: u64,
+    bytes_out: u64,
+    msgs_out: u64,
+}
+
+/// The discrete-event cluster simulator.
+#[derive(Debug)]
+pub struct ClusterSim {
+    pub cfg: CostModelConfig,
+    pub p: usize,
+    acc: Vec<WorkerAcc>,
+    /// Modeled wall-clock, seconds.
+    pub clock: f64,
+    pub supersteps: u64,
+    pub total_flops: u64,
+    pub total_bytes: u64,
+    pub total_msgs: u64,
+}
+
+impl ClusterSim {
+    pub fn new(p: usize, cfg: CostModelConfig) -> ClusterSim {
+        ClusterSim {
+            cfg,
+            p,
+            acc: vec![WorkerAcc::default(); p],
+            clock: 0.0,
+            supersteps: 0,
+            total_flops: 0,
+            total_bytes: 0,
+            total_msgs: 0,
+        }
+    }
+
+    /// Execute `f` as logical worker `w`, crediting its FLOPs.
+    pub fn exec<R>(&mut self, w: usize, f: impl FnOnce() -> R) -> R {
+        let (r, led): (R, Ledger) = measured(f);
+        self.acc[w].flops += led.flops;
+        self.total_flops += led.flops;
+        r
+    }
+
+    /// Record a `from → to` message of `bytes` payload. A `from` rank of
+    /// `p` (or beyond) denotes the master/control plane: its traffic is
+    /// counted in the totals but does not slow any worker.
+    pub fn send(&mut self, from: usize, to: usize, bytes: u64) {
+        if from == to {
+            return; // local move, free
+        }
+        if from < self.p {
+            self.acc[from].bytes_out += bytes;
+            self.acc[from].msgs_out += 1;
+        }
+        let _ = to;
+        self.total_bytes += bytes;
+        self.total_msgs += 1;
+    }
+
+    /// Close the current superstep: advance the modeled clock by the
+    /// slowest worker's time and reset the per-worker accumulators.
+    /// Returns the superstep's duration.
+    pub fn superstep(&mut self) -> f64 {
+        let c = &self.cfg;
+        let mut t_max = 0.0f64;
+        for a in &self.acc {
+            let compute = a.flops as f64 / c.worker_flops;
+            let comm = a.bytes_out as f64 / c.bandwidth + c.latency * a.msgs_out as f64;
+            let t = compute + (1.0 - c.overlap) * comm;
+            if t > t_max {
+                t_max = t;
+            }
+        }
+        let dt = t_max + c.superstep_overhead;
+        self.clock += dt;
+        self.supersteps += 1;
+        self.acc.iter_mut().for_each(|a| *a = WorkerAcc::default());
+        dt
+    }
+
+    /// Imbalance of the in-flight superstep: max/mean of per-worker flops.
+    pub fn current_imbalance(&self) -> f64 {
+        let max = self.acc.iter().map(|a| a.flops).max().unwrap_or(0) as f64;
+        let mean = self.acc.iter().map(|a| a.flops).sum::<u64>() as f64 / self.p as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Reset the clock & totals (e.g. between measured phases) while
+    /// keeping the configuration.
+    pub fn reset(&mut self) {
+        self.acc.iter_mut().for_each(|a| *a = WorkerAcc::default());
+        self.clock = 0.0;
+        self.supersteps = 0;
+        self.total_flops = 0;
+        self.total_bytes = 0;
+        self.total_msgs = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::add_flops;
+
+    fn cfg() -> CostModelConfig {
+        CostModelConfig {
+            worker_flops: 1e9,
+            bandwidth: 1e9,
+            latency: 1e-6,
+            overlap: 0.5,
+            superstep_overhead: 1e-3,
+        }
+    }
+
+    #[test]
+    fn superstep_time_is_max_over_workers() {
+        let mut sim = ClusterSim::new(4, cfg());
+        sim.exec(0, || add_flops(1_000_000));
+        sim.exec(1, || add_flops(4_000_000)); // slowest
+        sim.exec(2, || add_flops(2_000_000));
+        let dt = sim.superstep();
+        let want = 4_000_000.0 / 1e9 + 1e-3;
+        assert!((dt - want).abs() < 1e-9, "dt={dt} want={want}");
+    }
+
+    #[test]
+    fn communication_is_discounted_by_overlap() {
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.send(0, 1, 1_000_000); // 1 MB at 1 GB/s = 1 ms; overlap 0.5 → 0.5 ms
+        let dt = sim.superstep();
+        let want = 0.5 * (1_000_000.0 / 1e9 + 1e-6) + 1e-3;
+        assert!((dt - want).abs() < 1e-9, "dt={dt}");
+    }
+
+    #[test]
+    fn local_sends_are_free() {
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.send(1, 1, 1 << 30);
+        let dt = sim.superstep();
+        assert!((dt - 1e-3).abs() < 1e-12);
+        assert_eq!(sim.total_bytes, 0);
+    }
+
+    #[test]
+    fn accumulators_reset_each_superstep() {
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.exec(0, || add_flops(1_000_000));
+        sim.superstep();
+        let dt2 = sim.superstep(); // nothing happened
+        assert!((dt2 - 1e-3).abs() < 1e-12);
+        assert_eq!(sim.supersteps, 2);
+        assert_eq!(sim.total_flops, 1_000_000);
+    }
+
+    #[test]
+    fn more_workers_on_split_work_is_faster() {
+        // Perfectly divisible work: doubling workers halves modeled time.
+        let total = 8_000_000u64;
+        let time_for = |p: usize| {
+            let mut sim = ClusterSim::new(p, cfg());
+            for w in 0..p {
+                sim.exec(w, || add_flops(total / p as u64));
+            }
+            sim.superstep()
+        };
+        let t2 = time_for(2);
+        let t4 = time_for(4);
+        assert!(t4 < t2);
+        // minus the fixed overhead the ratio is exactly 2
+        let ratio = (t2 - 1e-3) / (t4 - 1e-3);
+        assert!((ratio - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.exec(0, || add_flops(3_000_000));
+        sim.exec(1, || add_flops(1_000_000));
+        assert!((sim.current_imbalance() - 1.5).abs() < 1e-9);
+    }
+}

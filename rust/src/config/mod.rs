@@ -1,0 +1,452 @@
+//! Configuration: model, training strategy, optimizer, cluster cost model.
+//!
+//! Configs are plain structs with builders plus a tiny `key = value` file
+//! format (`serde`/`toml` are not in the vendored crate set) so the
+//! launcher (`graphtheta train --config run.conf`) works like other
+//! training frameworks' YAML/TOML launchers.
+
+use std::collections::BTreeMap;
+
+/// Which GNN encoder to train.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Kipf & Welling GCN: proj → weighted mean propagation → sum.
+    Gcn,
+    /// The paper's in-house GAT-E: attention over (src, dst, edge-attr).
+    GatE,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub kind: ModelKind,
+    pub in_dim: usize,
+    pub hidden: usize,
+    pub out_dim: usize,
+    pub layers: usize,
+    /// Edge-attribute dim (GAT-E only; 0 disables the edge path).
+    pub edge_dim: usize,
+    /// Binary task (BCE + single logit) instead of multi-class softmax.
+    pub binary: bool,
+    /// Positive-class loss weight for imbalanced binary tasks (Alipay).
+    pub pos_weight: f32,
+}
+
+impl ModelConfig {
+    pub fn gcn(in_dim: usize, hidden: usize, classes: usize, layers: usize) -> ModelConfig {
+        ModelConfig {
+            kind: ModelKind::Gcn,
+            in_dim,
+            hidden,
+            out_dim: classes,
+            layers,
+            edge_dim: 0,
+            binary: false,
+            pos_weight: 1.0,
+        }
+    }
+
+    pub fn gat_e(
+        in_dim: usize,
+        hidden: usize,
+        classes: usize,
+        layers: usize,
+        edge_dim: usize,
+    ) -> ModelConfig {
+        ModelConfig {
+            kind: ModelKind::GatE,
+            in_dim,
+            hidden,
+            out_dim: classes,
+            layers,
+            edge_dim,
+            binary: false,
+            pos_weight: 1.0,
+        }
+    }
+
+    pub fn binary(mut self) -> ModelConfig {
+        self.binary = true;
+        self.out_dim = 1;
+        self
+    }
+
+    /// Weight the positive class in the BCE loss (imbalanced tasks).
+    pub fn pos_weighted(mut self, w: f32) -> ModelConfig {
+        self.pos_weight = w;
+        self
+    }
+
+    /// (in, out) dims of each encoder layer.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = Vec::with_capacity(self.layers);
+        let mut d = self.in_dim;
+        for _ in 0..self.layers {
+            dims.push((d, self.hidden));
+            d = self.hidden;
+        }
+        dims
+    }
+
+    /// Total trainable parameter count (reported by the launcher).
+    pub fn param_count(&self) -> usize {
+        let mut total = 0usize;
+        for (i, o) in self.layer_dims() {
+            total += i * o + o; // W + b
+            if self.kind == ModelKind::GatE {
+                total += 2 * o + self.edge_dim; // attention vectors a_src, a_dst, a_edge
+            }
+        }
+        total += self.hidden * self.out_dim + self.out_dim; // decoder
+        total
+    }
+}
+
+/// The three training strategies of the paper (§2.3) plus their knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StrategyKind {
+    /// Full-graph convolution each step.
+    GlobalBatch,
+    /// BFS k-hop subgraphs from a random batch of labeled target nodes.
+    MiniBatch {
+        /// Fraction of labeled nodes per batch (the paper uses 1% / 0.1%).
+        batch_frac: f64,
+    },
+    /// Batches are unions of Louvain clusters; optionally include `boundary`
+    /// hops outside the cluster (the paper's extension over Cluster-GCN).
+    ClusterBatch {
+        /// Fraction of clusters per batch.
+        cluster_frac: f64,
+        /// Boundary hops allowed outside the clusters (0 = Cluster-GCN).
+        boundary_hops: usize,
+    },
+}
+
+impl StrategyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::GlobalBatch => "global-batch",
+            StrategyKind::MiniBatch { .. } => "mini-batch",
+            StrategyKind::ClusterBatch { .. } => "cluster-batch",
+        }
+    }
+
+    pub fn mini(batch_frac: f64) -> StrategyKind {
+        StrategyKind::MiniBatch { batch_frac }
+    }
+
+    pub fn cluster(cluster_frac: f64, boundary_hops: usize) -> StrategyKind {
+        StrategyKind::ClusterBatch { cluster_frac, boundary_hops }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Adam,
+    AdamW,
+}
+
+/// Parameter update mode (§4.3: "UpdateParam performs the actual parameter
+/// update operations either in a synchronous or an asynchronous mode").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateMode {
+    Synchronous,
+    /// Bounded-staleness asynchronous updates.
+    Asynchronous { max_staleness: usize },
+}
+
+/// Neighbor sampling applied during subgraph construction (§4.2 implements
+/// "a few sampling methods, including random neighbor sampling").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SamplingConfig {
+    /// GraphTheta's default: no sampling.
+    None,
+    /// Cap fan-out per hop (GraphSAGE / GraphLearn style). Up to 4 hops.
+    Neighbor { fanout: [usize; 4] },
+}
+
+/// The full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: ModelConfig,
+    pub strategy: StrategyKind,
+    pub sampling: SamplingConfig,
+    pub optimizer: OptimizerKind,
+    pub update_mode: UpdateMode,
+    pub lr: f32,
+    pub weight_decay: f32,
+    /// Epochs for global-batch; steps otherwise.
+    pub epochs: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub cost: CostModelConfig,
+    /// Execute stage operators through PJRT artifacts instead of native.
+    pub use_pjrt: bool,
+}
+
+impl TrainConfig {
+    pub fn builder() -> TrainConfigBuilder {
+        TrainConfigBuilder::default()
+    }
+}
+
+#[derive(Default)]
+pub struct TrainConfigBuilder {
+    model: Option<ModelConfig>,
+    strategy: Option<StrategyKind>,
+    sampling: Option<SamplingConfig>,
+    optimizer: Option<OptimizerKind>,
+    update_mode: Option<UpdateMode>,
+    lr: Option<f32>,
+    weight_decay: Option<f32>,
+    epochs: Option<usize>,
+    eval_every: Option<usize>,
+    seed: Option<u64>,
+    cost: Option<CostModelConfig>,
+    use_pjrt: bool,
+}
+
+impl TrainConfigBuilder {
+    pub fn model(mut self, m: ModelConfig) -> Self {
+        self.model = Some(m);
+        self
+    }
+    pub fn strategy(mut self, s: StrategyKind) -> Self {
+        self.strategy = Some(s);
+        self
+    }
+    pub fn sampling(mut self, s: SamplingConfig) -> Self {
+        self.sampling = Some(s);
+        self
+    }
+    pub fn optimizer(mut self, o: OptimizerKind) -> Self {
+        self.optimizer = Some(o);
+        self
+    }
+    pub fn update_mode(mut self, u: UpdateMode) -> Self {
+        self.update_mode = Some(u);
+        self
+    }
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+    pub fn weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = Some(wd);
+        self
+    }
+    pub fn epochs(mut self, e: usize) -> Self {
+        self.epochs = Some(e);
+        self
+    }
+    pub fn eval_every(mut self, e: usize) -> Self {
+        self.eval_every = Some(e);
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = Some(s);
+        self
+    }
+    pub fn cost(mut self, c: CostModelConfig) -> Self {
+        self.cost = Some(c);
+        self
+    }
+    pub fn use_pjrt(mut self, b: bool) -> Self {
+        self.use_pjrt = b;
+        self
+    }
+
+    pub fn build(self) -> TrainConfig {
+        TrainConfig {
+            model: self.model.expect("model config required"),
+            strategy: self.strategy.unwrap_or(StrategyKind::GlobalBatch),
+            sampling: self.sampling.unwrap_or(SamplingConfig::None),
+            optimizer: self.optimizer.unwrap_or(OptimizerKind::Adam),
+            update_mode: self.update_mode.unwrap_or(UpdateMode::Synchronous),
+            lr: self.lr.unwrap_or(0.01),
+            weight_decay: self.weight_decay.unwrap_or(5e-4),
+            epochs: self.epochs.unwrap_or(100),
+            eval_every: self.eval_every.unwrap_or(10),
+            seed: self.seed.unwrap_or(42),
+            cost: self.cost.unwrap_or_default(),
+            use_pjrt: self.use_pjrt,
+        }
+    }
+}
+
+/// The simulated-cluster cost model (DESIGN.md §6). Defaults approximate
+/// the paper's testbed: small CPU dockers, one compute thread each, cloud
+/// datacenter networking.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModelConfig {
+    /// Per-worker sustained FLOP/s (one CPU core).
+    pub worker_flops: f64,
+    /// Per-worker network bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Per-message latency, seconds.
+    pub latency: f64,
+    /// Fraction of communication hidden behind compute (0..1). The paper
+    /// observes strong overlap because NN stages are compute-intensive.
+    pub overlap: f64,
+    /// Fixed per-superstep coordination cost, seconds (master RPC, barrier).
+    pub superstep_overhead: f64,
+}
+
+impl Default for CostModelConfig {
+    fn default() -> Self {
+        CostModelConfig {
+            worker_flops: 8.0e9,
+            bandwidth: 1.0e9,
+            latency: 50e-6,
+            overlap: 0.7,
+            superstep_overhead: 2e-3,
+        }
+    }
+}
+
+/// Parse a `key = value` config file (comments with `#`).
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut out = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        out.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(out)
+}
+
+/// Build a [`TrainConfig`] from parsed `key = value` pairs + a dataset's
+/// dims. Unknown keys are rejected so typos fail loudly.
+pub fn config_from_kv(
+    kv: &BTreeMap<String, String>,
+    in_dim: usize,
+    classes: usize,
+    edge_dim: usize,
+) -> Result<TrainConfig, String> {
+    let mut b = TrainConfig::builder();
+    let get_f = |k: &str, d: f64| -> Result<f64, String> {
+        match kv.get(k) {
+            Some(v) => v.parse().map_err(|_| format!("bad float for {k}: {v}")),
+            None => Ok(d),
+        }
+    };
+    let get_u = |k: &str, d: usize| -> Result<usize, String> {
+        match kv.get(k) {
+            Some(v) => v.parse().map_err(|_| format!("bad int for {k}: {v}")),
+            None => Ok(d),
+        }
+    };
+    let known = [
+        "model", "hidden", "layers", "strategy", "batch_frac", "cluster_frac",
+        "boundary_hops", "optimizer", "lr", "weight_decay", "epochs", "eval_every",
+        "seed", "backend", "fanout", "binary",
+    ];
+    for k in kv.keys() {
+        if !known.contains(&k.as_str()) {
+            return Err(format!("unknown config key: {k}"));
+        }
+    }
+    let hidden = get_u("hidden", 16)?;
+    let layers = get_u("layers", 2)?;
+    let model = match kv.get("model").map(String::as_str).unwrap_or("gcn") {
+        "gcn" => ModelConfig::gcn(in_dim, hidden, classes, layers),
+        "gat_e" | "gate" => ModelConfig::gat_e(in_dim, hidden, classes, layers, edge_dim),
+        other => return Err(format!("unknown model {other}")),
+    };
+    let model = if kv.get("binary").map(String::as_str) == Some("true") {
+        model.binary()
+    } else {
+        model
+    };
+    b = b.model(model);
+    let strategy = match kv.get("strategy").map(String::as_str).unwrap_or("global") {
+        "global" | "global-batch" => StrategyKind::GlobalBatch,
+        "mini" | "mini-batch" => StrategyKind::mini(get_f("batch_frac", 0.01)?),
+        "cluster" | "cluster-batch" => {
+            StrategyKind::cluster(get_f("cluster_frac", 0.01)?, get_u("boundary_hops", 0)?)
+        }
+        other => return Err(format!("unknown strategy {other}")),
+    };
+    b = b.strategy(strategy);
+    if let Some(f) = kv.get("fanout") {
+        let parts: Vec<usize> = f
+            .split(',')
+            .map(|x| x.trim().parse().map_err(|_| format!("bad fanout {f}")))
+            .collect::<Result<_, _>>()?;
+        let mut fanout = [usize::MAX; 4];
+        for (i, &x) in parts.iter().take(4).enumerate() {
+            fanout[i] = x;
+        }
+        b = b.sampling(SamplingConfig::Neighbor { fanout });
+    }
+    let opt = match kv.get("optimizer").map(String::as_str).unwrap_or("adam") {
+        "sgd" => OptimizerKind::Sgd,
+        "adam" => OptimizerKind::Adam,
+        "adamw" => OptimizerKind::AdamW,
+        other => return Err(format!("unknown optimizer {other}")),
+    };
+    Ok(b
+        .optimizer(opt)
+        .lr(get_f("lr", 0.01)? as f32)
+        .weight_decay(get_f("weight_decay", 5e-4)? as f32)
+        .epochs(get_u("epochs", 100)?)
+        .eval_every(get_u("eval_every", 10)?)
+        .seed(get_u("seed", 42)? as u64)
+        .use_pjrt(kv.get("backend").map(String::as_str) == Some("pjrt"))
+        .build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults() {
+        let c = TrainConfig::builder()
+            .model(ModelConfig::gcn(100, 16, 7, 2))
+            .build();
+        assert_eq!(c.strategy, StrategyKind::GlobalBatch);
+        assert_eq!(c.optimizer, OptimizerKind::Adam);
+        assert!(!c.use_pjrt);
+    }
+
+    #[test]
+    fn layer_dims_chain() {
+        let m = ModelConfig::gcn(100, 16, 7, 3);
+        assert_eq!(m.layer_dims(), vec![(100, 16), (16, 16), (16, 16)]);
+        assert_eq!(m.param_count(), 100 * 16 + 16 + 2 * (16 * 16 + 16) + 16 * 7 + 7);
+    }
+
+    #[test]
+    fn kv_parse_and_build() {
+        let kv = parse_kv(
+            "model = gcn\nhidden = 32 # comment\nstrategy = mini\nbatch_frac = 0.05\nlr=0.02\n",
+        )
+        .unwrap();
+        let c = config_from_kv(&kv, 64, 5, 0).unwrap();
+        assert_eq!(c.model.hidden, 32);
+        assert_eq!(c.strategy, StrategyKind::mini(0.05));
+        assert!((c.lr - 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_rejects_unknown_keys_and_bad_values() {
+        let kv = parse_kv("hiden = 32\n").unwrap();
+        assert!(config_from_kv(&kv, 64, 5, 0).is_err());
+        let kv = parse_kv("lr = fast\n").unwrap();
+        assert!(config_from_kv(&kv, 64, 5, 0).is_err());
+        assert!(parse_kv("no equals sign").is_err());
+    }
+
+    #[test]
+    fn binary_model_has_single_logit() {
+        let m = ModelConfig::gat_e(72, 32, 2, 2, 57).binary();
+        assert!(m.binary);
+        assert_eq!(m.out_dim, 1);
+    }
+}

@@ -1,0 +1,87 @@
+//! GraphView (paper §4.3): a light-weight logical view of the global
+//! parallel graph storage that exposes exactly the interfaces the training
+//! strategies need — reused CSR/CSC indexing, embedding lookup, and plan
+//! construction — without copying storage. Training tasks are scheduled
+//! over GraphViews (one per concurrent subgraph) by the
+//! [`super::scheduler`].
+
+use crate::config::SamplingConfig;
+use crate::graph::Graph;
+use crate::storage::DistGraph;
+use crate::tgar::ActivePlan;
+use crate::util::rng::Rng;
+
+/// A logical view over the shared distributed graph.
+pub struct GraphView<'a> {
+    pub g: &'a Graph,
+    pub dg: &'a DistGraph,
+    /// The parameter version this view's task pinned (multi-version
+    /// training: concurrent tasks may pin different versions).
+    pub param_version: u64,
+    /// View id (task identity for the scheduler).
+    pub id: u64,
+}
+
+impl<'a> GraphView<'a> {
+    pub fn new(g: &'a Graph, dg: &'a DistGraph, id: u64, param_version: u64) -> GraphView<'a> {
+        GraphView { g, dg, id, param_version }
+    }
+
+    /// Construct the subgraph plan for a batch of targets through this
+    /// view (reuses the global CSR/CSC via the DistGraph's vertex-ID maps;
+    /// nothing is copied).
+    pub fn subgraph(
+        &self,
+        targets: Vec<u32>,
+        k: usize,
+        sampling: SamplingConfig,
+        needs_dst: bool,
+        rng: &mut Rng,
+    ) -> ActivePlan {
+        ActivePlan::build(self.g, self.dg, targets, k, sampling, needs_dst, rng)
+    }
+
+    /// Embedding lookup: raw input features of a node (level-0 embedding).
+    pub fn features_of(&self, gid: u32) -> &[f32] {
+        self.g.feats.row(gid as usize)
+    }
+
+    /// Which partition owns a node's master replica.
+    pub fn owner(&self, gid: u32) -> u32 {
+        self.dg.master_part(gid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{Edge1D, Partitioner};
+
+    #[test]
+    fn views_share_storage_and_pin_versions() {
+        let g = gen::citation_like("cora", 7);
+        let plan = Edge1D::default().partition(&g, 2);
+        let dg = DistGraph::build(&g, plan);
+        let v1 = GraphView::new(&g, &dg, 1, 10);
+        let v2 = GraphView::new(&g, &dg, 2, 11);
+        assert_eq!(v1.param_version, 10);
+        assert_eq!(v2.param_version, 11);
+        // Same underlying storage.
+        assert_eq!(v1.features_of(5), v2.features_of(5));
+        assert_eq!(v1.owner(5), v2.owner(5));
+    }
+
+    #[test]
+    fn subgraph_goes_through_shared_indexing() {
+        let g = gen::citation_like("cora", 7);
+        let pplan = Edge1D::default().partition(&g, 2);
+        let dg = DistGraph::build(&g, pplan);
+        let view = GraphView::new(&g, &dg, 1, 0);
+        let mut rng = Rng::new(1);
+        let targets = g.labeled_nodes(&g.train_mask)[..4].to_vec();
+        let plan = view.subgraph(targets.clone(), 2, SamplingConfig::None, false, &mut rng);
+        assert_eq!(plan.targets, targets);
+        assert!(plan.active_count[0] >= targets.len());
+    }
+}

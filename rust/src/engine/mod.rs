@@ -1,0 +1,8 @@
+//! The training engine: strategies (global/mini/cluster-batch), the
+//! GraphView abstraction, the trainer driving NN-TGAR steps against the
+//! ParameterManager, and the work-stealing task scheduler of §4.3.
+
+pub mod strategy;
+pub mod graphview;
+pub mod scheduler;
+pub mod trainer;

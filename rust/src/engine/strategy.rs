@@ -1,0 +1,357 @@
+//! Batch selection for the three training strategies (paper §2.3, §4.2).
+//!
+//! All three reduce to "pick targets, build an [`ActivePlan`]" — the
+//! unified subgraph abstraction the paper argues for:
+//!
+//! * **global-batch**: all labeled nodes, full graph active;
+//! * **mini-batch**: a random fraction of labeled nodes, k-hop reverse BFS;
+//! * **cluster-batch**: a random fraction of Louvain clusters; targets are
+//!   the labeled members; neighborhood restricted to the chosen clusters
+//!   plus an optional boundary of `boundary_hops` hops (the paper's
+//!   extension over Cluster-GCN, appendix B).
+
+use crate::config::{SamplingConfig, StrategyKind};
+use crate::graph::Graph;
+use crate::partition::louvain;
+use crate::storage::DistGraph;
+use crate::tgar::ActivePlan;
+use crate::util::rng::Rng;
+
+/// Stateful batch generator for one training run.
+pub struct BatchGenerator {
+    strategy: StrategyKind,
+    sampling: SamplingConfig,
+    k: usize,
+    needs_dst: bool,
+    train_nodes: Vec<u32>,
+    /// Louvain cluster id per node (cluster-batch only).
+    clusters: Option<Clusters>,
+    /// Cached global plan (global-batch reuses it every epoch).
+    global_plan: Option<ActivePlan>,
+    rng: Rng,
+}
+
+struct Clusters {
+    of_node: Vec<u32>,
+    members: Vec<Vec<u32>>, // cluster -> labeled member nodes
+    count: usize,
+}
+
+impl BatchGenerator {
+    pub fn new(
+        g: &Graph,
+        dg: &DistGraph,
+        strategy: StrategyKind,
+        sampling: SamplingConfig,
+        k: usize,
+        needs_dst: bool,
+        seed: u64,
+    ) -> BatchGenerator {
+        let train_nodes = g.labeled_nodes(&g.train_mask);
+        let clusters = if matches!(strategy, StrategyKind::ClusterBatch { .. }) {
+            let of_node = louvain::louvain_communities(g, 2);
+            let count = of_node.iter().map(|&c| c as usize + 1).max().unwrap_or(1);
+            let mut members = vec![Vec::new(); count];
+            for &v in &train_nodes {
+                members[of_node[v as usize] as usize].push(v);
+            }
+            Some(Clusters { of_node, members, count })
+        } else {
+            None
+        };
+        let global_plan = if strategy == StrategyKind::GlobalBatch {
+            Some(ActivePlan::global(g, dg, k, needs_dst))
+        } else {
+            None
+        };
+        BatchGenerator {
+            strategy,
+            sampling,
+            k,
+            needs_dst,
+            train_nodes,
+            clusters,
+            global_plan,
+            rng: Rng::new(seed ^ 0xBA7C4),
+        }
+    }
+
+    /// Number of clusters detected (cluster-batch; for reporting).
+    pub fn num_clusters(&self) -> usize {
+        self.clusters.as_ref().map_or(0, |c| c.count)
+    }
+
+    /// Produce the next step's plan.
+    pub fn next_plan(&mut self, g: &Graph, dg: &DistGraph) -> ActivePlan {
+        match self.strategy.clone() {
+            StrategyKind::GlobalBatch => self.global_plan.clone().expect("cached"),
+            StrategyKind::MiniBatch { batch_frac } => {
+                let bs = ((self.train_nodes.len() as f64 * batch_frac).ceil() as usize)
+                    .clamp(1, self.train_nodes.len());
+                let picks = self.rng.sample_indices(self.train_nodes.len(), bs);
+                let targets: Vec<u32> = picks.iter().map(|&i| self.train_nodes[i]).collect();
+                ActivePlan::build(
+                    g,
+                    dg,
+                    targets,
+                    self.k,
+                    self.sampling,
+                    self.needs_dst,
+                    &mut self.rng,
+                )
+            }
+            StrategyKind::ClusterBatch { cluster_frac, boundary_hops } => {
+                let cl = self.clusters.as_ref().expect("clusters precomputed");
+                let nc = ((cl.count as f64 * cluster_frac).ceil() as usize).clamp(1, cl.count);
+                let picks = self.rng.sample_indices(cl.count, nc);
+                let mut targets = Vec::new();
+                let mut allowed = vec![false; g.n];
+                for &c in &picks {
+                    targets.extend_from_slice(&cl.members[c]);
+                    for (v, &cv) in cl.of_node.iter().enumerate() {
+                        if cv as usize == c {
+                            allowed[v] = true;
+                        }
+                    }
+                }
+                if targets.is_empty() {
+                    // Picked clusters had no labeled nodes — fall back to a
+                    // random labeled node to keep the step meaningful.
+                    let i = self.rng.below(self.train_nodes.len());
+                    targets.push(self.train_nodes[i]);
+                    allowed[self.train_nodes[i] as usize] = true;
+                }
+                let mut plan = ActivePlan::build(
+                    g,
+                    dg,
+                    targets,
+                    self.k,
+                    self.sampling,
+                    self.needs_dst,
+                    &mut self.rng,
+                );
+                restrict_to_clusters(&mut plan, g, dg, &allowed, boundary_hops, self.needs_dst);
+                plan
+            }
+        }
+    }
+}
+
+/// Restrict a plan to an allowed node set (cluster-batch; also reused by
+/// the GraphSAINT-style subgraph-sampling baseline): drop active edges whose source lies outside
+/// the chosen clusters, unless it is within `boundary_hops` hops of the
+/// cluster (hop counted from the targets' side — hop 0 is the layer
+/// closest to the targets). Recomputes the dependent node sets/routes.
+pub fn restrict_to_clusters(
+    plan: &mut ActivePlan,
+    g: &Graph,
+    dg: &DistGraph,
+    allowed: &[bool],
+    boundary_hops: usize,
+    needs_dst: bool,
+) {
+    let k = plan.k;
+    // Reset node activity above level k and rebuild top-down.
+    for l in 0..k {
+        plan.node_active[l].iter_mut().for_each(|b| *b = false);
+    }
+    for l in (1..=k).rev() {
+        let hop = k - l;
+        let outside_ok = hop < boundary_hops;
+        let (lower, upper) = plan.node_active.split_at_mut(l);
+        let mask_l = &upper[0];
+        let mask_lm1 = &mut lower[l - 1];
+        for (q, pv) in dg.parts.iter().enumerate() {
+            let mut kept = Vec::with_capacity(plan.edges_active[l][q].len());
+            let mut need_src = vec![false; pv.n_local()];
+            let mut need_dst = vec![false; pv.n_local()];
+            for &le in &plan.edges_active[l][q] {
+                let src = pv
+                    .csr_offsets
+                    .partition_point(|&o| o <= le as usize)
+                    .saturating_sub(1);
+                let dst = pv.csr_targets[le as usize] as usize;
+                let sgid = pv.nodes[src] as usize;
+                let dgid = pv.nodes[dst] as usize;
+                if !mask_l[dgid] {
+                    continue; // destination no longer active
+                }
+                if !allowed[sgid] && !outside_ok {
+                    continue; // outside the cluster and beyond the boundary
+                }
+                kept.push(le);
+                mask_lm1[sgid] = true;
+                need_src[src] = true;
+                need_dst[dst] = true;
+            }
+            plan.edges_active[l][q] = kept;
+            plan.sync_in[l][q] = (pv.n_masters..pv.n_local())
+                .filter(|&lid| need_src[lid] || (needs_dst && need_dst[lid]))
+                .map(|lid| lid as u32)
+                .collect();
+            plan.partial_out[l][q] = (pv.n_masters..pv.n_local())
+                .filter(|&lid| need_dst[lid])
+                .map(|lid| lid as u32)
+                .collect();
+        }
+        // Destinations at level l still need their h^{l-1}.
+        for v in 0..g.n {
+            if mask_l[v] {
+                mask_lm1[v] = true;
+            }
+        }
+    }
+    // Rebuild per-partition master lists + counters.
+    for l in 0..=k {
+        for (q, pv) in dg.parts.iter().enumerate() {
+            plan.masters_active[l][q] = (0..pv.n_masters as u32)
+                .filter(|&lid| plan.node_active[l][pv.nodes[lid as usize] as usize])
+                .collect();
+        }
+    }
+    plan.active_count = plan
+        .node_active
+        .iter()
+        .map(|m| m.iter().filter(|&&b| b).count())
+        .collect();
+    plan.active_edge_count = plan
+        .edges_active
+        .iter()
+        .map(|per_p| per_p.iter().map(Vec::len).sum())
+        .collect();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{Edge1D, Partitioner};
+
+    fn setup() -> (Graph, DistGraph) {
+        let g = gen::reddit_like();
+        let plan = Edge1D::default().partition(&g, 4);
+        let dg = DistGraph::build(&g, plan);
+        (g, dg)
+    }
+
+    #[test]
+    fn mini_batch_size_follows_frac() {
+        let (g, dg) = setup();
+        let mut bg = BatchGenerator::new(
+            &g,
+            &dg,
+            StrategyKind::mini(0.01),
+            SamplingConfig::None,
+            2,
+            false,
+            1,
+        );
+        let ntrain = g.labeled_nodes(&g.train_mask).len();
+        let plan = bg.next_plan(&g, &dg);
+        assert_eq!(plan.targets.len(), (ntrain as f64 * 0.01).ceil() as usize);
+        // dense community graph: 2-hop explodes well beyond the batch
+        assert!(plan.active_count[0] > 20 * plan.targets.len());
+    }
+
+    #[test]
+    fn mini_batches_differ_between_steps() {
+        let (g, dg) = setup();
+        let mut bg = BatchGenerator::new(
+            &g,
+            &dg,
+            StrategyKind::mini(0.01),
+            SamplingConfig::None,
+            1,
+            false,
+            2,
+        );
+        let a = bg.next_plan(&g, &dg);
+        let b = bg.next_plan(&g, &dg);
+        assert_ne!(a.targets, b.targets);
+    }
+
+    #[test]
+    fn cluster_batch_without_boundary_stays_in_clusters() {
+        let (g, dg) = setup();
+        let mut bg = BatchGenerator::new(
+            &g,
+            &dg,
+            StrategyKind::cluster(0.1, 0),
+            SamplingConfig::None,
+            2,
+            false,
+            3,
+        );
+        assert!(bg.num_clusters() >= 2);
+        let of_node = louvain::louvain_communities(&g, 2);
+        let plan = bg.next_plan(&g, &dg);
+        // Allowed clusters = those containing targets.
+        let allowed: std::collections::HashSet<u32> =
+            plan.targets.iter().map(|&t| of_node[t as usize]).collect();
+        // Every active *source* node at any level must be in an allowed
+        // cluster (boundary_hops = 0 ⇒ strict Cluster-GCN semantics).
+        for l in 1..=2 {
+            for (q, pv) in dg.parts.iter().enumerate() {
+                for &le in &plan.edges_active[l][q] {
+                    let src = pv
+                        .csr_offsets
+                        .partition_point(|&o| o <= le as usize)
+                        .saturating_sub(1);
+                    let sgid = pv.nodes[src] as usize;
+                    assert!(
+                        allowed.contains(&of_node[sgid]),
+                        "source {sgid} outside clusters at level {l}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_hops_admit_more_edges() {
+        let (g, dg) = setup();
+        let mk = |b: usize, seed: u64| {
+            let mut bg = BatchGenerator::new(
+                &g,
+                &dg,
+                StrategyKind::cluster(0.1, b),
+                SamplingConfig::None,
+                2,
+                false,
+                seed,
+            );
+            bg.next_plan(&g, &dg)
+        };
+        // Same seed → same clusters picked → comparable plans.
+        let strict = mk(0, 7);
+        let open = mk(2, 7);
+        assert_eq!(strict.targets, open.targets);
+        assert!(
+            open.active_edge_count[2] >= strict.active_edge_count[2],
+            "boundary should not shrink the plan"
+        );
+        assert!(
+            open.active_edge_count[1] > strict.active_edge_count[1],
+            "2-hop boundary should admit outside sources at the far layer"
+        );
+    }
+
+    #[test]
+    fn global_plan_is_reused() {
+        let (g, dg) = setup();
+        let mut bg = BatchGenerator::new(
+            &g,
+            &dg,
+            StrategyKind::GlobalBatch,
+            SamplingConfig::None,
+            2,
+            false,
+            4,
+        );
+        let a = bg.next_plan(&g, &dg);
+        let b = bg.next_plan(&g, &dg);
+        assert_eq!(a.targets, b.targets);
+        assert_eq!(a.active_count, vec![g.n; 3]);
+        assert_eq!(b.active_edge_count[1], g.m);
+    }
+}

@@ -1,0 +1,77 @@
+//! Figure 10: vertex-cut vs 1D-edge partitioning on the Amazon analogue,
+//! normalized forward / backward / full-step runtimes per strategy
+//! (normalization baseline: 1D-edge, as in the paper).
+
+use crate::config::{ModelConfig, StrategyKind, TrainConfig};
+use crate::engine::trainer::Trainer;
+use crate::graph::gen;
+use crate::metrics::markdown_table;
+use crate::partition::{Edge1D, Partitioner, VertexCut};
+use crate::storage::DistGraph;
+
+pub fn run(fast: bool) -> String {
+    let g = gen::amazon_like();
+    // Enough workers that hub nodes matter for balance (m/p comparable to
+    // hub degrees, as on the paper's 61M-edge Amazon), and the strong
+    // compute/communication overlap the paper observes for NN stages.
+    let workers = if fast { 48 } else { 64 };
+    let steps = if fast { 2 } else { 4 };
+    let model = ModelConfig::gcn(g.feat_dim, 32, g.num_classes, 2);
+    let cost = crate::config::CostModelConfig {
+        overlap: 0.93,
+        superstep_overhead: 2e-4,
+        ..Default::default()
+    };
+
+    let mut out = String::from(
+        "## Figure 10 — vertex-cut vs 1D-edge partition (Amazon-like), normalized to 1D-edge\n\n",
+    );
+    let mut rows = Vec::new();
+    for (label, strategy) in [
+        ("global-batch", StrategyKind::GlobalBatch),
+        ("cluster-batch", StrategyKind::cluster(0.05, 1)),
+        ("mini-batch", StrategyKind::mini(0.05)),
+    ] {
+        let time_with = |part: &dyn Partitioner| {
+            let plan = part.partition(&g, workers);
+            let dg = DistGraph::build(&g, plan);
+            let cfg = TrainConfig::builder()
+                .model(model.clone())
+                .strategy(strategy.clone())
+                .epochs(1)
+                .seed(17)
+                .cost(cost)
+                .build();
+            let mut t = Trainer::with_partition(&g, cfg, dg).unwrap();
+            let r = t.run_timing(steps).unwrap();
+            (r.sim_forward, r.sim_backward, r.sim_total)
+        };
+        let e1 = time_with(&Edge1D::default());
+        let vc = time_with(&VertexCut);
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.3}", vc.0 / e1.0),
+            format!("{:.3}", vc.1 / e1.1),
+            format!("{:.3}", vc.2 / e1.2),
+        ]);
+    }
+    out.push_str(&markdown_table(
+        &["strategy", "fwd (vc/1d)", "bwd (vc/1d)", "full step (vc/1d)"],
+        &rows,
+    ));
+    out.push_str(
+        "\nPaper's shape: vertex-cut <1 (wins) for global- and mini-batch via \
+         better edge balance on skewed load, >1 (loses) for cluster-batch.\n\
+         **Known divergence on this testbed** (recorded in EXPERIMENTS.md): \
+         vertex-cut's balance win is real here too — its edge imbalance is \
+         1.05 vs 1D-edge's 1.40 at p=64 (`graphtheta partition --dataset \
+         amazon --workers 64`) — but at our scaled-down graph size its \
+         replica-sync traffic (replica factor 26.6 vs 15.9) outweighs the \
+         balance gain in the end-to-end cost model, so vertex-cut loses \
+         end-to-end for every strategy. The paper's 61M-edge Amazon has a \
+         much higher compute/traffic ratio per partition, which is what \
+         lets the balance win dominate. Cluster-batch being the strategy \
+         that *least* benefits from vertex-cut matches the paper.\n",
+    );
+    out
+}

@@ -1,0 +1,115 @@
+//! Figure 9: (a) GraphTheta scalability on Reddit for 2–5-layer GCNs;
+//! (b) speedup over DistDGL-sim at the best configuration per layer count;
+//! (c) scalability on the Papers analogue.
+
+use crate::baselines::distdgl::{self, DistDglConfig};
+use crate::config::{CostModelConfig, ModelConfig, StrategyKind, TrainConfig};
+use crate::engine::trainer::Trainer;
+use crate::graph::gen;
+use crate::graph::Graph;
+use crate::metrics::markdown_table;
+
+fn reddit_cost() -> CostModelConfig {
+    CostModelConfig {
+        worker_flops: 5e8, // 4 cores per worker in this test
+        bandwidth: 1e9,
+        latency: 5e-5,
+        overlap: 0.7,
+        superstep_overhead: 5e-4,
+    }
+}
+
+fn scaling_table(g: &Graph, layers_list: &[usize], workers: &[usize], batch_frac: f64, steps: usize) -> (String, Vec<Vec<f64>>) {
+    let mut rows = Vec::new();
+    let mut secs_all = Vec::new();
+    for &layers in layers_list {
+        let model = ModelConfig::gcn(g.feat_dim, 32, g.num_classes, layers);
+        let mut cells = vec![format!("{layers}-layer")];
+        let mut secs_row = Vec::new();
+        for &w in workers {
+            let cfg = TrainConfig::builder()
+                .model(model.clone())
+                .strategy(StrategyKind::mini(batch_frac))
+                .epochs(1)
+                .seed(13)
+                .cost(reddit_cost())
+                .build();
+            let mut t = Trainer::new(g, cfg, w).unwrap();
+            let r = t.run_timing(steps).unwrap();
+            let s = r.sim_total / steps as f64;
+            secs_row.push(s);
+            cells.push(super::fmt_s(s));
+        }
+        secs_all.push(secs_row);
+        rows.push(cells);
+    }
+    let mut headers: Vec<String> = vec!["GCN".into()];
+    headers.extend(workers.iter().map(|w| format!("w={w}")));
+    let href: Vec<&str> = headers.iter().map(String::as_str).collect();
+    (markdown_table(&href, &rows), secs_all)
+}
+
+pub fn run_9a(fast: bool) -> String {
+    let g = gen::reddit_like();
+    let workers: &[usize] = if fast { &[8, 16, 32] } else { &[8, 16, 32, 64, 128] };
+    let layers: &[usize] = if fast { &[2, 3] } else { &[2, 3, 4, 5] };
+    let (table, _) = scaling_table(&g, layers, workers, 0.5, if fast { 1 } else { 2 });
+    format!(
+        "## Figure 9(a) — GraphTheta seconds per mini-batch on Reddit-like\n\n{table}\nShape expected: runtime falls as workers grow (unlike DistDGL, Table A3), mild degradation at the largest w.\n"
+    )
+}
+
+pub fn run_9b(fast: bool) -> String {
+    let g = gen::reddit_like();
+    let layers_list: &[usize] = if fast { &[2, 3] } else { &[2, 3, 4, 5] };
+    let dcfg = DistDglConfig {
+        overall_batch: if fast { 1000 } else { 2000 },
+        socket_capacity: f64::INFINITY, // best-performance test: 1 trainer/machine
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    for &layers in layers_list {
+        // DistDGL best configuration: 8 trainers (1/machine), tuned thread
+        // split (Fig A2) — take the best over the split sweep.
+        let best_dgl = (8..=56)
+            .step_by(8)
+            .filter_map(|p| distdgl::step_time(&g, &dcfg, 8, layers, Some(64 - p)).secs)
+            .fold(f64::INFINITY, f64::min);
+        // GraphTheta at the same 8-machine / 64-core budget: 128 workers
+        // of 4 cores each is the paper's setup; we report our best w.
+        let model = ModelConfig::gcn(g.feat_dim, 32, g.num_classes, layers);
+        let mut best_ours = f64::INFINITY;
+        for w in [32usize, 64, 128] {
+            let cfg = TrainConfig::builder()
+                .model(model.clone())
+                .strategy(StrategyKind::mini(0.5))
+                .epochs(1)
+                .seed(13)
+                .cost(reddit_cost())
+                .build();
+            let mut t = Trainer::new(&g, cfg, w).unwrap();
+            let r = t.run_timing(1).unwrap();
+            best_ours = best_ours.min(r.sim_total);
+        }
+        rows.push(vec![
+            format!("{layers}-layer"),
+            super::fmt_s(best_dgl),
+            super::fmt_s(best_ours),
+            format!("{:.2}x", best_dgl / best_ours),
+        ]);
+    }
+    format!(
+        "## Figure 9(b) — best-configuration speedup over DistDGL-sim (Reddit-like)\n\n{}\nShape expected from the paper: >1x everywhere, growing with depth then easing at 5 layers (paper: 1.09/1.53/2.02/1.81).\n",
+        markdown_table(&["GCN", "DistDGL-sim s/batch", "GraphTheta s/batch", "speedup"], &rows)
+    )
+}
+
+pub fn run_9c(fast: bool) -> String {
+    let g = gen::papers_like();
+    let workers: &[usize] = if fast { &[8, 16, 32] } else { &[8, 16, 32, 64, 128] };
+    let layers: &[usize] = if fast { &[2, 3] } else { &[2, 3, 4] };
+    let (table, _) = scaling_table(&g, layers, workers, 0.25, 1);
+    format!(
+        "## Figure 9(c) — GraphTheta seconds per mini-batch on Papers-like\n\n{table}\nShape expected: 3/4-layer keep improving with w; 2-layer flattens earliest (too little work per worker).\n"
+    )
+}

@@ -1,0 +1,71 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation
+//! (§5 + appendix). Each returns a markdown report with the same rows the
+//! paper presents; `cargo run --release -- experiment <id>` prints it and
+//! `cargo bench` regenerates the full set.
+//!
+//! Absolute numbers live on a different testbed (DESIGN.md §1) — the
+//! claims reproduced are the *shapes*: orderings, rough factors,
+//! crossovers, failure patterns.
+
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod fig8;
+pub mod fig9;
+pub mod fig10;
+pub mod appendix;
+pub mod ablations;
+
+/// All experiment ids.
+pub const ALL: &[&str] = &[
+    "table2", "table3", "table4", "table5", "fig8", "fig9a", "fig9b", "fig9c", "fig10",
+    "tableA2", "tableA3", "figA2", "figA3", "ablation:boundary", "ablation:overlap",
+    "ablation:cache", "ablation:stealing",
+];
+
+/// Run one experiment; `fast` trims epochs/sweeps for CI-grade runtime.
+pub fn run(name: &str, fast: bool) -> anyhow::Result<String> {
+    Ok(match name {
+        "table2" => table2::run(fast),
+        "table3" => table3::run(fast),
+        "table4" => table4::run(fast),
+        "table5" => table5::run(fast),
+        "fig8" => fig8::run(fast),
+        "fig9a" => fig9::run_9a(fast),
+        "fig9b" => fig9::run_9b(fast),
+        "fig9c" => fig9::run_9c(fast),
+        "fig10" => fig10::run(fast),
+        "tableA2" => appendix::table_a2(fast),
+        "tableA3" => appendix::table_a3(fast),
+        "figA2" => appendix::fig_a2(fast),
+        "figA3" => appendix::fig_a3(fast),
+        "ablation:boundary" => ablations::boundary_hops(fast),
+        "ablation:overlap" => ablations::overlap(fast),
+        "ablation:cache" => ablations::tensor_cache(fast),
+        "ablation:stealing" => ablations::work_stealing_ablation(fast),
+        other => anyhow::bail!("unknown experiment {other}; known: {ALL:?}"),
+    })
+}
+
+pub(crate) fn fmt_pct(x: f64) -> String {
+    format!("{:.2}", 100.0 * x)
+}
+
+pub(crate) fn fmt_s(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}")
+    } else if x >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{:.2}ms", x * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_rejects_unknown() {
+        assert!(super::run("table99", true).is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! Table 3: accuracy vs sampling-based methods on the modest-scale dense
+//! graphs (Reddit / Amazon analogues).
+//!
+//! Paper's shape: GB best; CB and MB close behind; GraphSAGE/GraphSAINT
+//! competitive on Reddit but weaker on Amazon; VR-GCN far below everyone
+//! ("sampling-based training methods are not always better than
+//! non-sampling-based ones").
+
+use crate::baselines::samplers::{accuracy_baselines, run_baseline};
+use crate::config::{ModelConfig, StrategyKind, TrainConfig};
+use crate::engine::trainer::Trainer;
+use crate::graph::gen;
+use crate::metrics::markdown_table;
+
+pub fn run(fast: bool) -> String {
+    let (epochs, hidden) = if fast { (30, 32) } else { (80, 64) };
+    let datasets: Vec<(&str, crate::graph::Graph, f64)> = vec![
+        ("reddit", gen::reddit_like(), 0.01),
+        ("amazon", gen::amazon_like(), 0.01),
+    ];
+    let mut rows = Vec::new();
+    for (name, g, frac) in datasets {
+        let model = ModelConfig::gcn(g.feat_dim, hidden, g.num_classes, 2);
+        let ours = |strategy: StrategyKind, seed: u64| {
+            let cfg = TrainConfig::builder()
+                .model(model.clone())
+                .strategy(strategy)
+                .epochs(epochs)
+                .eval_every(usize::MAX)
+                .lr(0.05)
+                .seed(seed)
+                .build();
+            Trainer::new(&g, cfg, 4).unwrap().run().unwrap()
+        };
+        let gb = ours(StrategyKind::GlobalBatch, 7);
+        let mb = ours(StrategyKind::mini(frac * 20.0), 7);
+        let cb = ours(StrategyKind::cluster(0.20, 1), 7);
+
+        let mut cells = vec![
+            name.to_string(),
+            super::fmt_pct(gb.test_accuracy),
+            super::fmt_pct(mb.test_accuracy),
+            super::fmt_pct(cb.test_accuracy),
+        ];
+        for b in accuracy_baselines(frac * 20.0) {
+            if b.name.contains("Cluster-GCN")
+                || b.name.contains("VR-GCN")
+                || b.name.contains("GraphSAGE")
+                || b.name.contains("GraphSAINT")
+            {
+                let r = run_baseline(&g, &b, model.clone(), epochs, 0.05, 7).unwrap();
+                cells.push(super::fmt_pct(r.test_accuracy));
+            }
+        }
+        rows.push(cells);
+    }
+    format!(
+        "## Table 3 — test accuracy (%) vs sampling-based methods\n\n{}\nShape expected from the paper: GB best; VR-GCN-style far below; \
+         sampling not uniformly better than non-sampling.\n",
+        markdown_table(
+            &[
+                "dataset", "GB", "MB", "CB", "GraphSAGE", "GraphSAINT", "VR-GCN*", "Cluster-GCN"
+            ],
+            &rows,
+        )
+    )
+}

@@ -1,0 +1,440 @@
+//! Graph storage: CSR (out-edges) + CSC (in-edges), node/edge features,
+//! labels and split masks.
+//!
+//! GraphTheta organizes outgoing edges in CSR and incoming edges in CSC and
+//! stores node and edge values separately (paper §4.1); distributed
+//! traversal runs the two concurrently. This module is the *global* graph;
+//! [`crate::storage`] derives the per-partition local views with
+//! master/mirror placement.
+
+pub mod gen;
+pub mod stats;
+
+use crate::tensor::Tensor;
+
+/// An immutable attributed directed graph.
+///
+/// Edge ids are CSR order: edge `e` has source `csr_src_of(e)`, target
+/// `csr_targets[e]`, features `edge_feats.row(e)` and Laplacian weight
+/// `edge_weights[e]`. The CSC arrays reference the same edge ids so edge
+/// state is stored exactly once.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    /// Number of nodes.
+    pub n: usize,
+    /// Number of directed edges.
+    pub m: usize,
+
+    // CSR: outgoing edges, edge id == position.
+    pub csr_offsets: Vec<usize>,
+    pub csr_targets: Vec<u32>,
+    // CSC: incoming edges, values are edge ids into the CSR arrays.
+    pub csc_offsets: Vec<usize>,
+    pub csc_sources: Vec<u32>,
+    pub csc_eids: Vec<u32>,
+
+    /// Node features `[n, feat_dim]`.
+    pub feats: Tensor,
+    pub feat_dim: usize,
+    /// Optional edge features `[m, edge_feat_dim]` (Alipay has 57 dims).
+    pub edge_feats: Option<Tensor>,
+    pub edge_feat_dim: usize,
+    /// Per-edge Laplacian/propagation weight (GCN: 1/√(d̂_i·d̂_j)).
+    pub edge_weights: Vec<f32>,
+
+    pub labels: Vec<u32>,
+    pub num_classes: usize,
+    pub train_mask: Vec<bool>,
+    pub val_mask: Vec<bool>,
+    pub test_mask: Vec<bool>,
+}
+
+impl Graph {
+    /// Out-neighbors (targets) of `v` with their edge ids.
+    #[inline]
+    pub fn out_edges(&self, v: usize) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let lo = self.csr_offsets[v];
+        let hi = self.csr_offsets[v + 1];
+        (lo..hi).map(move |e| (self.csr_targets[e], e as u32))
+    }
+
+    /// In-neighbors (sources) of `v` with their edge ids.
+    #[inline]
+    pub fn in_edges(&self, v: usize) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let lo = self.csc_offsets[v];
+        let hi = self.csc_offsets[v + 1];
+        (lo..hi).map(move |i| (self.csc_sources[i], self.csc_eids[i]))
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: usize) -> usize {
+        self.csr_offsets[v + 1] - self.csr_offsets[v]
+    }
+
+    #[inline]
+    pub fn in_degree(&self, v: usize) -> usize {
+        self.csc_offsets[v + 1] - self.csc_offsets[v]
+    }
+
+    /// Source node of a CSR edge id (binary search over offsets).
+    pub fn csr_src_of(&self, e: u32) -> u32 {
+        let e = e as usize;
+        match self.csr_offsets.binary_search(&e) {
+            // offsets may repeat for degree-0 nodes: take the last node
+            // whose range starts at or before e and is non-empty.
+            Ok(mut i) => {
+                while i + 1 < self.csr_offsets.len() - 1 && self.csr_offsets[i + 1] == e {
+                    i += 1;
+                }
+                i as u32
+            }
+            Err(i) => (i - 1) as u32,
+        }
+    }
+
+    pub fn density(&self) -> f64 {
+        self.m as f64 / self.n as f64
+    }
+
+    pub fn max_out_degree(&self) -> usize {
+        (0..self.n).map(|v| self.out_degree(v)).max().unwrap_or(0)
+    }
+
+    pub fn labeled_nodes(&self, mask: &[bool]) -> Vec<u32> {
+        (0..self.n as u32).filter(|&v| mask[v as usize]).collect()
+    }
+}
+
+/// Incremental builder: add edges, then [`GraphBuilder::build`].
+pub struct GraphBuilder {
+    name: String,
+    n: usize,
+    edges: Vec<(u32, u32)>,
+    edge_feats: Vec<f32>,
+    edge_feat_dim: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, n: usize) -> Self {
+        GraphBuilder {
+            name: name.to_string(),
+            n,
+            edges: Vec::new(),
+            edge_feats: Vec::new(),
+            edge_feat_dim: 0,
+        }
+    }
+
+    pub fn with_edge_feat_dim(mut self, d: usize) -> Self {
+        self.edge_feat_dim = d;
+        self
+    }
+
+    pub fn add_edge(&mut self, src: u32, dst: u32) {
+        debug_assert!(self.edge_feat_dim == 0, "use add_edge_with_feat");
+        self.edges.push((src, dst));
+    }
+
+    pub fn add_edge_with_feat(&mut self, src: u32, dst: u32, feat: &[f32]) {
+        assert_eq!(feat.len(), self.edge_feat_dim);
+        self.edges.push((src, dst));
+        self.edge_feats.extend_from_slice(feat);
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Add the reverse of every edge (message passing in both directions,
+    /// as the spectral GCN formulation requires a symmetric adjacency).
+    /// Reverse edges copy the forward edge's features.
+    pub fn symmetrize(&mut self) {
+        let fwd = self.edges.clone();
+        let d = self.edge_feat_dim;
+        for (i, &(s, t)) in fwd.iter().enumerate() {
+            if s == t {
+                continue;
+            }
+            self.edges.push((t, s));
+            if d > 0 {
+                let row: Vec<f32> = self.edge_feats[i * d..(i + 1) * d].to_vec();
+                self.edge_feats.extend_from_slice(&row);
+            }
+        }
+    }
+
+    /// Add one self-loop per node (renormalization trick of Kipf & Welling).
+    pub fn add_self_loops(&mut self) {
+        let d = self.edge_feat_dim;
+        for v in 0..self.n as u32 {
+            self.edges.push((v, v));
+            if d > 0 {
+                self.edge_feats.extend(std::iter::repeat(0.0).take(d));
+            }
+        }
+    }
+
+    /// Finalize into CSR+CSC with GCN-normalized edge weights
+    /// `w(i→j) = 1/√(deg_out(i)·deg_in(j))`. Duplicate edges are kept
+    /// (they carry distinct edge state, matching multi-relation graphs).
+    pub fn build(
+        self,
+        feats: Tensor,
+        labels: Vec<u32>,
+        num_classes: usize,
+        splits: (Vec<bool>, Vec<bool>, Vec<bool>),
+    ) -> Graph {
+        let n = self.n;
+        let m = self.edges.len();
+        assert_eq!(feats.rows, n, "feature rows must equal node count");
+        assert_eq!(labels.len(), n);
+
+        // CSR: counting sort by source, preserving insertion order per node.
+        let mut out_deg = vec![0usize; n];
+        for &(s, _) in &self.edges {
+            out_deg[s as usize] += 1;
+        }
+        let mut csr_offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            csr_offsets[v + 1] = csr_offsets[v] + out_deg[v];
+        }
+        let mut cursor = csr_offsets.clone();
+        let mut csr_targets = vec![0u32; m];
+        // permutation: original edge index -> CSR edge id
+        let mut perm = vec![0usize; m];
+        for (orig, &(s, t)) in self.edges.iter().enumerate() {
+            let pos = cursor[s as usize];
+            cursor[s as usize] += 1;
+            csr_targets[pos] = t;
+            perm[orig] = pos;
+        }
+
+        // Edge features re-ordered into CSR edge-id order.
+        let edge_feats = if self.edge_feat_dim > 0 {
+            let d = self.edge_feat_dim;
+            let mut ef = vec![0.0f32; m * d];
+            for (orig, &pos) in perm.iter().enumerate() {
+                ef[pos * d..(pos + 1) * d]
+                    .copy_from_slice(&self.edge_feats[orig * d..(orig + 1) * d]);
+            }
+            Some(Tensor::from_vec(m, d, ef))
+        } else {
+            None
+        };
+
+        // CSC from CSR.
+        let mut in_deg = vec![0usize; n];
+        for &t in &csr_targets {
+            in_deg[t as usize] += 1;
+        }
+        let mut csc_offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            csc_offsets[v + 1] = csc_offsets[v] + in_deg[v];
+        }
+        let mut ccur = csc_offsets.clone();
+        let mut csc_sources = vec![0u32; m];
+        let mut csc_eids = vec![0u32; m];
+        for v in 0..n {
+            for e in csr_offsets[v]..csr_offsets[v + 1] {
+                let t = csr_targets[e] as usize;
+                let pos = ccur[t];
+                ccur[t] += 1;
+                csc_sources[pos] = v as u32;
+                csc_eids[pos] = e as u32;
+            }
+        }
+
+        // GCN normalization.
+        let mut edge_weights = vec![0.0f32; m];
+        for v in 0..n {
+            for e in csr_offsets[v]..csr_offsets[v + 1] {
+                let t = csr_targets[e] as usize;
+                let di = out_deg[v].max(1) as f32;
+                let dj = in_deg[t].max(1) as f32;
+                edge_weights[e] = 1.0 / (di * dj).sqrt();
+            }
+        }
+
+        let feat_dim = feats.cols;
+        Graph {
+            name: self.name,
+            n,
+            m,
+            csr_offsets,
+            csr_targets,
+            csc_offsets,
+            csc_sources,
+            csc_eids,
+            feats,
+            feat_dim,
+            edge_feats,
+            edge_feat_dim: self.edge_feat_dim,
+            edge_weights,
+            labels,
+            num_classes,
+            train_mask: splits.0,
+            val_mask: splits.1,
+            test_mask: splits.2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::qcheck;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> Graph {
+        // 0 -> 1, 0 -> 2, 1 -> 2, 2 -> 0
+        let mut b = GraphBuilder::new("tiny", 3);
+        b.add_edge(0, 1);
+        b.add_edge(0, 2);
+        b.add_edge(1, 2);
+        b.add_edge(2, 0);
+        b.build(
+            Tensor::zeros(3, 2),
+            vec![0, 1, 0],
+            2,
+            (vec![true; 3], vec![false; 3], vec![false; 3]),
+        )
+    }
+
+    #[test]
+    fn csr_csc_agree() {
+        let g = tiny();
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.in_degree(2), 2);
+        // Every CSC entry must reference a CSR edge with matching endpoints.
+        for v in 0..g.n {
+            for (src, eid) in g.in_edges(v) {
+                assert_eq!(g.csr_targets[eid as usize], v as u32);
+                assert_eq!(g.csr_src_of(eid), src);
+            }
+        }
+    }
+
+    #[test]
+    fn csr_src_of_handles_degree_zero_nodes() {
+        let mut b = GraphBuilder::new("holes", 5);
+        b.add_edge(0, 1);
+        b.add_edge(3, 4); // nodes 1,2 have no out-edges
+        let g = b.build(
+            Tensor::zeros(5, 1),
+            vec![0; 5],
+            1,
+            (vec![true; 5], vec![false; 5], vec![false; 5]),
+        );
+        assert_eq!(g.csr_src_of(0), 0);
+        assert_eq!(g.csr_src_of(1), 3);
+    }
+
+    #[test]
+    fn gcn_weights_symmetric_graph() {
+        let mut b = GraphBuilder::new("pair", 2);
+        b.add_edge(0, 1);
+        b.symmetrize();
+        b.add_self_loops();
+        let g = b.build(
+            Tensor::zeros(2, 1),
+            vec![0, 0],
+            1,
+            (vec![true; 2], vec![false; 2], vec![false; 2]),
+        );
+        // Each node: out_deg = in_deg = 2 (1 edge + self loop) → w = 1/2.
+        for &w in &g.edge_weights {
+            assert!((w - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn builder_invariants_random_graphs() {
+        qcheck(
+            "csr-csc-consistency",
+            |r: &mut Rng| {
+                let n = 2 + r.below(40);
+                let m = r.below(4 * n);
+                let edges: Vec<(u32, u32)> = (0..m)
+                    .map(|_| (r.below(n) as u32, r.below(n) as u32))
+                    .collect();
+                (n, edges)
+            },
+            |(n, edges)| {
+                let mut b = GraphBuilder::new("rand", *n);
+                for &(s, t) in edges {
+                    b.add_edge(s, t);
+                }
+                let g = b.build(
+                    Tensor::zeros(*n, 1),
+                    vec![0; *n],
+                    1,
+                    (vec![true; *n], vec![false; *n], vec![false; *n]),
+                );
+                if g.m != edges.len() {
+                    return Err("edge count changed".into());
+                }
+                // Multiset of (src,dst) must be preserved.
+                let mut want: Vec<(u32, u32)> = edges.clone();
+                let mut got: Vec<(u32, u32)> = (0..g.n as u32)
+                    .flat_map(|v| g.out_edges(v as usize).map(move |(t, _)| (v, t)))
+                    .collect();
+                want.sort_unstable();
+                got.sort_unstable();
+                if want != got {
+                    return Err("edge multiset changed".into());
+                }
+                // CSC covers every edge id exactly once.
+                let mut seen = vec![false; g.m];
+                for v in 0..g.n {
+                    for (_, e) in g.in_edges(v) {
+                        if seen[e as usize] {
+                            return Err(format!("edge {e} appears twice in CSC"));
+                        }
+                        seen[e as usize] = true;
+                    }
+                }
+                if !seen.iter().all(|&s| s) {
+                    return Err("CSC misses an edge".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn edge_features_follow_reordering() {
+        let mut b = GraphBuilder::new("ef", 3).with_edge_feat_dim(2);
+        // Insert out of source order so the counting sort must move them.
+        b.add_edge_with_feat(2, 0, &[20.0, 21.0]);
+        b.add_edge_with_feat(0, 1, &[1.0, 2.0]);
+        b.add_edge_with_feat(1, 2, &[10.0, 11.0]);
+        let g = b.build(
+            Tensor::zeros(3, 1),
+            vec![0; 3],
+            1,
+            (vec![true; 3], vec![false; 3], vec![false; 3]),
+        );
+        let ef = g.edge_feats.as_ref().unwrap();
+        for v in 0..3 {
+            for (t, e) in g.out_edges(v) {
+                let row = ef.row(e as usize);
+                match (v, t) {
+                    (0, 1) => assert_eq!(row, &[1.0, 2.0]),
+                    (1, 2) => assert_eq!(row, &[10.0, 11.0]),
+                    (2, 0) => assert_eq!(row, &[20.0, 21.0]),
+                    _ => panic!("unexpected edge"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symmetrize_skips_self_loops_and_doubles_rest() {
+        let mut b = GraphBuilder::new("sym", 3);
+        b.add_edge(0, 1);
+        b.add_edge(2, 2);
+        b.symmetrize();
+        assert_eq!(b.num_edges(), 3); // 0->1, 2->2, 1->0
+    }
+}

@@ -1,0 +1,70 @@
+//! # GraphTheta — distributed GNN learning with flexible training strategies
+//!
+//! Reproduction of *"GraphTheta: A Distributed Graph Neural Network Learning
+//! System With Flexible Training Strategy"* (Liu, Li, et al., 2021).
+//!
+//! GraphTheta is a vertex-centric distributed graph **training** engine: the
+//! forward and backward passes of a GNN are expressed as the NN-TGAR pattern
+//! (NN-Transform → NN-Gather → Sum → NN-Apply → Reduce) over a distributed
+//! graph with master/mirror node placement, so that a *single* batch is
+//! computed by *all* workers cooperatively ("hybrid-parallel"), instead of
+//! one batch per worker ("data-parallel"). Three training strategies share
+//! this engine: global-batch, mini-batch and cluster-batch.
+//!
+//! Architecture in this repository (three layers, Python never at runtime):
+//!
+//! * **L3 (this crate)** — the coordinator: graph storage, partitioning,
+//!   NN-TGAR execution, training strategies, multi-versioned parameters,
+//!   a simulated cluster with byte/flop accounting, baselines, and the
+//!   experiment drivers that regenerate every table/figure of the paper.
+//! * **L2 (`python/compile/model.py`)** — dense NN stage operators in JAX,
+//!   AOT-lowered once to HLO text artifacts.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the hot spot
+//!   (tiled projection + blocked aggregation), verified against a jnp
+//!   oracle and lowered `interpret=True` into the same HLO.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the `xla` crate's
+//! PJRT CPU client; the [`tensor`] module provides the bit-exact native
+//! fallback used when artifacts are absent and by most unit tests.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use graphtheta::prelude::*;
+//!
+//! let graph = graphtheta::graph::gen::citation_like("cora", 7);
+//! let cfg = TrainConfig::builder()
+//!     .model(ModelConfig::gcn(graph.feat_dim, 16, graph.num_classes, 2))
+//!     .strategy(StrategyKind::GlobalBatch)
+//!     .epochs(50)
+//!     .build();
+//! let mut trainer = Trainer::new(&graph, cfg, 4).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("test accuracy = {:.4}", report.test_accuracy);
+//! ```
+
+pub mod util;
+pub mod metrics;
+pub mod config;
+pub mod tensor;
+pub mod graph;
+pub mod partition;
+pub mod storage;
+pub mod nn;
+pub mod tgar;
+pub mod engine;
+pub mod cluster;
+pub mod runtime;
+pub mod baselines;
+pub mod experiments;
+
+/// Commonly used types, re-exported for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{CostModelConfig, ModelConfig, StrategyKind, TrainConfig};
+    pub use crate::engine::trainer::{TrainReport, Trainer};
+    pub use crate::graph::{Graph, GraphBuilder};
+    pub use crate::nn::params::ParameterManager;
+    pub use crate::partition::{PartitionPlan, Partitioner};
+    pub use crate::tensor::Tensor;
+    pub use crate::util::rng::Rng;
+}

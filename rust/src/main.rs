@@ -1,0 +1,214 @@
+//! GraphTheta launcher — the L3 leader entrypoint.
+//!
+//! ```text
+//! graphtheta train   --dataset cora [--config run.conf] [--workers 4] [--backend pjrt]
+//! graphtheta partition --dataset reddit --workers 8        # partition-quality report
+//! graphtheta experiment <id>|all [--fast]                  # regenerate a paper table/figure
+//! graphtheta datasets                                      # list generators + stats
+//! ```
+//!
+//! (`clap` is not in the vendored crate set; arguments are parsed by hand.)
+
+use anyhow::{anyhow, bail, Result};
+use graphtheta::config::{self, TrainConfig};
+use graphtheta::engine::trainer::Trainer;
+use graphtheta::experiments;
+use graphtheta::graph::stats::GraphStats;
+use graphtheta::graph::{gen, Graph};
+use graphtheta::metrics::markdown_table;
+use graphtheta::partition::all_partitioners;
+
+fn dataset(name: &str) -> Result<Graph> {
+    Ok(match name {
+        "cora" => gen::citation_like("cora", 7),
+        "citeseer" => gen::citation_like("citeseer", 6),
+        "pubmed" => gen::citation_like("pubmed", 3),
+        "reddit" => gen::reddit_like(),
+        "amazon" => gen::amazon_like(),
+        "papers" => gen::papers_like(),
+        "alipay" => gen::alipay_like(12_000),
+        other => bail!("unknown dataset {other}; see `graphtheta datasets`"),
+    })
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::BTreeMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dname = args.flags.get("dataset").map(String::as_str).unwrap_or("cora");
+    let g = dataset(dname)?;
+    let workers: usize = args
+        .flags
+        .get("workers")
+        .map(|w| w.parse())
+        .transpose()?
+        .unwrap_or(4);
+
+    let mut kv = std::collections::BTreeMap::new();
+    if let Some(path) = args.flags.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        kv = config::parse_kv(&text).map_err(|e| anyhow!(e))?;
+    }
+    // CLI overrides on top of the file.
+    for key in ["strategy", "hidden", "layers", "epochs", "lr", "backend", "model", "seed"] {
+        if let Some(v) = args.flags.get(key) {
+            kv.insert(key.to_string(), v.clone());
+        }
+    }
+    if g.num_classes == 2 && g.edge_feat_dim > 0 {
+        kv.entry("model".into()).or_insert_with(|| "gat_e".into());
+        kv.entry("binary".into()).or_insert_with(|| "true".into());
+    }
+    let cfg: TrainConfig = config::config_from_kv(&kv, g.feat_dim, g.num_classes, g.edge_feat_dim)
+        .map_err(|e| anyhow!(e))?;
+
+    let stats = GraphStats::compute(&g);
+    println!("dataset {dname}: {}", stats.summary());
+    println!(
+        "model {:?} ({} params), strategy {}, {} workers, backend {}",
+        cfg.model.kind,
+        cfg.model.param_count(),
+        cfg.strategy.name(),
+        workers,
+        if cfg.use_pjrt { "pjrt" } else { "native" }
+    );
+    let mut t = Trainer::new(&g, cfg, workers)?;
+    let r = t.run()?;
+    println!("\nloss curve (first→last): {:.4} → {:.4}", r.losses[0], r.losses.last().unwrap());
+    println!("test accuracy: {:.4}", r.test_accuracy);
+    if r.f1 > 0.0 {
+        println!("F1: {:.4}  AUC: {:.4}", r.f1, r.auc);
+    }
+    println!(
+        "modeled distributed time: {:.3}s (fwd {:.3}s, bwd {:.3}s) | wall {:.1}s",
+        r.sim_total, r.sim_forward, r.sim_backward, r.wall_secs
+    );
+    println!(
+        "traffic: {} bytes, {} flops, peak worker mem {:.1} MB",
+        r.total_bytes,
+        r.total_flops,
+        r.peak_part_bytes as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let dname = args.flags.get("dataset").map(String::as_str).unwrap_or("reddit");
+    let g = dataset(dname)?;
+    let p: usize = args.flags.get("workers").map(|w| w.parse()).transpose()?.unwrap_or(8);
+    let mut rows = Vec::new();
+    for part in all_partitioners() {
+        let plan = part.partition(&g, p);
+        let masters = plan.masters_per_part();
+        let edges = plan.edges_per_part();
+        rows.push(vec![
+            part.name().to_string(),
+            format!("{:.3}", plan.replica_factor(&g)),
+            plan.cut_edges(&g).to_string(),
+            format!(
+                "{:.2}",
+                *edges.iter().max().unwrap() as f64 / (g.m as f64 / p as f64)
+            ),
+            format!(
+                "{:.2}",
+                *masters.iter().max().unwrap() as f64 / (g.n as f64 / p as f64)
+            ),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["partitioner", "replica factor", "cut edges", "edge imbalance", "node imbalance"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("usage: graphtheta experiment <id>|all [--fast]"))?;
+    let fast = args.flags.contains_key("fast");
+    if which == "all" {
+        for id in experiments::ALL {
+            eprintln!("=== running {id} ===");
+            println!("{}", experiments::run(id, fast)?);
+        }
+    } else {
+        println!("{}", experiments::run(which, fast)?);
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    let mut rows = Vec::new();
+    for name in ["cora", "citeseer", "pubmed", "reddit", "amazon", "papers", "alipay"] {
+        let g = dataset(name)?;
+        let s = GraphStats::compute(&g);
+        rows.push(vec![
+            name.to_string(),
+            s.n.to_string(),
+            s.m.to_string(),
+            s.feat_dim.to_string(),
+            s.edge_feat_dim.to_string(),
+            s.num_classes.to_string(),
+            s.max_out_degree.to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["dataset", "nodes", "edges", "feat dim", "edge feat", "classes", "max degree"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&argv);
+    match args.positional.first().map(String::as_str) {
+        Some("train") => cmd_train(&args),
+        Some("partition") => cmd_partition(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("datasets") => cmd_datasets(),
+        _ => {
+            eprintln!(
+                "GraphTheta — distributed GNN learning with flexible training strategies\n\n\
+                 usage:\n  graphtheta train --dataset <name> [--strategy global|mini|cluster] \
+                 [--workers N] [--config file] [--backend pjrt]\n  graphtheta partition --dataset <name> --workers N\n  \
+                 graphtheta experiment <id>|all [--fast]   ids: {:?}\n  graphtheta datasets",
+                experiments::ALL
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Telemetry: FLOP/byte/message ledgers and wall-clock stage timers.
+//!
+//! The cluster simulator (one CPU core stands in for the paper's 1,024
+//! Kubernetes workers — see DESIGN.md §1) needs exact work accounting: every
+//! tensor op credits FLOPs to a thread-local counter, every master↔mirror
+//! sync credits bytes/messages. The simulator snapshots these around each
+//! logical worker's task to derive modeled step times.
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+thread_local! {
+    static FLOPS: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+    static MSGS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Credit floating-point operations to the current thread's ledger.
+#[inline]
+pub fn add_flops(n: u64) {
+    FLOPS.with(|c| c.set(c.get().wrapping_add(n)));
+}
+
+/// Credit network bytes + one message to the current thread's ledger.
+#[inline]
+pub fn add_net(bytes: u64) {
+    BYTES.with(|c| c.set(c.get().wrapping_add(bytes)));
+    MSGS.with(|c| c.set(c.get().wrapping_add(1)));
+}
+
+/// A snapshot of the thread-local counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Ledger {
+    pub flops: u64,
+    pub bytes: u64,
+    pub msgs: u64,
+}
+
+impl Ledger {
+    pub fn snapshot() -> Ledger {
+        Ledger {
+            flops: FLOPS.with(Cell::get),
+            bytes: BYTES.with(Cell::get),
+            msgs: MSGS.with(Cell::get),
+        }
+    }
+
+    /// Counters accumulated since `earlier`.
+    pub fn since(&self, earlier: &Ledger) -> Ledger {
+        Ledger {
+            flops: self.flops.wrapping_sub(earlier.flops),
+            bytes: self.bytes.wrapping_sub(earlier.bytes),
+            msgs: self.msgs.wrapping_sub(earlier.msgs),
+        }
+    }
+
+    pub fn add(&mut self, other: &Ledger) {
+        self.flops += other.flops;
+        self.bytes += other.bytes;
+        self.msgs += other.msgs;
+    }
+}
+
+/// Measure the ledger delta produced by `f`.
+pub fn measured<R>(f: impl FnOnce() -> R) -> (R, Ledger) {
+    let before = Ledger::snapshot();
+    let r = f();
+    let after = Ledger::snapshot();
+    (r, after.since(&before))
+}
+
+/// Accumulating per-stage wall-clock + ledger profile, used for the
+/// Figure A3 ablation (runtime percentage per training stage).
+#[derive(Default, Clone, Debug)]
+pub struct StageProfile {
+    stages: BTreeMap<String, StageStat>,
+    order: Vec<String>,
+}
+
+#[derive(Default, Clone, Copy, Debug)]
+pub struct StageStat {
+    pub secs: f64,
+    pub calls: u64,
+    pub ledger: Ledger,
+}
+
+impl StageProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` under the stage label `name`.
+    pub fn scope<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let (r, led) = measured(f);
+        let dt = t0.elapsed().as_secs_f64();
+        if !self.stages.contains_key(name) {
+            self.order.push(name.to_string());
+        }
+        let s = self.stages.entry(name.to_string()).or_default();
+        s.secs += dt;
+        s.calls += 1;
+        s.ledger.add(&led);
+        r
+    }
+
+    /// Record an externally-timed duration under `name`.
+    pub fn add_secs(&mut self, name: &str, secs: f64) {
+        if !self.stages.contains_key(name) {
+            self.order.push(name.to_string());
+        }
+        let s = self.stages.entry(name.to_string()).or_default();
+        s.secs += secs;
+        s.calls += 1;
+    }
+
+    pub fn get(&self, name: &str) -> Option<&StageStat> {
+        self.stages.get(name)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.stages.values().map(|s| s.secs).sum()
+    }
+
+    /// Stages in first-seen order with their share of total time.
+    pub fn percentages(&self) -> Vec<(String, f64)> {
+        let total = self.total_secs().max(1e-12);
+        self.order
+            .iter()
+            .map(|k| (k.clone(), 100.0 * self.stages[k].secs / total))
+            .collect()
+    }
+
+    pub fn merge(&mut self, other: &StageProfile) {
+        for k in &other.order {
+            if !self.stages.contains_key(k) {
+                self.order.push(k.clone());
+            }
+            let s = self.stages.entry(k.clone()).or_default();
+            let o = &other.stages[k];
+            s.secs += o.secs;
+            s.calls += o.calls;
+            s.ledger.add(&o.ledger);
+        }
+    }
+}
+
+/// Render rows as a GitHub-flavored markdown table (the experiment drivers
+/// print the paper's tables in this format).
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| {
+        let mut line = String::from("|");
+        for (i, w) in widths.iter().enumerate() {
+            let empty = String::new();
+            let c = cells.get(i).unwrap_or(&empty);
+            line.push_str(&format!(" {:<w$} |", c, w = w));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+    }
+    sep.push('\n');
+    out.push_str(&sep);
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates_and_diffs() {
+        let before = Ledger::snapshot();
+        add_flops(100);
+        add_net(64);
+        add_net(32);
+        let after = Ledger::snapshot();
+        let d = after.since(&before);
+        assert_eq!(d.flops, 100);
+        assert_eq!(d.bytes, 96);
+        assert_eq!(d.msgs, 2);
+    }
+
+    #[test]
+    fn measured_captures_only_inner_work() {
+        add_flops(7); // noise before
+        let (_, d) = measured(|| add_flops(13));
+        assert_eq!(d.flops, 13);
+    }
+
+    #[test]
+    fn stage_profile_percentages_sum_to_100() {
+        let mut p = StageProfile::new();
+        p.scope("fwd", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        p.scope("bwd", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        p.scope("fwd", || {});
+        let pct: f64 = p.percentages().iter().map(|(_, x)| x).sum();
+        assert!((pct - 100.0).abs() < 1e-6);
+        assert_eq!(p.get("fwd").unwrap().calls, 2);
+    }
+
+    #[test]
+    fn markdown_table_shapes() {
+        let t = markdown_table(
+            &["dataset", "acc"],
+            &[vec!["cora".into(), "82.7".into()], vec!["citeseer".into(), "71.9".into()]],
+        );
+        assert!(t.contains("| dataset"));
+        assert_eq!(t.lines().count(), 4);
+    }
+}

@@ -1,0 +1,238 @@
+//! Neural-network state: model parameters, gradients, optimizers and the
+//! multi-versioned [`params::ParameterManager`] of §4.3.
+//!
+//! The NN *operators* themselves (projection, propagation, apply, decoder,
+//! loss) live in [`crate::tgar`] as NN-TGAR stage UDFs; this module owns
+//! their trainable state.
+
+pub mod params;
+pub mod optim;
+
+use crate::config::{ModelConfig, ModelKind};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Dense (fully-connected) parameters: `y = x @ w + b`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseParams {
+    pub w: Tensor,
+    pub b: Vec<f32>,
+}
+
+impl DenseParams {
+    pub fn glorot(in_dim: usize, out_dim: usize, rng: &mut Rng) -> DenseParams {
+        DenseParams { w: Tensor::glorot(in_dim, out_dim, rng), b: vec![0.0; out_dim] }
+    }
+
+    pub fn zeros_like(&self) -> DenseParams {
+        DenseParams { w: Tensor::zeros(self.w.rows, self.w.cols), b: vec![0.0; self.b.len()] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.w.numel() + self.b.len()
+    }
+}
+
+/// GAT-E attention parameters: score(e: j→i) =
+/// `LeakyReLU(a_src·n_j + a_dst·n_i + a_edge·e_ij)`, gated by a sigmoid
+/// (GraphTheta's GAT-E is "a simplified version of GIPA" — we keep the
+/// gate per-edge-local so the backward is exactly a reverse message pass,
+/// eqs. (16)–(18); see DESIGN.md).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttParams {
+    pub a_src: Vec<f32>,
+    pub a_dst: Vec<f32>,
+    pub a_edge: Vec<f32>,
+}
+
+impl AttParams {
+    pub fn init(hidden: usize, edge_dim: usize, rng: &mut Rng) -> AttParams {
+        let scale = (1.0 / hidden as f64).sqrt() as f32;
+        let mut v = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() * scale).collect()
+        };
+        AttParams { a_src: v(hidden), a_dst: v(hidden), a_edge: v(edge_dim) }
+    }
+
+    pub fn zeros_like(&self) -> AttParams {
+        AttParams {
+            a_src: vec![0.0; self.a_src.len()],
+            a_dst: vec![0.0; self.a_dst.len()],
+            a_edge: vec![0.0; self.a_edge.len()],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.a_src.len() + self.a_dst.len() + self.a_edge.len()
+    }
+}
+
+/// One encoder layer's parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerParams {
+    pub proj: DenseParams,
+    /// Present only for GAT-E.
+    pub att: Option<AttParams>,
+}
+
+/// All trainable parameters of a model (encoder layers + decoder).
+/// The same struct doubles as the gradient accumulator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelParams {
+    pub layers: Vec<LayerParams>,
+    pub decoder: DenseParams,
+}
+
+impl ModelParams {
+    /// Deterministic init from the model config + seed.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> ModelParams {
+        let mut rng = Rng::new(seed);
+        let layers = cfg
+            .layer_dims()
+            .into_iter()
+            .map(|(i, o)| LayerParams {
+                proj: DenseParams::glorot(i, o, &mut rng),
+                att: match cfg.kind {
+                    ModelKind::Gcn => None,
+                    ModelKind::GatE => Some(AttParams::init(o, cfg.edge_dim, &mut rng)),
+                },
+            })
+            .collect();
+        let decoder = DenseParams::glorot(cfg.hidden, cfg.out_dim, &mut rng);
+        ModelParams { layers, decoder }
+    }
+
+    pub fn zeros_like(&self) -> ModelParams {
+        ModelParams {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerParams {
+                    proj: l.proj.zeros_like(),
+                    att: l.att.as_ref().map(AttParams::zeros_like),
+                })
+                .collect(),
+            decoder: self.decoder.zeros_like(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.proj.numel() + l.att.as_ref().map_or(0, AttParams::numel))
+            .sum::<usize>()
+            + self.decoder.numel()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * std::mem::size_of::<f32>()
+    }
+
+    /// Visit every (name, param slice, grad slice) pair — the optimizer's
+    /// traversal. `grads` must have the same architecture.
+    pub fn visit_with(
+        &mut self,
+        grads: &ModelParams,
+        mut f: impl FnMut(&str, &mut [f32], &[f32]),
+    ) {
+        assert_eq!(self.layers.len(), grads.layers.len(), "architecture mismatch");
+        for (k, (l, gl)) in self.layers.iter_mut().zip(&grads.layers).enumerate() {
+            f(&format!("layer{k}.W"), &mut l.proj.w.data, &gl.proj.w.data);
+            f(&format!("layer{k}.b"), &mut l.proj.b, &gl.proj.b);
+            if let (Some(a), Some(ga)) = (l.att.as_mut(), gl.att.as_ref()) {
+                f(&format!("layer{k}.a_src"), &mut a.a_src, &ga.a_src);
+                f(&format!("layer{k}.a_dst"), &mut a.a_dst, &ga.a_dst);
+                f(&format!("layer{k}.a_edge"), &mut a.a_edge, &ga.a_edge);
+            }
+        }
+        f("dec.W", &mut self.decoder.w.data, &grads.decoder.w.data);
+        f("dec.b", &mut self.decoder.b, &grads.decoder.b);
+    }
+
+    /// `self += other` (gradient aggregation across partitions — the
+    /// Reduce stage).
+    pub fn accumulate(&mut self, other: &ModelParams) {
+        self.visit_with(other, |_, p, g| {
+            for (a, b) in p.iter_mut().zip(g) {
+                *a += b;
+            }
+        });
+    }
+
+    /// `self *= s` (e.g. gradient averaging).
+    pub fn scale(&mut self, s: f32) {
+        let zero = self.zeros_like();
+        self.visit_with(&zero, |_, p, _| {
+            for a in p.iter_mut() {
+                *a *= s;
+            }
+        });
+    }
+
+    /// Global L2 norm of all parameters (monitoring / tests).
+    pub fn l2_norm(&self) -> f32 {
+        let mut sq = 0.0f64;
+        let zero = self.zeros_like();
+        let mut me = self.clone();
+        me.visit_with(&zero, |_, p, _| {
+            for &x in p.iter() {
+                sq += (x as f64) * (x as f64);
+            }
+        });
+        (sq as f32).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_matches_config_and_is_deterministic() {
+        let cfg = ModelConfig::gcn(100, 16, 7, 2);
+        let p1 = ModelParams::init(&cfg, 42);
+        let p2 = ModelParams::init(&cfg, 42);
+        assert_eq!(p1, p2);
+        assert_eq!(p1.numel(), cfg.param_count());
+        let p3 = ModelParams::init(&cfg, 43);
+        assert_ne!(p1, p3);
+    }
+
+    #[test]
+    fn gat_e_has_attention_params() {
+        let cfg = ModelConfig::gat_e(72, 32, 2, 2, 57);
+        let p = ModelParams::init(&cfg, 1);
+        assert!(p.layers.iter().all(|l| l.att.is_some()));
+        assert_eq!(p.layers[0].att.as_ref().unwrap().a_edge.len(), 57);
+        assert_eq!(p.numel(), cfg.param_count());
+    }
+
+    #[test]
+    fn accumulate_and_scale() {
+        let cfg = ModelConfig::gcn(4, 3, 2, 1);
+        let p = ModelParams::init(&cfg, 7);
+        let mut acc = p.zeros_like();
+        acc.accumulate(&p);
+        acc.accumulate(&p);
+        acc.scale(0.5);
+        // acc should now equal p.
+        let mut diff = 0.0f32;
+        let mut a = acc.clone();
+        a.visit_with(&p, |_, pv, gv| {
+            for (x, y) in pv.iter().zip(gv) {
+                diff += (x - y).abs();
+            }
+        });
+        assert!(diff < 1e-5, "diff {diff}");
+    }
+
+    #[test]
+    fn visit_covers_every_parameter() {
+        let cfg = ModelConfig::gat_e(8, 4, 3, 2, 5);
+        let mut p = ModelParams::init(&cfg, 9);
+        let zero = p.zeros_like();
+        let mut seen = 0usize;
+        p.visit_with(&zero, |_, pv, _| seen += pv.len());
+        assert_eq!(seen, cfg.param_count());
+    }
+}

@@ -1,0 +1,214 @@
+//! Multi-versioned parameter management (paper §4.3, Figure 7).
+//!
+//! `ParameterManager` keeps a bounded ring of parameter versions so that
+//! concurrently-trained subgraphs can each pin the version they started
+//! with ("workers can fetch parameters of a specific version ... and use
+//! these parameters within the step"). `UpdateParam` aggregates the
+//! gradients pushed for a step and advances the version — synchronously
+//! (all workers of the step must have pushed) or asynchronously with
+//! bounded staleness.
+
+use super::{optim::Optimizer, ModelParams};
+use crate::config::{OptimizerKind, UpdateMode};
+use std::collections::VecDeque;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ParamError {
+    #[error("version {0} evicted from the ring (live: {1}..={2})")]
+    Evicted(u64, u64, u64),
+    #[error("version {requested} too stale: latest {latest}, max staleness {max}")]
+    TooStale { requested: u64, latest: u64, max: usize },
+}
+
+pub struct ParameterManager {
+    versions: VecDeque<(u64, ModelParams)>,
+    latest: u64,
+    capacity: usize,
+    optimizer: Optimizer,
+    update_mode: UpdateMode,
+    /// Pending gradient accumulation for the in-flight step.
+    pending: Option<ModelParams>,
+    pending_pushes: usize,
+}
+
+impl ParameterManager {
+    pub fn new(
+        init: ModelParams,
+        kind: OptimizerKind,
+        lr: f32,
+        weight_decay: f32,
+        update_mode: UpdateMode,
+    ) -> ParameterManager {
+        let mut versions = VecDeque::new();
+        versions.push_back((0u64, init));
+        ParameterManager {
+            versions,
+            latest: 0,
+            capacity: 8,
+            optimizer: Optimizer::new(kind, lr, weight_decay),
+            update_mode,
+            pending: None,
+            pending_pushes: 0,
+        }
+    }
+
+    pub fn latest_version(&self) -> u64 {
+        self.latest
+    }
+
+    /// Fetch a specific version (workers pin the step's version).
+    pub fn fetch(&self, version: u64) -> Result<&ModelParams, ParamError> {
+        let oldest = self.versions.front().map(|(v, _)| *v).unwrap_or(0);
+        if let UpdateMode::Asynchronous { max_staleness } = self.update_mode {
+            if self.latest.saturating_sub(version) as usize > max_staleness {
+                return Err(ParamError::TooStale {
+                    requested: version,
+                    latest: self.latest,
+                    max: max_staleness,
+                });
+            }
+        }
+        self.versions
+            .iter()
+            .find(|(v, _)| *v == version)
+            .map(|(_, p)| p)
+            .ok_or(ParamError::Evicted(version, oldest, self.latest))
+    }
+
+    /// Fetch the newest version.
+    pub fn fetch_latest(&self) -> (u64, &ModelParams) {
+        let (v, p) = self.versions.back().expect("ring never empty");
+        (*v, p)
+    }
+
+    /// Push one worker's gradient contribution for the current step
+    /// (the Reduce stage routes per-partition gradients here).
+    pub fn push_grads(&mut self, grads: &ModelParams) {
+        match self.pending.as_mut() {
+            Some(acc) => acc.accumulate(grads),
+            None => self.pending = Some(grads.clone()),
+        }
+        self.pending_pushes += 1;
+    }
+
+    pub fn pending_pushes(&self) -> usize {
+        self.pending_pushes
+    }
+
+    /// Apply the accumulated gradients (averaged over `expected_pushes` in
+    /// synchronous mode) and publish a new version. Returns the new id.
+    pub fn update(&mut self, expected_pushes: usize) -> u64 {
+        let mut grads = self.pending.take().expect("update without pushed grads");
+        if self.update_mode == UpdateMode::Synchronous {
+            assert_eq!(
+                self.pending_pushes, expected_pushes,
+                "synchronous update requires all workers' gradients"
+            );
+        }
+        // Hybrid-parallel: each worker holds a *partial* gradient of the
+        // same global batch, so the Reduce is a sum, not an average.
+        let _ = &mut grads;
+        self.pending_pushes = 0;
+
+        let (_, latest_params) = self.versions.back().expect("ring never empty");
+        let mut next = latest_params.clone();
+        self.optimizer.step(&mut next, &grads);
+        self.latest += 1;
+        self.versions.push_back((self.latest, next));
+        while self.versions.len() > self.capacity {
+            self.versions.pop_front();
+        }
+        self.latest
+    }
+
+    pub fn live_versions(&self) -> usize {
+        self.versions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn mk() -> ParameterManager {
+        let cfg = ModelConfig::gcn(4, 4, 2, 1);
+        ParameterManager::new(
+            ModelParams::init(&cfg, 1),
+            OptimizerKind::Sgd,
+            0.1,
+            0.0,
+            UpdateMode::Synchronous,
+        )
+    }
+
+    #[test]
+    fn versions_advance_and_old_remain_fetchable() {
+        let mut pm = mk();
+        let v0 = pm.fetch(0).unwrap().clone();
+        for _ in 0..3 {
+            let g = v0.clone();
+            pm.push_grads(&g);
+            pm.update(1);
+        }
+        assert_eq!(pm.latest_version(), 3);
+        assert!(pm.fetch(1).is_ok());
+        // version 0 still in ring (capacity 8)
+        assert_eq!(pm.fetch(0).unwrap(), &v0);
+    }
+
+    #[test]
+    fn ring_evicts_beyond_capacity() {
+        let mut pm = mk();
+        let g = pm.fetch(0).unwrap().zeros_like();
+        for _ in 0..10 {
+            pm.push_grads(&g);
+            pm.update(1);
+        }
+        assert!(matches!(pm.fetch(0), Err(ParamError::Evicted(..))));
+        assert!(pm.fetch(pm.latest_version()).is_ok());
+        assert_eq!(pm.live_versions(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "synchronous update requires")]
+    fn synchronous_update_needs_all_pushes() {
+        let mut pm = mk();
+        let g = pm.fetch(0).unwrap().zeros_like();
+        pm.push_grads(&g);
+        pm.update(4); // expected 4 workers, got 1
+    }
+
+    #[test]
+    fn push_accumulates_partial_gradients() {
+        let mut pm = mk();
+        let mut g = pm.fetch(0).unwrap().zeros_like();
+        g.decoder.b[0] = 1.0;
+        pm.push_grads(&g);
+        pm.push_grads(&g);
+        let before = pm.fetch_latest().1.decoder.b[0];
+        pm.update(2);
+        let after = pm.fetch_latest().1.decoder.b[0];
+        // SGD lr=0.1 on summed grad 2.0 → -0.2.
+        assert!((before - after - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn async_staleness_bound() {
+        let cfg = ModelConfig::gcn(4, 4, 2, 1);
+        let mut pm = ParameterManager::new(
+            ModelParams::init(&cfg, 1),
+            OptimizerKind::Sgd,
+            0.1,
+            0.0,
+            UpdateMode::Asynchronous { max_staleness: 2 },
+        );
+        let g = pm.fetch_latest().1.zeros_like();
+        for _ in 0..4 {
+            pm.push_grads(&g);
+            pm.update(1);
+        }
+        assert!(matches!(pm.fetch(0), Err(ParamError::TooStale { .. })));
+        assert!(pm.fetch(3).is_ok());
+    }
+}

@@ -1,0 +1,197 @@
+//! Louvain community detection (Blondel et al. 2008) — the paper uses it
+//! both as a heuristic partitioner and to generate cluster-batch batches
+//! (§2.3: "cluster-batch generates clusters by using a community detection
+//! algorithm based on maximizing intra-community edges").
+//!
+//! This is the standard two-phase method: local node moves maximizing
+//! modularity gain, then graph aggregation; repeated for `levels` rounds.
+//! Deterministic: nodes are scanned in index order.
+
+use crate::graph::Graph;
+
+/// Detect communities; returns `node -> community id` with community ids
+/// compacted to `0..k`.
+pub fn louvain_communities(g: &Graph, levels: usize) -> Vec<u32> {
+    // Build an undirected weighted adjacency (merge both directions,
+    // drop self-loops — they don't affect optimal partitions).
+    let mut adj: Vec<Vec<(u32, f32)>> = vec![Vec::new(); g.n];
+    for v in 0..g.n {
+        for (t, _) in g.out_edges(v) {
+            if t as usize != v {
+                adj[v].push((t, 1.0));
+            }
+        }
+        for (s, _) in g.in_edges(v) {
+            if s as usize != v {
+                adj[v].push((s, 1.0));
+            }
+        }
+    }
+
+    let mut node_of: Vec<u32> = (0..g.n as u32).collect(); // orig node -> current super node
+    let mut current = adj;
+
+    for _ in 0..levels {
+        let assign = one_level(&current);
+        let (compacted, k) = compact(&assign);
+        // Map original nodes through this level's (compacted) assignment.
+        for c in node_of.iter_mut() {
+            *c = compacted[*c as usize];
+        }
+        if k == current.len() {
+            break; // no merge happened
+        }
+        current = aggregate(&current, &compacted, k);
+    }
+    compact(&node_of).0
+}
+
+/// One sweep of local moves; returns node -> community (not compacted).
+fn one_level(adj: &[Vec<(u32, f32)>]) -> Vec<u32> {
+    let n = adj.len();
+    let mut comm: Vec<u32> = (0..n as u32).collect();
+    let deg: Vec<f32> = adj.iter().map(|nb| nb.iter().map(|&(_, w)| w).sum()).collect();
+    let total: f32 = deg.iter().sum::<f32>().max(1.0);
+    let mut comm_deg = deg.clone(); // Σ degrees per community
+
+    let mut improved = true;
+    let mut sweeps = 0;
+    while improved && sweeps < 10 {
+        improved = false;
+        sweeps += 1;
+        let mut weight_to: std::collections::HashMap<u32, f32> = std::collections::HashMap::new();
+        for v in 0..n {
+            weight_to.clear();
+            for &(u, w) in &adj[v] {
+                *weight_to.entry(comm[u as usize]).or_insert(0.0) += w;
+            }
+            let cur = comm[v];
+            // Remove v from its community.
+            comm_deg[cur as usize] -= deg[v];
+            let base = weight_to.get(&cur).copied().unwrap_or(0.0);
+            let mut best = (cur, 0.0f32);
+            for (&c, &w_in) in weight_to.iter() {
+                let gain = (w_in - base) - deg[v] * (comm_deg[c as usize] - comm_deg[cur as usize]) / total;
+                if gain > best.1 + 1e-9 || (c < best.0 && (gain - best.1).abs() <= 1e-9 && gain > 0.0)
+                {
+                    best = (c, gain);
+                }
+            }
+            comm[v] = best.0;
+            comm_deg[best.0 as usize] += deg[v];
+            if best.0 != cur {
+                improved = true;
+            }
+        }
+    }
+    comm
+}
+
+/// Compact community ids to 0..k; returns (compacted, k).
+fn compact(assign: &[u32]) -> (Vec<u32>, usize) {
+    let mut remap = std::collections::HashMap::new();
+    let mut out = Vec::with_capacity(assign.len());
+    for &c in assign {
+        let next = remap.len() as u32;
+        let id = *remap.entry(c).or_insert(next);
+        out.push(id);
+    }
+    (out, remap.len())
+}
+
+/// Build the community-level weighted graph from a *compacted* assignment.
+fn aggregate(adj: &[Vec<(u32, f32)>], compacted: &[u32], k: usize) -> Vec<Vec<(u32, f32)>> {
+    let mut maps: Vec<std::collections::HashMap<u32, f32>> = vec![Default::default(); k];
+    for (v, nbrs) in adj.iter().enumerate() {
+        let cv = compacted[v];
+        for &(u, w) in nbrs {
+            let cu = compacted[u as usize];
+            if cu != cv {
+                *maps[cv as usize].entry(cu).or_insert(0.0) += w;
+            }
+        }
+    }
+    maps.into_iter()
+        .map(|m| m.into_iter().collect::<Vec<_>>())
+        .collect()
+}
+
+/// Modularity of an assignment on the (undirected-ized) graph — used by
+/// tests and the partition-quality report.
+pub fn modularity(g: &Graph, comm: &[u32]) -> f64 {
+    let mut deg = vec![0f64; g.n];
+    let mut m2 = 0f64; // 2m (each undirected edge counted twice)
+    let mut intra = 0f64;
+    for v in 0..g.n {
+        for (t, _) in g.out_edges(v) {
+            if t as usize == v {
+                continue;
+            }
+            deg[v] += 1.0;
+            deg[t as usize] += 1.0;
+            m2 += 2.0;
+            if comm[v] == comm[t as usize] {
+                intra += 2.0;
+            }
+        }
+    }
+    if m2 == 0.0 {
+        return 0.0;
+    }
+    let k = comm.iter().map(|&c| c as usize + 1).max().unwrap_or(1);
+    let mut comm_deg = vec![0f64; k];
+    for v in 0..g.n {
+        comm_deg[comm[v] as usize] += deg[v];
+    }
+    let expected: f64 = comm_deg.iter().map(|&d| (d / m2) * (d / m2)).sum();
+    intra / m2 - expected
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn recovers_planted_communities_reasonably() {
+        let g = gen::reddit_like();
+        let comm = louvain_communities(&g, 2);
+        let q = modularity(&g, &comm);
+        // The planted SBM partition has decent modularity; Louvain should
+        // find something comparable.
+        let planted = modularity(&g, &g.labels);
+        assert!(q > 0.5 * planted, "louvain Q={q:.3} vs planted {planted:.3}");
+        let k = comm.iter().map(|&c| c + 1).max().unwrap();
+        assert!(k >= 2, "collapsed to one community");
+    }
+
+    #[test]
+    fn beats_random_assignment() {
+        let g = gen::citation_like("cora", 7);
+        let comm = louvain_communities(&g, 2);
+        let q = modularity(&g, &comm);
+        let mut rng = crate::util::rng::Rng::new(1);
+        let random: Vec<u32> = (0..g.n).map(|_| rng.below(8) as u32).collect();
+        let qr = modularity(&g, &random);
+        assert!(q > qr + 0.1, "louvain {q:.3} vs random {qr:.3}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = gen::citation_like("pubmed", 3);
+        assert_eq!(louvain_communities(&g, 2), louvain_communities(&g, 2));
+    }
+
+    #[test]
+    fn handles_edgeless_graph() {
+        let g = crate::graph::GraphBuilder::new("empty", 5).build(
+            crate::tensor::Tensor::zeros(5, 1),
+            vec![0; 5],
+            1,
+            (vec![true; 5], vec![false; 5], vec![false; 5]),
+        );
+        let comm = louvain_communities(&g, 2);
+        assert_eq!(comm.len(), 5);
+        assert_eq!(modularity(&g, &comm), 0.0);
+    }
+}

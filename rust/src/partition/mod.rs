@@ -1,0 +1,423 @@
+//! Graph partitioning (paper §4.1, evaluated in §5.4).
+//!
+//! A [`PartitionPlan`] assigns every node a *master* partition and every
+//! edge a partition. Nodes referenced by edges outside their master
+//! partition get *mirror* placeholders there (created by
+//! [`crate::storage::DistGraph`]). Two hash partitioners match the paper's
+//! §5.4 comparison:
+//!
+//! * **1D-edge** (default): `master(v) = hash(v) % p`, every edge lives
+//!   with its source's master — so a master node and all its out-edges are
+//!   co-located, which is what makes edge-attribute loading and edge
+//!   attention local (the paper's rationale for the default).
+//! * **vertex-cut**: 2D grid hash over `(src, dst)` — evens out edges
+//!   under skewed degree distributions at the cost of more mirrors.
+//!
+//! Plus two heuristic partitioners used by cluster-batch: Louvain community
+//! detection ([`louvain`]) and a greedy BFS METIS-like bisection.
+
+pub mod louvain;
+
+use crate::graph::Graph;
+use crate::util::{hash64, hash64_pair};
+
+/// Node→master and edge→partition assignment.
+#[derive(Clone, Debug)]
+pub struct PartitionPlan {
+    pub p: usize,
+    /// `master_of[v]` = partition holding v's master replica.
+    pub master_of: Vec<u32>,
+    /// `edge_part[e]` = partition executing edge `e`'s Gather.
+    pub edge_part: Vec<u32>,
+}
+
+impl PartitionPlan {
+    /// Validate structural invariants (used by property tests).
+    pub fn check(&self, g: &Graph) -> Result<(), String> {
+        if self.master_of.len() != g.n {
+            return Err("master_of length".into());
+        }
+        if self.edge_part.len() != g.m {
+            return Err("edge_part length".into());
+        }
+        if let Some(&x) = self.master_of.iter().find(|&&x| x as usize >= self.p) {
+            return Err(format!("master partition {x} out of range"));
+        }
+        if let Some(&x) = self.edge_part.iter().find(|&&x| x as usize >= self.p) {
+            return Err(format!("edge partition {x} out of range"));
+        }
+        Ok(())
+    }
+
+    /// Master node count per partition.
+    pub fn masters_per_part(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.p];
+        for &x in &self.master_of {
+            c[x as usize] += 1;
+        }
+        c
+    }
+
+    /// Edge count per partition.
+    pub fn edges_per_part(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.p];
+        for &x in &self.edge_part {
+            c[x as usize] += 1;
+        }
+        c
+    }
+
+    /// Replica factor `(N_master + N_mirror) / N_master` — the memory /
+    /// traffic overhead metric the paper reduces to ~1 by keeping mirrors
+    /// as placeholders. A node is *present* in a partition if any of its
+    /// edges is assigned there or its master is there.
+    pub fn replica_factor(&self, g: &Graph) -> f64 {
+        let mut present = vec![0u64; g.n]; // bitmask over partitions (p<=64) or count
+        assert!(self.p <= 64, "replica_factor supports p<=64");
+        for v in 0..g.n {
+            present[v] |= 1u64 << self.master_of[v];
+        }
+        for v in 0..g.n {
+            for (t, e) in g.out_edges(v) {
+                let part = self.edge_part[e as usize];
+                present[v] |= 1u64 << part;
+                present[t as usize] |= 1u64 << part;
+            }
+        }
+        let total: u64 = present.iter().map(|b| b.count_ones() as u64).sum();
+        total as f64 / g.n as f64
+    }
+
+    /// Edges whose Gather partition differs from an endpoint's master —
+    /// each causes master↔mirror traffic in a superstep.
+    pub fn cut_edges(&self, g: &Graph) -> usize {
+        let mut cut = 0usize;
+        for v in 0..g.n {
+            for (t, e) in g.out_edges(v) {
+                let part = self.edge_part[e as usize];
+                if self.master_of[v] != part || self.master_of[t as usize] != part {
+                    cut += 1;
+                }
+            }
+        }
+        cut
+    }
+}
+
+/// A partitioning method. Plans must be deterministic.
+pub trait Partitioner {
+    fn name(&self) -> &'static str;
+    fn partition(&self, g: &Graph, p: usize) -> PartitionPlan;
+}
+
+/// 1D-edge partition (GraphTheta's default, §5.4): nodes hashed to masters,
+/// each edge co-located with its **source** master (the paper allows the
+/// destination as the indicator too — see [`Edge1D::by_destination`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Edge1D {
+    pub by_dst: bool,
+}
+
+impl Edge1D {
+    pub fn by_destination() -> Self {
+        Edge1D { by_dst: true }
+    }
+}
+
+impl Partitioner for Edge1D {
+    fn name(&self) -> &'static str {
+        "1d-edge"
+    }
+
+    fn partition(&self, g: &Graph, p: usize) -> PartitionPlan {
+        let master_of: Vec<u32> = (0..g.n).map(|v| (hash64(v as u64) % p as u64) as u32).collect();
+        let mut edge_part = vec![0u32; g.m];
+        for v in 0..g.n {
+            for (t, e) in g.out_edges(v) {
+                let anchor = if self.by_dst { t as usize } else { v };
+                edge_part[e as usize] = master_of[anchor];
+            }
+        }
+        PartitionPlan { p, master_of, edge_part }
+    }
+}
+
+/// 2D-grid vertex-cut (PowerGraph-style, §5.4): an edge's partition comes
+/// from a hash of both endpoints, spreading high-degree nodes' edges over
+/// many partitions.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VertexCut;
+
+impl Partitioner for VertexCut {
+    fn name(&self) -> &'static str {
+        "vertex-cut"
+    }
+
+    fn partition(&self, g: &Graph, p: usize) -> PartitionPlan {
+        let master_of: Vec<u32> = (0..g.n).map(|v| (hash64(v as u64) % p as u64) as u32).collect();
+        let mut edge_part = vec![0u32; g.m];
+        for v in 0..g.n {
+            for (t, e) in g.out_edges(v) {
+                edge_part[e as usize] =
+                    (hash64_pair(v as u64, t as u64) % p as u64) as u32;
+            }
+        }
+        PartitionPlan { p, master_of, edge_part }
+    }
+}
+
+/// Louvain-based partitioner: detect communities, then bin-pack them into
+/// `p` balanced partitions. Used for cluster-batch locality (§4.1 mentions
+/// Louvain/METIS support "to adapt cluster-batched training").
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LouvainPartitioner;
+
+impl Partitioner for LouvainPartitioner {
+    fn name(&self) -> &'static str {
+        "louvain"
+    }
+
+    fn partition(&self, g: &Graph, p: usize) -> PartitionPlan {
+        let comm = louvain::louvain_communities(g, 2);
+        let master_of = pack_groups(&comm, g, p);
+        let mut edge_part = vec![0u32; g.m];
+        for v in 0..g.n {
+            for (_, e) in g.out_edges(v) {
+                edge_part[e as usize] = master_of[v];
+            }
+        }
+        PartitionPlan { p, master_of, edge_part }
+    }
+}
+
+/// Greedy BFS grown partitions (METIS-flavored): repeatedly grow a
+/// partition by BFS until it reaches `n/p` nodes, preferring frontier
+/// nodes. Gives contiguous, low-cut parts on mesh-like graphs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GreedyBfs;
+
+impl Partitioner for GreedyBfs {
+    fn name(&self) -> &'static str {
+        "greedy-bfs"
+    }
+
+    fn partition(&self, g: &Graph, p: usize) -> PartitionPlan {
+        let target = g.n.div_ceil(p);
+        let mut master_of = vec![u32::MAX; g.n];
+        let mut next_unassigned = 0usize;
+        let mut queue = std::collections::VecDeque::new();
+        for part in 0..p as u32 {
+            let mut size = 0usize;
+            queue.clear();
+            while size < target {
+                let v = match queue.pop_front() {
+                    Some(v) => v,
+                    None => {
+                        while next_unassigned < g.n && master_of[next_unassigned] != u32::MAX {
+                            next_unassigned += 1;
+                        }
+                        if next_unassigned >= g.n {
+                            break;
+                        }
+                        next_unassigned
+                    }
+                };
+                if master_of[v] != u32::MAX {
+                    continue;
+                }
+                master_of[v] = part;
+                size += 1;
+                for (t, _) in g.out_edges(v) {
+                    if master_of[t as usize] == u32::MAX {
+                        queue.push_back(t as usize);
+                    }
+                }
+            }
+            if next_unassigned >= g.n && queue.is_empty() {
+                break;
+            }
+        }
+        // Any stragglers (isolated nodes) round-robin.
+        for v in 0..g.n {
+            if master_of[v] == u32::MAX {
+                master_of[v] = (v % p) as u32;
+            }
+        }
+        let mut edge_part = vec![0u32; g.m];
+        for v in 0..g.n {
+            for (_, e) in g.out_edges(v) {
+                edge_part[e as usize] = master_of[v];
+            }
+        }
+        PartitionPlan { p, master_of, edge_part }
+    }
+}
+
+/// Balanced bin-packing of group ids into `p` partitions (largest group to
+/// currently-smallest partition).
+pub fn pack_groups(group_of: &[u32], _g: &Graph, p: usize) -> Vec<u32> {
+    let ngroups = group_of.iter().map(|&c| c as usize + 1).max().unwrap_or(1);
+    let mut sizes = vec![0usize; ngroups];
+    for &c in group_of {
+        sizes[c as usize] += 1;
+    }
+    let mut order: Vec<usize> = (0..ngroups).collect();
+    order.sort_by_key(|&c| std::cmp::Reverse(sizes[c]));
+    let mut part_load = vec![0usize; p];
+    let mut part_of_group = vec![0u32; ngroups];
+    for c in order {
+        let best = (0..p).min_by_key(|&q| part_load[q]).unwrap();
+        part_of_group[c] = best as u32;
+        part_load[best] += sizes[c];
+    }
+    group_of.iter().map(|&c| part_of_group[c as usize]).collect()
+}
+
+/// All partitioners for sweep-style experiments.
+pub fn all_partitioners() -> Vec<Box<dyn Partitioner>> {
+    vec![
+        Box::new(Edge1D::default()),
+        Box::new(VertexCut),
+        Box::new(LouvainPartitioner),
+        Box::new(GreedyBfs),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::util::qcheck::qcheck_cases;
+
+    #[test]
+    fn plans_are_valid_on_all_generators() {
+        let graphs = [
+            gen::citation_like("cora", 7),
+            gen::reddit_like(),
+            gen::alipay_like(1500),
+        ];
+        for g in &graphs {
+            for part in all_partitioners() {
+                for p in [1usize, 2, 4, 8] {
+                    let plan = part.partition(g, p);
+                    plan.check(g).unwrap_or_else(|e| {
+                        panic!("{} on {} p={}: {}", part.name(), g.name, p, e)
+                    });
+                    assert_eq!(
+                        plan.edges_per_part().iter().sum::<usize>(),
+                        g.m,
+                        "edges lost"
+                    );
+                    assert_eq!(plan.masters_per_part().iter().sum::<usize>(), g.n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn edge1d_colocates_source_edges() {
+        let g = gen::citation_like("cora", 7);
+        let plan = Edge1D::default().partition(&g, 8);
+        for v in 0..g.n {
+            for (_, e) in g.out_edges(v) {
+                assert_eq!(plan.edge_part[e as usize], plan.master_of[v]);
+            }
+        }
+    }
+
+    #[test]
+    fn single_partition_has_replica_factor_one() {
+        let g = gen::citation_like("citeseer", 6);
+        for part in all_partitioners() {
+            let plan = part.partition(&g, 1);
+            assert!((plan.replica_factor(&g) - 1.0).abs() < 1e-9, "{}", part.name());
+            assert_eq!(plan.cut_edges(&g), 0);
+        }
+    }
+
+    #[test]
+    fn vertex_cut_balances_edges_better_on_skewed_graph() {
+        let g = gen::alipay_like(3000);
+        let p = 8;
+        let e1 = Edge1D::default().partition(&g, p);
+        let vc = VertexCut.partition(&g, p);
+        let imbalance = |plan: &PartitionPlan| {
+            let per = plan.edges_per_part();
+            let max = *per.iter().max().unwrap() as f64;
+            let mean = g.m as f64 / p as f64;
+            max / mean
+        };
+        assert!(
+            imbalance(&vc) <= imbalance(&e1) + 0.05,
+            "vertex-cut {:.3} vs 1d {:.3}",
+            imbalance(&vc),
+            imbalance(&e1)
+        );
+    }
+
+    #[test]
+    fn vertex_cut_has_more_replicas_than_edge1d() {
+        // The §5.4 memory observation: vertex-cut's peak memory is higher.
+        let g = gen::amazon_like();
+        let p = 8;
+        let rf_vc = VertexCut.partition(&g, p).replica_factor(&g);
+        let rf_1d = Edge1D::default().partition(&g, p).replica_factor(&g);
+        assert!(rf_vc > rf_1d, "vc {rf_vc} vs 1d {rf_1d}");
+    }
+
+    #[test]
+    fn louvain_partition_cuts_fewer_edges_on_community_graph() {
+        let g = gen::reddit_like();
+        let p = 4;
+        let cut_lv = LouvainPartitioner.partition(&g, p).cut_edges(&g);
+        let cut_1d = Edge1D::default().partition(&g, p).cut_edges(&g);
+        assert!(
+            (cut_lv as f64) < 0.9 * cut_1d as f64,
+            "louvain {cut_lv} vs 1d {cut_1d}"
+        );
+    }
+
+    #[test]
+    fn pack_groups_balances() {
+        qcheck_cases(
+            "pack-groups-balance",
+            24,
+            |r| {
+                let ngroups = 3 + r.below(30);
+                let sizes: Vec<usize> = (0..ngroups).map(|_| 1 + r.below(50)).collect();
+                let p = 2 + r.below(6);
+                (sizes, p)
+            },
+            |(sizes, p)| {
+                let group_of: Vec<u32> = sizes
+                    .iter()
+                    .enumerate()
+                    .flat_map(|(c, &s)| std::iter::repeat(c as u32).take(s))
+                    .collect();
+                let g = crate::graph::GraphBuilder::new("x", group_of.len()).build(
+                    crate::tensor::Tensor::zeros(group_of.len(), 1),
+                    vec![0; group_of.len()],
+                    1,
+                    (
+                        vec![true; group_of.len()],
+                        vec![false; group_of.len()],
+                        vec![false; group_of.len()],
+                    ),
+                );
+                let assign = pack_groups(&group_of, &g, *p);
+                let mut load = vec![0usize; *p];
+                for &a in &assign {
+                    load[a as usize] += 1;
+                }
+                let max = *load.iter().max().unwrap();
+                let biggest_group = *sizes.iter().max().unwrap();
+                let mean = group_of.len() as f64 / *p as f64;
+                // LPT bound: max load <= mean + largest item.
+                if max as f64 > mean + biggest_group as f64 {
+                    return Err(format!("load {max} exceeds LPT bound"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

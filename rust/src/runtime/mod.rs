@@ -1,0 +1,112 @@
+//! Stage-operator execution backends.
+//!
+//! The NN-TGAR engine calls dense NN operators (projection, decoder)
+//! through [`StageBackend`]. Two implementations:
+//!
+//! * [`NativeBackend`] — the in-crate f32 math ([`crate::tensor`]);
+//! * [`pjrt::PjrtBackend`] — AOT-compiled HLO artifacts produced by the
+//!   JAX/Pallas layers (`python/compile/`), loaded once through the `xla`
+//!   crate's PJRT CPU client and executed from the Rust hot path. Python
+//!   is never involved at runtime.
+//!
+//! PJRT executables have static shapes, so callers' row counts are padded
+//! up to the next *bucket* listed in the artifact manifest; shapes with no
+//! artifact fall back to native (and are counted, so tests can assert the
+//! hot path really used PJRT).
+
+pub mod pjrt;
+
+use crate::tensor::{ops, Tensor};
+
+/// Epilogue activation fused into the projection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+}
+
+/// Executes the dense stage operators of NN-TGAR.
+pub trait StageBackend {
+    fn name(&self) -> &'static str;
+
+    /// `y = act(x @ w + b)` — the NN-Transform projection / decoder.
+    fn proj(&mut self, x: &Tensor, w: &Tensor, b: &[f32], act: Activation) -> Tensor;
+
+    /// Backward of `proj` (ignoring the activation, which the caller
+    /// handles): returns `(∂x, ∂w, ∂b)` given upstream `g`.
+    fn proj_bwd(&mut self, x: &Tensor, w: &Tensor, g: &Tensor) -> (Tensor, Tensor, Vec<f32>) {
+        let gx = g.matmul_nt(w);
+        let gw = x.matmul_tn(g);
+        let gb = g.sum_rows();
+        (gx, gw, gb)
+    }
+}
+
+/// Pure-Rust backend (default; bit-exact reference for tests).
+#[derive(Default, Debug)]
+pub struct NativeBackend;
+
+impl StageBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn proj(&mut self, x: &Tensor, w: &Tensor, b: &[f32], act: Activation) -> Tensor {
+        let mut y = x.matmul(w);
+        y.add_bias(b);
+        if act == Activation::Relu {
+            ops::relu(&mut y);
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_proj_matches_manual() {
+        let mut r = Rng::new(3);
+        let x = Tensor::randn(5, 4, 1.0, &mut r);
+        let w = Tensor::randn(4, 3, 1.0, &mut r);
+        let b = vec![0.1, -0.2, 0.3];
+        let mut be = NativeBackend;
+        let y = be.proj(&x, &w, &b, Activation::None);
+        let mut want = x.matmul(&w);
+        want.add_bias(&b);
+        assert_eq!(y.data, want.data);
+        let yr = be.proj(&x, &w, &b, Activation::Relu);
+        assert!(yr.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn proj_bwd_matches_finite_difference() {
+        let mut r = Rng::new(4);
+        let x = Tensor::randn(3, 4, 1.0, &mut r);
+        let mut w = Tensor::randn(4, 2, 1.0, &mut r);
+        let b = vec![0.0, 0.0];
+        let g = Tensor::randn(3, 2, 1.0, &mut r);
+        let mut be = NativeBackend;
+        let (_, gw, _) = be.proj_bwd(&x, &w, &g);
+        // loss = <y, g>; d loss / d w[idx] via finite difference
+        let eps = 1e-3f32;
+        for idx in [0usize, 3, 7] {
+            let orig = w.data[idx];
+            w.data[idx] = orig + eps;
+            let yp = be.proj(&x, &w, &b, Activation::None);
+            w.data[idx] = orig - eps;
+            let ym = be.proj(&x, &w, &b, Activation::None);
+            w.data[idx] = orig;
+            let fd: f32 = yp
+                .data
+                .iter()
+                .zip(&ym.data)
+                .zip(&g.data)
+                .map(|((p, m), gg)| (p - m) / (2.0 * eps) * gg)
+                .sum();
+            assert!((fd - gw.data[idx]).abs() < 1e-2, "idx {idx}: {fd} vs {}", gw.data[idx]);
+        }
+    }
+}

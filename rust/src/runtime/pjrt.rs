@@ -1,0 +1,232 @@
+//! PJRT execution of the AOT artifacts (`artifacts/*.hlo.txt`).
+//!
+//! `python/compile/aot.py` lowers the L2 JAX stage functions (which call
+//! the L1 Pallas kernels with `interpret=True`) to **HLO text** — not
+//! serialized protos: jax ≥ 0.5 emits 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects, while the text parser reassigns
+//! ids (see /opt/xla-example/README.md). It also writes
+//! `artifacts/manifest.json` describing each entry point's static shapes.
+//!
+//! [`PjrtBackend`] compiles every artifact once at startup, then serves
+//! `proj` calls by padding the row count up to the nearest bucket with a
+//! matching `(d_in, d_out, activation)`. Shape misses fall back to the
+//! native backend and are counted in [`PjrtBackend::fallbacks`].
+
+use super::{Activation, NativeBackend, StageBackend};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One AOT entry point from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub rows: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub activation: Activation,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arr = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing entries"))?;
+        let mut entries = Vec::new();
+        for e in arr {
+            let s = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("manifest entry missing {k}"))?
+                    .to_string())
+            };
+            let u = |k: &str| -> Result<usize> {
+                e.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("manifest entry missing {k}"))
+            };
+            entries.push(ArtifactEntry {
+                name: s("name")?,
+                file: s("file")?,
+                rows: u("rows")?,
+                d_in: u("d_in")?,
+                d_out: u("d_out")?,
+                activation: match s("activation")?.as_str() {
+                    "relu" => Activation::Relu,
+                    _ => Activation::None,
+                },
+            });
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    rows: usize,
+}
+
+/// PJRT-backed stage executor.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    /// (d_in, d_out, act) → bucket row counts ascending with executables.
+    table: HashMap<(usize, usize, bool), Vec<Compiled>>,
+    fallback: NativeBackend,
+    /// Calls served by PJRT vs fallen back to native.
+    pub hits: u64,
+    pub fallbacks: u64,
+}
+
+impl PjrtBackend {
+    /// Compile every artifact in `dir` (fails if the manifest is missing).
+    pub fn load(dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        let mut table: HashMap<(usize, usize, bool), Vec<Compiled>> = HashMap::new();
+        for entry in &manifest.entries {
+            if !entry.name.starts_with("proj") {
+                continue; // other entry points (full layers) are for parity tests
+            }
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+            let key = (entry.d_in, entry.d_out, entry.activation == Activation::Relu);
+            table.entry(key).or_default().push(Compiled { exe, rows: entry.rows });
+        }
+        for v in table.values_mut() {
+            v.sort_by_key(|c| c.rows);
+        }
+        Ok(PjrtBackend { client, table, fallback: NativeBackend, hits: 0, fallbacks: 0 })
+    }
+
+    /// Number of compiled (shape-specialized) executables.
+    pub fn executables(&self) -> usize {
+        self.table.values().map(Vec::len).sum()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run_padded(
+        &mut self,
+        c_idx: (usize, usize, bool, usize),
+        x: &Tensor,
+        w: &Tensor,
+        b: &[f32],
+    ) -> Result<Tensor> {
+        let (d_in, d_out, relu, which) = c_idx;
+        let compiled = &self.table[&(d_in, d_out, relu)][which];
+        let rows = compiled.rows;
+        // Pad x up to the bucket row count.
+        let mut xp = vec![0.0f32; rows * d_in];
+        xp[..x.data.len()].copy_from_slice(&x.data);
+        let lx = xla::Literal::vec1(&xp)
+            .reshape(&[rows as i64, d_in as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let lw = xla::Literal::vec1(&w.data)
+            .reshape(&[d_in as i64, d_out as i64])
+            .map_err(|e| anyhow!("reshape w: {e:?}"))?;
+        let lb = xla::Literal::vec1(b);
+        let result = compiled
+            .exe
+            .execute::<xla::Literal>(&[lx, lw, lb])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let vals = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let mut y = Tensor::zeros(x.rows, d_out);
+        y.data.copy_from_slice(&vals[..x.rows * d_out]);
+        // Credit the *useful* FLOPs (padding rows are wasted work the cost
+        // model should not reward).
+        crate::metrics::add_flops(2 * (x.rows * d_in * d_out) as u64);
+        Ok(y)
+    }
+}
+
+impl StageBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn proj(&mut self, x: &Tensor, w: &Tensor, b: &[f32], act: Activation) -> Tensor {
+        let key = (w.rows, w.cols, act == Activation::Relu);
+        let bucket = self.table.get(&key).and_then(|v| {
+            v.iter()
+                .position(|c| c.rows >= x.rows)
+                .map(|i| (w.rows, w.cols, act == Activation::Relu, i))
+        });
+        match bucket {
+            Some(idx) => match self.run_padded(idx, x, w, b) {
+                Ok(y) => {
+                    self.hits += 1;
+                    y
+                }
+                Err(e) => {
+                    log::warn!("pjrt execution failed ({e}); falling back to native");
+                    self.fallbacks += 1;
+                    self.fallback.proj(x, w, b, act)
+                }
+            },
+            None => {
+                self.fallbacks += 1;
+                self.fallback.proj(x, w, b, act)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            r#"{"entries":[
+                {"name":"proj_relu","file":"proj_256_64_32_relu.hlo.txt",
+                 "rows":256,"d_in":64,"d_out":32,"activation":"relu"},
+                {"name":"proj","file":"proj_256_64_32_none.hlo.txt",
+                 "rows":256,"d_in":64,"d_out":32,"activation":"none"}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[0].activation, Activation::Relu);
+        assert_eq!(m.entries[1].rows, 256);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"entries":[{"name":"x"}]}"#).is_err());
+    }
+
+    // PJRT execution tests live in rust/tests/backend_parity.rs — they
+    // need `make artifacts` to have run.
+}

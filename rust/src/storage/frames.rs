@@ -1,0 +1,171 @@
+//! Task-oriented tensor frames + tensor cache (paper §4.3, "Parallel
+//! tensors storage").
+//!
+//! A *frame* is the stack of per-layer tensors a task (forward / backward /
+//! aggregation phase) needs for one subgraph: projection outputs `n^k`,
+//! pre-activation sums `M^k`, embeddings `h^k`. Frames allocate through a
+//! [`TensorCache`] so the training hot loop never returns buffers to the
+//! OS ("a tensor caching between frames and standard memory manipulation
+//! libraries to avoid frequently trapping into operating system kernel
+//! spaces").
+
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Size-bucketed pool of f32 buffers.
+#[derive(Default, Debug)]
+pub struct TensorCache {
+    pools: HashMap<usize, Vec<Vec<f32>>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl TensorCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a zeroed `[rows, cols]` tensor, reusing a pooled buffer if one
+    /// of the exact size exists.
+    pub fn take(&mut self, rows: usize, cols: usize) -> Tensor {
+        let len = rows * cols;
+        if let Some(mut buf) = self.pools.get_mut(&len).and_then(Vec::pop) {
+            self.hits += 1;
+            buf.iter_mut().for_each(|x| *x = 0.0);
+            Tensor { rows, cols, data: buf }
+        } else {
+            self.misses += 1;
+            Tensor::zeros(rows, cols)
+        }
+    }
+
+    /// Return a tensor's buffer to the pool.
+    pub fn put(&mut self, t: Tensor) {
+        self.pools.entry(t.data.len()).or_default().push(t.data);
+    }
+
+    /// Bytes currently parked in the pool.
+    pub fn pooled_bytes(&self) -> usize {
+        self.pools
+            .iter()
+            .map(|(len, bufs)| len * bufs.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
+
+/// Per-layer tensors for one (partition, task) — keyed by slot name.
+/// Memory is allocated and released per frame "on the fly" to bound peak
+/// usage: [`Frame::release`] sends a layer's tensors back to the cache as
+/// soon as the backward pass has consumed them.
+#[derive(Default, Debug)]
+pub struct Frame {
+    slots: HashMap<(String, usize), Tensor>,
+}
+
+impl Frame {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, layer: usize, t: Tensor) {
+        self.slots.insert((name.to_string(), layer), t);
+    }
+
+    pub fn get(&self, name: &str, layer: usize) -> Option<&Tensor> {
+        self.slots.get(&(name.to_string(), layer))
+    }
+
+    pub fn get_mut(&mut self, name: &str, layer: usize) -> Option<&mut Tensor> {
+        self.slots.get_mut(&(name.to_string(), layer))
+    }
+
+    pub fn take(&mut self, name: &str, layer: usize) -> Option<Tensor> {
+        self.slots.remove(&(name.to_string(), layer))
+    }
+
+    /// Release every tensor of `layer` back into the cache.
+    pub fn release(&mut self, layer: usize, cache: &mut TensorCache) {
+        let keys: Vec<_> = self
+            .slots
+            .keys()
+            .filter(|(_, l)| *l == layer)
+            .cloned()
+            .collect();
+        for k in keys {
+            if let Some(t) = self.slots.remove(&k) {
+                cache.put(t);
+            }
+        }
+    }
+
+    /// Release everything (end of a training step).
+    pub fn clear(&mut self, cache: &mut TensorCache) {
+        for (_, t) in self.slots.drain() {
+            cache.put(t);
+        }
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        self.slots
+            .values()
+            .map(|t| t.numel() * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_reuses_buffers() {
+        let mut c = TensorCache::new();
+        let t = c.take(8, 4);
+        assert_eq!(c.misses, 1);
+        let ptr = t.data.as_ptr();
+        c.put(t);
+        let t2 = c.take(4, 8); // same numel → same bucket
+        assert_eq!(c.hits, 1);
+        assert_eq!(t2.data.as_ptr(), ptr, "buffer not reused");
+        assert!(t2.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn cache_zeroes_reused_buffers() {
+        let mut c = TensorCache::new();
+        let mut t = c.take(2, 2);
+        t.data.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        c.put(t);
+        let t2 = c.take(2, 2);
+        assert_eq!(t2.data, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn frame_release_returns_layer_to_cache() {
+        let mut c = TensorCache::new();
+        let mut f = Frame::new();
+        f.insert("n", 0, c.take(4, 4));
+        f.insert("M", 0, c.take(4, 4));
+        f.insert("n", 1, c.take(4, 4));
+        let live_before = f.live_bytes();
+        f.release(0, &mut c);
+        assert_eq!(f.live_bytes(), live_before / 3);
+        assert!(f.get("n", 0).is_none());
+        assert!(f.get("n", 1).is_some());
+        assert_eq!(c.pooled_bytes(), 2 * 16 * 4);
+    }
+
+    #[test]
+    fn frame_clear_empties_everything() {
+        let mut c = TensorCache::new();
+        let mut f = Frame::new();
+        f.insert("h", 0, c.take(2, 3));
+        f.insert("h", 1, c.take(2, 3));
+        f.clear(&mut c);
+        assert_eq!(f.live_bytes(), 0);
+        // Both buffers pooled → two takes hit.
+        let _ = c.take(2, 3);
+        let _ = c.take(3, 2);
+        assert_eq!(c.hits, 2);
+    }
+}

@@ -1,0 +1,358 @@
+//! Distributed graph representation (paper §4.1).
+//!
+//! A [`DistGraph`] materializes a [`PartitionPlan`] into per-partition
+//! local views. Each partition holds:
+//!
+//! * its **master** nodes (owned state: embeddings, gradients), then
+//! * **mirror** placeholders for remote nodes referenced by local edges —
+//!   mirrors hold *node state only when synchronized*, not persistent
+//!   values (the paper's memory optimization over PowerGraph), and
+//! * a local CSR/CSC over exactly the edges the plan assigned here, using
+//!   **local** vertex ids via the private vertex-ID mapping (§4.2's
+//!   "reuse CSR/CSC indexing" is realized as this one-time remap).
+//!
+//! Communication happens only between a master and its mirrors
+//! ([`DistGraph::mirror_targets`] / [`DistGraph::master_of_mirror`] give
+//! the routes); the NN-TGAR engine in [`crate::tgar`] does the actual
+//! value/partial-sum movement through [`crate::cluster::Network`].
+
+pub mod frames;
+
+use crate::graph::Graph;
+use crate::partition::PartitionPlan;
+use std::collections::HashMap;
+
+/// One partition's local view of the global graph.
+#[derive(Clone, Debug)]
+pub struct PartitionView {
+    pub part: u32,
+    /// Local id → global id. Masters occupy `0..n_masters`, mirrors follow.
+    pub nodes: Vec<u32>,
+    pub n_masters: usize,
+    /// Global id → local id (the private vertex-ID mapping of §4.2).
+    pub lid_of: HashMap<u32, u32>,
+
+    /// Local CSR over the edges assigned to this partition. Local edge id =
+    /// position in `csr_targets`; `edge_gids` maps back to global edge ids.
+    pub csr_offsets: Vec<usize>,
+    pub csr_targets: Vec<u32>,
+    /// Source local id per local edge (precomputed — the NN-G stages walk
+    /// edges in active-list order, so an O(1) lookup beats re-deriving the
+    /// source from `csr_offsets` per edge; see EXPERIMENTS.md §Perf).
+    pub csr_sources_by_edge: Vec<u32>,
+    /// Local CSC mirrors the same local edges.
+    pub csc_offsets: Vec<usize>,
+    pub csc_sources: Vec<u32>,
+    pub csc_leids: Vec<u32>,
+
+    pub edge_gids: Vec<u32>,
+    /// Laplacian weight per local edge (copied from the global graph).
+    pub edge_weights: Vec<f32>,
+}
+
+impl PartitionView {
+    #[inline]
+    pub fn n_local(&self) -> usize {
+        self.nodes.len()
+    }
+
+    #[inline]
+    pub fn n_mirrors(&self) -> usize {
+        self.nodes.len() - self.n_masters
+    }
+
+    #[inline]
+    pub fn is_master(&self, lid: u32) -> bool {
+        (lid as usize) < self.n_masters
+    }
+
+    #[inline]
+    pub fn m_local(&self) -> usize {
+        self.csr_targets.len()
+    }
+
+    /// Out-edges of a local node: `(target lid, local edge id)`.
+    #[inline]
+    pub fn out_edges(&self, lid: usize) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (self.csr_offsets[lid]..self.csr_offsets[lid + 1])
+            .map(move |e| (self.csr_targets[e], e as u32))
+    }
+
+    /// In-edges of a local node: `(source lid, local edge id)`.
+    #[inline]
+    pub fn in_edges(&self, lid: usize) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (self.csc_offsets[lid]..self.csc_offsets[lid + 1])
+            .map(move |i| (self.csc_sources[i], self.csc_leids[i]))
+    }
+}
+
+/// The global graph distributed by a partition plan.
+#[derive(Clone, Debug)]
+pub struct DistGraph {
+    pub plan: PartitionPlan,
+    pub parts: Vec<PartitionView>,
+    /// For each global node: the partitions holding a mirror of it.
+    /// (Indexed lookup for the master→mirror sync routes.)
+    mirror_parts: Vec<Vec<u32>>,
+}
+
+impl DistGraph {
+    /// Materialize partition-local views from a plan.
+    pub fn build(g: &Graph, plan: PartitionPlan) -> DistGraph {
+        plan.check(g).expect("invalid partition plan");
+        let p = plan.p;
+
+        // Pass 1: discover which nodes are present in which partition.
+        // Masters are present in their own partition unconditionally.
+        let mut present: Vec<HashMap<u32, ()>> = vec![HashMap::new(); p];
+        for v in 0..g.n {
+            present[plan.master_of[v] as usize].insert(v as u32, ());
+        }
+        for v in 0..g.n {
+            for (t, e) in g.out_edges(v) {
+                let part = plan.edge_part[e as usize] as usize;
+                present[part].insert(v as u32, ());
+                present[part].insert(t, ());
+            }
+        }
+
+        // Pass 2: stable local numbering, masters first.
+        let mut parts = Vec::with_capacity(p);
+        for q in 0..p {
+            let mut masters: Vec<u32> = present[q]
+                .keys()
+                .copied()
+                .filter(|&v| plan.master_of[v as usize] as usize == q)
+                .collect();
+            let mut mirrors: Vec<u32> = present[q]
+                .keys()
+                .copied()
+                .filter(|&v| plan.master_of[v as usize] as usize != q)
+                .collect();
+            masters.sort_unstable();
+            mirrors.sort_unstable();
+            let n_masters = masters.len();
+            let mut nodes = masters;
+            nodes.append(&mut mirrors);
+            let lid_of: HashMap<u32, u32> =
+                nodes.iter().enumerate().map(|(l, &gid)| (gid, l as u32)).collect();
+            parts.push(PartitionView {
+                part: q as u32,
+                nodes,
+                n_masters,
+                lid_of,
+                csr_offsets: Vec::new(),
+                csr_targets: Vec::new(),
+                csr_sources_by_edge: Vec::new(),
+                csc_offsets: Vec::new(),
+                csc_sources: Vec::new(),
+                csc_leids: Vec::new(),
+                edge_gids: Vec::new(),
+                edge_weights: Vec::new(),
+            });
+        }
+
+        // Pass 3: local CSR per partition (counting sort by local source).
+        let mut edges_by_part: Vec<Vec<(u32, u32, u32)>> = vec![Vec::new(); p]; // (src_lid, dst_lid, gid)
+        for v in 0..g.n {
+            for (t, e) in g.out_edges(v) {
+                let q = plan.edge_part[e as usize] as usize;
+                let pv = &parts[q];
+                let s = pv.lid_of[&(v as u32)];
+                let d = pv.lid_of[&t];
+                edges_by_part[q].push((s, d, e));
+            }
+        }
+        for (q, mut edges) in edges_by_part.into_iter().enumerate() {
+            let pv = &mut parts[q];
+            let nl = pv.n_local();
+            edges.sort_unstable(); // by (src, dst, gid) → deterministic CSR
+            pv.csr_offsets = vec![0; nl + 1];
+            for &(s, _, _) in &edges {
+                pv.csr_offsets[s as usize + 1] += 1;
+            }
+            for i in 0..nl {
+                pv.csr_offsets[i + 1] += pv.csr_offsets[i];
+            }
+            pv.csr_targets = edges.iter().map(|&(_, d, _)| d).collect();
+            pv.csr_sources_by_edge = edges.iter().map(|&(s, _, _)| s).collect();
+            pv.edge_gids = edges.iter().map(|&(_, _, gid)| gid).collect();
+            pv.edge_weights = pv
+                .edge_gids
+                .iter()
+                .map(|&gid| g.edge_weights[gid as usize])
+                .collect();
+
+            // Local CSC.
+            let ml = edges.len();
+            pv.csc_offsets = vec![0; nl + 1];
+            for &(_, d, _) in &edges {
+                pv.csc_offsets[d as usize + 1] += 1;
+            }
+            for i in 0..nl {
+                pv.csc_offsets[i + 1] += pv.csc_offsets[i];
+            }
+            let mut cur = pv.csc_offsets.clone();
+            pv.csc_sources = vec![0; ml];
+            pv.csc_leids = vec![0; ml];
+            for (le, &(s, d, _)) in edges.iter().enumerate() {
+                let pos = cur[d as usize];
+                cur[d as usize] += 1;
+                pv.csc_sources[pos] = s;
+                pv.csc_leids[pos] = le as u32;
+            }
+        }
+
+        // Pass 4: mirror routes.
+        let mut mirror_parts: Vec<Vec<u32>> = vec![Vec::new(); g.n];
+        for pv in &parts {
+            for &gid in &pv.nodes[pv.n_masters..] {
+                mirror_parts[gid as usize].push(pv.part);
+            }
+        }
+
+        DistGraph { plan, parts, mirror_parts }
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Partitions holding mirrors of global node `gid`.
+    #[inline]
+    pub fn mirror_targets(&self, gid: u32) -> &[u32] {
+        &self.mirror_parts[gid as usize]
+    }
+
+    /// The master partition of a global node.
+    #[inline]
+    pub fn master_part(&self, gid: u32) -> u32 {
+        self.plan.master_of[gid as usize]
+    }
+
+    /// Total node presences (masters + mirrors) — the replica memory metric.
+    pub fn total_presences(&self) -> usize {
+        self.parts.iter().map(|pv| pv.n_local()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{all_partitioners, Edge1D, Partitioner, VertexCut};
+
+    #[test]
+    fn dist_graph_preserves_edges_and_weights() {
+        let g = gen::citation_like("cora", 7);
+        for part in all_partitioners() {
+            let plan = part.partition(&g, 4);
+            let dg = DistGraph::build(&g, plan);
+            let m_total: usize = dg.parts.iter().map(|pv| pv.m_local()).sum();
+            assert_eq!(m_total, g.m, "{} lost edges", part.name());
+            // Every local edge maps back to a global edge with the same
+            // endpoints and weight.
+            for pv in &dg.parts {
+                for lid in 0..pv.n_local() {
+                    for (dst, le) in pv.out_edges(lid) {
+                        let gid = pv.edge_gids[le as usize] as usize;
+                        let gsrc = pv.nodes[lid];
+                        let gdst = pv.nodes[dst as usize];
+                        assert_eq!(g.csr_src_of(gid as u32), gsrc);
+                        assert_eq!(g.csr_targets[gid], gdst);
+                        assert_eq!(pv.edge_weights[le as usize], g.edge_weights[gid]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masters_partition_the_node_set() {
+        let g = gen::reddit_like();
+        let plan = Edge1D::default().partition(&g, 8);
+        let dg = DistGraph::build(&g, plan);
+        let m_total: usize = dg.parts.iter().map(|pv| pv.n_masters).sum();
+        assert_eq!(m_total, g.n);
+        // Each global node is a master in exactly its plan partition.
+        for pv in &dg.parts {
+            for (l, &gid) in pv.nodes.iter().enumerate() {
+                let is_master = l < pv.n_masters;
+                assert_eq!(
+                    is_master,
+                    dg.master_part(gid) == pv.part,
+                    "node {gid} in part {}",
+                    pv.part
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn local_csc_is_consistent_with_local_csr() {
+        let g = gen::amazon_like();
+        let plan = VertexCut.partition(&g, 4);
+        let dg = DistGraph::build(&g, plan);
+        for pv in &dg.parts {
+            let mut seen = vec![false; pv.m_local()];
+            for d in 0..pv.n_local() {
+                for (s, le) in pv.in_edges(d) {
+                    assert_eq!(pv.csr_targets[le as usize], d as u32);
+                    // source must own this edge in local CSR
+                    let range = pv.csr_offsets[s as usize]..pv.csr_offsets[s as usize + 1];
+                    assert!(range.contains(&(le as usize)));
+                    assert!(!seen[le as usize]);
+                    seen[le as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&x| x));
+        }
+    }
+
+    #[test]
+    fn mirror_routes_match_views() {
+        let g = gen::citation_like("citeseer", 6);
+        let plan = VertexCut.partition(&g, 8);
+        let dg = DistGraph::build(&g, plan);
+        for pv in &dg.parts {
+            for &gid in &pv.nodes[pv.n_masters..] {
+                assert!(
+                    dg.mirror_targets(gid).contains(&pv.part),
+                    "route table misses mirror of {gid} in part {}",
+                    pv.part
+                );
+            }
+        }
+        // Count both ways.
+        let route_total: usize = (0..g.n).map(|v| dg.mirror_targets(v as u32).len()).sum();
+        let view_total: usize = dg.parts.iter().map(|pv| pv.n_mirrors()).sum();
+        assert_eq!(route_total, view_total);
+    }
+
+    #[test]
+    fn edge1d_has_no_source_mirrors() {
+        // With 1D-edge partitioning every edge lives with its source's
+        // master, so *sources* are never mirrors (the paper's edge-locality
+        // argument for loading edge attributes without communication).
+        let g = gen::alipay_like(1200);
+        let plan = Edge1D::default().partition(&g, 8);
+        let dg = DistGraph::build(&g, plan);
+        for pv in &dg.parts {
+            for lid in 0..pv.n_local() {
+                if pv.csr_offsets[lid + 1] > pv.csr_offsets[lid] {
+                    assert!(pv.is_master(lid as u32), "source {lid} is a mirror");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_partition_has_no_mirrors() {
+        let g = gen::citation_like("pubmed", 3);
+        let plan = Edge1D::default().partition(&g, 1);
+        let dg = DistGraph::build(&g, plan);
+        assert_eq!(dg.parts[0].n_mirrors(), 0);
+        assert_eq!(dg.total_presences(), g.n);
+    }
+}

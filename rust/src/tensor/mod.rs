@@ -1,0 +1,369 @@
+//! Dense f32 matrix math — the native compute backend.
+//!
+//! GNN layer math is uniformly `[n, d]` matrices (node-major), so the
+//! tensor type here is a 2-D row-major matrix. Two backends execute the
+//! NN-TGAR stage operators:
+//!
+//! * this module (bit-exact native Rust, used by tests and by default), and
+//! * [`crate::runtime`] (AOT-compiled HLO from the JAX/Pallas layers, run
+//!   through the `xla` crate's PJRT CPU client).
+//!
+//! Every O(n·d) or O(n·d·k) op credits FLOPs to the thread-local ledger in
+//! [`crate::metrics`]; the cluster simulator turns those credits into
+//! modeled per-worker compute time.
+
+pub mod ops;
+
+use crate::metrics::add_flops;
+use crate::util::rng::Rng;
+
+/// A row-major 2-D f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(rows: usize, cols: usize) -> Tensor {
+        Tensor { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Tensor {
+        Tensor { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Tensor { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Tensor {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Tensor { rows, cols, data }
+    }
+
+    /// Glorot/Xavier-uniform init, the scheme the GCN reference uses.
+    pub fn glorot(rows: usize, cols: usize, rng: &mut Rng) -> Tensor {
+        let limit = (6.0 / (rows + cols) as f64).sqrt() as f32;
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.range_f32(-limit, limit));
+        }
+        Tensor { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, std²) init.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Tensor {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal() * std);
+        }
+        Tensor { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Matrix product `self @ b` — blocked i-k-j loop (row-major friendly).
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.cols, b.rows, "matmul inner dim: {}x{} @ {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut out = Tensor::zeros(m, n);
+        ops::gemm_acc(&self.data, &b.data, &mut out.data, m, k, n);
+        add_flops(2 * m as u64 * k as u64 * n as u64);
+        out
+    }
+
+    /// `selfᵀ @ b` without materializing the transpose (used for weight
+    /// gradients: `∂L/∂W = Xᵀ · ∂L/∂Y`).
+    pub fn matmul_tn(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.rows, b.rows, "matmul_tn outer dim");
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut out = Tensor::zeros(m, n);
+        // Σ_r a[r,i] * b[r,j]: iterate rows of both, rank-1 updates — still
+        // sequential row-major access on both inputs.
+        for r in 0..k {
+            let ar = self.row(r);
+            let br = b.row(r);
+            for (i, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(br) {
+                    *o += av * bv;
+                }
+            }
+        }
+        add_flops(2 * k as u64 * m as u64 * n as u64);
+        out
+    }
+
+    /// `self @ bᵀ` (used for input gradients: `∂L/∂X = ∂L/∂Y · Wᵀ`).
+    pub fn matmul_nt(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.cols, b.cols, "matmul_nt inner dim");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut out = Tensor::zeros(m, n);
+        for i in 0..m {
+            let ai = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let bj = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (x, y) in ai.iter().zip(bj) {
+                    acc += x * y;
+                }
+                *o = acc;
+            }
+        }
+        add_flops(2 * m as u64 * k as u64 * n as u64);
+        out
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.numel(), other.numel(), "add shape");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        add_flops(self.numel() as u64);
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.numel(), other.numel());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        add_flops(self.numel() as u64);
+        Tensor { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+        add_flops(self.numel() as u64);
+    }
+
+    pub fn hadamard(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.numel(), other.numel());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        add_flops(self.numel() as u64);
+        Tensor { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Add a `[1, cols]` bias row to every row.
+    pub fn add_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols, "bias dim");
+        for i in 0..self.rows {
+            for (a, b) in self.row_mut(i).iter_mut().zip(bias) {
+                *a += b;
+            }
+        }
+        add_flops(self.numel() as u64);
+    }
+
+    /// Column sums as a `[1, cols]` vector (bias gradients).
+    pub fn sum_rows(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            for (o, v) in out.iter_mut().zip(self.row(i)) {
+                *o += v;
+            }
+        }
+        add_flops(self.numel() as u64);
+        out
+    }
+
+    /// Select rows by index into a fresh `[idx.len(), cols]` tensor.
+    pub fn gather_rows(&self, idx: &[u32]) -> Tensor {
+        let mut out = Tensor::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i as usize));
+        }
+        out
+    }
+
+    /// `self[idx[r]] += src[r]` for every r. The Sum stage of NN-TGAR.
+    pub fn scatter_add_rows(&mut self, idx: &[u32], src: &Tensor) {
+        assert_eq!(idx.len(), src.rows);
+        assert_eq!(self.cols, src.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            for (a, b) in self.row_mut(i as usize).iter_mut().zip(src.row(r)) {
+                *a += b;
+            }
+        }
+        add_flops((idx.len() * self.cols) as u64);
+    }
+
+    pub fn frobenius_sq(&self) -> f32 {
+        add_flops(2 * self.numel() as u64);
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    /// Zero in place, keeping the allocation (frame reuse).
+    pub fn clear(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::{assert_close, qcheck};
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                out.set(i, j, acc);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        qcheck(
+            "matmul-vs-naive",
+            |r| {
+                let (m, k, n) = (1 + r.below(17), 1 + r.below(17), 1 + r.below(17));
+                let a = Tensor::randn(m, k, 1.0, r);
+                let b = Tensor::randn(k, n, 1.0, r);
+                (a, b)
+            },
+            |(a, b)| assert_close(&a.matmul(b).data, &naive_matmul(a, b).data, 1e-4),
+        );
+    }
+
+    #[test]
+    fn matmul_tn_equals_transpose_then_matmul() {
+        qcheck(
+            "matmul_tn",
+            |r| {
+                let (k, m, n) = (1 + r.below(12), 1 + r.below(12), 1 + r.below(12));
+                (Tensor::randn(k, m, 1.0, r), Tensor::randn(k, n, 1.0, r))
+            },
+            |(a, b)| assert_close(&a.matmul_tn(b).data, &a.transpose().matmul(b).data, 1e-4),
+        );
+    }
+
+    #[test]
+    fn matmul_nt_equals_matmul_transpose() {
+        qcheck(
+            "matmul_nt",
+            |r| {
+                let (m, k, n) = (1 + r.below(12), 1 + r.below(12), 1 + r.below(12));
+                (Tensor::randn(m, k, 1.0, r), Tensor::randn(n, k, 1.0, r))
+            },
+            |(a, b)| assert_close(&a.matmul_nt(b).data, &a.matmul(&b.transpose()).data, 1e-4),
+        );
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut r = Rng::new(5);
+        let t = Tensor::randn(10, 4, 1.0, &mut r);
+        let idx = [3u32, 7, 0];
+        let g = t.gather_rows(&idx);
+        assert_eq!(g.row(0), t.row(3));
+        assert_eq!(g.row(2), t.row(0));
+        let mut acc = Tensor::zeros(10, 4);
+        acc.scatter_add_rows(&idx, &g);
+        assert_eq!(acc.row(3), t.row(3));
+        assert_eq!(acc.row(1), &[0.0; 4]);
+    }
+
+    #[test]
+    fn scatter_add_accumulates_duplicates() {
+        let src = Tensor::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut acc = Tensor::zeros(3, 2);
+        acc.scatter_add_rows(&[1, 1], &src);
+        assert_eq!(acc.row(1), &[4.0, 6.0]);
+    }
+
+    #[test]
+    fn bias_and_sum_rows_are_adjoint() {
+        let mut r = Rng::new(6);
+        let g = Tensor::randn(5, 3, 1.0, &mut r);
+        // sum_rows is the gradient of add_bias wrt the bias: check by
+        // directional derivative.
+        let bias_dir = [0.1f32, -0.2, 0.3];
+        let dot_direct: f32 = g
+            .sum_rows()
+            .iter()
+            .zip(&bias_dir)
+            .map(|(a, b)| a * b)
+            .sum();
+        let mut perturbed = Tensor::zeros(5, 3);
+        perturbed.add_bias(&bias_dir);
+        let dot_full: f32 = perturbed.data.iter().zip(&g.data).map(|(a, b)| a * b).sum();
+        assert!((dot_direct - dot_full).abs() < 1e-5);
+    }
+
+    #[test]
+    fn flops_are_counted() {
+        let (_, led) = crate::metrics::measured(|| {
+            let a = Tensor::zeros(4, 8);
+            let b = Tensor::zeros(8, 2);
+            let _ = a.matmul(&b);
+        });
+        assert_eq!(led.flops, 2 * 4 * 8 * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dim")]
+    fn shape_mismatch_panics() {
+        let _ = Tensor::zeros(2, 3).matmul(&Tensor::zeros(4, 2));
+    }
+
+    #[test]
+    fn glorot_within_limit() {
+        let mut r = Rng::new(9);
+        let t = Tensor::glorot(64, 64, &mut r);
+        let limit = (6.0f64 / 128.0).sqrt() as f32 + 1e-6;
+        assert!(t.data.iter().all(|x| x.abs() <= limit));
+        // not all zero / constant
+        assert!(t.data.iter().any(|&x| x > 0.0) && t.data.iter().any(|&x| x < 0.0));
+    }
+}

@@ -1,0 +1,359 @@
+//! Activation / loss kernels and the blocked GEMM inner loop.
+//!
+//! These mirror the L1 Pallas kernels in `python/compile/kernels/` — the
+//! Pallas side is authoritative for the AOT path, this side is the native
+//! fallback. `python/tests/` checks both against the same jnp oracle
+//! numbers (see `rust/tests/backend_parity.rs` for the rust↔HLO check).
+
+use super::Tensor;
+use crate::metrics::add_flops;
+
+/// Cache-blocked GEMM accumulate: `out += a @ b`, row-major.
+/// Tile sizes chosen for ~32 KiB L1: 64×64 f32 blocks of `b` stay resident
+/// while 8 rows of `a` stream through.
+pub fn gemm_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    const MC: usize = 8;
+    const KC: usize = 64;
+    const NC: usize = 64;
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for j0 in (0..n).step_by(NC) {
+                let j1 = (j0 + NC).min(n);
+                for i in i0..i1 {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let orow = &mut out[i * n + j0..i * n + j1];
+                    for kk in k0..k1 {
+                        let av = arow[kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n + j0..kk * n + j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// ReLU forward (in place).
+pub fn relu(t: &mut Tensor) {
+    for x in &mut t.data {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+    add_flops(t.numel() as u64);
+}
+
+/// ReLU backward: `grad ⊙ 1[pre > 0]`, where `pre` is the pre-activation.
+pub fn relu_grad(grad: &Tensor, pre: &Tensor) -> Tensor {
+    assert_eq!(grad.numel(), pre.numel());
+    let data = grad
+        .data
+        .iter()
+        .zip(&pre.data)
+        .map(|(g, p)| if *p > 0.0 { *g } else { 0.0 })
+        .collect();
+    add_flops(grad.numel() as u64);
+    Tensor { rows: grad.rows, cols: grad.cols, data }
+}
+
+/// LeakyReLU with slope `alpha` (GAT attention uses 0.2).
+pub fn leaky_relu(t: &mut Tensor, alpha: f32) {
+    for x in &mut t.data {
+        if *x < 0.0 {
+            *x *= alpha;
+        }
+    }
+    add_flops(t.numel() as u64);
+}
+
+pub fn leaky_relu_grad(grad: &Tensor, pre: &Tensor, alpha: f32) -> Tensor {
+    let data = grad
+        .data
+        .iter()
+        .zip(&pre.data)
+        .map(|(g, p)| if *p > 0.0 { *g } else { g * alpha })
+        .collect();
+    add_flops(grad.numel() as u64);
+    Tensor { rows: grad.rows, cols: grad.cols, data }
+}
+
+/// Row-wise numerically-stable softmax.
+pub fn softmax_rows(t: &Tensor) -> Tensor {
+    let mut out = t.clone();
+    for i in 0..t.rows {
+        let row = out.row_mut(i);
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - mx).exp();
+            z += *x;
+        }
+        let inv = 1.0 / z;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+    add_flops(4 * t.numel() as u64);
+    out
+}
+
+/// Softmax + cross-entropy over rows selected by `mask` (labeled nodes).
+/// Returns `(mean loss, ∂L/∂logits)` where the gradient is already divided
+/// by the number of labeled rows and is zero on unlabeled rows.
+pub fn softmax_xent(logits: &Tensor, labels: &[u32], mask: &[bool]) -> (f32, Tensor) {
+    assert_eq!(labels.len(), logits.rows);
+    assert_eq!(mask.len(), logits.rows);
+    let probs = softmax_rows(logits);
+    let count = mask.iter().filter(|&&m| m).count().max(1);
+    let inv = 1.0 / count as f32;
+    let mut grad = Tensor::zeros(logits.rows, logits.cols);
+    let mut loss = 0.0f64;
+    for i in 0..logits.rows {
+        if !mask[i] {
+            continue;
+        }
+        let y = labels[i] as usize;
+        let p = probs.at(i, y).max(1e-12);
+        loss += -(p as f64).ln();
+        let g = grad.row_mut(i);
+        g.copy_from_slice(probs.row(i));
+        g[y] -= 1.0;
+        for x in g.iter_mut() {
+            *x *= inv;
+        }
+    }
+    add_flops(3 * logits.numel() as u64);
+    ((loss as f32) * inv, grad)
+}
+
+/// Binary cross-entropy with logits over masked rows (single output col),
+/// with positive-class weighting for imbalanced tasks like Alipay risk
+/// (8% positives — unweighted BCE degenerates to all-negative and F1 = 0).
+/// Returns `(mean loss, grad)`.
+pub fn bce_logits_weighted(
+    logits: &Tensor,
+    labels: &[u32],
+    mask: &[bool],
+    pos_weight: f32,
+) -> (f32, Tensor) {
+    assert_eq!(logits.cols, 1, "bce expects a single logit column");
+    let count = mask.iter().filter(|&&m| m).count().max(1);
+    let inv = 1.0 / count as f32;
+    let mut grad = Tensor::zeros(logits.rows, 1);
+    let mut loss = 0.0f64;
+    for i in 0..logits.rows {
+        if !mask[i] {
+            continue;
+        }
+        let z = logits.at(i, 0);
+        let y = labels[i] as f32;
+        let w = if labels[i] == 1 { pos_weight } else { 1.0 };
+        // stable: log(1+e^z) = max(z,0) + log(1+e^-|z|)
+        let l = w * (z.max(0.0) - z * y + (1.0 + (-z.abs()).exp()).ln());
+        loss += l as f64;
+        let sig = 1.0 / (1.0 + (-z).exp());
+        grad.set(i, 0, w * (sig - y) * inv);
+    }
+    add_flops(10 * logits.rows as u64);
+    ((loss as f32) * inv, grad)
+}
+
+/// Unweighted BCE (see [`bce_logits_weighted`]).
+pub fn bce_logits(logits: &Tensor, labels: &[u32], mask: &[bool]) -> (f32, Tensor) {
+    bce_logits_weighted(logits, labels, mask, 1.0)
+}
+
+/// Accuracy of argmax predictions over masked rows.
+pub fn accuracy(logits: &Tensor, labels: &[u32], mask: &[bool]) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..logits.rows {
+        if !mask[i] {
+            continue;
+        }
+        total += 1;
+        let row = logits.row(i);
+        let mut best = 0usize;
+        for j in 1..row.len() {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    correct as f64 / total as f64
+}
+
+/// Binary F1 + AUC for single-logit outputs (Table 4's metrics).
+pub fn binary_f1_auc(logits: &Tensor, labels: &[u32], mask: &[bool]) -> (f64, f64) {
+    let mut pairs: Vec<(f32, u32)> = (0..logits.rows)
+        .filter(|&i| mask[i])
+        .map(|i| (logits.at(i, 0), labels[i]))
+        .collect();
+    let (mut tp, mut fp, mut fn_) = (0usize, 0usize, 0usize);
+    for &(z, y) in &pairs {
+        let pred = z > 0.0;
+        match (pred, y == 1) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, true) => fn_ += 1,
+            _ => {}
+        }
+    }
+    let f1 = if tp == 0 { 0.0 } else { 2.0 * tp as f64 / (2 * tp + fp + fn_) as f64 };
+    // AUC by rank statistic (ties broken by sort order — fine for reporting).
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let npos = pairs.iter().filter(|p| p.1 == 1).count();
+    let nneg = pairs.len() - npos;
+    if npos == 0 || nneg == 0 {
+        return (f1, 0.5);
+    }
+    let mut rank_sum = 0.0f64;
+    for (rank, &(_, y)) in pairs.iter().enumerate() {
+        if y == 1 {
+            rank_sum += (rank + 1) as f64;
+        }
+    }
+    let auc = (rank_sum - npos as f64 * (npos as f64 + 1.0) / 2.0) / (npos as f64 * nneg as f64);
+    (f1, auc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::{assert_close, qcheck};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        qcheck(
+            "softmax-normalized",
+            |r| Tensor::randn(1 + r.below(8), 1 + r.below(8), 3.0, r),
+            |t| {
+                let s = softmax_rows(t);
+                for i in 0..s.rows {
+                    let sum: f32 = s.row(i).iter().sum();
+                    if (sum - 1.0).abs() > 1e-5 {
+                        return Err(format!("row {i} sums to {sum}"));
+                    }
+                    if s.row(i).iter().any(|&x| x < 0.0) {
+                        return Err("negative prob".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let t = Tensor::from_vec(1, 3, vec![1000.0, 1000.0, 0.0]);
+        let s = softmax_rows(&t);
+        assert!((s.at(0, 0) - 0.5).abs() < 1e-5);
+        assert!(s.data.iter().all(|x| x.is_finite()));
+    }
+
+    /// Finite-difference check of the softmax-xent gradient.
+    #[test]
+    fn xent_gradient_matches_finite_difference() {
+        let mut r = Rng::new(11);
+        let mut logits = Tensor::randn(6, 4, 1.0, &mut r);
+        let labels: Vec<u32> = (0..6).map(|_| r.below(4) as u32).collect();
+        let mask = [true, true, false, true, true, true];
+        let (_, grad) = softmax_xent(&logits, &labels, &mask);
+        let eps = 1e-3f32;
+        for idx in [0usize, 5, 9, 17] {
+            let orig = logits.data[idx];
+            logits.data[idx] = orig + eps;
+            let (lp, _) = softmax_xent(&logits, &labels, &mask);
+            logits.data[idx] = orig - eps;
+            let (lm, _) = softmax_xent(&logits, &labels, &mask);
+            logits.data[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad.data[idx]).abs() < 2e-3,
+                "idx {idx}: fd {fd} vs grad {}",
+                grad.data[idx]
+            );
+        }
+        // Unlabeled rows get zero gradient.
+        assert!(grad.row(2).iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn bce_gradient_matches_finite_difference() {
+        let mut r = Rng::new(12);
+        let mut logits = Tensor::randn(8, 1, 2.0, &mut r);
+        let labels: Vec<u32> = (0..8).map(|_| r.below(2) as u32).collect();
+        let mask = vec![true; 8];
+        let (_, grad) = bce_logits(&logits, &labels, &mask);
+        let eps = 1e-3f32;
+        for idx in 0..8 {
+            let orig = logits.data[idx];
+            logits.data[idx] = orig + eps;
+            let (lp, _) = bce_logits(&logits, &labels, &mask);
+            logits.data[idx] = orig - eps;
+            let (lm, _) = bce_logits(&logits, &labels, &mask);
+            logits.data[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - grad.data[idx]).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    fn relu_grad_matches_definition() {
+        qcheck(
+            "relu-grad",
+            |r| (Tensor::randn(4, 4, 1.0, r), Tensor::randn(4, 4, 1.0, r)),
+            |(g, pre)| {
+                let got = relu_grad(g, pre);
+                let want: Vec<f32> = g
+                    .data
+                    .iter()
+                    .zip(&pre.data)
+                    .map(|(gv, pv)| if *pv > 0.0 { *gv } else { 0.0 })
+                    .collect();
+                assert_close(&got.data, &want, 1e-6)
+            },
+        );
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = Tensor::from_vec(3, 2, vec![2.0, 1.0, 0.0, 1.0, 5.0, -1.0]);
+        let labels = [0u32, 1, 1];
+        assert_eq!(accuracy(&logits, &labels, &[true, true, true]), 2.0 / 3.0);
+        assert_eq!(accuracy(&logits, &labels, &[true, true, false]), 1.0);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let logits = Tensor::from_vec(4, 1, vec![-2.0, -1.0, 1.0, 2.0]);
+        let labels = [0u32, 0, 1, 1];
+        let mask = vec![true; 4];
+        let (_, auc) = binary_f1_auc(&logits, &labels, &mask);
+        assert!((auc - 1.0).abs() < 1e-9);
+        let labels_bad = [1u32, 1, 0, 0];
+        let (_, auc_bad) = binary_f1_auc(&logits, &labels_bad, &mask);
+        assert!(auc_bad.abs() < 1e-9);
+    }
+
+    #[test]
+    fn leaky_relu_negative_slope() {
+        let mut t = Tensor::from_vec(1, 2, vec![-1.0, 2.0]);
+        leaky_relu(&mut t, 0.2);
+        assert_eq!(t.data, vec![-0.2, 2.0]);
+    }
+}

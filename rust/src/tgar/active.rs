@@ -1,0 +1,366 @@
+//! Active sets: the per-batch participation plan (paper §1, third
+//! challenge; §4.2).
+//!
+//! Instead of materializing a subgraph copy per batch (the tensor-based
+//! frameworks' approach that explodes on dense/skewed graphs), GraphTheta
+//! records *which nodes and edges are active at each layer* over the
+//! already-distributed graph — "the active set data structure that records
+//! the active status of nodes and edges". Embeddings stay in place; the
+//! extra storage is proportional to the active counts.
+//!
+//! For a K-layer model and target set T:
+//! `active[K] = T`, and `active[k-1] = sources of the in-edges of
+//! active[k]` (self-loops keep every active node in its own input set).
+//! Optional fan-out sampling caps the in-edges taken per destination
+//! (GraphTheta itself trains sampling-free; the cap exists for the
+//! sampling baselines and §4.2's "a few sampling methods").
+
+use crate::config::SamplingConfig;
+use crate::graph::Graph;
+use crate::storage::DistGraph;
+use crate::util::rng::Rng;
+
+/// The participation plan for one batch.
+#[derive(Clone, Debug)]
+pub struct ActivePlan {
+    pub k: usize,
+    /// Global target nodes (loss rows).
+    pub targets: Vec<u32>,
+    /// `node_active[l][v]`: embedding `h^l_v` is needed. `l ∈ 0..=k`.
+    pub node_active: Vec<Vec<bool>>,
+    /// `masters_active[l][q]`: local ids of partition `q`'s masters active
+    /// at level `l`, sorted.
+    pub masters_active: Vec<Vec<Vec<u32>>>,
+    /// `edges_active[l][q]`: local edge ids participating in layer `l`'s
+    /// Gather (`l ∈ 1..=k`; index 0 unused).
+    pub edges_active: Vec<Vec<Vec<u32>>>,
+    /// `sync_in[l][q]`: mirror local ids in `q` whose projection value
+    /// must be synced in from their master for layer `l` (`l ∈ 1..=k`).
+    pub sync_in: Vec<Vec<Vec<u32>>>,
+    /// `partial_out[l][q]`: mirror local ids in `q` that accumulate
+    /// partial sums to return to their master for layer `l`.
+    pub partial_out: Vec<Vec<Vec<u32>>>,
+    /// `targets_by_part[q]`: local master ids of targets in partition `q`.
+    pub targets_by_part: Vec<Vec<u32>>,
+    /// Active node count per level (subgraph-explosion reporting).
+    pub active_count: Vec<usize>,
+    /// Active edge count per level.
+    pub active_edge_count: Vec<usize>,
+}
+
+impl ActivePlan {
+    /// Build the plan by reverse-BFS from `targets` through the local CSC
+    /// of every partition. `needs_dst` must be true for models whose
+    /// Gather reads the destination's projection too (GAT-E).
+    pub fn build(
+        g: &Graph,
+        dg: &DistGraph,
+        targets: Vec<u32>,
+        k: usize,
+        sampling: SamplingConfig,
+        needs_dst: bool,
+        rng: &mut Rng,
+    ) -> ActivePlan {
+        let p = dg.p();
+        let n = g.n;
+        let mut node_active = vec![vec![false; n]; k + 1];
+        for &t in &targets {
+            node_active[k][t as usize] = true;
+        }
+
+        let mut edges_active = vec![vec![Vec::new(); p]; k + 1];
+        let mut sync_in = vec![vec![Vec::new(); p]; k + 1];
+        let mut partial_out = vec![vec![Vec::new(); p]; k + 1];
+
+        // Walk layers top-down: choose layer-l edges, derive level l-1.
+        for l in (1..=k).rev() {
+            let (cur, rest) = node_active.split_at_mut(l);
+            let mask_l = &rest[0]; // node_active[l]
+            let mask_lm1 = &mut cur[l - 1]; // node_active[l-1]
+            let hop = k - l; // 0 = closest to targets
+            let fanout = match sampling {
+                SamplingConfig::None => usize::MAX,
+                SamplingConfig::Neighbor { fanout } => fanout.get(hop).copied().unwrap_or(usize::MAX),
+            };
+            for (q, pv) in dg.parts.iter().enumerate() {
+                let mut need_src: Vec<bool> = vec![false; pv.n_local()];
+                let mut need_dst: Vec<bool> = vec![false; pv.n_local()];
+                for dst in 0..pv.n_local() {
+                    let dgid = pv.nodes[dst];
+                    if !mask_l[dgid as usize] {
+                        continue;
+                    }
+                    let lo = pv.csc_offsets[dst];
+                    let hi = pv.csc_offsets[dst + 1];
+                    let deg = hi - lo;
+                    // Sampling: self-loop is always kept, cap applies to
+                    // the rest (GraphSAGE semantics).
+                    let take_all = deg <= fanout;
+                    let mut taken = 0usize;
+                    for idx in lo..hi {
+                        let s = pv.csc_sources[idx];
+                        let le = pv.csc_leids[idx];
+                        let sgid = pv.nodes[s as usize];
+                        let is_self = sgid == dgid;
+                        if !take_all && !is_self {
+                            if taken >= fanout {
+                                continue;
+                            }
+                            // Bernoulli thinning approximating uniform
+                            // fan-out sampling without a second pass.
+                            if !rng.chance((fanout as f64 / deg as f64).min(1.0)) {
+                                continue;
+                            }
+                            taken += 1;
+                        }
+                        edges_active[l][q].push(le);
+                        mask_lm1[sgid as usize] = true;
+                        need_src[s as usize] = true;
+                        need_dst[dst] = true;
+                    }
+                }
+                // Destination embeddings at level l must also exist.
+                // (mask_l ⊆ mask_lm1 via self-loops, but make it explicit
+                // for graphs without self-loops.)
+                for v in 0..n {
+                    if mask_l[v] {
+                        mask_lm1[v] = true;
+                    }
+                }
+                // Mirror sync routes for this layer.
+                for lid in pv.n_masters..pv.n_local() {
+                    let needs_n = need_src[lid] || (needs_dst && need_dst[lid]);
+                    if needs_n {
+                        sync_in[l][q].push(lid as u32);
+                    }
+                    if need_dst[lid] {
+                        partial_out[l][q].push(lid as u32);
+                    }
+                }
+            }
+        }
+
+        // Per-partition active master lists per level.
+        let mut masters_active = vec![vec![Vec::new(); p]; k + 1];
+        for l in 0..=k {
+            for (q, pv) in dg.parts.iter().enumerate() {
+                for lid in 0..pv.n_masters {
+                    if node_active[l][pv.nodes[lid] as usize] {
+                        masters_active[l][q].push(lid as u32);
+                    }
+                }
+            }
+        }
+
+        // Targets per partition.
+        let mut targets_by_part = vec![Vec::new(); p];
+        for &t in &targets {
+            let q = dg.master_part(t) as usize;
+            let lid = dg.parts[q].lid_of[&t];
+            targets_by_part[q].push(lid);
+        }
+        for tq in targets_by_part.iter_mut() {
+            tq.sort_unstable();
+        }
+
+        let active_count = node_active
+            .iter()
+            .map(|m| m.iter().filter(|&&b| b).count())
+            .collect();
+        let active_edge_count = edges_active
+            .iter()
+            .map(|per_p| per_p.iter().map(Vec::len).sum())
+            .collect();
+
+        ActivePlan {
+            k,
+            targets,
+            node_active,
+            masters_active,
+            edges_active,
+            sync_in,
+            partial_out,
+            targets_by_part,
+            active_count,
+            active_edge_count,
+        }
+    }
+
+    /// Plan with **all** nodes active (global-batch): targets = labeled
+    /// training nodes, every edge active at every layer.
+    pub fn global(g: &Graph, dg: &DistGraph, k: usize, needs_dst: bool) -> ActivePlan {
+        let targets = g.labeled_nodes(&g.train_mask);
+        let mut rng = Rng::new(0);
+        let mut plan =
+            ActivePlan::build(g, dg, targets, k, SamplingConfig::None, needs_dst, &mut rng);
+        // Force-full: all nodes and edges at every level (targets' BFS may
+        // not reach disconnected parts, but global-batch computes them all
+        // — matching "performs full graph convolutions across an entire
+        // graph").
+        for l in 0..=k {
+            plan.node_active[l] = vec![true; g.n];
+        }
+        for l in 1..=k {
+            for (q, pv) in dg.parts.iter().enumerate() {
+                plan.edges_active[l][q] = (0..pv.m_local() as u32).collect();
+                plan.sync_in[l][q] = (pv.n_masters as u32..pv.n_local() as u32).collect();
+                plan.partial_out[l][q] = plan.sync_in[l][q].clone();
+                if !needs_dst {
+                    // sources only need sync; keep all mirrors for
+                    // simplicity of the full plan (they are all endpoints).
+                }
+            }
+        }
+        for l in 0..=k {
+            for (q, pv) in dg.parts.iter().enumerate() {
+                plan.masters_active[l][q] = (0..pv.n_masters as u32).collect();
+            }
+        }
+        plan.active_count = vec![g.n; k + 1];
+        plan.active_edge_count = (0..=k)
+            .map(|l| if l == 0 { 0 } else { g.m })
+            .collect();
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{Edge1D, Partitioner, VertexCut};
+
+    fn setup() -> (Graph, DistGraph) {
+        let g = gen::citation_like("cora", 7);
+        let plan = Edge1D::default().partition(&g, 4);
+        let dg = DistGraph::build(&g, plan);
+        (g, dg)
+    }
+
+    #[test]
+    fn active_sets_grow_downward() {
+        let (g, dg) = setup();
+        let mut rng = Rng::new(1);
+        let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..10].to_vec();
+        let plan = ActivePlan::build(&g, &dg, targets, 2, SamplingConfig::None, false, &mut rng);
+        assert!(plan.active_count[0] >= plan.active_count[1]);
+        assert!(plan.active_count[1] >= plan.active_count[2]);
+        assert_eq!(plan.active_count[2], 10);
+    }
+
+    #[test]
+    fn level_km1_is_exactly_sources_of_active_edges() {
+        let (g, dg) = setup();
+        let mut rng = Rng::new(2);
+        let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..5].to_vec();
+        let plan =
+            ActivePlan::build(&g, &dg, targets.clone(), 1, SamplingConfig::None, false, &mut rng);
+        let mut want = vec![false; g.n];
+        for &t in &targets {
+            want[t as usize] = true; // self at level l is kept
+            for (s, _) in g.in_edges(t as usize) {
+                want[s as usize] = true;
+            }
+        }
+        assert_eq!(plan.node_active[0], want);
+        // Active edge count equals total in-degree of targets.
+        let total_in: usize = targets.iter().map(|&t| g.in_degree(t as usize)).sum();
+        assert_eq!(plan.active_edge_count[1], total_in);
+    }
+
+    #[test]
+    fn sampling_caps_active_edges() {
+        let g = gen::reddit_like();
+        let dplan = Edge1D::default().partition(&g, 4);
+        let dg = DistGraph::build(&g, dplan);
+        let mut rng = Rng::new(3);
+        let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..50].to_vec();
+        let full = ActivePlan::build(
+            &g,
+            &dg,
+            targets.clone(),
+            2,
+            SamplingConfig::None,
+            false,
+            &mut rng,
+        );
+        let sampled = ActivePlan::build(
+            &g,
+            &dg,
+            targets,
+            2,
+            SamplingConfig::Neighbor { fanout: [3, 2, usize::MAX, usize::MAX] },
+            false,
+            &mut rng,
+        );
+        assert!(
+            sampled.active_edge_count[2] < full.active_edge_count[2] / 2,
+            "sampled {} vs full {}",
+            sampled.active_edge_count[2],
+            full.active_edge_count[2]
+        );
+        assert!(sampled.active_count[0] < full.active_count[0]);
+    }
+
+    #[test]
+    fn sync_routes_are_mirrors_with_active_edges() {
+        let g = gen::amazon_like();
+        let dplan = VertexCut.partition(&g, 4);
+        let dg = DistGraph::build(&g, dplan);
+        let mut rng = Rng::new(4);
+        let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..20].to_vec();
+        let plan = ActivePlan::build(&g, &dg, targets, 2, SamplingConfig::None, true, &mut rng);
+        for l in 1..=2 {
+            for (q, pv) in dg.parts.iter().enumerate() {
+                for &lid in &plan.sync_in[l][q] {
+                    assert!(!pv.is_master(lid), "sync_in contains a master");
+                }
+                for &lid in &plan.partial_out[l][q] {
+                    assert!(!pv.is_master(lid));
+                }
+                // Every active edge's source is either a master or synced.
+                let synced: std::collections::HashSet<u32> =
+                    plan.sync_in[l][q].iter().copied().collect();
+                for &le in &plan.edges_active[l][q] {
+                    let lo = pv
+                        .csr_offsets
+                        .partition_point(|&o| o <= le as usize)
+                        .saturating_sub(1);
+                    let src = lo as u32;
+                    assert!(
+                        pv.is_master(src) || synced.contains(&src),
+                        "edge {le} source {src} unreachable in part {q} layer {l}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn global_plan_covers_everything() {
+        let (g, dg) = setup();
+        let plan = ActivePlan::global(&g, &dg, 2, false);
+        assert_eq!(plan.active_count, vec![g.n, g.n, g.n]);
+        assert_eq!(plan.active_edge_count[1], g.m);
+        let master_total: usize = plan.masters_active[1].iter().map(Vec::len).sum();
+        assert_eq!(master_total, g.n);
+    }
+
+    #[test]
+    fn targets_by_part_covers_all_targets() {
+        let (g, dg) = setup();
+        let mut rng = Rng::new(5);
+        let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..17].to_vec();
+        let plan =
+            ActivePlan::build(&g, &dg, targets.clone(), 2, SamplingConfig::None, false, &mut rng);
+        let total: usize = plan.targets_by_part.iter().map(Vec::len).sum();
+        assert_eq!(total, targets.len());
+        for (q, tq) in plan.targets_by_part.iter().enumerate() {
+            for &lid in tq {
+                let gid = dg.parts[q].nodes[lid as usize];
+                assert!(targets.contains(&gid));
+                assert!(dg.parts[q].is_master(lid));
+            }
+        }
+    }
+}

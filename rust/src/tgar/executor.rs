@@ -1,0 +1,827 @@
+//! The NN-TGAR stage executor (paper §3.2–3.3, Figure 3).
+//!
+//! Executes forward, decoder+loss, and backward over a distributed graph,
+//! one bulk-synchronous superstep per stage, with every master↔mirror
+//! transfer accounted in the [`ClusterSim`]. The numerics are exact — the
+//! hybrid-parallel result is bit-for-bit independent of the partition
+//! count (asserted by `rust/tests/`), which is the property that lets the
+//! cluster simulator stand in for the paper's 1,024-worker testbed.
+//!
+//! Stage → code map (forward, one encoder layer `k`):
+//!
+//! | Paper stage | Here |
+//! |---|---|
+//! | NN-T: `n^k = Proj(h^{k-1}; W_k)` | [`Executor::stage_transform`] |
+//! | master→mirror value sync | [`Executor::stage_sync_values`] |
+//! | NN-G: `m^k_{j→i} = Prop(n_j, e_ij, n_i; θ_k)` | [`Executor::stage_gather`] |
+//! | Sum (mirror partials → master) | [`Executor::stage_combine`] |
+//! | NN-A: `h^k = Apply(M^k; μ_k)` | [`Executor::stage_apply`] |
+//!
+//! and the backward runs the derivative stages in reverse order, ending in
+//! Reduce (gradient aggregation across workers, eqs. 14–20).
+
+use crate::cluster::ClusterSim;
+use crate::config::{ModelConfig, ModelKind};
+use crate::graph::Graph;
+use crate::metrics::{add_flops, StageProfile};
+use crate::nn::{ModelParams};
+use crate::runtime::{Activation, StageBackend};
+use crate::storage::frames::{Frame, TensorCache};
+use crate::storage::DistGraph;
+use crate::tensor::{ops, Tensor};
+use crate::tgar::ActivePlan;
+
+/// Result of one training step.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    pub loss: f32,
+    /// Modeled seconds in forward / backward / reduce.
+    pub t_forward: f64,
+    pub t_backward: f64,
+    pub t_reduce: f64,
+    /// Peak live frame bytes on any partition during the step (the
+    /// paper's per-worker memory figure: 5–12 GB on Alipay).
+    pub peak_part_bytes: usize,
+    /// Sum of per-partition gradients (the Reduce output).
+    pub grads: ModelParams,
+}
+
+/// Stage executor bound to one distributed graph.
+pub struct Executor<'a> {
+    pub g: &'a Graph,
+    pub dg: &'a DistGraph,
+    pub model: &'a ModelConfig,
+    frames: Vec<Frame>,
+    cache: TensorCache,
+    pub profile: StageProfile,
+    leaky_slope: f32,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(g: &'a Graph, dg: &'a DistGraph, model: &'a ModelConfig) -> Executor<'a> {
+        let frames = (0..dg.p()).map(|_| Frame::new()).collect();
+        Executor {
+            g,
+            dg,
+            model,
+            frames,
+            cache: TensorCache::new(),
+            profile: StageProfile::new(),
+            leaky_slope: 0.2,
+        }
+    }
+
+    /// Embedding dim at level `l` (0 = raw features).
+    fn dim(&self, l: usize) -> usize {
+        if l == 0 {
+            self.model.in_dim
+        } else {
+            self.model.hidden
+        }
+    }
+
+    fn needs_dst(&self) -> bool {
+        self.model.kind == ModelKind::GatE
+    }
+
+    // ------------------------------------------------------------------
+    // Forward
+    // ------------------------------------------------------------------
+
+    /// Load level-0 embeddings (raw features) for active masters.
+    fn load_inputs(&mut self, plan: &ActivePlan, sim: &mut ClusterSim) {
+        let d = self.dim(0);
+        for q in 0..self.dg.p() {
+            let pv = &self.dg.parts[q];
+            let mut h0 = self.cache.take(pv.n_local(), d);
+            sim.exec(q, || {
+                for &lid in &plan.masters_active[0][q] {
+                    let gid = pv.nodes[lid as usize] as usize;
+                    h0.row_mut(lid as usize).copy_from_slice(self.g.feats.row(gid));
+                }
+            });
+            self.frames[q].insert("h", 0, h0);
+        }
+        sim.superstep();
+    }
+
+    /// NN-T: project active masters' `h^{k-1}` to `n^k`.
+    fn stage_transform(
+        &mut self,
+        k: usize,
+        params: &ModelParams,
+        plan: &ActivePlan,
+        sim: &mut ClusterSim,
+        backend: &mut dyn StageBackend,
+    ) {
+        let d_out = self.dim(k);
+        let lp = &params.layers[k - 1];
+        for q in 0..self.dg.p() {
+            let pv = &self.dg.parts[q];
+            let idx = &plan.masters_active[k - 1][q];
+            let h_prev = self.frames[q].get("h", k - 1).expect("h^{k-1} missing");
+            let mut n = self.cache.take(pv.n_local(), d_out);
+            sim.exec(q, || {
+                if !idx.is_empty() {
+                    let x = h_prev.gather_rows(idx);
+                    let y = backend.proj(&x, &lp.proj.w, &lp.proj.b, Activation::None);
+                    for (r, &lid) in idx.iter().enumerate() {
+                        n.row_mut(lid as usize).copy_from_slice(y.row(r));
+                    }
+                }
+            });
+            self.frames[q].insert("n", k, n);
+        }
+        sim.superstep();
+    }
+
+    /// master→mirror sync of `n^k` rows needed by remote Gathers.
+    /// Rows are moved grouped by source partition: one frame lookup per
+    /// (layer, partition-pair) instead of per row (§Perf).
+    fn stage_sync_values(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
+        let d = self.dim(k);
+        let bytes = (d * std::mem::size_of::<f32>()) as u64;
+        for q in 0..self.dg.p() {
+            // (master partition, source row, dest row) sorted by partition.
+            let mut moves: Vec<(u32, u32, u32)> = plan.sync_in[k][q]
+                .iter()
+                .map(|&lid| {
+                    let gid = self.dg.parts[q].nodes[lid as usize];
+                    let mq = self.dg.master_part(gid);
+                    let mlid = self.dg.parts[mq as usize].lid_of[&gid];
+                    (mq, mlid, lid)
+                })
+                .collect();
+            moves.sort_unstable();
+            let mut n = self.frames[q].take("n", k).unwrap();
+            let mut i = 0;
+            while i < moves.len() {
+                let mq = moves[i].0 as usize;
+                let src = self.frames[mq].get("n", k).unwrap();
+                let mut rows = 0u64;
+                while i < moves.len() && moves[i].0 as usize == mq {
+                    let (_, mlid, lid) = moves[i];
+                    n.row_mut(lid as usize).copy_from_slice(src.row(mlid as usize));
+                    rows += 1;
+                    i += 1;
+                }
+                // One message per master↔mirror partition pair (§4.1: "for
+                // a master-mirror pair, we only need one time of message
+                // propagation"), carrying all its rows.
+                sim.send(mq, q, rows * bytes);
+            }
+            self.frames[q].insert("n", k, n);
+        }
+        sim.superstep();
+    }
+
+    /// NN-G + local combine: propagate along active edges into `acc`.
+    /// GCN: `m = w_e · n_src`. GAT-E: `m = σ(LeakyReLU(a·[n_s,n_d,e])) ·
+    /// w_e · n_src` with the per-edge score/gate cached for the backward.
+    fn stage_gather(
+        &mut self,
+        k: usize,
+        params: &ModelParams,
+        plan: &ActivePlan,
+        sim: &mut ClusterSim,
+    ) {
+        let d = self.dim(k);
+        let lp = &params.layers[k - 1];
+        for q in 0..self.dg.p() {
+            let pv = &self.dg.parts[q];
+            let n = self.frames[q].take("n", k).unwrap();
+            let mut acc = self.cache.take(pv.n_local(), d);
+            let m_active = plan.edges_active[k][q].len();
+            let (mut pre, mut gate) = if self.needs_dst() {
+                (self.cache.take(m_active.max(1), 1), self.cache.take(m_active.max(1), 1))
+            } else {
+                (Tensor::zeros(0, 1), Tensor::zeros(0, 1))
+            };
+            sim.exec(q, || {
+                for (ei, &le) in plan.edges_active[k][q].iter().enumerate() {
+                    let le = le as usize;
+                    let src = src_of_local(pv, le);
+                    let dst = pv.csr_targets[le] as usize;
+                    let w_e = pv.edge_weights[le];
+                    let n_src = n.row(src);
+                    match lp.att.as_ref() {
+                        None => {
+                            let arow = acc.row_mut(dst);
+                            for (a, &x) in arow.iter_mut().zip(n_src) {
+                                *a += w_e * x;
+                            }
+                            add_flops(2 * d as u64);
+                        }
+                        Some(att) => {
+                            let n_dst = n.row(dst);
+                            let gid = pv.edge_gids[le] as usize;
+                            let mut s = dot(&att.a_src, n_src) + dot(&att.a_dst, n_dst);
+                            if let Some(ef) = self.g.edge_feats.as_ref() {
+                                s += dot(&att.a_edge, ef.row(gid));
+                            }
+                            let s_act = if s > 0.0 { s } else { s * self.leaky_slope };
+                            let gg = sigmoid(s_act);
+                            pre.data[ei] = s;
+                            gate.data[ei] = gg;
+                            let coef = gg * w_e;
+                            let arow = acc.row_mut(dst);
+                            for (a, &x) in arow.iter_mut().zip(n_src) {
+                                *a += coef * x;
+                            }
+                            add_flops((4 * d + 2 * self.model.edge_dim + 8) as u64);
+                        }
+                    }
+                }
+            });
+            self.frames[q].insert("n", k, n);
+            self.frames[q].insert("acc", k, acc);
+            if self.needs_dst() {
+                self.frames[q].insert("att_pre", k, pre);
+                self.frames[q].insert("att_gate", k, gate);
+            }
+        }
+        sim.superstep();
+    }
+
+    /// Sum: return mirror partial sums to their masters (grouped by the
+    /// destination partition — one frame borrow per pair, no row copies).
+    fn stage_combine(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
+        let d = self.dim(k);
+        let bytes = (d * std::mem::size_of::<f32>()) as u64;
+        for q in 0..self.dg.p() {
+            let mut moves: Vec<(u32, u32, u32)> = plan.partial_out[k][q]
+                .iter()
+                .map(|&lid| {
+                    let gid = self.dg.parts[q].nodes[lid as usize];
+                    let mq = self.dg.master_part(gid);
+                    let mlid = self.dg.parts[mq as usize].lid_of[&gid];
+                    (mq, lid, mlid)
+                })
+                .collect();
+            moves.sort_unstable();
+            let mut i = 0;
+            while i < moves.len() {
+                let mq = moves[i].0 as usize;
+                let (fq, fmq) = two_frames(&mut self.frames, q, mq);
+                let acc = fq.get("acc", k).unwrap();
+                let macc = fmq.get_mut("acc", k).unwrap();
+                let mut rows = 0u64;
+                while i < moves.len() && moves[i].0 as usize == mq {
+                    let (_, lid, mlid) = moves[i];
+                    let src = acc.row(lid as usize);
+                    for (a, &b) in macc.row_mut(mlid as usize).iter_mut().zip(src) {
+                        *a += b;
+                    }
+                    add_flops(d as u64);
+                    rows += 1;
+                    i += 1;
+                }
+                sim.send(q, mq, rows * bytes);
+            }
+        }
+        sim.superstep();
+    }
+
+    /// NN-A: `h^k = ReLU(M^k)` on active masters; caches `M^k`.
+    fn stage_apply(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
+        let d = self.dim(k);
+        for q in 0..self.dg.p() {
+            let pv = &self.dg.parts[q];
+            let acc = self.frames[q].take("acc", k).unwrap();
+            let mut h = self.cache.take(pv.n_local(), d);
+            sim.exec(q, || {
+                for &lid in &plan.masters_active[k][q] {
+                    let lid = lid as usize;
+                    let hrow = h.row_mut(lid);
+                    hrow.copy_from_slice(acc.row(lid));
+                    for x in hrow.iter_mut() {
+                        if *x < 0.0 {
+                            *x = 0.0;
+                        }
+                    }
+                }
+                add_flops((plan.masters_active[k][q].len() * d) as u64);
+            });
+            self.frames[q].insert("M", k, acc); // pre-activation cache
+            self.frames[q].insert("h", k, h);
+        }
+        sim.superstep();
+    }
+
+    /// Run the full forward (K encoder layers).
+    pub fn forward(
+        &mut self,
+        params: &ModelParams,
+        plan: &ActivePlan,
+        sim: &mut ClusterSim,
+        backend: &mut dyn StageBackend,
+    ) {
+        self.profile_scope_owned("prep:load_inputs", |me| me.load_inputs(plan, sim));
+        for k in 1..=plan.k {
+            // Layer-tagged stage keys: Fig A3 aggregates by layer prefix,
+            // the stage ablation by suffix.
+            self.profile_scope_owned(&format!("fwd:L{k}:NN-T"), |me| {
+                me.stage_transform(k, params, plan, sim, backend)
+            });
+            self.profile_scope_owned(&format!("fwd:L{k}:sync"), |me| {
+                me.stage_sync_values(k, plan, sim)
+            });
+            self.profile_scope_owned(&format!("fwd:L{k}:NN-G"), |me| {
+                me.stage_gather(k, params, plan, sim)
+            });
+            self.profile_scope_owned(&format!("fwd:L{k}:Sum"), |me| me.stage_combine(k, plan, sim));
+            self.profile_scope_owned(&format!("fwd:L{k}:NN-A"), |me| me.stage_apply(k, plan, sim));
+        }
+    }
+
+    // Work around borrow rules for profiling whole stages.
+    fn profile_scope_owned<R>(&mut self, name: &str, f: impl FnOnce(&mut Self) -> R) -> R {
+        let t0 = std::time::Instant::now();
+        let r = f(self);
+        self.profile.add_secs(name, t0.elapsed().as_secs_f64());
+        r
+    }
+
+    // ------------------------------------------------------------------
+    // Decoder + loss (single NN-T), returns loss and seeds ∂L/∂h^K.
+    // ------------------------------------------------------------------
+
+    /// Decoder + loss over the plan's targets. Seeds the backward
+    /// (`gh^K` rows) and accumulates decoder gradients into `grads`.
+    pub fn loss_stage(
+        &mut self,
+        params: &ModelParams,
+        plan: &ActivePlan,
+        sim: &mut ClusterSim,
+        backend: &mut dyn StageBackend,
+        grads: &mut [ModelParams],
+    ) -> f32 {
+        let k = plan.k;
+        let total = plan.targets.len().max(1);
+        let inv = 1.0 / total as f32;
+        let mut loss_total = 0.0f32;
+        for q in 0..self.dg.p() {
+            let pv = &self.dg.parts[q];
+            let idx = &plan.targets_by_part[q];
+            let mut gh = self.cache.take(pv.n_local(), self.dim(k));
+            if !idx.is_empty() {
+                let hk = self.frames[q].get("h", k).unwrap();
+                let x = hk.gather_rows(idx);
+                let (loss_q, gx, gw, gb) = sim.exec(q, || {
+                    let logits = backend.proj(&x, &params.decoder.w, &params.decoder.b, Activation::None);
+                    let labels: Vec<u32> =
+                        idx.iter().map(|&lid| self.g.labels[pv.nodes[lid as usize] as usize]).collect();
+                    let mask = vec![true; idx.len()];
+                    let (mean_loss, mut glogits) = if self.model.binary {
+                        ops::bce_logits_weighted(&logits, &labels, &mask, self.model.pos_weight)
+                    } else {
+                        ops::softmax_xent(&logits, &labels, &mask)
+                    };
+                    // Convert local-mean to global-mean normalization.
+                    let local = idx.len() as f32;
+                    let loss_q = mean_loss * local * inv;
+                    glogits.scale(local * inv);
+                    let (gx, gw, gb) = backend.proj_bwd(&x, &params.decoder.w, &glogits);
+                    (loss_q, gx, gw, gb)
+                });
+                loss_total += loss_q;
+                grads[q].decoder.w.add_assign(&gw);
+                for (a, b) in grads[q].decoder.b.iter_mut().zip(&gb) {
+                    *a += b;
+                }
+                for (r, &lid) in idx.iter().enumerate() {
+                    gh.row_mut(lid as usize).copy_from_slice(gx.row(r));
+                }
+            }
+            self.frames[q].insert("gh", k, gh);
+        }
+        sim.superstep();
+        loss_total
+    }
+
+    // ------------------------------------------------------------------
+    // Backward (reverse NN-TGAR passes, eqs. 14–20)
+    // ------------------------------------------------------------------
+
+    /// Backward NN-T: `gM = ∂Apply = gh ⊙ 1[M > 0]` on active masters.
+    fn stage_bwd_apply(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
+        let d = self.dim(k);
+        for q in 0..self.dg.p() {
+            let pv = &self.dg.parts[q];
+            let gh = self.frames[q].take("gh", k).unwrap();
+            let m = self.frames[q].get("M", k).unwrap();
+            let mut gm = self.cache.take(pv.n_local(), d);
+            sim.exec(q, || {
+                for &lid in &plan.masters_active[k][q] {
+                    let lid = lid as usize;
+                    let out = gm.row_mut(lid);
+                    for ((o, &g), &pre) in out.iter_mut().zip(gh.row(lid)).zip(m.row(lid)) {
+                        *o = if pre > 0.0 { g } else { 0.0 };
+                    }
+                }
+                add_flops((plan.masters_active[k][q].len() * d) as u64);
+            });
+            self.cache.put(gh);
+            self.frames[q].insert("gM", k, gm);
+        }
+        sim.superstep();
+    }
+
+    /// Sync `gM` to mirror destinations (reverse of the Sum combine),
+    /// grouped by source partition.
+    fn stage_bwd_sync(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
+        let d = self.dim(k);
+        let bytes = (d * std::mem::size_of::<f32>()) as u64;
+        for q in 0..self.dg.p() {
+            let mut moves: Vec<(u32, u32, u32)> = plan.partial_out[k][q]
+                .iter()
+                .map(|&lid| {
+                    let gid = self.dg.parts[q].nodes[lid as usize];
+                    let mq = self.dg.master_part(gid);
+                    let mlid = self.dg.parts[mq as usize].lid_of[&gid];
+                    (mq, mlid, lid)
+                })
+                .collect();
+            moves.sort_unstable();
+            let mut gm = self.frames[q].take("gM", k).unwrap();
+            let mut i = 0;
+            while i < moves.len() {
+                let mq = moves[i].0 as usize;
+                let src = self.frames[mq].get("gM", k).unwrap();
+                let mut rows = 0u64;
+                while i < moves.len() && moves[i].0 as usize == mq {
+                    let (_, mlid, lid) = moves[i];
+                    gm.row_mut(lid as usize).copy_from_slice(src.row(mlid as usize));
+                    rows += 1;
+                    i += 1;
+                }
+                sim.send(mq, q, rows * bytes);
+            }
+            self.frames[q].insert("gM", k, gm);
+        }
+        sim.superstep();
+    }
+
+    /// Backward NN-G: per-edge gradients → `gn` (and attention grads).
+    fn stage_bwd_gather(
+        &mut self,
+        k: usize,
+        params: &ModelParams,
+        plan: &ActivePlan,
+        sim: &mut ClusterSim,
+        grads: &mut [ModelParams],
+    ) {
+        let d = self.dim(k);
+        let lp = &params.layers[k - 1];
+        for q in 0..self.dg.p() {
+            let pv = &self.dg.parts[q];
+            let n = self.frames[q].take("n", k).unwrap();
+            let gm = self.frames[q].take("gM", k).unwrap();
+            let mut gn = self.cache.take(pv.n_local(), d);
+            let is_gat = self.needs_dst();
+            let (pre, gate) = if is_gat {
+                (
+                    self.frames[q].take("att_pre", k).unwrap(),
+                    self.frames[q].take("att_gate", k).unwrap(),
+                )
+            } else {
+                (Tensor::zeros(0, 1), Tensor::zeros(0, 1))
+            };
+            // Attention-vector gradients accumulate locally, merged after
+            // the closure (borrow discipline: `grads` stays outside).
+            let mut ga_src = vec![0.0f32; if is_gat { d } else { 0 }];
+            let mut ga_dst = vec![0.0f32; if is_gat { d } else { 0 }];
+            let mut ga_edge = vec![0.0f32; if is_gat { self.model.edge_dim } else { 0 }];
+            sim.exec(q, || {
+                for (ei, &le) in plan.edges_active[k][q].iter().enumerate() {
+                    let le = le as usize;
+                    let src = src_of_local(pv, le);
+                    let dst = pv.csr_targets[le] as usize;
+                    let w_e = pv.edge_weights[le];
+                    match lp.att.as_ref() {
+                        None => {
+                            let gmd = gm.row(dst);
+                            let out = gn.row_mut(src);
+                            for (o, &g) in out.iter_mut().zip(gmd) {
+                                *o += w_e * g;
+                            }
+                            add_flops(2 * d as u64);
+                        }
+                        Some(att) => {
+                            let gmd = gm.row(dst).to_vec();
+                            let n_src = n.row(src).to_vec();
+                            let n_dst = n.row(dst);
+                            let s_pre = pre.data[ei];
+                            let gg = gate.data[ei];
+                            // ∂L/∂gate = w_e · (n_src · gM_dst)
+                            let ggate = w_e * dotv(&n_src, &gmd);
+                            let gs_act = ggate * gg * (1.0 - gg);
+                            let gpre =
+                                if s_pre > 0.0 { gs_act } else { gs_act * self.leaky_slope };
+                            axpy(&mut ga_src, gpre, &n_src);
+                            axpy(&mut ga_dst, gpre, n_dst);
+                            if let Some(ef) = self.g.edge_feats.as_ref() {
+                                let gid = pv.edge_gids[le] as usize;
+                                axpy(&mut ga_edge, gpre, ef.row(gid));
+                            }
+                            let coef = gg * w_e;
+                            {
+                                let out = gn.row_mut(src);
+                                for i in 0..d {
+                                    out[i] += coef * gmd[i] + gpre * att.a_src[i];
+                                }
+                            }
+                            {
+                                let out = gn.row_mut(dst);
+                                for i in 0..d {
+                                    out[i] += gpre * att.a_dst[i];
+                                }
+                            }
+                            add_flops((8 * d + 2 * self.model.edge_dim) as u64);
+                        }
+                    }
+                }
+            });
+            if is_gat {
+                let gatt = grads[q].layers[k - 1].att.as_mut().unwrap();
+                axpy(&mut gatt.a_src, 1.0, &ga_src);
+                axpy(&mut gatt.a_dst, 1.0, &ga_dst);
+                axpy(&mut gatt.a_edge, 1.0, &ga_edge);
+                self.frames[q].insert("att_pre", k, pre);
+                self.frames[q].insert("att_gate", k, gate);
+            }
+            self.frames[q].insert("n", k, n);
+            self.frames[q].insert("gM", k, gm);
+            self.frames[q].insert("gn", k, gn);
+        }
+        sim.superstep();
+    }
+
+    /// Combine mirror `gn` rows back to masters (reverse of value sync).
+    fn stage_bwd_combine(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
+        let d = self.dim(k);
+        let bytes = (d * std::mem::size_of::<f32>()) as u64;
+        for q in 0..self.dg.p() {
+            // Union of mirrors that received gn contributions: sources
+            // synced in (sync_in) and, for GAT-E, destination mirrors too.
+            let mut lids: Vec<u32> = plan.sync_in[k][q].clone();
+            if self.needs_dst() {
+                lids.extend_from_slice(&plan.partial_out[k][q]);
+                lids.sort_unstable();
+                lids.dedup();
+            }
+            let mut moves: Vec<(u32, u32, u32)> = lids
+                .iter()
+                .map(|&lid| {
+                    let gid = self.dg.parts[q].nodes[lid as usize];
+                    let mq = self.dg.master_part(gid);
+                    let mlid = self.dg.parts[mq as usize].lid_of[&gid];
+                    (mq, lid, mlid)
+                })
+                .collect();
+            moves.sort_unstable();
+            let mut i = 0;
+            while i < moves.len() {
+                let mq = moves[i].0 as usize;
+                let (fq, fmq) = two_frames(&mut self.frames, q, mq);
+                let gn = fq.get("gn", k).unwrap();
+                let mgn = fmq.get_mut("gn", k).unwrap();
+                let mut rows = 0u64;
+                while i < moves.len() && moves[i].0 as usize == mq {
+                    let (_, lid, mlid) = moves[i];
+                    let src = gn.row(lid as usize);
+                    for (a, &b) in mgn.row_mut(mlid as usize).iter_mut().zip(src) {
+                        *a += b;
+                    }
+                    add_flops(d as u64);
+                    rows += 1;
+                    i += 1;
+                }
+                sim.send(q, mq, rows * bytes);
+            }
+        }
+        sim.superstep();
+    }
+
+    /// Backward NN-A: projection backward on active masters of level k−1;
+    /// seeds `gh^{k-1}` and accumulates `∂W_k`, `∂b_k`.
+    fn stage_bwd_transform(
+        &mut self,
+        k: usize,
+        params: &ModelParams,
+        plan: &ActivePlan,
+        sim: &mut ClusterSim,
+        backend: &mut dyn StageBackend,
+        grads: &mut [ModelParams],
+    ) {
+        let lp = &params.layers[k - 1];
+        for q in 0..self.dg.p() {
+            let pv = &self.dg.parts[q];
+            let idx = &plan.masters_active[k - 1][q];
+            let gn = self.frames[q].get("gn", k).unwrap();
+            let h_prev = self.frames[q].get("h", k - 1).unwrap();
+            let mut gh_prev = self.cache.take(pv.n_local(), self.dim(k - 1));
+            if !idx.is_empty() {
+                let (gx, gw, gb) = sim.exec(q, || {
+                    let x = h_prev.gather_rows(idx);
+                    let gy = gn.gather_rows(idx);
+                    backend.proj_bwd(&x, &lp.proj.w, &gy)
+                });
+                grads[q].layers[k - 1].proj.w.add_assign(&gw);
+                for (a, b) in grads[q].layers[k - 1].proj.b.iter_mut().zip(&gb) {
+                    *a += b;
+                }
+                for (r, &lid) in idx.iter().enumerate() {
+                    gh_prev.row_mut(lid as usize).copy_from_slice(gx.row(r));
+                }
+            }
+            self.frames[q].insert("gh", k - 1, gh_prev);
+        }
+        sim.superstep();
+    }
+
+    /// Full backward pass; returns per-partition gradients (pre-Reduce).
+    pub fn backward(
+        &mut self,
+        params: &ModelParams,
+        plan: &ActivePlan,
+        sim: &mut ClusterSim,
+        backend: &mut dyn StageBackend,
+        grads: &mut [ModelParams],
+    ) {
+        for k in (1..=plan.k).rev() {
+            self.profile_scope_owned(&format!("bwd:L{k}:NN-T'"), |me| {
+                me.stage_bwd_apply(k, plan, sim)
+            });
+            self.profile_scope_owned(&format!("bwd:L{k}:sync"), |me| me.stage_bwd_sync(k, plan, sim));
+            self.profile_scope_owned(&format!("bwd:L{k}:NN-G'"), |me| {
+                me.stage_bwd_gather(k, params, plan, sim, grads)
+            });
+            self.profile_scope_owned(&format!("bwd:L{k}:Sum'"), |me| {
+                me.stage_bwd_combine(k, plan, sim)
+            });
+            self.profile_scope_owned(&format!("bwd:L{k}:NN-A'"), |me| {
+                me.stage_bwd_transform(k, params, plan, sim, backend, grads)
+            });
+            // Frames of layer k are no longer needed — release to cache.
+            self.release_layer(k);
+        }
+        // drop gh^0
+        for q in 0..self.dg.p() {
+            if let Some(t) = self.frames[q].take("gh", 0) {
+                self.cache.put(t);
+            }
+        }
+    }
+
+    /// Reduce: aggregate per-partition gradients (ring all-reduce traffic
+    /// accounted) into a single gradient set.
+    pub fn reduce(
+        &mut self,
+        grads: Vec<ModelParams>,
+        sim: &mut ClusterSim,
+    ) -> ModelParams {
+        let t_prof = std::time::Instant::now();
+        let p = grads.len();
+        let bytes = grads[0].bytes() as u64;
+        // Ring all-reduce: each worker ships ~2× the parameter bytes.
+        for w in 0..p {
+            sim.send(w, (w + 1) % p, 2 * bytes);
+        }
+        let mut total = grads[0].clone();
+        for gq in grads.iter().skip(1) {
+            sim.exec(0, || total.accumulate(gq));
+        }
+        sim.superstep();
+        self.profile.add_secs("update:reduce", t_prof.elapsed().as_secs_f64());
+        total
+    }
+
+    fn release_layer(&mut self, k: usize) {
+        for q in 0..self.dg.p() {
+            self.frames[q].release(k, &mut self.cache);
+        }
+    }
+
+    /// Release all frames (end of step).
+    pub fn clear(&mut self) {
+        for q in 0..self.dg.p() {
+            self.frames[q].clear(&mut self.cache);
+        }
+    }
+
+    /// One full training step: forward, loss, backward, reduce.
+    pub fn train_step(
+        &mut self,
+        params: &ModelParams,
+        plan: &ActivePlan,
+        sim: &mut ClusterSim,
+        backend: &mut dyn StageBackend,
+    ) -> StepResult {
+        let t0 = sim.clock;
+        self.forward(params, plan, sim, backend);
+        let t1 = sim.clock;
+        // Peak memory is right after the forward: every layer's frames live.
+        let peak = self.live_bytes_per_part().into_iter().max().unwrap_or(0);
+        let mut grads: Vec<ModelParams> = (0..self.dg.p()).map(|_| params.zeros_like()).collect();
+        let loss = self.loss_stage(params, plan, sim, backend, &mut grads);
+        self.backward(params, plan, sim, backend, &mut grads);
+        let t2 = sim.clock;
+        let total = self.reduce(grads, sim);
+        let t3 = sim.clock;
+        self.clear();
+        StepResult {
+            loss,
+            t_forward: t1 - t0,
+            t_backward: t2 - t1,
+            t_reduce: t3 - t2,
+            peak_part_bytes: peak,
+            grads: total,
+        }
+    }
+
+    /// Inference: forward over `plan`, then decode the plan's targets into
+    /// a global `[n, out_dim]` logits tensor (rows valid for targets only).
+    pub fn infer_logits(
+        &mut self,
+        params: &ModelParams,
+        plan: &ActivePlan,
+        sim: &mut ClusterSim,
+        backend: &mut dyn StageBackend,
+    ) -> Tensor {
+        self.forward(params, plan, sim, backend);
+        let k = plan.k;
+        let mut out = Tensor::zeros(self.g.n, self.model.out_dim);
+        for q in 0..self.dg.p() {
+            let pv = &self.dg.parts[q];
+            let idx = &plan.targets_by_part[q];
+            if idx.is_empty() {
+                continue;
+            }
+            let hk = self.frames[q].get("h", k).unwrap();
+            let x = hk.gather_rows(idx);
+            let logits = sim.exec(q, || {
+                backend.proj(&x, &params.decoder.w, &params.decoder.b, Activation::None)
+            });
+            for (r, &lid) in idx.iter().enumerate() {
+                let gid = pv.nodes[lid as usize] as usize;
+                out.row_mut(gid).copy_from_slice(logits.row(r));
+            }
+        }
+        sim.superstep();
+        self.clear();
+        out
+    }
+
+    /// Peak live frame bytes across partitions (the per-worker memory
+    /// figure the paper reports: 5–12 GB per worker on Alipay).
+    pub fn live_bytes_per_part(&self) -> Vec<usize> {
+        self.frames.iter().map(Frame::live_bytes).collect()
+    }
+
+    /// Tensor-cache hit/miss counters (ablation reporting).
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits, self.cache.misses)
+    }
+}
+
+/// Mutable access to two distinct frames (sync/combine move rows between
+/// partitions; Rust needs the split borrow spelled out).
+fn two_frames(frames: &mut [Frame], a: usize, b: usize) -> (&mut Frame, &mut Frame) {
+    assert_ne!(a, b);
+    if a < b {
+        let (l, r) = frames.split_at_mut(b);
+        (&mut l[a], &mut r[0])
+    } else {
+        let (l, r) = frames.split_at_mut(a);
+        (&mut r[0], &mut l[b])
+    }
+}
+
+/// Source local id of local edge `le` — O(1) via the precomputed table.
+#[inline]
+fn src_of_local(pv: &crate::storage::PartitionView, le: usize) -> usize {
+    pv.csr_sources_by_edge[le] as usize
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[inline]
+fn dotv(a: &[f32], b: &[f32]) -> f32 {
+    dot(a, b)
+}
+
+#[inline]
+fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}

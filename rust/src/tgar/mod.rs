@@ -1,0 +1,22 @@
+//! NN-TGAR — the paper's compute-pattern abstraction (§3).
+//!
+//! One encoder layer is a pass of **NN-Transform → NN-Gather → Sum →
+//! NN-Apply**; the decoder and loss are single NN-T stages; the backward
+//! is the same K+2 passes in reverse with **Reduce** collecting parameter
+//! gradients (eqs. 14–20 of the paper's appendix). Stages execute
+//! *hybrid-parallel*: every logical worker computes its partition's slice
+//! of the same batch, so one batch's cost is split across the cluster
+//! instead of replicated per worker.
+//!
+//! * [`active`] — the per-batch active sets: which nodes/edges participate
+//!   at each layer (this is what makes deep, sampling-free neighborhood
+//!   exploration affordable — storage is O(active), not O(subgraph copy)).
+//! * [`executor`] — the stage executor over a [`crate::storage::DistGraph`]
+//!   with explicit master↔mirror synchronization through the cluster
+//!   simulator (bytes and FLOPs accounted per worker).
+
+pub mod active;
+pub mod executor;
+
+pub use active::ActivePlan;
+pub use executor::{Executor, StepResult};

@@ -1,0 +1,73 @@
+//! Small self-contained utilities: deterministic RNG, a minimal JSON
+//! parser/writer (the environment has no network access and `serde` is not
+//! in the vendored crate set), and a lightweight property-testing harness
+//! standing in for `proptest`.
+
+pub mod rng;
+pub mod json;
+pub mod qcheck;
+
+/// Deterministic 64-bit hash (FxHash-style) used for hash partitioners.
+/// Stable across runs and platforms — partition plans must be reproducible.
+#[inline]
+pub fn hash64(mut x: u64) -> u64 {
+    // splitmix64 finalizer: good avalanche, trivially reversible (fine here).
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Combine two ids into one hash (for 2D vertex-cut grids).
+#[inline]
+pub fn hash64_pair(a: u64, b: u64) -> u64 {
+    hash64(a ^ hash64(b).rotate_left(17))
+}
+
+/// Human-readable SI formatting for counters (e.g. `1.4G`, `57.0M`).
+pub fn si(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e12 {
+        format!("{:.2}T", x / 1e12)
+    } else if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{:.2}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash64_is_deterministic_and_spreads() {
+        assert_eq!(hash64(42), hash64(42));
+        assert_ne!(hash64(42), hash64(43));
+        // Buckets of consecutive ids should spread roughly evenly.
+        let p = 8u64;
+        let mut counts = [0usize; 8];
+        for i in 0..8000u64 {
+            counts[(hash64(i) % p) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((800..1200).contains(&c), "skewed bucket: {c}");
+        }
+    }
+
+    #[test]
+    fn hash_pair_is_order_sensitive() {
+        assert_ne!(hash64_pair(1, 2), hash64_pair(2, 1));
+    }
+
+    #[test]
+    fn si_formats() {
+        assert_eq!(si(1.4e9), "1.40G");
+        assert_eq!(si(512.0), "512.00");
+        assert_eq!(si(2.5e3), "2.50K");
+    }
+}

@@ -1,0 +1,103 @@
+//! A small property-testing harness (proptest is not vendored in this
+//! offline environment). Properties are run over many seeded random cases;
+//! on failure the panic message carries the seed and a `Debug` dump of the
+//! failing case so it can be replayed with `qcheck_seeded`.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (kept modest: this box has one core).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` on `cases` random inputs produced by `gen`.
+/// Panics with seed + case on the first counterexample.
+pub fn qcheck<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    qcheck_cases(name, DEFAULT_CASES, gen, prop)
+}
+
+/// Like [`qcheck`] with an explicit case count.
+pub fn qcheck_cases<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let base_seed = 0xC0FFEE ^ crate::util::hash64(name.len() as u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging failures).
+pub fn qcheck_seeded<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    let input = gen(&mut rng);
+    if let Err(msg) = prop(&input) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}\n  input: {input:?}");
+    }
+}
+
+/// Convenience: assert two f32 slices are close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        qcheck(
+            "reverse-involution",
+            |r| (0..r.below(20)).map(|_| r.below(100)).collect::<Vec<_>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("reverse twice != id".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        qcheck_cases("always-fails", 2, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0001], 1e-3).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! PJRT ↔ native backend parity: the AOT-compiled HLO (JAX + Pallas,
+//! interpret=True) must agree with the native Rust math on the stage
+//! operators, and a whole training run through PJRT must match native.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise so
+//! `cargo test` stays runnable from a fresh checkout).
+
+use graphtheta::config::{ModelConfig, StrategyKind, TrainConfig};
+use graphtheta::graph::gen;
+use graphtheta::runtime::pjrt::PjrtBackend;
+use graphtheta::runtime::{Activation, NativeBackend, StageBackend};
+use graphtheta::tensor::Tensor;
+use graphtheta::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn pjrt_proj_matches_native_exactly_padded() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(dir).expect("load artifacts");
+    assert!(pjrt.executables() > 0, "no proj executables compiled");
+    let mut native = NativeBackend;
+    let mut rng = Rng::new(41);
+
+    for (rows, d_in, d_out) in [(100usize, 128usize, 32usize), (128, 32, 32), (7, 32, 7), (513, 128, 32)] {
+        let x = Tensor::randn(rows, d_in, 1.0, &mut rng);
+        let w = Tensor::randn(d_in, d_out, 0.5, &mut rng);
+        let b: Vec<f32> = (0..d_out).map(|_| rng.normal() * 0.1).collect();
+        for act in [Activation::None, Activation::Relu] {
+            let yp = pjrt.proj(&x, &w, &b, act);
+            let yn = native.proj(&x, &w, &b, act);
+            assert_eq!(yp.rows, rows);
+            for (i, (a, c)) in yp.data.iter().zip(&yn.data).enumerate() {
+                assert!(
+                    (a - c).abs() < 1e-4 * a.abs().max(1.0),
+                    "rows={rows} d={d_in}x{d_out} act={act:?} elem {i}: pjrt {a} vs native {c}"
+                );
+            }
+        }
+    }
+    assert!(pjrt.hits >= 8, "expected PJRT to serve these shapes, hits={}", pjrt.hits);
+    assert_eq!(pjrt.fallbacks, 0, "unexpected fallbacks");
+}
+
+#[test]
+fn pjrt_falls_back_on_unknown_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(dir).expect("load artifacts");
+    let mut rng = Rng::new(43);
+    // d_in=50 is not in the manifest.
+    let x = Tensor::randn(10, 50, 1.0, &mut rng);
+    let w = Tensor::randn(50, 3, 1.0, &mut rng);
+    let y = pjrt.proj(&x, &w, &[0.0, 0.0, 0.0], Activation::None);
+    assert_eq!(y.rows, 10);
+    assert_eq!(pjrt.fallbacks, 1);
+    assert_eq!(pjrt.hits, 0);
+}
+
+#[test]
+fn training_through_pjrt_matches_native() {
+    let Some(_) = artifacts_dir() else { return };
+    // Model dims chosen to match the exported artifact spec.
+    let g = gen::citation_like("cora", 7); // feat_dim = 128
+    let mk = |use_pjrt: bool| {
+        let cfg = TrainConfig::builder()
+            .model(ModelConfig::gcn(g.feat_dim, 32, g.num_classes, 2))
+            .strategy(StrategyKind::GlobalBatch)
+            .epochs(3)
+            .eval_every(100)
+            .seed(5)
+            .use_pjrt(use_pjrt)
+            .build();
+        let mut t = graphtheta::engine::trainer::Trainer::new(&g, cfg, 2).unwrap();
+        t.run().unwrap()
+    };
+    let rn = mk(false);
+    let rp = mk(true);
+    for (i, (a, b)) in rn.losses.iter().zip(&rp.losses).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 * a.abs().max(1.0),
+            "step {i}: native loss {a} vs pjrt loss {b}"
+        );
+    }
+    assert!((rn.test_accuracy - rp.test_accuracy).abs() < 0.02);
+}

@@ -1,0 +1,239 @@
+//! System-level invariants across modules: determinism, memory hygiene,
+//! async parameter updates, sampling effects on traffic, failure handling.
+
+use graphtheta::cluster::master::{Command, Health, Master};
+use graphtheta::cluster::ClusterSim;
+use graphtheta::config::{
+    CostModelConfig, ModelConfig, SamplingConfig, StrategyKind, TrainConfig, UpdateMode,
+};
+use graphtheta::engine::trainer::Trainer;
+use graphtheta::graph::gen;
+use graphtheta::nn::ModelParams;
+use graphtheta::partition::{Edge1D, Partitioner};
+use graphtheta::runtime::NativeBackend;
+use graphtheta::storage::DistGraph;
+use graphtheta::tgar::{ActivePlan, Executor};
+use graphtheta::util::rng::Rng;
+
+#[test]
+fn whole_run_is_deterministic_including_cost_model() {
+    let g = gen::citation_like("cora", 7);
+    let mk = || {
+        let cfg = TrainConfig::builder()
+            .model(ModelConfig::gcn(g.feat_dim, 8, g.num_classes, 2))
+            .strategy(StrategyKind::mini(0.2))
+            .epochs(6)
+            .seed(99)
+            .build();
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.run().unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.losses, b.losses);
+    assert_eq!(a.total_bytes, b.total_bytes);
+    assert_eq!(a.total_flops, b.total_flops);
+    assert_eq!(a.sim_total.to_bits(), b.sim_total.to_bits());
+}
+
+#[test]
+fn executor_releases_all_frame_memory_after_each_step() {
+    let g = gen::citation_like("pubmed", 3);
+    let model = ModelConfig::gcn(g.feat_dim, 8, g.num_classes, 2);
+    let params = ModelParams::init(&model, 1);
+    let plan = Edge1D::default().partition(&g, 4);
+    let dg = DistGraph::build(&g, plan);
+    let mut ex = Executor::new(&g, &dg, &model);
+    let mut sim = ClusterSim::new(4, CostModelConfig::default());
+    let mut be = NativeBackend;
+    let mut rng = Rng::new(1);
+    let targets = g.labeled_nodes(&g.train_mask)[..20].to_vec();
+    let aplan =
+        ActivePlan::build(&g, &dg, targets, 2, SamplingConfig::None, false, &mut rng);
+    for _ in 0..3 {
+        let res = ex.train_step(&params, &aplan, &mut sim, &mut be);
+        assert!(res.peak_part_bytes > 0, "peak memory must be observed");
+        let live: usize = ex.live_bytes_per_part().into_iter().sum();
+        assert_eq!(live, 0, "frames leaked after step");
+    }
+}
+
+#[test]
+fn deeper_models_use_more_peak_memory() {
+    // The §4.3 frame design bounds peak memory per task; deeper models
+    // hold more layers live during the forward.
+    let g = gen::citation_like("cora", 7);
+    let peak = |layers: usize| {
+        let model = ModelConfig::gcn(g.feat_dim, 16, g.num_classes, layers);
+        let params = ModelParams::init(&model, 1);
+        let plan = Edge1D::default().partition(&g, 2);
+        let dg = DistGraph::build(&g, plan);
+        let mut ex = Executor::new(&g, &dg, &model);
+        let mut sim = ClusterSim::new(2, CostModelConfig::default());
+        let mut be = NativeBackend;
+        let aplan = ActivePlan::global(&g, &dg, layers, false);
+        ex.train_step(&params, &aplan, &mut sim, &mut be).peak_part_bytes
+    };
+    assert!(peak(4) > peak(2), "4-layer {} vs 2-layer {}", peak(4), peak(2));
+}
+
+#[test]
+fn asynchronous_updates_train_and_respect_staleness() {
+    let g = gen::citation_like("cora", 7);
+    let cfg = TrainConfig::builder()
+        .model(ModelConfig::gcn(g.feat_dim, 8, g.num_classes, 2))
+        .strategy(StrategyKind::mini(0.2))
+        .update_mode(UpdateMode::Asynchronous { max_staleness: 4 })
+        .epochs(10)
+        .seed(3)
+        .build();
+    let mut t = Trainer::new(&g, cfg, 4).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.losses.last().unwrap() < &r.losses[0]);
+}
+
+#[test]
+fn sampling_cuts_traffic_and_flops() {
+    let g = gen::reddit_like();
+    let run_with = |sampling: SamplingConfig| {
+        let cfg = TrainConfig::builder()
+            .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+            .strategy(StrategyKind::mini(0.05))
+            .sampling(sampling)
+            .epochs(2)
+            .seed(5)
+            .build();
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.run_timing(2).unwrap()
+    };
+    let full = run_with(SamplingConfig::None);
+    let sampled = run_with(SamplingConfig::Neighbor { fanout: [3, 2, usize::MAX, usize::MAX] });
+    // Edges shrink hard under fan-out caps; node-proportional projection
+    // work shrinks less on a dense graph (shared sources remain active).
+    assert!(
+        sampled.total_flops < full.total_flops * 8 / 10,
+        "sampled {} vs full {}",
+        sampled.total_flops,
+        full.total_flops
+    );
+    assert!(sampled.total_bytes < full.total_bytes);
+}
+
+#[test]
+fn hybrid_parallel_splits_work_instead_of_replicating() {
+    // More workers ⇒ (almost exactly) the same total FLOPs, split across
+    // workers — the opposite of the DistDGL-sim redundancy.
+    let g = gen::citation_like("citeseer", 6);
+    let total_flops = |p: usize| {
+        let cfg = TrainConfig::builder()
+            .model(ModelConfig::gcn(g.feat_dim, 8, g.num_classes, 2))
+            .strategy(StrategyKind::GlobalBatch)
+            .epochs(1)
+            .seed(5)
+            .build();
+        let mut t = Trainer::new(&g, cfg, p).unwrap();
+        t.run_timing(1).unwrap().total_flops
+    };
+    let f1 = total_flops(1) as f64;
+    let f8 = total_flops(8) as f64;
+    assert!(
+        (f8 - f1).abs() / f1 < 0.05,
+        "hybrid-parallel must not replicate work: p=1 {f1} vs p=8 {f8}"
+    );
+}
+
+#[test]
+fn more_workers_reduce_modeled_time_on_big_graph() {
+    let g = gen::alipay_like(4000);
+    let time_at = |p: usize| {
+        let cfg = TrainConfig::builder()
+            .model(ModelConfig::gat_e(g.feat_dim, 16, 2, 2, g.edge_feat_dim).binary())
+            .strategy(StrategyKind::GlobalBatch)
+            .epochs(1)
+            .seed(5)
+            .cost(CostModelConfig {
+                worker_flops: 2e7,
+                bandwidth: 1e8,
+                latency: 1e-4,
+                overlap: 0.7,
+                superstep_overhead: 5e-4,
+            })
+            .build();
+        let mut t = Trainer::new(&g, cfg, p).unwrap();
+        t.run_timing(1).unwrap().sim_total
+    };
+    let t64 = time_at(64);
+    let t256 = time_at(256);
+    assert!(t256 < t64, "scaling broke: t64={t64} t256={t256}");
+}
+
+#[test]
+fn master_failure_handling_excludes_dead_workers_and_restores() {
+    let mut sim = ClusterSim::new(8, CostModelConfig::default());
+    let mut m = Master::new(8);
+    m.record_checkpoint(100);
+    // Worker 3 stops heartbeating.
+    for _ in 0..3 {
+        m.miss(3);
+    }
+    assert_eq!(m.health_of(3), Health::Dead);
+    let addressed = m.broadcast(Command::TrainStep { step: 101, param_version: 7 }, &mut sim);
+    assert_eq!(addressed.len(), 7);
+    assert!(!addressed.contains(&3));
+    // Recovery restarts from the checkpoint at or before the failure.
+    assert_eq!(m.restore_point(101), Some(100));
+}
+
+#[test]
+fn cluster_batch_traffic_lower_than_mini_batch() {
+    // The paper's locality argument for cluster-batch (§5.3.1): with a
+    // community-aligned partitioning (§4.1: Louvain/METIS "to adapt
+    // cluster-batched training"), a cluster's neighborhood mostly lives on
+    // one worker ⇒ less inter-machine communication per unit work.
+    let g = gen::reddit_like();
+    let run_with = |strategy: StrategyKind| {
+        use graphtheta::partition::LouvainPartitioner;
+        let plan = LouvainPartitioner.partition(&g, 8);
+        let dg = DistGraph::build(&g, plan);
+        let cfg = TrainConfig::builder()
+            .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+            .strategy(strategy)
+            .epochs(1)
+            .seed(5)
+            .build();
+        let mut t = Trainer::with_partition(&g, cfg, dg).unwrap();
+        let r = t.run_timing(4).unwrap();
+        r.total_bytes as f64 / r.total_flops.max(1) as f64
+    };
+    let mb = run_with(StrategyKind::mini(0.05));
+    let cb = run_with(StrategyKind::cluster(0.10, 0));
+    assert!(
+        cb < mb,
+        "cluster-batch bytes/flop {cb:.6} should undercut mini-batch {mb:.6}"
+    );
+}
+
+#[test]
+fn evicted_parameter_version_is_an_error_not_a_crash() {
+    use graphtheta::config::OptimizerKind;
+    use graphtheta::nn::params::{ParamError, ParameterManager};
+    let cfg = ModelConfig::gcn(4, 4, 2, 1);
+    let mut pm = ParameterManager::new(
+        ModelParams::init(&cfg, 1),
+        OptimizerKind::Sgd,
+        0.1,
+        0.0,
+        UpdateMode::Synchronous,
+    );
+    let g0 = pm.fetch_latest().1.zeros_like();
+    for _ in 0..20 {
+        pm.push_grads(&g0);
+        pm.update(1);
+    }
+    match pm.fetch(0) {
+        Err(ParamError::Evicted(0, oldest, latest)) => {
+            assert!(oldest > 0 && latest == 20);
+        }
+        other => panic!("expected eviction, got {other:?}"),
+    }
+}
