@@ -4,6 +4,14 @@
 //!
 //! `harness = false` (criterion is not vendored): a simple
 //! median-of-runs timer with warmup.
+//!
+//! Besides the stdout table, results are written machine-readable to
+//! `BENCH_hotpath.json` at the repository root (name → median/min ms),
+//! so the perf trajectory is tracked across PRs. The file holds two
+//! series: `seed_results` (baseline) and `results` (current). A normal
+//! run fills `results` and preserves any existing `seed_results`; run
+//! with `GT_BENCH_AS_SEED=1` on the baseline commit to record
+//! `seed_results` instead. `GT_BENCH_NO_JSON=1` skips the write.
 
 use graphtheta::cluster::ClusterSim;
 use graphtheta::config::{ModelConfig, SamplingConfig, StrategyKind, TrainConfig};
@@ -15,10 +23,14 @@ use graphtheta::runtime::{Activation, NativeBackend, StageBackend};
 use graphtheta::storage::DistGraph;
 use graphtheta::tensor::Tensor;
 use graphtheta::tgar::{ActivePlan, Executor};
+use graphtheta::util::json::Json;
 use graphtheta::util::rng::Rng;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+/// (name, median ms, min ms) per bench, in run order.
+type Results = Vec<(String, f64, f64)>;
+
+fn bench<F: FnMut()>(results: &mut Results, name: &str, iters: usize, mut f: F) {
     // Warmup.
     f();
     let mut times = Vec::with_capacity(iters);
@@ -31,28 +43,66 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     let med = times[times.len() / 2];
     let min = times[0];
     println!("{name:<44} median {:>10.3} ms   min {:>10.3} ms", med * 1e3, min * 1e3);
+    results.push((name.to_string(), med * 1e3, min * 1e3));
+}
+
+fn write_json(results: &Results) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    let entries: Vec<Json> = results
+        .iter()
+        .map(|(name, med, min)| {
+            Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("median_ms", Json::Num(*med)),
+                ("min_ms", Json::Num(*min)),
+            ])
+        })
+        .collect();
+    let as_seed = std::env::var("GT_BENCH_AS_SEED").is_ok();
+    // Keep the other series from a previous run so seed and current can
+    // coexist in one checked-in file.
+    let keep = |key: &str| -> Json {
+        std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|doc| doc.get(key).cloned())
+            .unwrap_or(Json::Null)
+    };
+    let (seed_results, current) = if as_seed {
+        (Json::Arr(entries), keep("results"))
+    } else {
+        (keep("seed_results"), Json::Arr(entries))
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("unit", Json::Str("ms".into())),
+        ("seed_results", seed_results),
+        ("results", current),
+    ]);
+    match std::fs::write(path, format!("{doc}\n")) {
+        Ok(()) => println!(
+            "\n[{} written to {path}]",
+            if as_seed { "seed baseline" } else { "results" }
+        ),
+        Err(e) => eprintln!("\n[could not write {path}: {e}]"),
+    }
 }
 
 fn main() {
     println!("== hot-path microbenches (median of runs) ==\n");
     let mut rng = Rng::new(1);
+    let mut results: Results = Vec::new();
 
     // GEMM shapes of the shipped models.
     for (m, k, n) in [(2048usize, 128usize, 32usize), (4000, 64, 128), (512, 32, 32)] {
         let a = Tensor::randn(m, k, 1.0, &mut rng);
         let b = Tensor::randn(k, n, 1.0, &mut rng);
         let flops = 2.0 * (m * k * n) as f64;
-        let t0 = Instant::now();
-        let iters = 5;
-        for _ in 0..iters {
+        bench(&mut results, &format!("gemm {m}x{k}x{n}"), 5, || {
             std::hint::black_box(a.matmul(&b));
-        }
-        let dt = t0.elapsed().as_secs_f64() / iters as f64;
-        println!(
-            "gemm {m}x{k}x{n}                               {:>10.3} ms   {:.2} GFLOP/s",
-            dt * 1e3,
-            flops / dt / 1e9
-        );
+        });
+        let med_ms = results.last().unwrap().1;
+        println!("{:<44} {:>10.2} GFLOP/s", "", flops / (med_ms * 1e-3) / 1e9);
     }
     println!();
 
@@ -62,7 +112,7 @@ fn main() {
         let w = Tensor::randn(128, 32, 1.0, &mut rng);
         let bias = vec![0.0f32; 32];
         let mut be = NativeBackend;
-        bench("proj 2048x128x32 (native)", 10, || {
+        bench(&mut results, "proj 2048x128x32 (native)", 10, || {
             std::hint::black_box(be.proj(&x, &w, &bias, Activation::Relu));
         });
     }
@@ -71,12 +121,12 @@ fn main() {
     {
         let t = Tensor::randn(4000, 64, 1.0, &mut rng);
         let idx: Vec<u32> = (0..2000).map(|_| rng.below(4000) as u32).collect();
-        bench("gather_rows 2000x64", 50, || {
+        bench(&mut results, "gather_rows 2000x64", 50, || {
             std::hint::black_box(t.gather_rows(&idx));
         });
         let src = Tensor::randn(2000, 64, 1.0, &mut rng);
         let mut acc = Tensor::zeros(4000, 64);
-        bench("scatter_add_rows 2000x64", 50, || {
+        bench(&mut results, "scatter_add_rows 2000x64", 50, || {
             acc.scatter_add_rows(&idx, &src);
         });
     }
@@ -84,26 +134,26 @@ fn main() {
 
     // Graph-side substrates.
     let g = gen::reddit_like();
-    bench("partition 1d-edge (reddit, p=16)", 5, || {
+    bench(&mut results, "partition 1d-edge (reddit, p=16)", 5, || {
         std::hint::black_box(Edge1D::default().partition(&g, 16));
     });
-    bench("partition vertex-cut (reddit, p=16)", 5, || {
+    bench(&mut results, "partition vertex-cut (reddit, p=16)", 5, || {
         std::hint::black_box(VertexCut.partition(&g, 16));
     });
-    bench("partition louvain (reddit, p=16)", 3, || {
+    bench(&mut results, "partition louvain (reddit, p=16)", 3, || {
         std::hint::black_box(LouvainPartitioner.partition(&g, 16));
     });
 
     let plan = Edge1D::default().partition(&g, 16);
     let dg = DistGraph::build(&g, plan);
-    bench("DistGraph::build (reddit, p=16)", 3, || {
+    bench(&mut results, "DistGraph::build (reddit, p=16)", 3, || {
         let plan = Edge1D::default().partition(&g, 16);
         std::hint::black_box(DistGraph::build(&g, plan));
     });
 
     let train = g.labeled_nodes(&g.train_mask);
     let targets: Vec<u32> = train[..500].to_vec();
-    bench("ActivePlan::build 500 targets k=2 (reddit)", 5, || {
+    bench(&mut results, "ActivePlan::build 500 targets k=2 (reddit)", 5, || {
         let mut r2 = Rng::new(9);
         std::hint::black_box(ActivePlan::build(
             &g,
@@ -117,7 +167,8 @@ fn main() {
     });
     println!();
 
-    // One full NN-TGAR training step (the end-to-end hot path).
+    // One full NN-TGAR training step (the end-to-end hot path), serial
+    // and parallel supersteps (identical numerics, different wall time).
     {
         let model = ModelConfig::gcn(g.feat_dim, 32, g.num_classes, 2);
         let params = ModelParams::init(&model, 3);
@@ -132,9 +183,14 @@ fn main() {
             &mut r2,
         );
         let mut ex = Executor::new(&g, &dg, &model);
-        let mut sim = ClusterSim::new(16, Default::default());
         let mut be = NativeBackend;
-        bench("tgar train_step (reddit, 500 targets, p=16)", 5, || {
+        let mut sim = ClusterSim::new(16, Default::default());
+        sim.set_threads(1);
+        bench(&mut results, "tgar train_step serial (reddit, 500t, p=16)", 5, || {
+            std::hint::black_box(ex.train_step(&params, &aplan, &mut sim, &mut be));
+        });
+        let mut sim = ClusterSim::new(16, Default::default());
+        bench(&mut results, "tgar train_step (reddit, 500 targets, p=16)", 5, || {
             std::hint::black_box(ex.train_step(&params, &aplan, &mut sim, &mut be));
         });
     }
@@ -149,9 +205,13 @@ fn main() {
             .seed(3)
             .build();
         let mut t = Trainer::new(&g, cfg, 16).unwrap();
-        bench("trainer global-batch epoch (reddit, p=16)", 3, || {
+        bench(&mut results, "trainer global-batch epoch (reddit, p=16)", 3, || {
             std::hint::black_box(t.run_timing(1).unwrap());
         });
+    }
+
+    if std::env::var("GT_BENCH_NO_JSON").is_err() {
+        write_json(&results);
     }
     println!("\nhotpath bench OK");
 }

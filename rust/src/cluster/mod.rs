@@ -16,6 +16,14 @@
 //! tensor ops maintain; bytes/messages from the [`ClusterSim::send`]
 //! calls the NN-TGAR engine makes for every master↔mirror transfer. The
 //! model is deterministic, so speedup curves are exactly reproducible.
+//!
+//! Logical workers of one superstep may execute on real OS threads via
+//! [`ClusterSim::exec_batch`]: each worker's closure runs on its own
+//! thread-local FLOP ledger and the ledgers are merged in worker order, so
+//! the accounting — and every numeric result — is **bit-for-bit identical**
+//! to serial execution (`rust/tests/parallel_equivalence.rs` asserts this).
+//! The discrete-event clock is untouched: real-thread speedup shortens
+//! wall time, not modeled time.
 
 pub mod master;
 
@@ -42,6 +50,9 @@ pub struct ClusterSim {
     pub total_flops: u64,
     pub total_bytes: u64,
     pub total_msgs: u64,
+    /// OS threads [`ClusterSim::exec_batch`] spreads logical workers over
+    /// (1 = serial). Defaults to the machine's available parallelism.
+    pub exec_threads: usize,
 }
 
 impl ClusterSim {
@@ -55,7 +66,14 @@ impl ClusterSim {
             total_flops: 0,
             total_bytes: 0,
             total_msgs: 0,
+            exec_threads: default_exec_threads(),
         }
+    }
+
+    /// Pin the OS-thread count used by [`ClusterSim::exec_batch`]
+    /// (1 forces serial execution; results are identical either way).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.exec_threads = threads.max(1);
     }
 
     /// Execute `f` as logical worker `w`, crediting its FLOPs.
@@ -64,6 +82,61 @@ impl ClusterSim {
         self.acc[w].flops += led.flops;
         self.total_flops += led.flops;
         r
+    }
+
+    /// Execute one superstep's worth of per-worker tasks, spread over up
+    /// to [`ClusterSim::exec_threads`] OS threads. Each task runs under
+    /// its own thread-local FLOP ledger; ledgers are merged **in task
+    /// order**, so accounting and results are bit-identical to calling
+    /// [`ClusterSim::exec`] sequentially. Returns the task results in
+    /// input order.
+    pub fn exec_batch<T, F>(&mut self, tasks: Vec<(usize, F)>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let n = tasks.len();
+        let threads = self.exec_threads.min(n).max(1);
+        if threads <= 1 {
+            return tasks.into_iter().map(|(w, f)| self.exec(w, f)).collect();
+        }
+        // Contiguous chunks per thread; each slot is filled exactly once.
+        let chunk = (n + threads - 1) / threads;
+        let mut slots: Vec<Option<(usize, T, Ledger)>> = Vec::new();
+        slots.resize_with(n, || None);
+        let mut chunks: Vec<Vec<(usize, F)>> = Vec::with_capacity(threads);
+        {
+            let mut it = tasks.into_iter();
+            loop {
+                let c: Vec<(usize, F)> = it.by_ref().take(chunk).collect();
+                if c.is_empty() {
+                    break;
+                }
+                chunks.push(c);
+            }
+        }
+        std::thread::scope(|s| {
+            let mut rest: &mut [Option<(usize, T, Ledger)>] = &mut slots;
+            for c in chunks {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(c.len());
+                rest = tail;
+                s.spawn(move || {
+                    for (slot, (w, f)) in head.iter_mut().zip(c) {
+                        let (r, led) = measured(f);
+                        *slot = Some((w, r, led));
+                    }
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                let (w, r, led) = slot.expect("worker task panicked");
+                self.acc[w].flops += led.flops;
+                self.total_flops += led.flops;
+                r
+            })
+            .collect()
     }
 
     /// Record a `from → to` message of `bytes` payload. A `from` rank of
@@ -124,6 +197,11 @@ impl ClusterSim {
         self.total_bytes = 0;
         self.total_msgs = 0;
     }
+}
+
+/// Default OS-thread count for [`ClusterSim::exec_batch`].
+fn default_exec_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 #[cfg(test)]
@@ -198,6 +276,51 @@ mod tests {
         // minus the fixed overhead the ratio is exactly 2
         let ratio = (t2 - 1e-3) / (t4 - 1e-3);
         assert!((ratio - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exec_batch_matches_serial_accounting_exactly() {
+        let work: Vec<u64> = vec![3_000_000, 1_000_000, 4_000_000, 2_000_000, 500_000];
+        let run = |threads: usize| {
+            let mut sim = ClusterSim::new(work.len(), cfg());
+            sim.set_threads(threads);
+            let tasks: Vec<(usize, _)> = work
+                .iter()
+                .enumerate()
+                .map(|(w, &fl)| {
+                    (w, move || {
+                        add_flops(fl);
+                        fl as f64 * 0.5
+                    })
+                })
+                .collect();
+            let results = sim.exec_batch(tasks);
+            let dt = sim.superstep();
+            (results, dt, sim.total_flops)
+        };
+        let (r1, dt1, f1) = run(1);
+        let (r4, dt4, f4) = run(4);
+        assert_eq!(r1, r4);
+        assert_eq!(dt1.to_bits(), dt4.to_bits());
+        assert_eq!(f1, f4);
+        assert_eq!(f1, work.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn exec_batch_returns_results_in_task_order() {
+        let mut sim = ClusterSim::new(8, cfg());
+        sim.set_threads(3);
+        let tasks: Vec<(usize, _)> = (0..8).map(|w| (w, move || w * 10)).collect();
+        assert_eq!(sim.exec_batch(tasks), (0..8).map(|w| w * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn exec_batch_handles_empty_and_single() {
+        let mut sim = ClusterSim::new(2, cfg());
+        let empty: Vec<(usize, fn() -> u32)> = Vec::new();
+        assert!(sim.exec_batch(empty).is_empty());
+        let one: Vec<(usize, _)> = vec![(1, || 7u32)];
+        assert_eq!(sim.exec_batch(one), vec![7]);
     }
 
     #[test]

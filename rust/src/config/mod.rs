@@ -182,6 +182,9 @@ pub struct TrainConfig {
     pub cost: CostModelConfig,
     /// Execute stage operators through PJRT artifacts instead of native.
     pub use_pjrt: bool,
+    /// OS threads for the parallel superstep runner (0 = auto-detect;
+    /// 1 = serial). Numerics are bit-identical at any setting.
+    pub threads: usize,
 }
 
 impl TrainConfig {
@@ -204,6 +207,7 @@ pub struct TrainConfigBuilder {
     seed: Option<u64>,
     cost: Option<CostModelConfig>,
     use_pjrt: bool,
+    threads: Option<usize>,
 }
 
 impl TrainConfigBuilder {
@@ -255,6 +259,10 @@ impl TrainConfigBuilder {
         self.use_pjrt = b;
         self
     }
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = Some(t);
+        self
+    }
 
     pub fn build(self) -> TrainConfig {
         TrainConfig {
@@ -270,6 +278,7 @@ impl TrainConfigBuilder {
             seed: self.seed.unwrap_or(42),
             cost: self.cost.unwrap_or_default(),
             use_pjrt: self.use_pjrt,
+            threads: self.threads.unwrap_or(0),
         }
     }
 }
@@ -344,7 +353,7 @@ pub fn config_from_kv(
     let known = [
         "model", "hidden", "layers", "strategy", "batch_frac", "cluster_frac",
         "boundary_hops", "optimizer", "lr", "weight_decay", "epochs", "eval_every",
-        "seed", "backend", "fanout", "binary",
+        "seed", "backend", "fanout", "binary", "threads",
     ];
     for k in kv.keys() {
         if !known.contains(&k.as_str()) {
@@ -398,6 +407,7 @@ pub fn config_from_kv(
         .eval_every(get_u("eval_every", 10)?)
         .seed(get_u("seed", 42)? as u64)
         .use_pjrt(kv.get("backend").map(String::as_str) == Some("pjrt"))
+        .threads(get_u("threads", 0)?)
         .build())
 }
 

@@ -121,7 +121,9 @@ impl BatchGenerator {
                     targets.push(self.train_nodes[i]);
                     allowed[self.train_nodes[i] as usize] = true;
                 }
-                let mut plan = ActivePlan::build(
+                // Routes are rebuilt by the restriction below — skip the
+                // initial construction rather than paying it twice.
+                let mut plan = ActivePlan::build_unrouted(
                     g,
                     dg,
                     targets,
@@ -219,6 +221,8 @@ pub fn restrict_to_clusters(
         .iter()
         .map(|per_p| per_p.iter().map(Vec::len).sum())
         .collect();
+    // The mirror lists changed — the precomputed routes must follow.
+    plan.rebuild_comm(dg);
 }
 
 #[cfg(test)]

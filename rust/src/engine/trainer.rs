@@ -60,7 +60,10 @@ impl<'a> Trainer<'a> {
 
     /// Use a custom pre-built distributed graph (partitioning studies).
     pub fn with_partition(g: &'a Graph, cfg: TrainConfig, dg: DistGraph) -> Result<Trainer<'a>> {
-        let sim = ClusterSim::new(dg.p(), cfg.cost);
+        let mut sim = ClusterSim::new(dg.p(), cfg.cost);
+        if cfg.threads > 0 {
+            sim.set_threads(cfg.threads);
+        }
         let backend: Box<dyn StageBackend> = if cfg.use_pjrt {
             let dir = std::path::Path::new("artifacts");
             Box::new(crate::runtime::pjrt::PjrtBackend::load(dir)?)

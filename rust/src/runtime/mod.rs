@@ -40,6 +40,14 @@ pub trait StageBackend {
         let gb = g.sum_rows();
         (gx, gw, gb)
     }
+
+    /// A thread-local clone for parallel per-partition execution. `None`
+    /// (the default) keeps stateful backends on the serial path — the
+    /// NN-TGAR executor only fans stage operators out across OS threads
+    /// when every logical worker can get its own fork.
+    fn fork(&self) -> Option<Box<dyn StageBackend + Send>> {
+        None
+    }
 }
 
 /// Pure-Rust backend (default; bit-exact reference for tests).
@@ -58,6 +66,11 @@ impl StageBackend for NativeBackend {
             ops::relu(&mut y);
         }
         y
+    }
+
+    fn fork(&self) -> Option<Box<dyn StageBackend + Send>> {
+        // Stateless — every worker thread can run its own copy.
+        Some(Box::new(NativeBackend))
     }
 }
 

@@ -94,6 +94,12 @@ pub struct DistGraph {
     /// For each global node: the partitions holding a mirror of it.
     /// (Indexed lookup for the master→mirror sync routes.)
     mirror_parts: Vec<Vec<u32>>,
+    /// For each global node: its local id *in its master partition*.
+    /// Dense companion to the per-partition `lid_of` hash maps — the
+    /// NN-TGAR routing hot path only ever resolves master rows, and an
+    /// indexed load beats a hash probe per routed row (see
+    /// [`crate::tgar::commplan`]).
+    master_lids: Vec<u32>,
 }
 
 impl DistGraph {
@@ -203,15 +209,21 @@ impl DistGraph {
             }
         }
 
-        // Pass 4: mirror routes.
+        // Pass 4: mirror routes + the dense master-lid table.
         let mut mirror_parts: Vec<Vec<u32>> = vec![Vec::new(); g.n];
         for pv in &parts {
             for &gid in &pv.nodes[pv.n_masters..] {
                 mirror_parts[gid as usize].push(pv.part);
             }
         }
+        let mut master_lids = vec![0u32; g.n];
+        for pv in &parts {
+            for (lid, &gid) in pv.nodes[..pv.n_masters].iter().enumerate() {
+                master_lids[gid as usize] = lid as u32;
+            }
+        }
 
-        DistGraph { plan, parts, mirror_parts }
+        DistGraph { plan, parts, mirror_parts, master_lids }
     }
 
     #[inline]
@@ -229,6 +241,13 @@ impl DistGraph {
     #[inline]
     pub fn master_part(&self, gid: u32) -> u32 {
         self.plan.master_of[gid as usize]
+    }
+
+    /// Local id of a global node in its master partition — O(1) dense
+    /// lookup, equivalent to `parts[master_part(gid)].lid_of[&gid]`.
+    #[inline]
+    pub fn master_lid(&self, gid: u32) -> u32 {
+        self.master_lids[gid as usize]
     }
 
     /// Total node presences (masters + mirrors) — the replica memory metric.
@@ -344,6 +363,18 @@ mod tests {
                     assert!(pv.is_master(lid as u32), "source {lid} is a mirror");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn master_lid_matches_hash_lookup() {
+        let g = gen::citation_like("citeseer", 6);
+        let plan = VertexCut.partition(&g, 4);
+        let dg = DistGraph::build(&g, plan);
+        for v in 0..g.n as u32 {
+            let mq = dg.master_part(v) as usize;
+            assert_eq!(dg.master_lid(v), dg.parts[mq].lid_of[&v], "node {v}");
+            assert!(dg.parts[mq].is_master(dg.master_lid(v)));
         }
     }
 

@@ -8,32 +8,84 @@
 use super::Tensor;
 use crate::metrics::add_flops;
 
-/// Cache-blocked GEMM accumulate: `out += a @ b`, row-major.
-/// Tile sizes chosen for ~32 KiB L1: 64×64 f32 blocks of `b` stay resident
-/// while 8 rows of `a` stream through.
+/// Packed, blocked GEMM accumulate: `out += a @ b`, row-major.
+///
+/// Panels of `b` (`KC×NR`, zero-padded on ragged edges) are packed into a
+/// stack buffer once per `(k-block, j-block)` and reused across every row
+/// block of `a`. The inner micro-kernel holds a 4×8 register tile of the
+/// output and unrolls fully over the fixed `NR = 8` width, so the scalar
+/// inner loop auto-vectorizes instead of leaving >50% of throughput on
+/// the table (§Perf). Zero `a` entries are skipped per row, which is
+/// numerically exact and keeps sparse level-0 feature projections cheap.
 pub fn gemm_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    const MC: usize = 8;
-    const KC: usize = 64;
-    const NC: usize = 64;
-    for i0 in (0..m).step_by(MC) {
-        let i1 = (i0 + MC).min(m);
-        for k0 in (0..k).step_by(KC) {
-            let k1 = (k0 + KC).min(k);
-            for j0 in (0..n).step_by(NC) {
-                let j1 = (j0 + NC).min(n);
-                for i in i0..i1 {
-                    let arow = &a[i * k..(i + 1) * k];
-                    let orow = &mut out[i * n + j0..i * n + j1];
-                    for kk in k0..k1 {
+    const MR: usize = 4;
+    const NR: usize = 8;
+    const KC: usize = 128;
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let mut bp = [0.0f32; KC * NR];
+    for k0 in (0..k).step_by(KC) {
+        let kb = KC.min(k - k0);
+        for j0 in (0..n).step_by(NR) {
+            let jb = NR.min(n - j0);
+            // Pack B[k0..k0+kb, j0..j0+jb], zero-padding to NR columns so
+            // the micro-kernel always runs full width.
+            for kk in 0..kb {
+                let src = &b[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + jb];
+                let dst = &mut bp[kk * NR..(kk + 1) * NR];
+                dst[..jb].copy_from_slice(src);
+                for x in &mut dst[jb..] {
+                    *x = 0.0;
+                }
+            }
+            // 4-row micro-kernel over the packed panel.
+            let mut i0 = 0;
+            while i0 + MR <= m {
+                let ar = [
+                    &a[i0 * k + k0..i0 * k + k0 + kb],
+                    &a[(i0 + 1) * k + k0..(i0 + 1) * k + k0 + kb],
+                    &a[(i0 + 2) * k + k0..(i0 + 2) * k + k0 + kb],
+                    &a[(i0 + 3) * k + k0..(i0 + 3) * k + k0 + kb],
+                ];
+                let mut c = [[0.0f32; NR]; MR];
+                for kk in 0..kb {
+                    let bk = &bp[kk * NR..(kk + 1) * NR];
+                    for (ci, arow) in c.iter_mut().zip(&ar) {
                         let av = arow[kk];
                         if av == 0.0 {
                             continue;
                         }
-                        let brow = &b[kk * n + j0..kk * n + j1];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv;
+                        for (cv, &bv) in ci.iter_mut().zip(bk) {
+                            *cv += av * bv;
                         }
                     }
+                }
+                for (i, ci) in c.iter().enumerate() {
+                    let orow = &mut out[(i0 + i) * n + j0..(i0 + i) * n + j0 + jb];
+                    for (o, &cv) in orow.iter_mut().zip(ci) {
+                        *o += cv;
+                    }
+                }
+                i0 += MR;
+            }
+            // Remainder rows (m % 4), same kernel one row at a time.
+            for i in i0..m {
+                let arow = &a[i * k + k0..i * k + k0 + kb];
+                let mut ci = [0.0f32; NR];
+                for kk in 0..kb {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let bk = &bp[kk * NR..(kk + 1) * NR];
+                    for (cv, &bv) in ci.iter_mut().zip(bk) {
+                        *cv += av * bv;
+                    }
+                }
+                let orow = &mut out[i * n + j0..i * n + j0 + jb];
+                for (o, &cv) in orow.iter_mut().zip(&ci) {
+                    *o += cv;
                 }
             }
         }
@@ -235,6 +287,34 @@ mod tests {
     use super::*;
     use crate::util::qcheck::{assert_close, qcheck};
     use crate::util::rng::Rng;
+
+    #[test]
+    fn gemm_acc_accumulates_on_ragged_shapes() {
+        // Shapes straddling every tile boundary of the 4×8/KC=128 kernel,
+        // including k > KC and the m%4 / n%8 remainders.
+        let mut r = Rng::new(31);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 130, 9), (7, 129, 17), (12, 64, 8)]
+        {
+            let a = Tensor::randn(m, k, 1.0, &mut r);
+            let b = Tensor::randn(k, n, 1.0, &mut r);
+            let init = Tensor::randn(m, n, 1.0, &mut r);
+            let mut out = init.clone();
+            gemm_acc(&a.data, &b.data, &mut out.data, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut want = init.at(i, j);
+                    for kk in 0..k {
+                        want += a.at(i, kk) * b.at(kk, j);
+                    }
+                    assert!(
+                        (out.at(i, j) - want).abs() < 1e-3 * want.abs().max(1.0),
+                        "({m},{k},{n}) at ({i},{j}): {} vs {want}",
+                        out.at(i, j)
+                    );
+                }
+            }
+        }
+    }
 
     #[test]
     fn softmax_rows_sum_to_one() {

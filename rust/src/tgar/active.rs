@@ -18,6 +18,7 @@
 use crate::config::SamplingConfig;
 use crate::graph::Graph;
 use crate::storage::DistGraph;
+use crate::tgar::commplan::CommPlan;
 use crate::util::rng::Rng;
 
 /// The participation plan for one batch.
@@ -46,6 +47,14 @@ pub struct ActivePlan {
     pub active_count: Vec<usize>,
     /// Active edge count per level.
     pub active_edge_count: Vec<usize>,
+    /// Whether the Gather stage reads destination projections (GAT-E);
+    /// recorded so the communication routes can be rebuilt after plan
+    /// surgery (cluster-batch restriction).
+    pub needs_dst: bool,
+    /// Precomputed master↔mirror routes for every layer (§Perf): built
+    /// once here so the executor's sync/combine supersteps do no route
+    /// derivation, hashing, or sorting.
+    pub comm: CommPlan,
 }
 
 impl ActivePlan {
@@ -53,6 +62,25 @@ impl ActivePlan {
     /// of every partition. `needs_dst` must be true for models whose
     /// Gather reads the destination's projection too (GAT-E).
     pub fn build(
+        g: &Graph,
+        dg: &DistGraph,
+        targets: Vec<u32>,
+        k: usize,
+        sampling: SamplingConfig,
+        needs_dst: bool,
+        rng: &mut Rng,
+    ) -> ActivePlan {
+        let mut plan = Self::build_unrouted(g, dg, targets, k, sampling, needs_dst, rng);
+        plan.rebuild_comm(dg);
+        plan
+    }
+
+    /// [`ActivePlan::build`] without the communication routes — for callers
+    /// that mutate the mirror lists before executing (global-batch
+    /// force-full, cluster-batch restriction) and would otherwise pay the
+    /// route construction twice. The returned plan MUST NOT reach the
+    /// executor until [`ActivePlan::rebuild_comm`] has run.
+    pub(crate) fn build_unrouted(
         g: &Graph,
         dg: &DistGraph,
         targets: Vec<u32>,
@@ -156,8 +184,7 @@ impl ActivePlan {
         let mut targets_by_part = vec![Vec::new(); p];
         for &t in &targets {
             let q = dg.master_part(t) as usize;
-            let lid = dg.parts[q].lid_of[&t];
-            targets_by_part[q].push(lid);
+            targets_by_part[q].push(dg.master_lid(t));
         }
         for tq in targets_by_part.iter_mut() {
             tq.sort_unstable();
@@ -183,7 +210,15 @@ impl ActivePlan {
             targets_by_part,
             active_count,
             active_edge_count,
+            needs_dst,
+            comm: CommPlan::default(),
         }
+    }
+
+    /// Rebuild the precomputed communication routes after the mirror lists
+    /// changed (plan surgery, e.g. the cluster-batch restriction).
+    pub fn rebuild_comm(&mut self, dg: &DistGraph) {
+        self.comm = CommPlan::build(dg, &self.sync_in, &self.partial_out, self.needs_dst);
     }
 
     /// Plan with **all** nodes active (global-batch): targets = labeled
@@ -192,7 +227,7 @@ impl ActivePlan {
         let targets = g.labeled_nodes(&g.train_mask);
         let mut rng = Rng::new(0);
         let mut plan =
-            ActivePlan::build(g, dg, targets, k, SamplingConfig::None, needs_dst, &mut rng);
+            ActivePlan::build_unrouted(g, dg, targets, k, SamplingConfig::None, needs_dst, &mut rng);
         // Force-full: all nodes and edges at every level (targets' BFS may
         // not reach disconnected parts, but global-batch computes them all
         // — matching "performs full graph convolutions across an entire
@@ -220,6 +255,7 @@ impl ActivePlan {
         plan.active_edge_count = (0..=k)
             .map(|l| if l == 0 { 0 } else { g.m })
             .collect();
+        plan.rebuild_comm(dg);
         plan
     }
 }

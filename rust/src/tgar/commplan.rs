@@ -1,0 +1,257 @@
+//! Precomputed master↔mirror communication routes (§Perf).
+//!
+//! The seed executor re-derived every sync/combine route *inside* the
+//! superstep loop: per layer, per step, per stage it rebuilt a
+//! `(master_part, src, dst)` triple list, resolved each row's master-local
+//! id through a `HashMap` probe, and re-sorted the list — four times per
+//! layer per training step (forward sync, Sum combine, backward sync,
+//! backward combine). A [`CommPlan`] hoists all of that to *plan build
+//! time*: one pass over the plan's mirror lists produces dense CSR-style
+//! [`RouteTable`]s, grouped by peer partition with row indices already
+//! resolved to `u32` local ids (via [`DistGraph::master_lid`], a dense
+//! vector — no hashing). The executor's sync/combine stages then reduce to
+//! straight indexed row copies/accumulations plus one `ClusterSim::send`
+//! per partition pair.
+//!
+//! Route kinds, per `(layer, partition)`:
+//!
+//! * [`CommPlan::sync`]    — mirrors whose projection value `n^k` is synced
+//!   in from their master (forward value sync; also the reverse `gM` sync
+//!   reads the same pairing for GAT-E destinations via `partial`).
+//! * [`CommPlan::partial`] — mirrors that accumulate Gather partials to
+//!   return to their master (Sum combine, and the backward `gM` sync which
+//!   is its mirror image).
+//! * [`CommPlan::grad`]    — union of `sync` (+ `partial` for models whose
+//!   Gather reads destination projections, i.e. GAT-E): the mirrors whose
+//!   `gn` contributions flow back to masters in the backward combine.
+
+use crate::storage::DistGraph;
+
+/// Routes of one partition for one layer, grouped by peer partition
+/// (CSR layout: rows of peer `peers[i]` live at `offsets[i]..offsets[i+1]`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RouteTable {
+    /// Peer (master) partitions, ascending, self excluded by construction
+    /// (a mirror's master is always remote).
+    pub peers: Vec<u32>,
+    /// `peers.len() + 1` offsets into `local`/`remote`.
+    pub offsets: Vec<u32>,
+    /// Row ids in the owning partition (the mirror rows).
+    pub local: Vec<u32>,
+    /// Row ids in the peer partition (the master rows).
+    pub remote: Vec<u32>,
+}
+
+impl RouteTable {
+    /// Build the route table for partition `q` from its mirror local ids.
+    /// `lids` must all be mirrors of `q` (checked in debug builds).
+    pub fn build(dg: &DistGraph, q: usize, lids: &[u32]) -> RouteTable {
+        let pv = &dg.parts[q];
+        let mut rows: Vec<(u32, u32, u32)> = lids
+            .iter()
+            .map(|&lid| {
+                debug_assert!(!pv.is_master(lid), "route row {lid} is a master of {q}");
+                let gid = pv.nodes[lid as usize];
+                (dg.master_part(gid), lid, dg.master_lid(gid))
+            })
+            .collect();
+        rows.sort_unstable();
+        let mut rt = RouteTable {
+            peers: Vec::new(),
+            offsets: vec![0],
+            local: Vec::with_capacity(rows.len()),
+            remote: Vec::with_capacity(rows.len()),
+        };
+        for (mq, lid, mlid) in rows {
+            if rt.peers.last() != Some(&mq) {
+                rt.peers.push(mq);
+                rt.offsets.push(*rt.offsets.last().unwrap());
+            }
+            *rt.offsets.last_mut().unwrap() += 1;
+            rt.local.push(lid);
+            rt.remote.push(mlid);
+        }
+        rt
+    }
+
+    /// Number of routed rows.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.local.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.local.is_empty()
+    }
+
+    /// Iterate `(peer_partition, local_rows, remote_rows)` groups.
+    pub fn groups(&self) -> impl Iterator<Item = (usize, &[u32], &[u32])> + '_ {
+        self.peers.iter().enumerate().map(move |(i, &mq)| {
+            let lo = self.offsets[i] as usize;
+            let hi = self.offsets[i + 1] as usize;
+            (mq as usize, &self.local[lo..hi], &self.remote[lo..hi])
+        })
+    }
+}
+
+/// All communication routes of one [`crate::tgar::ActivePlan`], indexed
+/// `[layer][partition]` (layer 0 unused — level 0 is raw features).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CommPlan {
+    pub sync: Vec<Vec<RouteTable>>,
+    pub partial: Vec<Vec<RouteTable>>,
+    /// Backward-combine routes. `None` when they would be identical to
+    /// `sync` — any model whose Gather never reads destination rows
+    /// (GCN, the dominant path) — halving route memory and build time;
+    /// read through [`CommPlan::grad`].
+    grad_dst: Option<Vec<Vec<RouteTable>>>,
+}
+
+impl CommPlan {
+    /// Build every layer's route tables from a plan's mirror lists.
+    /// `needs_dst` matches the plan's (GAT-E reads destination rows, so
+    /// its backward combine also returns `partial` mirrors).
+    pub fn build(
+        dg: &DistGraph,
+        sync_in: &[Vec<Vec<u32>>],
+        partial_out: &[Vec<Vec<u32>>],
+        needs_dst: bool,
+    ) -> CommPlan {
+        let p = dg.p();
+        let layers = sync_in.len(); // k + 1, index 0 unused
+        let empty_layer = || vec![RouteTable::default(); p];
+        let mut plan = CommPlan {
+            sync: vec![empty_layer()],
+            partial: vec![empty_layer()],
+            grad_dst: needs_dst.then(|| vec![empty_layer()]),
+        };
+        for l in 1..layers {
+            let mut sync_l = Vec::with_capacity(p);
+            let mut partial_l = Vec::with_capacity(p);
+            let mut grad_l = Vec::with_capacity(p);
+            for q in 0..p {
+                sync_l.push(RouteTable::build(dg, q, &sync_in[l][q]));
+                partial_l.push(RouteTable::build(dg, q, &partial_out[l][q]));
+                if needs_dst {
+                    let mut u = sync_in[l][q].clone();
+                    u.extend_from_slice(&partial_out[l][q]);
+                    u.sort_unstable();
+                    u.dedup();
+                    grad_l.push(RouteTable::build(dg, q, &u));
+                }
+            }
+            plan.sync.push(sync_l);
+            plan.partial.push(partial_l);
+            if let Some(g) = plan.grad_dst.as_mut() {
+                g.push(grad_l);
+            }
+        }
+        plan
+    }
+
+    /// Backward-combine routes of `(layer, partition)`: the mirrors whose
+    /// `gn` contributions return to masters — `sync` when the model never
+    /// reads destination rows, the sync∪partial union otherwise.
+    #[inline]
+    pub fn grad(&self, l: usize, q: usize) -> &RouteTable {
+        match self.grad_dst.as_ref() {
+            Some(g) => &g[l][q],
+            None => &self.sync[l][q],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SamplingConfig;
+    use crate::graph::gen;
+    use crate::partition::{Partitioner, VertexCut};
+    use crate::tgar::ActivePlan;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn route_table_matches_hash_derivation() {
+        let g = gen::amazon_like();
+        let dplan = VertexCut.partition(&g, 4);
+        let dg = DistGraph::build(&g, dplan);
+        let mut rng = Rng::new(7);
+        let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..30].to_vec();
+        let plan = ActivePlan::build(&g, &dg, targets, 2, SamplingConfig::None, true, &mut rng);
+        for l in 1..=2 {
+            for q in 0..dg.p() {
+                // Reference derivation, the seed executor's inner-loop way.
+                let mut want: Vec<(u32, u32, u32)> = plan.sync_in[l][q]
+                    .iter()
+                    .map(|&lid| {
+                        let gid = dg.parts[q].nodes[lid as usize];
+                        let mq = dg.master_part(gid);
+                        (mq, lid, dg.parts[mq as usize].lid_of[&gid])
+                    })
+                    .collect();
+                want.sort_unstable();
+                let rt = &plan.comm.sync[l][q];
+                assert_eq!(rt.len(), want.len());
+                let mut got = Vec::new();
+                for (mq, local, remote) in rt.groups() {
+                    for (&lid, &mlid) in local.iter().zip(remote) {
+                        got.push((mq as u32, lid, mlid));
+                    }
+                }
+                assert_eq!(got, want, "layer {l} part {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn groups_are_sorted_and_exclude_self() {
+        let g = gen::reddit_like();
+        let dplan = VertexCut.partition(&g, 8);
+        let dg = DistGraph::build(&g, dplan);
+        let plan = ActivePlan::global(&g, &dg, 2, false);
+        for l in 1..=2 {
+            for q in 0..dg.p() {
+                for rt in [&plan.comm.sync[l][q], &plan.comm.partial[l][q], plan.comm.grad(l, q)] {
+                    assert!(rt.peers.windows(2).all(|w| w[0] < w[1]));
+                    assert!(rt.peers.iter().all(|&mq| mq as usize != q));
+                    assert_eq!(*rt.offsets.last().unwrap() as usize, rt.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_routes_alias_sync_without_dst_reads() {
+        // GCN (needs_dst = false): the backward combine returns exactly the
+        // synced mirrors, so no separate table is materialized.
+        let g = gen::reddit_like();
+        let dplan = VertexCut.partition(&g, 4);
+        let dg = DistGraph::build(&g, dplan);
+        let plan = ActivePlan::global(&g, &dg, 2, false);
+        for l in 1..=2 {
+            for q in 0..dg.p() {
+                assert_eq!(plan.comm.grad(l, q), &plan.comm.sync[l][q]);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_routes_union_sync_and_partial_for_gat() {
+        let g = gen::alipay_like(600);
+        let dplan = VertexCut.partition(&g, 4);
+        let dg = DistGraph::build(&g, dplan);
+        let mut rng = Rng::new(3);
+        let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..20].to_vec();
+        let plan = ActivePlan::build(&g, &dg, targets, 2, SamplingConfig::None, true, &mut rng);
+        for q in 0..dg.p() {
+            let mut want: Vec<u32> = plan.sync_in[1][q].clone();
+            want.extend_from_slice(&plan.partial_out[1][q]);
+            want.sort_unstable();
+            want.dedup();
+            let mut got: Vec<u32> = plan.comm.grad(1, q).local.clone();
+            got.sort_unstable();
+            assert_eq!(got, want, "part {q}");
+        }
+    }
+}

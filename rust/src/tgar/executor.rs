@@ -11,6 +11,7 @@
 //!
 //! | Paper stage | Here |
 //! |---|---|
+//! | route construction (once per plan) | [`crate::tgar::commplan::CommPlan::build`] |
 //! | NN-T: `n^k = Proj(h^{k-1}; W_k)` | [`Executor::stage_transform`] |
 //! | master→mirror value sync | [`Executor::stage_sync_values`] |
 //! | NN-G: `m^k_{j→i} = Prop(n_j, e_ij, n_i; θ_k)` | [`Executor::stage_gather`] |
@@ -19,15 +20,28 @@
 //!
 //! and the backward runs the derivative stages in reverse order, ending in
 //! Reduce (gradient aggregation across workers, eqs. 14–20).
+//!
+//! Two §Perf properties of the hot path:
+//!
+//! * **No route derivation inside the step.** All master↔mirror routes are
+//!   dense precomputed [`crate::tgar::RouteTable`]s carried by the
+//!   [`ActivePlan`]; the sync/combine stages are straight indexed row
+//!   moves plus one [`ClusterSim::send`] per partition pair (§4.1: "for a
+//!   master-mirror pair, we only need one time of message propagation").
+//! * **Real parallel supersteps.** The compute stages (Transform, Gather,
+//!   Apply and their adjoints) run their per-partition closures across OS
+//!   threads via [`ClusterSim::exec_batch`]; FLOP ledgers merge in
+//!   partition order so the modeled clock and every numeric result are
+//!   bit-for-bit identical to serial execution.
 
 use crate::cluster::ClusterSim;
 use crate::config::{ModelConfig, ModelKind};
 use crate::graph::Graph;
 use crate::metrics::{add_flops, StageProfile};
-use crate::nn::{ModelParams};
+use crate::nn::{LayerParams, ModelParams};
 use crate::runtime::{Activation, StageBackend};
 use crate::storage::frames::{Frame, TensorCache};
-use crate::storage::DistGraph;
+use crate::storage::{DistGraph, PartitionView};
 use crate::tensor::{ops, Tensor};
 use crate::tgar::ActivePlan;
 
@@ -91,15 +105,29 @@ impl<'a> Executor<'a> {
     /// Load level-0 embeddings (raw features) for active masters.
     fn load_inputs(&mut self, plan: &ActivePlan, sim: &mut ClusterSim) {
         let d = self.dim(0);
-        for q in 0..self.dg.p() {
-            let pv = &self.dg.parts[q];
-            let mut h0 = self.cache.take(pv.n_local(), d);
-            sim.exec(q, || {
-                for &lid in &plan.masters_active[0][q] {
-                    let gid = pv.nodes[lid as usize] as usize;
-                    h0.row_mut(lid as usize).copy_from_slice(self.g.feats.row(gid));
-                }
-            });
+        let g = self.g;
+        let dg = self.dg;
+        let mut jobs = Vec::with_capacity(dg.p());
+        for q in 0..dg.p() {
+            jobs.push(self.cache.take(dg.parts[q].n_local(), d));
+        }
+        let outs = sim.exec_batch(
+            jobs.into_iter()
+                .enumerate()
+                .map(|(q, mut h0)| {
+                    let pv = &dg.parts[q];
+                    let idx = &plan.masters_active[0][q];
+                    (q, move || {
+                        for &lid in idx {
+                            let gid = pv.nodes[lid as usize] as usize;
+                            h0.row_mut(lid as usize).copy_from_slice(g.feats.row(gid));
+                        }
+                        h0
+                    })
+                })
+                .collect(),
+        );
+        for (q, h0) in outs.into_iter().enumerate() {
             self.frames[q].insert("h", 0, h0);
         }
         sim.superstep();
@@ -116,59 +144,62 @@ impl<'a> Executor<'a> {
     ) {
         let d_out = self.dim(k);
         let lp = &params.layers[k - 1];
-        for q in 0..self.dg.p() {
-            let pv = &self.dg.parts[q];
-            let idx = &plan.masters_active[k - 1][q];
-            let h_prev = self.frames[q].get("h", k - 1).expect("h^{k-1} missing");
-            let mut n = self.cache.take(pv.n_local(), d_out);
-            sim.exec(q, || {
-                if !idx.is_empty() {
-                    let x = h_prev.gather_rows(idx);
-                    let y = backend.proj(&x, &lp.proj.w, &lp.proj.b, Activation::None);
-                    for (r, &lid) in idx.iter().enumerate() {
-                        n.row_mut(lid as usize).copy_from_slice(y.row(r));
-                    }
+        let dg = self.dg;
+        let mut jobs = Vec::with_capacity(dg.p());
+        for q in 0..dg.p() {
+            let h_prev = self.frames[q].take("h", k - 1).expect("h^{k-1} missing");
+            let n = self.cache.take(dg.parts[q].n_local(), d_out);
+            jobs.push((h_prev, n));
+        }
+        let outs = match fork_backends(&*backend, dg.p()) {
+            Some(forks) => sim.exec_batch(
+                jobs.into_iter()
+                    .zip(forks)
+                    .enumerate()
+                    .map(|(q, ((h_prev, mut n), mut be))| {
+                        let idx = &plan.masters_active[k - 1][q];
+                        (q, move || {
+                            transform_part(idx, &h_prev, &mut n, lp, be.as_mut());
+                            (h_prev, n)
+                        })
+                    })
+                    .collect(),
+            ),
+            None => {
+                let mut outs = Vec::with_capacity(dg.p());
+                for (q, (h_prev, mut n)) in jobs.into_iter().enumerate() {
+                    let idx = &plan.masters_active[k - 1][q];
+                    sim.exec(q, || transform_part(idx, &h_prev, &mut n, lp, &mut *backend));
+                    outs.push((h_prev, n));
                 }
-            });
+                outs
+            }
+        };
+        for (q, (h_prev, n)) in outs.into_iter().enumerate() {
+            self.frames[q].insert("h", k - 1, h_prev);
             self.frames[q].insert("n", k, n);
         }
         sim.superstep();
     }
 
-    /// master→mirror sync of `n^k` rows needed by remote Gathers.
-    /// Rows are moved grouped by source partition: one frame lookup per
-    /// (layer, partition-pair) instead of per row (§Perf).
+    /// master→mirror sync of `n^k` rows needed by remote Gathers, walking
+    /// the precomputed route table: one message per master↔mirror
+    /// partition pair carrying all its rows, zero route derivation.
     fn stage_sync_values(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
         let d = self.dim(k);
         let bytes = (d * std::mem::size_of::<f32>()) as u64;
         for q in 0..self.dg.p() {
-            // (master partition, source row, dest row) sorted by partition.
-            let mut moves: Vec<(u32, u32, u32)> = plan.sync_in[k][q]
-                .iter()
-                .map(|&lid| {
-                    let gid = self.dg.parts[q].nodes[lid as usize];
-                    let mq = self.dg.master_part(gid);
-                    let mlid = self.dg.parts[mq as usize].lid_of[&gid];
-                    (mq, mlid, lid)
-                })
-                .collect();
-            moves.sort_unstable();
+            let rt = &plan.comm.sync[k][q];
+            if rt.is_empty() {
+                continue;
+            }
             let mut n = self.frames[q].take("n", k).unwrap();
-            let mut i = 0;
-            while i < moves.len() {
-                let mq = moves[i].0 as usize;
+            for (mq, local, remote) in rt.groups() {
                 let src = self.frames[mq].get("n", k).unwrap();
-                let mut rows = 0u64;
-                while i < moves.len() && moves[i].0 as usize == mq {
-                    let (_, mlid, lid) = moves[i];
+                for (&lid, &mlid) in local.iter().zip(remote) {
                     n.row_mut(lid as usize).copy_from_slice(src.row(mlid as usize));
-                    rows += 1;
-                    i += 1;
                 }
-                // One message per master↔mirror partition pair (§4.1: "for
-                // a master-mirror pair, we only need one time of message
-                // propagation"), carrying all its rows.
-                sim.send(mq, q, rows * bytes);
+                sim.send(mq, q, local.len() as u64 * bytes);
             }
             self.frames[q].insert("n", k, n);
         }
@@ -187,55 +218,44 @@ impl<'a> Executor<'a> {
     ) {
         let d = self.dim(k);
         let lp = &params.layers[k - 1];
-        for q in 0..self.dg.p() {
-            let pv = &self.dg.parts[q];
+        let g = self.g;
+        let dg = self.dg;
+        let needs_dst = self.needs_dst();
+        let slope = self.leaky_slope;
+        let edge_dim = self.model.edge_dim;
+        let mut jobs = Vec::with_capacity(dg.p());
+        for q in 0..dg.p() {
+            let pv = &dg.parts[q];
             let n = self.frames[q].take("n", k).unwrap();
-            let mut acc = self.cache.take(pv.n_local(), d);
+            let acc = self.cache.take(pv.n_local(), d);
             let m_active = plan.edges_active[k][q].len();
-            let (mut pre, mut gate) = if self.needs_dst() {
+            let (pre, gate) = if needs_dst {
                 (self.cache.take(m_active.max(1), 1), self.cache.take(m_active.max(1), 1))
             } else {
                 (Tensor::zeros(0, 1), Tensor::zeros(0, 1))
             };
-            sim.exec(q, || {
-                for (ei, &le) in plan.edges_active[k][q].iter().enumerate() {
-                    let le = le as usize;
-                    let src = src_of_local(pv, le);
-                    let dst = pv.csr_targets[le] as usize;
-                    let w_e = pv.edge_weights[le];
-                    let n_src = n.row(src);
-                    match lp.att.as_ref() {
-                        None => {
-                            let arow = acc.row_mut(dst);
-                            for (a, &x) in arow.iter_mut().zip(n_src) {
-                                *a += w_e * x;
-                            }
-                            add_flops(2 * d as u64);
-                        }
-                        Some(att) => {
-                            let n_dst = n.row(dst);
-                            let gid = pv.edge_gids[le] as usize;
-                            let mut s = dot(&att.a_src, n_src) + dot(&att.a_dst, n_dst);
-                            if let Some(ef) = self.g.edge_feats.as_ref() {
-                                s += dot(&att.a_edge, ef.row(gid));
-                            }
-                            let s_act = if s > 0.0 { s } else { s * self.leaky_slope };
-                            let gg = sigmoid(s_act);
-                            pre.data[ei] = s;
-                            gate.data[ei] = gg;
-                            let coef = gg * w_e;
-                            let arow = acc.row_mut(dst);
-                            for (a, &x) in arow.iter_mut().zip(n_src) {
-                                *a += coef * x;
-                            }
-                            add_flops((4 * d + 2 * self.model.edge_dim + 8) as u64);
-                        }
-                    }
-                }
-            });
+            jobs.push((n, acc, pre, gate));
+        }
+        let outs = sim.exec_batch(
+            jobs.into_iter()
+                .enumerate()
+                .map(|(q, (n, mut acc, mut pre, mut gate))| {
+                    let pv = &dg.parts[q];
+                    let edges = &plan.edges_active[k][q];
+                    (q, move || {
+                        gather_part(
+                            pv, edges, lp, g, edge_dim, slope, d, &n, &mut acc, &mut pre,
+                            &mut gate,
+                        );
+                        (n, acc, pre, gate)
+                    })
+                })
+                .collect(),
+        );
+        for (q, (n, acc, pre, gate)) in outs.into_iter().enumerate() {
             self.frames[q].insert("n", k, n);
             self.frames[q].insert("acc", k, acc);
-            if self.needs_dst() {
+            if needs_dst {
                 self.frames[q].insert("att_pre", k, pre);
                 self.frames[q].insert("att_gate", k, gate);
             }
@@ -243,40 +263,26 @@ impl<'a> Executor<'a> {
         sim.superstep();
     }
 
-    /// Sum: return mirror partial sums to their masters (grouped by the
-    /// destination partition — one frame borrow per pair, no row copies).
+    /// Sum: return mirror partial sums to their masters along the
+    /// precomputed `partial` routes (one frame borrow per pair, no row
+    /// copies, no route derivation).
     fn stage_combine(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
         let d = self.dim(k);
         let bytes = (d * std::mem::size_of::<f32>()) as u64;
         for q in 0..self.dg.p() {
-            let mut moves: Vec<(u32, u32, u32)> = plan.partial_out[k][q]
-                .iter()
-                .map(|&lid| {
-                    let gid = self.dg.parts[q].nodes[lid as usize];
-                    let mq = self.dg.master_part(gid);
-                    let mlid = self.dg.parts[mq as usize].lid_of[&gid];
-                    (mq, lid, mlid)
-                })
-                .collect();
-            moves.sort_unstable();
-            let mut i = 0;
-            while i < moves.len() {
-                let mq = moves[i].0 as usize;
+            let rt = &plan.comm.partial[k][q];
+            for (mq, local, remote) in rt.groups() {
                 let (fq, fmq) = two_frames(&mut self.frames, q, mq);
                 let acc = fq.get("acc", k).unwrap();
                 let macc = fmq.get_mut("acc", k).unwrap();
-                let mut rows = 0u64;
-                while i < moves.len() && moves[i].0 as usize == mq {
-                    let (_, lid, mlid) = moves[i];
+                for (&lid, &mlid) in local.iter().zip(remote) {
                     let src = acc.row(lid as usize);
                     for (a, &b) in macc.row_mut(mlid as usize).iter_mut().zip(src) {
                         *a += b;
                     }
-                    add_flops(d as u64);
-                    rows += 1;
-                    i += 1;
                 }
-                sim.send(q, mq, rows * bytes);
+                add_flops(local.len() as u64 * d as u64);
+                sim.send(q, mq, local.len() as u64 * bytes);
             }
         }
         sim.superstep();
@@ -285,23 +291,36 @@ impl<'a> Executor<'a> {
     /// NN-A: `h^k = ReLU(M^k)` on active masters; caches `M^k`.
     fn stage_apply(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
         let d = self.dim(k);
-        for q in 0..self.dg.p() {
-            let pv = &self.dg.parts[q];
+        let dg = self.dg;
+        let mut jobs = Vec::with_capacity(dg.p());
+        for q in 0..dg.p() {
             let acc = self.frames[q].take("acc", k).unwrap();
-            let mut h = self.cache.take(pv.n_local(), d);
-            sim.exec(q, || {
-                for &lid in &plan.masters_active[k][q] {
-                    let lid = lid as usize;
-                    let hrow = h.row_mut(lid);
-                    hrow.copy_from_slice(acc.row(lid));
-                    for x in hrow.iter_mut() {
-                        if *x < 0.0 {
-                            *x = 0.0;
+            let h = self.cache.take(dg.parts[q].n_local(), d);
+            jobs.push((acc, h));
+        }
+        let outs = sim.exec_batch(
+            jobs.into_iter()
+                .enumerate()
+                .map(|(q, (acc, mut h))| {
+                    let idx = &plan.masters_active[k][q];
+                    (q, move || {
+                        for &lid in idx {
+                            let lid = lid as usize;
+                            let hrow = h.row_mut(lid);
+                            hrow.copy_from_slice(acc.row(lid));
+                            for x in hrow.iter_mut() {
+                                if *x < 0.0 {
+                                    *x = 0.0;
+                                }
+                            }
                         }
-                    }
-                }
-                add_flops((plan.masters_active[k][q].len() * d) as u64);
-            });
+                        add_flops((idx.len() * d) as u64);
+                        (acc, h)
+                    })
+                })
+                .collect(),
+        );
+        for (q, (acc, h)) in outs.into_iter().enumerate() {
             self.frames[q].insert("M", k, acc); // pre-activation cache
             self.frames[q].insert("h", k, h);
         }
@@ -406,56 +425,58 @@ impl<'a> Executor<'a> {
     /// Backward NN-T: `gM = ∂Apply = gh ⊙ 1[M > 0]` on active masters.
     fn stage_bwd_apply(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
         let d = self.dim(k);
-        for q in 0..self.dg.p() {
-            let pv = &self.dg.parts[q];
+        let dg = self.dg;
+        let mut jobs = Vec::with_capacity(dg.p());
+        for q in 0..dg.p() {
             let gh = self.frames[q].take("gh", k).unwrap();
-            let m = self.frames[q].get("M", k).unwrap();
-            let mut gm = self.cache.take(pv.n_local(), d);
-            sim.exec(q, || {
-                for &lid in &plan.masters_active[k][q] {
-                    let lid = lid as usize;
-                    let out = gm.row_mut(lid);
-                    for ((o, &g), &pre) in out.iter_mut().zip(gh.row(lid)).zip(m.row(lid)) {
-                        *o = if pre > 0.0 { g } else { 0.0 };
-                    }
-                }
-                add_flops((plan.masters_active[k][q].len() * d) as u64);
-            });
+            let m = self.frames[q].take("M", k).unwrap();
+            let gm = self.cache.take(dg.parts[q].n_local(), d);
+            jobs.push((gh, m, gm));
+        }
+        let outs = sim.exec_batch(
+            jobs.into_iter()
+                .enumerate()
+                .map(|(q, (gh, m, mut gm))| {
+                    let idx = &plan.masters_active[k][q];
+                    (q, move || {
+                        for &lid in idx {
+                            let lid = lid as usize;
+                            let out = gm.row_mut(lid);
+                            for ((o, &g), &pre) in out.iter_mut().zip(gh.row(lid)).zip(m.row(lid)) {
+                                *o = if pre > 0.0 { g } else { 0.0 };
+                            }
+                        }
+                        add_flops((idx.len() * d) as u64);
+                        (gh, m, gm)
+                    })
+                })
+                .collect(),
+        );
+        for (q, (gh, m, gm)) in outs.into_iter().enumerate() {
             self.cache.put(gh);
+            self.frames[q].insert("M", k, m);
             self.frames[q].insert("gM", k, gm);
         }
         sim.superstep();
     }
 
-    /// Sync `gM` to mirror destinations (reverse of the Sum combine),
-    /// grouped by source partition.
+    /// Sync `gM` to mirror destinations (reverse of the Sum combine): the
+    /// `partial` route read in the master→mirror direction.
     fn stage_bwd_sync(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
         let d = self.dim(k);
         let bytes = (d * std::mem::size_of::<f32>()) as u64;
         for q in 0..self.dg.p() {
-            let mut moves: Vec<(u32, u32, u32)> = plan.partial_out[k][q]
-                .iter()
-                .map(|&lid| {
-                    let gid = self.dg.parts[q].nodes[lid as usize];
-                    let mq = self.dg.master_part(gid);
-                    let mlid = self.dg.parts[mq as usize].lid_of[&gid];
-                    (mq, mlid, lid)
-                })
-                .collect();
-            moves.sort_unstable();
+            let rt = &plan.comm.partial[k][q];
+            if rt.is_empty() {
+                continue;
+            }
             let mut gm = self.frames[q].take("gM", k).unwrap();
-            let mut i = 0;
-            while i < moves.len() {
-                let mq = moves[i].0 as usize;
+            for (mq, local, remote) in rt.groups() {
                 let src = self.frames[mq].get("gM", k).unwrap();
-                let mut rows = 0u64;
-                while i < moves.len() && moves[i].0 as usize == mq {
-                    let (_, mlid, lid) = moves[i];
+                for (&lid, &mlid) in local.iter().zip(remote) {
                     gm.row_mut(lid as usize).copy_from_slice(src.row(mlid as usize));
-                    rows += 1;
-                    i += 1;
                 }
-                sim.send(mq, q, rows * bytes);
+                sim.send(mq, q, local.len() as u64 * bytes);
             }
             self.frames[q].insert("gM", k, gm);
         }
@@ -473,12 +494,16 @@ impl<'a> Executor<'a> {
     ) {
         let d = self.dim(k);
         let lp = &params.layers[k - 1];
-        for q in 0..self.dg.p() {
-            let pv = &self.dg.parts[q];
+        let g = self.g;
+        let dg = self.dg;
+        let is_gat = self.needs_dst();
+        let slope = self.leaky_slope;
+        let edge_dim = self.model.edge_dim;
+        let mut jobs = Vec::with_capacity(dg.p());
+        for q in 0..dg.p() {
             let n = self.frames[q].take("n", k).unwrap();
             let gm = self.frames[q].take("gM", k).unwrap();
-            let mut gn = self.cache.take(pv.n_local(), d);
-            let is_gat = self.needs_dst();
+            let gn = self.cache.take(dg.parts[q].n_local(), d);
             let (pre, gate) = if is_gat {
                 (
                     self.frames[q].take("att_pre", k).unwrap(),
@@ -487,117 +512,66 @@ impl<'a> Executor<'a> {
             } else {
                 (Tensor::zeros(0, 1), Tensor::zeros(0, 1))
             };
-            // Attention-vector gradients accumulate locally, merged after
-            // the closure (borrow discipline: `grads` stays outside).
-            let mut ga_src = vec![0.0f32; if is_gat { d } else { 0 }];
-            let mut ga_dst = vec![0.0f32; if is_gat { d } else { 0 }];
-            let mut ga_edge = vec![0.0f32; if is_gat { self.model.edge_dim } else { 0 }];
-            sim.exec(q, || {
-                for (ei, &le) in plan.edges_active[k][q].iter().enumerate() {
-                    let le = le as usize;
-                    let src = src_of_local(pv, le);
-                    let dst = pv.csr_targets[le] as usize;
-                    let w_e = pv.edge_weights[le];
-                    match lp.att.as_ref() {
-                        None => {
-                            let gmd = gm.row(dst);
-                            let out = gn.row_mut(src);
-                            for (o, &g) in out.iter_mut().zip(gmd) {
-                                *o += w_e * g;
-                            }
-                            add_flops(2 * d as u64);
-                        }
-                        Some(att) => {
-                            let gmd = gm.row(dst).to_vec();
-                            let n_src = n.row(src).to_vec();
-                            let n_dst = n.row(dst);
-                            let s_pre = pre.data[ei];
-                            let gg = gate.data[ei];
-                            // ∂L/∂gate = w_e · (n_src · gM_dst)
-                            let ggate = w_e * dotv(&n_src, &gmd);
-                            let gs_act = ggate * gg * (1.0 - gg);
-                            let gpre =
-                                if s_pre > 0.0 { gs_act } else { gs_act * self.leaky_slope };
-                            axpy(&mut ga_src, gpre, &n_src);
-                            axpy(&mut ga_dst, gpre, n_dst);
-                            if let Some(ef) = self.g.edge_feats.as_ref() {
-                                let gid = pv.edge_gids[le] as usize;
-                                axpy(&mut ga_edge, gpre, ef.row(gid));
-                            }
-                            let coef = gg * w_e;
-                            {
-                                let out = gn.row_mut(src);
-                                for i in 0..d {
-                                    out[i] += coef * gmd[i] + gpre * att.a_src[i];
-                                }
-                            }
-                            {
-                                let out = gn.row_mut(dst);
-                                for i in 0..d {
-                                    out[i] += gpre * att.a_dst[i];
-                                }
-                            }
-                            add_flops((8 * d + 2 * self.model.edge_dim) as u64);
-                        }
-                    }
-                }
-            });
+            jobs.push(BwdGatherJob { n, gm, gn, pre, gate });
+        }
+        let outs = sim.exec_batch(
+            jobs.into_iter()
+                .enumerate()
+                .map(|(q, mut job)| {
+                    let pv = &dg.parts[q];
+                    let edges = &plan.edges_active[k][q];
+                    (q, move || {
+                        // Attention-vector gradients accumulate locally,
+                        // merged after the batch (borrow discipline:
+                        // `grads` stays on the main thread).
+                        let mut ga_src = vec![0.0f32; if is_gat { d } else { 0 }];
+                        let mut ga_dst = vec![0.0f32; if is_gat { d } else { 0 }];
+                        let mut ga_edge = vec![0.0f32; if is_gat { edge_dim } else { 0 }];
+                        bwd_gather_part(
+                            pv, edges, lp, g, edge_dim, slope, d, &mut job, &mut ga_src,
+                            &mut ga_dst, &mut ga_edge,
+                        );
+                        (job, ga_src, ga_dst, ga_edge)
+                    })
+                })
+                .collect(),
+        );
+        for (q, (job, ga_src, ga_dst, ga_edge)) in outs.into_iter().enumerate() {
             if is_gat {
                 let gatt = grads[q].layers[k - 1].att.as_mut().unwrap();
                 axpy(&mut gatt.a_src, 1.0, &ga_src);
                 axpy(&mut gatt.a_dst, 1.0, &ga_dst);
                 axpy(&mut gatt.a_edge, 1.0, &ga_edge);
-                self.frames[q].insert("att_pre", k, pre);
-                self.frames[q].insert("att_gate", k, gate);
+                self.frames[q].insert("att_pre", k, job.pre);
+                self.frames[q].insert("att_gate", k, job.gate);
             }
-            self.frames[q].insert("n", k, n);
-            self.frames[q].insert("gM", k, gm);
-            self.frames[q].insert("gn", k, gn);
+            self.frames[q].insert("n", k, job.n);
+            self.frames[q].insert("gM", k, job.gm);
+            self.frames[q].insert("gn", k, job.gn);
         }
         sim.superstep();
     }
 
-    /// Combine mirror `gn` rows back to masters (reverse of value sync).
+    /// Combine mirror `gn` rows back to masters (reverse of value sync),
+    /// along the precomputed `grad` routes (sync mirrors ∪ partial mirrors
+    /// for GAT-E, whose Gather also reads destination projections).
     fn stage_bwd_combine(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
         let d = self.dim(k);
         let bytes = (d * std::mem::size_of::<f32>()) as u64;
         for q in 0..self.dg.p() {
-            // Union of mirrors that received gn contributions: sources
-            // synced in (sync_in) and, for GAT-E, destination mirrors too.
-            let mut lids: Vec<u32> = plan.sync_in[k][q].clone();
-            if self.needs_dst() {
-                lids.extend_from_slice(&plan.partial_out[k][q]);
-                lids.sort_unstable();
-                lids.dedup();
-            }
-            let mut moves: Vec<(u32, u32, u32)> = lids
-                .iter()
-                .map(|&lid| {
-                    let gid = self.dg.parts[q].nodes[lid as usize];
-                    let mq = self.dg.master_part(gid);
-                    let mlid = self.dg.parts[mq as usize].lid_of[&gid];
-                    (mq, lid, mlid)
-                })
-                .collect();
-            moves.sort_unstable();
-            let mut i = 0;
-            while i < moves.len() {
-                let mq = moves[i].0 as usize;
+            let rt = plan.comm.grad(k, q);
+            for (mq, local, remote) in rt.groups() {
                 let (fq, fmq) = two_frames(&mut self.frames, q, mq);
                 let gn = fq.get("gn", k).unwrap();
                 let mgn = fmq.get_mut("gn", k).unwrap();
-                let mut rows = 0u64;
-                while i < moves.len() && moves[i].0 as usize == mq {
-                    let (_, lid, mlid) = moves[i];
+                for (&lid, &mlid) in local.iter().zip(remote) {
                     let src = gn.row(lid as usize);
                     for (a, &b) in mgn.row_mut(mlid as usize).iter_mut().zip(src) {
                         *a += b;
                     }
-                    add_flops(d as u64);
-                    rows += 1;
-                    i += 1;
                 }
-                sim.send(q, mq, rows * bytes);
+                add_flops(local.len() as u64 * d as u64);
+                sim.send(q, mq, local.len() as u64 * bytes);
             }
         }
         sim.superstep();
@@ -615,26 +589,51 @@ impl<'a> Executor<'a> {
         grads: &mut [ModelParams],
     ) {
         let lp = &params.layers[k - 1];
-        for q in 0..self.dg.p() {
-            let pv = &self.dg.parts[q];
-            let idx = &plan.masters_active[k - 1][q];
-            let gn = self.frames[q].get("gn", k).unwrap();
-            let h_prev = self.frames[q].get("h", k - 1).unwrap();
-            let mut gh_prev = self.cache.take(pv.n_local(), self.dim(k - 1));
-            if !idx.is_empty() {
-                let (gx, gw, gb) = sim.exec(q, || {
-                    let x = h_prev.gather_rows(idx);
-                    let gy = gn.gather_rows(idx);
-                    backend.proj_bwd(&x, &lp.proj.w, &gy)
-                });
+        let dg = self.dg;
+        let d_prev = self.dim(k - 1);
+        let mut jobs = Vec::with_capacity(dg.p());
+        for q in 0..dg.p() {
+            let gn = self.frames[q].take("gn", k).unwrap();
+            let h_prev = self.frames[q].take("h", k - 1).unwrap();
+            let gh_prev = self.cache.take(dg.parts[q].n_local(), d_prev);
+            jobs.push((gn, h_prev, gh_prev));
+        }
+        let outs = match fork_backends(&*backend, dg.p()) {
+            Some(forks) => sim.exec_batch(
+                jobs.into_iter()
+                    .zip(forks)
+                    .enumerate()
+                    .map(|(q, ((gn, h_prev, mut gh_prev), mut be))| {
+                        let idx = &plan.masters_active[k - 1][q];
+                        (q, move || {
+                            let gwb =
+                                bwd_transform_part(idx, &h_prev, &gn, &mut gh_prev, lp, be.as_mut());
+                            (gn, h_prev, gh_prev, gwb)
+                        })
+                    })
+                    .collect(),
+            ),
+            None => {
+                let mut outs = Vec::with_capacity(dg.p());
+                for (q, (gn, h_prev, mut gh_prev)) in jobs.into_iter().enumerate() {
+                    let idx = &plan.masters_active[k - 1][q];
+                    let gwb = sim.exec(q, || {
+                        bwd_transform_part(idx, &h_prev, &gn, &mut gh_prev, lp, &mut *backend)
+                    });
+                    outs.push((gn, h_prev, gh_prev, gwb));
+                }
+                outs
+            }
+        };
+        for (q, (gn, h_prev, gh_prev, gwb)) in outs.into_iter().enumerate() {
+            if let Some((gw, gb)) = gwb {
                 grads[q].layers[k - 1].proj.w.add_assign(&gw);
                 for (a, b) in grads[q].layers[k - 1].proj.b.iter_mut().zip(&gb) {
                     *a += b;
                 }
-                for (r, &lid) in idx.iter().enumerate() {
-                    gh_prev.row_mut(lid as usize).copy_from_slice(gx.row(r));
-                }
             }
+            self.frames[q].insert("gn", k, gn);
+            self.frames[q].insert("h", k - 1, h_prev);
             self.frames[q].insert("gh", k - 1, gh_prev);
         }
         sim.superstep();
@@ -785,6 +784,183 @@ impl<'a> Executor<'a> {
     }
 }
 
+/// Per-partition tensors moved through the backward Gather stage.
+struct BwdGatherJob {
+    n: Tensor,
+    gm: Tensor,
+    gn: Tensor,
+    pre: Tensor,
+    gate: Tensor,
+}
+
+/// Per-partition NN-T forward body (runs on a worker thread or inline).
+fn transform_part(
+    idx: &[u32],
+    h_prev: &Tensor,
+    n: &mut Tensor,
+    lp: &LayerParams,
+    be: &mut dyn StageBackend,
+) {
+    if idx.is_empty() {
+        return;
+    }
+    let x = h_prev.gather_rows(idx);
+    let y = be.proj(&x, &lp.proj.w, &lp.proj.b, Activation::None);
+    for (r, &lid) in idx.iter().enumerate() {
+        n.row_mut(lid as usize).copy_from_slice(y.row(r));
+    }
+}
+
+/// Per-partition NN-G forward body.
+#[allow(clippy::too_many_arguments)]
+fn gather_part(
+    pv: &PartitionView,
+    edges: &[u32],
+    lp: &LayerParams,
+    g: &Graph,
+    edge_dim: usize,
+    leaky_slope: f32,
+    d: usize,
+    n: &Tensor,
+    acc: &mut Tensor,
+    pre: &mut Tensor,
+    gate: &mut Tensor,
+) {
+    for (ei, &le) in edges.iter().enumerate() {
+        let le = le as usize;
+        let src = src_of_local(pv, le);
+        let dst = pv.csr_targets[le] as usize;
+        let w_e = pv.edge_weights[le];
+        let n_src = n.row(src);
+        match lp.att.as_ref() {
+            None => {
+                let arow = acc.row_mut(dst);
+                for (a, &x) in arow.iter_mut().zip(n_src) {
+                    *a += w_e * x;
+                }
+                add_flops(2 * d as u64);
+            }
+            Some(att) => {
+                let n_dst = n.row(dst);
+                let gid = pv.edge_gids[le] as usize;
+                let mut s = dot(&att.a_src, n_src) + dot(&att.a_dst, n_dst);
+                if let Some(ef) = g.edge_feats.as_ref() {
+                    s += dot(&att.a_edge, ef.row(gid));
+                }
+                let s_act = if s > 0.0 { s } else { s * leaky_slope };
+                let gg = sigmoid(s_act);
+                pre.data[ei] = s;
+                gate.data[ei] = gg;
+                let coef = gg * w_e;
+                let arow = acc.row_mut(dst);
+                for (a, &x) in arow.iter_mut().zip(n_src) {
+                    *a += coef * x;
+                }
+                add_flops((4 * d + 2 * edge_dim + 8) as u64);
+            }
+        }
+    }
+}
+
+/// Per-partition backward NN-G body. Reads `job.n`/`job.gm`/the cached
+/// attention score+gate, accumulates into `job.gn` and the local attention
+/// gradient vectors — no per-edge scratch allocation (§Perf: the seed
+/// cloned two rows per edge).
+#[allow(clippy::too_many_arguments)]
+fn bwd_gather_part(
+    pv: &PartitionView,
+    edges: &[u32],
+    lp: &LayerParams,
+    g: &Graph,
+    edge_dim: usize,
+    leaky_slope: f32,
+    d: usize,
+    job: &mut BwdGatherJob,
+    ga_src: &mut [f32],
+    ga_dst: &mut [f32],
+    ga_edge: &mut [f32],
+) {
+    for (ei, &le) in edges.iter().enumerate() {
+        let le = le as usize;
+        let src = src_of_local(pv, le);
+        let dst = pv.csr_targets[le] as usize;
+        let w_e = pv.edge_weights[le];
+        match lp.att.as_ref() {
+            None => {
+                let gmd = job.gm.row(dst);
+                let out = job.gn.row_mut(src);
+                for (o, &gv) in out.iter_mut().zip(gmd) {
+                    *o += w_e * gv;
+                }
+                add_flops(2 * d as u64);
+            }
+            Some(att) => {
+                let gmd = job.gm.row(dst);
+                let n_src = job.n.row(src);
+                let n_dst = job.n.row(dst);
+                let s_pre = job.pre.data[ei];
+                let gg = job.gate.data[ei];
+                // ∂L/∂gate = w_e · (n_src · gM_dst)
+                let ggate = w_e * dot(n_src, gmd);
+                let gs_act = ggate * gg * (1.0 - gg);
+                let gpre = if s_pre > 0.0 { gs_act } else { gs_act * leaky_slope };
+                axpy(ga_src, gpre, n_src);
+                axpy(ga_dst, gpre, n_dst);
+                if let Some(ef) = g.edge_feats.as_ref() {
+                    let gid = pv.edge_gids[le] as usize;
+                    axpy(ga_edge, gpre, ef.row(gid));
+                }
+                let coef = gg * w_e;
+                {
+                    let out = job.gn.row_mut(src);
+                    for i in 0..d {
+                        out[i] += coef * gmd[i] + gpre * att.a_src[i];
+                    }
+                }
+                {
+                    let out = job.gn.row_mut(dst);
+                    for i in 0..d {
+                        out[i] += gpre * att.a_dst[i];
+                    }
+                }
+                add_flops((8 * d + 2 * edge_dim) as u64);
+            }
+        }
+    }
+}
+
+/// Per-partition backward NN-A body: projection backward + `gh^{k-1}`
+/// scatter. Returns the weight/bias gradients (None when inactive).
+fn bwd_transform_part(
+    idx: &[u32],
+    h_prev: &Tensor,
+    gn: &Tensor,
+    gh_prev: &mut Tensor,
+    lp: &LayerParams,
+    be: &mut dyn StageBackend,
+) -> Option<(Tensor, Vec<f32>)> {
+    if idx.is_empty() {
+        return None;
+    }
+    let x = h_prev.gather_rows(idx);
+    let gy = gn.gather_rows(idx);
+    let (gx, gw, gb) = be.proj_bwd(&x, &lp.proj.w, &gy);
+    for (r, &lid) in idx.iter().enumerate() {
+        gh_prev.row_mut(lid as usize).copy_from_slice(gx.row(r));
+    }
+    Some((gw, gb))
+}
+
+/// One forked backend per logical worker, or `None` if the backend cannot
+/// be shared across threads (stateful backends stay on the serial path).
+fn fork_backends(be: &dyn StageBackend, p: usize) -> Option<Vec<Box<dyn StageBackend + Send>>> {
+    let mut forks = Vec::with_capacity(p);
+    for _ in 0..p {
+        forks.push(be.fork()?);
+    }
+    Some(forks)
+}
+
 /// Mutable access to two distinct frames (sync/combine move rows between
 /// partitions; Rust needs the split borrow spelled out).
 fn two_frames(frames: &mut [Frame], a: usize, b: usize) -> (&mut Frame, &mut Frame) {
@@ -800,18 +976,13 @@ fn two_frames(frames: &mut [Frame], a: usize, b: usize) -> (&mut Frame, &mut Fra
 
 /// Source local id of local edge `le` — O(1) via the precomputed table.
 #[inline]
-fn src_of_local(pv: &crate::storage::PartitionView, le: usize) -> usize {
+fn src_of_local(pv: &PartitionView, le: usize) -> usize {
     pv.csr_sources_by_edge[le] as usize
 }
 
 #[inline]
 fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
-}
-
-#[inline]
-fn dotv(a: &[f32], b: &[f32]) -> f32 {
-    dot(a, b)
 }
 
 #[inline]

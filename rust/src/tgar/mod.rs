@@ -11,12 +11,17 @@
 //! * [`active`] — the per-batch active sets: which nodes/edges participate
 //!   at each layer (this is what makes deep, sampling-free neighborhood
 //!   exploration affordable — storage is O(active), not O(subgraph copy)).
+//! * [`commplan`] — the precomputed master↔mirror communication routes:
+//!   dense CSR-style tables built once per plan, so the executor's
+//!   sync/combine supersteps do no per-row hashing or sorting.
 //! * [`executor`] — the stage executor over a [`crate::storage::DistGraph`]
 //!   with explicit master↔mirror synchronization through the cluster
 //!   simulator (bytes and FLOPs accounted per worker).
 
 pub mod active;
+pub mod commplan;
 pub mod executor;
 
 pub use active::ActivePlan;
+pub use commplan::{CommPlan, RouteTable};
 pub use executor::{Executor, StepResult};

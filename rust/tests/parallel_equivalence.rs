@@ -1,0 +1,126 @@
+//! The parallel superstep runner must be a pure wall-clock optimization:
+//! running the per-partition stage closures on OS threads may not change
+//! a single bit of the training step — not the loss, not the gradients,
+//! not the modeled distributed clock, not the traffic totals. This is the
+//! invariant that lets `ClusterSim::exec_batch` default to parallel
+//! everywhere (tests, experiments, benches) without perturbing any
+//! reproduced number.
+
+use graphtheta::cluster::ClusterSim;
+use graphtheta::config::{CostModelConfig, ModelConfig, SamplingConfig};
+use graphtheta::graph::{gen, Graph};
+use graphtheta::nn::ModelParams;
+use graphtheta::partition::{Edge1D, Partitioner, VertexCut};
+use graphtheta::runtime::NativeBackend;
+use graphtheta::storage::DistGraph;
+use graphtheta::tgar::{ActivePlan, Executor, StepResult};
+use graphtheta::util::rng::Rng;
+
+/// One full train step on `p` partitions with a pinned thread count.
+fn step_with_threads(
+    g: &Graph,
+    model: &ModelConfig,
+    params: &ModelParams,
+    part: &dyn Partitioner,
+    p: usize,
+    targets: &[u32],
+    threads: usize,
+) -> (StepResult, f64, u64, u64) {
+    let plan = part.partition(g, p);
+    let dg = DistGraph::build(g, plan);
+    let mut sim = ClusterSim::new(p, CostModelConfig::default());
+    sim.set_threads(threads);
+    let mut ex = Executor::new(g, &dg, model);
+    let mut rng = Rng::new(99);
+    let needs_dst = model.kind == graphtheta::config::ModelKind::GatE;
+    let aplan = ActivePlan::build(
+        g,
+        &dg,
+        targets.to_vec(),
+        model.layers,
+        SamplingConfig::None,
+        needs_dst,
+        &mut rng,
+    );
+    let mut be = NativeBackend;
+    let res = ex.train_step(params, &aplan, &mut sim, &mut be);
+    (res, sim.clock, sim.total_flops, sim.total_bytes)
+}
+
+fn assert_grads_identical(a: &ModelParams, b: &ModelParams, what: &str) {
+    let mut a2 = a.clone();
+    a2.visit_with(b, |name, pa, pb| {
+        for (i, (x, y)) in pa.iter().zip(pb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: {name}[{i}] differs: {x} vs {y}"
+            );
+        }
+    });
+}
+
+#[test]
+fn gcn_step_bit_identical_serial_vs_parallel() {
+    let g = gen::citation_like("cora", 7);
+    let model = ModelConfig::gcn(g.feat_dim, 8, g.num_classes, 2);
+    let params = ModelParams::init(&model, 11);
+    let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..32].to_vec();
+    for p in [1usize, 4] {
+        let (r1, clock1, fl1, by1) =
+            step_with_threads(&g, &model, &params, &Edge1D::default(), p, &targets, 1);
+        let (r4, clock4, fl4, by4) =
+            step_with_threads(&g, &model, &params, &Edge1D::default(), p, &targets, 4);
+        assert_eq!(r1.loss.to_bits(), r4.loss.to_bits(), "p={p}: loss");
+        assert_eq!(clock1.to_bits(), clock4.to_bits(), "p={p}: modeled clock");
+        assert_eq!(fl1, fl4, "p={p}: flops");
+        assert_eq!(by1, by4, "p={p}: bytes");
+        assert_eq!(
+            r1.t_forward.to_bits(),
+            r4.t_forward.to_bits(),
+            "p={p}: forward clock"
+        );
+        assert_eq!(
+            r1.t_backward.to_bits(),
+            r4.t_backward.to_bits(),
+            "p={p}: backward clock"
+        );
+        assert_grads_identical(&r1.grads, &r4.grads, &format!("gcn p={p}"));
+    }
+}
+
+#[test]
+fn gat_e_step_bit_identical_serial_vs_parallel() {
+    // GAT-E exercises the attention scratch + destination-mirror routes.
+    let g = gen::alipay_like(600);
+    let model = ModelConfig::gat_e(g.feat_dim, 8, 2, 2, g.edge_feat_dim).binary();
+    let params = ModelParams::init(&model, 13);
+    let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..24].to_vec();
+    for p in [1usize, 4] {
+        let (r1, clock1, fl1, by1) =
+            step_with_threads(&g, &model, &params, &VertexCut, p, &targets, 1);
+        let (r4, clock4, fl4, by4) =
+            step_with_threads(&g, &model, &params, &VertexCut, p, &targets, 4);
+        assert_eq!(r1.loss.to_bits(), r4.loss.to_bits(), "p={p}: loss");
+        assert_eq!(clock1.to_bits(), clock4.to_bits(), "p={p}: modeled clock");
+        assert_eq!(fl1, fl4, "p={p}: flops");
+        assert_eq!(by1, by4, "p={p}: bytes");
+        assert_grads_identical(&r1.grads, &r4.grads, &format!("gat-e p={p}"));
+    }
+}
+
+#[test]
+fn oversubscribed_threads_also_identical() {
+    // More threads than partitions (and than cores) — chunking edge case.
+    let g = gen::citation_like("pubmed", 3);
+    let model = ModelConfig::gcn(g.feat_dim, 8, g.num_classes, 2);
+    let params = ModelParams::init(&model, 5);
+    let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..16].to_vec();
+    let (r1, clock1, _, _) =
+        step_with_threads(&g, &model, &params, &Edge1D::default(), 3, &targets, 1);
+    let (r16, clock16, _, _) =
+        step_with_threads(&g, &model, &params, &Edge1D::default(), 3, &targets, 16);
+    assert_eq!(r1.loss.to_bits(), r16.loss.to_bits());
+    assert_eq!(clock1.to_bits(), clock16.to_bits());
+    assert_grads_identical(&r1.grads, &r16.grads, "oversubscribed");
+}
