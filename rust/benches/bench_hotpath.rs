@@ -209,6 +209,44 @@ fn main() {
             std::hint::black_box(t.run_timing(1).unwrap());
         });
     }
+    println!();
+
+    // Pipelined coordinator: width sweep on the mini-batch workload. Wall
+    // time is benched as usual; each width's *modeled* overlapped makespan
+    // is recorded as an extra row (unit: modeled ms, identical min/median)
+    // so the §Perf series and the pipeline study land in one JSON pass on
+    // the first toolchain-equipped machine.
+    {
+        for &w in &[1usize, 2, 4, 8] {
+            let model = ModelConfig::gcn(g.feat_dim, 32, g.num_classes, 2);
+            let cfg = TrainConfig::builder()
+                .model(model)
+                .strategy(StrategyKind::mini(0.02))
+                .epochs(8)
+                .eval_every(usize::MAX)
+                .seed(3)
+                .pipeline_width(w)
+                .accum_window(w.min(2))
+                .build();
+            let mut makespan_ms = 0.0f64;
+            bench(&mut results, &format!("pipelined mini-batch 8 steps (width={w})"), 3, || {
+                let mut t = Trainer::new(&g, cfg.clone(), 16).unwrap();
+                let rep = t.train_pipelined().unwrap();
+                makespan_ms = rep.train.sim_total * 1e3;
+                std::hint::black_box(&rep);
+            });
+            results.push((
+                format!("pipelined width={w} modeled makespan (model-ms)"),
+                makespan_ms,
+                makespan_ms,
+            ));
+            println!(
+                "{:<44} {:>10.3} model-ms",
+                format!("  ↳ modeled makespan (width={w})"),
+                makespan_ms
+            );
+        }
+    }
 
     if std::env::var("GT_BENCH_NO_JSON").is_err() {
         write_json(&results);

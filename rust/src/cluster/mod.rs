@@ -24,6 +24,13 @@
 //! to serial execution (`rust/tests/parallel_equivalence.rs` asserts this).
 //! The discrete-event clock is untouched: real-thread speedup shortens
 //! wall time, not modeled time.
+//!
+//! The clock here is strictly *serial*: supersteps of different training
+//! steps never overlap. Pipelined training's overlapped makespan — many
+//! subgraph trainings in flight, placed by the work-stealing scheduler —
+//! is layered on top by [`crate::coordinator`], which reads phase
+//! durations off this clock (via [`ClusterSim::mark`]/[`ClusterSim::since`]
+//! and the executor's per-phase times) and never mutates it.
 
 pub mod master;
 
@@ -176,6 +183,17 @@ impl ClusterSim {
         dt
     }
 
+    /// Current modeled clock, as an opaque mark for [`ClusterSim::since`].
+    pub fn mark(&self) -> f64 {
+        self.clock
+    }
+
+    /// Modeled seconds elapsed since `mark` (phase attribution — e.g. the
+    /// pipelined coordinator splitting evaluation supersteps from training).
+    pub fn since(&self, mark: f64) -> f64 {
+        self.clock - mark
+    }
+
     /// Imbalance of the in-flight superstep: max/mean of per-worker flops.
     pub fn current_imbalance(&self) -> f64 {
         let max = self.acc.iter().map(|a| a.flops).max().unwrap_or(0) as f64;
@@ -321,6 +339,17 @@ mod tests {
         assert!(sim.exec_batch(empty).is_empty());
         let one: Vec<(usize, _)> = vec![(1, || 7u32)];
         assert_eq!(sim.exec_batch(one), vec![7]);
+    }
+
+    #[test]
+    fn mark_and_since_track_the_clock() {
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.exec(0, || add_flops(1_000_000));
+        sim.superstep();
+        let mark = sim.mark();
+        sim.exec(1, || add_flops(2_000_000));
+        let dt = sim.superstep();
+        assert!((sim.since(mark) - dt).abs() < 1e-12, "since {} dt {dt}", sim.since(mark));
     }
 
     #[test]

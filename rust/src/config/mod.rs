@@ -185,6 +185,15 @@ pub struct TrainConfig {
     /// OS threads for the parallel superstep runner (0 = auto-detect;
     /// 1 = serial). Numerics are bit-identical at any setting.
     pub threads: usize,
+    /// Concurrent subgraph trainings kept in flight by
+    /// [`crate::coordinator::Coordinator`] (`Trainer::train_pipelined`).
+    /// 1 = no concurrency; with `accum_window = 1` too, pipelined training
+    /// is bit-identical to the sequential trainer.
+    pub pipeline_width: usize,
+    /// Steps whose gradients accumulate (averaged) into one parameter
+    /// update — the pipelined-SGD window bounding staleness. 1 = update
+    /// after every step, exactly sequential SGD.
+    pub accum_window: usize,
 }
 
 impl TrainConfig {
@@ -208,6 +217,8 @@ pub struct TrainConfigBuilder {
     cost: Option<CostModelConfig>,
     use_pjrt: bool,
     threads: Option<usize>,
+    pipeline_width: Option<usize>,
+    accum_window: Option<usize>,
 }
 
 impl TrainConfigBuilder {
@@ -263,6 +274,14 @@ impl TrainConfigBuilder {
         self.threads = Some(t);
         self
     }
+    pub fn pipeline_width(mut self, w: usize) -> Self {
+        self.pipeline_width = Some(w);
+        self
+    }
+    pub fn accum_window(mut self, a: usize) -> Self {
+        self.accum_window = Some(a);
+        self
+    }
 
     pub fn build(self) -> TrainConfig {
         TrainConfig {
@@ -279,6 +298,8 @@ impl TrainConfigBuilder {
             cost: self.cost.unwrap_or_default(),
             use_pjrt: self.use_pjrt,
             threads: self.threads.unwrap_or(0),
+            pipeline_width: self.pipeline_width.unwrap_or(1).max(1),
+            accum_window: self.accum_window.unwrap_or(1).max(1),
         }
     }
 }
@@ -353,7 +374,7 @@ pub fn config_from_kv(
     let known = [
         "model", "hidden", "layers", "strategy", "batch_frac", "cluster_frac",
         "boundary_hops", "optimizer", "lr", "weight_decay", "epochs", "eval_every",
-        "seed", "backend", "fanout", "binary", "threads",
+        "seed", "backend", "fanout", "binary", "threads", "pipeline_width", "accum_window",
     ];
     for k in kv.keys() {
         if !known.contains(&k.as_str()) {
@@ -408,6 +429,8 @@ pub fn config_from_kv(
         .seed(get_u("seed", 42)? as u64)
         .use_pjrt(kv.get("backend").map(String::as_str) == Some("pjrt"))
         .threads(get_u("threads", 0)?)
+        .pipeline_width(get_u("pipeline_width", 1)?)
+        .accum_window(get_u("accum_window", 1)?)
         .build())
 }
 
@@ -423,6 +446,28 @@ mod tests {
         assert_eq!(c.strategy, StrategyKind::GlobalBatch);
         assert_eq!(c.optimizer, OptimizerKind::Adam);
         assert!(!c.use_pjrt);
+        assert_eq!(c.pipeline_width, 1);
+        assert_eq!(c.accum_window, 1);
+    }
+
+    #[test]
+    fn pipeline_knobs_via_builder_and_kv() {
+        let c = TrainConfig::builder()
+            .model(ModelConfig::gcn(8, 8, 2, 1))
+            .pipeline_width(4)
+            .accum_window(2)
+            .build();
+        assert_eq!((c.pipeline_width, c.accum_window), (4, 2));
+        // Zero is clamped to 1 (a width/window of 0 is meaningless).
+        let c = TrainConfig::builder()
+            .model(ModelConfig::gcn(8, 8, 2, 1))
+            .pipeline_width(0)
+            .accum_window(0)
+            .build();
+        assert_eq!((c.pipeline_width, c.accum_window), (1, 1));
+        let kv = parse_kv("pipeline_width = 8\naccum_window = 4\n").unwrap();
+        let c = config_from_kv(&kv, 8, 2, 0).unwrap();
+        assert_eq!((c.pipeline_width, c.accum_window), (8, 4));
     }
 
     #[test]

@@ -1,1 +1,357 @@
-// paper's L3 coordination contribution
+//! Hybrid-parallel coordination (paper §4.3): many subgraph trainings in
+//! flight over one modeled cluster, placed by the work-stealing scheduler,
+//! with gradients accumulated into shared multi-versioned parameters.
+//!
+//! The sequential [`crate::engine::trainer::Trainer::run`] executes one
+//! NN-TGAR step at a time: fetch the latest parameters, train, update.
+//! The [`Coordinator`] generalizes that loop along two orthogonal knobs
+//! from [`TrainConfig`]:
+//!
+//! * **`pipeline_width` (W)** — concurrent subgraph trainings in flight.
+//!   Steps are admitted in *rounds* of up to W; every step of a round pins
+//!   the parameter version current at round start ("workers can fetch
+//!   parameters of a specific version … and use these parameters within
+//!   the step", §4.3 / Figure 7).
+//! * **`accum_window` (A)** — steps whose gradients accumulate (averaged)
+//!   into one optimizer update. The window flushes through
+//!   [`ParameterManager::update_averaged`]; a trailing partial window
+//!   flushes at the end of training.
+//!
+//! `W = 1, A = 1` degenerates to the sequential loop *bit-for-bit*: the
+//! same plans, the same parameter trajectory, the same modeled clock
+//! (`rust/tests/golden_training.rs` pins this down). `W > 1` with `A ≥ 1`
+//! is the paper's pipelined SGD: an in-flight step may push gradients
+//! computed against a version up to `W − 1` updates behind the latest
+//! (when `A < W`), and the staleness every push incurred is recorded by
+//! the [`ParameterManager`].
+//!
+//! # Task graph
+//!
+//! Each admitted step contributes one *chain* of three phase tasks,
+//!
+//! ```text
+//! forward supersteps ─▶ backward supersteps ─▶ gradient sync (Reduce)
+//! ```
+//!
+//! with a sequential dependency inside the chain and none across chains
+//! of the same round (they share a pinned parameter version). Rounds
+//! serialize at the update barrier. The chains are handed to
+//! [`schedule_chains`] — the work-stealing scheduler scheduling *real*
+//! tasks — over the modeled cluster's `p` workers; chain `c`'s home
+//! worker is `c % p` and executing elsewhere counts as a steal.
+//!
+//! # Clock model
+//!
+//! Numerics always execute serially (that is what keeps them exactly
+//! reproducible), and [`ClusterSim`]'s clock stays the *serial* clock: the
+//! sum of every superstep's modeled time. Phase-task costs are the
+//! executor's measured phase durations — themselves derived from the cost
+//! model's FLOP/byte charges, i.e. proportional to the plan's active-edge
+//! counts — converted to integer nanoseconds for the scheduler. Per round:
+//!
+//! ```text
+//! gain = Σ task costs − work-stealing makespan        (≥ 0)
+//! overlapped clock = serial clock − Σ rounds gain
+//! ```
+//!
+//! A round with a single chain (W = 1, or the last partial round) cannot
+//! overlap anything: its gain is *exactly* zero, which is what makes the
+//! width-1 pipelined clock bit-identical to the sequential trainer's. A
+//! mini-batch step underutilizes the cluster, so modeling one phase task
+//! per executor slot (out of `p`) is the paper's cheapest-parallelism
+//! argument: concurrency of independent mini-batches, not finer
+//! intra-step partitioning. Evaluation supersteps are serial barriers and
+//! are never overlapped.
+
+use crate::cluster::ClusterSim;
+use crate::config::{ModelKind, TrainConfig};
+use crate::engine::scheduler::{schedule_chains, Task};
+use crate::engine::strategy::BatchGenerator;
+use crate::engine::trainer::{eval_plan, test_metrics, TrainReport};
+use crate::graph::Graph;
+use crate::metrics::OverlapStats;
+use crate::nn::params::ParameterManager;
+use crate::nn::ModelParams;
+use crate::runtime::StageBackend;
+use crate::storage::DistGraph;
+use crate::tensor::ops;
+use crate::tgar::{ActivePlan, Executor};
+use anyhow::Result;
+
+/// Report of a pipelined run: the sequential-compatible [`TrainReport`]
+/// (its `sim_total` is the *overlapped* modeled clock) plus pipeline
+/// telemetry.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    pub train: TrainReport,
+    pub pipeline_width: usize,
+    pub accum_window: usize,
+    /// Admission rounds executed (`⌈steps / width⌉`).
+    pub rounds: usize,
+    /// Parameter versions published.
+    pub updates: u64,
+    /// Serial vs overlapped accounting of the training phase tasks.
+    pub overlap: OverlapStats,
+    /// Modeled seconds spent in evaluation supersteps (serial barriers).
+    pub eval_secs: f64,
+    /// Max updates any pushed gradient's version lagged the latest.
+    pub max_staleness: u64,
+    pub mean_staleness: f64,
+}
+
+impl PipelineReport {
+    /// The serial modeled clock this run would have had without overlap.
+    pub fn serial_clock(&self) -> f64 {
+        self.train.sim_total + self.overlap.gain_secs()
+    }
+}
+
+/// Drives rounds of concurrent subgraph trainings over one modeled
+/// cluster. Construct via [`Coordinator::new`] (or use
+/// [`crate::engine::trainer::Trainer::train_pipelined`], which shares the
+/// trainer's partitioning, cost model and backend).
+pub struct Coordinator<'a> {
+    g: &'a Graph,
+    dg: &'a DistGraph,
+    cfg: TrainConfig,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn new(g: &'a Graph, dg: &'a DistGraph, cfg: TrainConfig) -> Coordinator<'a> {
+        Coordinator { g, dg, cfg }
+    }
+
+    fn needs_dst(&self) -> bool {
+        self.cfg.model.kind == ModelKind::GatE
+    }
+
+    /// Run the pipelined training loop. Expects a fresh `sim` (clock 0);
+    /// a warm one simply shifts the reported clocks.
+    pub fn run(
+        &self,
+        sim: &mut ClusterSim,
+        backend: &mut dyn StageBackend,
+    ) -> Result<PipelineReport> {
+        let t_wall = std::time::Instant::now();
+        let cfg = self.cfg.clone();
+        let width = cfg.pipeline_width.max(1);
+        let window = cfg.accum_window.max(1);
+        let model = cfg.model.clone();
+        let mut pm = ParameterManager::new(
+            ModelParams::init(&model, cfg.seed),
+            cfg.optimizer,
+            cfg.lr,
+            cfg.weight_decay,
+            cfg.update_mode,
+        );
+        let mut gen = BatchGenerator::new(
+            self.g,
+            self.dg,
+            cfg.strategy.clone(),
+            cfg.sampling,
+            model.layers,
+            self.needs_dst(),
+            cfg.seed,
+        );
+        let mut ex = Executor::new(self.g, self.dg, &model);
+
+        let has_val = self.g.val_mask.iter().any(|&b| b);
+        let val_plan =
+            if has_val { Some(eval_plan(self.g, self.dg, &model, &self.g.val_mask)) } else { None };
+
+        let epochs = cfg.epochs;
+        let mut losses = Vec::with_capacity(epochs);
+        let (mut sim_fwd, mut sim_bwd) = (0.0f64, 0.0f64);
+        let mut best_val = 0.0f64;
+        let mut best_params: Option<ModelParams> = None;
+        let mut peak_bytes = 0usize;
+        let mut overlap = OverlapStats::default();
+        let mut eval_secs = 0.0f64;
+        let mut in_window = 0usize;
+        let mut rounds = 0usize;
+        let mut step = 0usize;
+        let mut next_plan: Option<ActivePlan> =
+            if epochs > 0 { Some(gen.next_plan(self.g, self.dg)) } else { None };
+
+        while step < epochs {
+            let round_n = width.min(epochs - step);
+            rounds += 1;
+            // Every step of this round pins the round-start version.
+            let version = pm.latest_version();
+            let params = pm.fetch(version)?.clone();
+            let mut chain_costs: Vec<[f64; 3]> = Vec::with_capacity(round_n);
+            for _ in 0..round_n {
+                let plan = next_plan.take().expect("plan prefetched");
+                let res = if step + 1 < epochs {
+                    // Hide the next plan's subgraph construction behind
+                    // this step's NN-TGAR execution.
+                    let (np, res) = gen.next_plan_overlapped(self.g, self.dg, || {
+                        ex.train_step(&params, &plan, sim, backend)
+                    });
+                    next_plan = Some(np);
+                    res
+                } else {
+                    ex.train_step(&params, &plan, sim, backend)
+                };
+                peak_bytes = peak_bytes.max(res.peak_part_bytes);
+                sim_fwd += res.t_forward;
+                sim_bwd += res.t_backward;
+                losses.push(res.loss);
+                chain_costs.push([res.t_forward, res.t_backward, res.t_reduce]);
+                pm.push_grads_from(&res.grads, version);
+                in_window += 1;
+                if in_window == window {
+                    pm.update_averaged(window);
+                    in_window = 0;
+                }
+                step += 1;
+                if has_val && step % cfg.eval_every == 0 {
+                    let mark = sim.mark();
+                    let latest = pm.fetch_latest().1.clone();
+                    let logits =
+                        ex.infer_logits(&latest, val_plan.as_ref().unwrap(), sim, backend);
+                    let acc = ops::accuracy(&logits, &self.g.labels, &self.g.val_mask);
+                    if acc > best_val {
+                        best_val = acc;
+                        best_params = Some(latest);
+                    }
+                    eval_secs += sim.since(mark);
+                }
+            }
+            // Clock model for the round (see module docs).
+            let serial: f64 = chain_costs.iter().map(|c| c[0] + c[1] + c[2]).sum();
+            if round_n >= 2 {
+                let chains: Vec<Vec<Task>> = chain_costs
+                    .iter()
+                    .enumerate()
+                    .map(|(c, phases)| {
+                        phases
+                            .iter()
+                            .enumerate()
+                            .map(|(j, &dt)| Task {
+                                id: (c * 3 + j) as u64,
+                                cost: (dt * 1e9).round() as u64,
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let sched = schedule_chains(&chains, self.dg.p());
+                let serial_ns: u64 = chains.iter().flatten().map(|t| t.cost).sum();
+                let gain_ns = serial_ns.saturating_sub(sched.makespan());
+                overlap.serial_secs += serial;
+                overlap.overlapped_secs += serial - gain_ns as f64 * 1e-9;
+                overlap.tasks += 3 * round_n;
+                overlap.steals += sched.steals;
+            } else {
+                // One chain cannot overlap: gain is exactly zero, keeping
+                // the width-1 clock bit-identical to `Trainer::run`.
+                overlap.serial_secs += serial;
+                overlap.overlapped_secs += serial;
+                overlap.tasks += 3;
+            }
+        }
+        if in_window > 0 {
+            pm.update_averaged(in_window);
+        }
+
+        // Final evaluation — the same code path as the sequential trainer.
+        let final_params = best_params.unwrap_or_else(|| pm.fetch_latest().1.clone());
+        let test_plan = eval_plan(self.g, self.dg, &model, &self.g.test_mask);
+        let mark = sim.mark();
+        let logits = ex.infer_logits(&final_params, &test_plan, sim, backend);
+        let (test_accuracy, f1, auc) = test_metrics(self.g, &model, &logits);
+        eval_secs += sim.since(mark);
+
+        let (max_staleness, mean_staleness) = pm.staleness();
+        let latest_param_l2 = pm.fetch_latest().1.l2_norm();
+        let train = TrainReport {
+            losses,
+            steps: epochs,
+            test_accuracy,
+            best_val_accuracy: best_val,
+            f1,
+            auc,
+            sim_forward: sim_fwd,
+            sim_backward: sim_bwd,
+            sim_total: sim.clock - overlap.gain_secs(),
+            wall_secs: t_wall.elapsed().as_secs_f64(),
+            total_bytes: sim.total_bytes,
+            total_flops: sim.total_flops,
+            peak_part_bytes: peak_bytes,
+            latest_param_l2,
+            profile: ex.profile.clone(),
+        };
+        Ok(PipelineReport {
+            train,
+            pipeline_width: width,
+            accum_window: window,
+            rounds,
+            updates: pm.latest_version(),
+            overlap,
+            eval_secs,
+            max_staleness,
+            mean_staleness,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, StrategyKind};
+    use crate::engine::trainer::Trainer;
+    use crate::graph::gen;
+
+    fn cfg(g: &Graph, width: usize, window: usize, epochs: usize) -> TrainConfig {
+        TrainConfig::builder()
+            .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+            .strategy(StrategyKind::mini(0.3))
+            .epochs(epochs)
+            .eval_every(5)
+            .lr(0.05)
+            .seed(7)
+            .pipeline_width(width)
+            .accum_window(window)
+            .build()
+    }
+
+    #[test]
+    fn width_one_window_one_matches_sequential_bitwise() {
+        let g = gen::citation_like("citeseer", 6);
+        let seq = {
+            let mut t = Trainer::new(&g, cfg(&g, 1, 1, 6), 4).unwrap();
+            t.run().unwrap()
+        };
+        let pip = {
+            let mut t = Trainer::new(&g, cfg(&g, 1, 1, 6), 4).unwrap();
+            t.train_pipelined().unwrap()
+        };
+        assert_eq!(seq.losses, pip.train.losses);
+        assert_eq!(seq.sim_total.to_bits(), pip.train.sim_total.to_bits());
+        assert_eq!(seq.test_accuracy.to_bits(), pip.train.test_accuracy.to_bits());
+        assert_eq!(seq.latest_param_l2.to_bits(), pip.train.latest_param_l2.to_bits());
+        assert_eq!(pip.overlap.gain_secs(), 0.0);
+        assert_eq!(pip.max_staleness, 0);
+    }
+
+    #[test]
+    fn rounds_updates_and_staleness_bookkeeping() {
+        let g = gen::citation_like("citeseer", 6);
+        // width 4, window 4, 10 steps: 3 rounds (4+4+2); updates at steps
+        // 4 and 8, plus the trailing flush of 2 ⇒ 3 versions; no update
+        // ever lands mid-round ⇒ staleness 0.
+        let mut t = Trainer::new(&g, cfg(&g, 4, 4, 10), 4).unwrap();
+        let r = t.train_pipelined().unwrap();
+        assert_eq!(r.rounds, 3);
+        assert_eq!(r.updates, 3);
+        assert_eq!(r.max_staleness, 0);
+        assert_eq!(r.train.losses.len(), 10);
+        // width 4, window 1: updates publish inside the round, so the
+        // last step of a full round lags 3 updates.
+        let mut t = Trainer::new(&g, cfg(&g, 4, 1, 10), 4).unwrap();
+        let r = t.train_pipelined().unwrap();
+        assert_eq!(r.updates, 10);
+        assert_eq!(r.max_staleness, 3);
+        assert!(r.mean_staleness > 0.0);
+    }
+}

@@ -7,6 +7,17 @@
 //! from the busiest victim when starved. On this 1-core box the scheduler
 //! runs as a deterministic simulation that reports the resulting makespan,
 //! which is what the ablation benches compare against static assignment.
+//!
+//! Two entry points:
+//!
+//! * [`work_stealing`] — independent tasks (the original makespan model,
+//!   still used for synthetic load-balance studies and unit tests);
+//! * [`schedule_chains`] — the real workload: each in-flight subgraph
+//!   training is a *chain* of phase tasks (forward supersteps → backward
+//!   supersteps → gradient sync) with a sequential dependency inside the
+//!   chain and none across chains of the same parameter version. This is
+//!   what [`crate::coordinator::Coordinator`] places on the modeled
+//!   cluster to derive the overlapped makespan of pipelined training.
 
 /// A schedulable unit of work.
 #[derive(Clone, Debug, PartialEq)]
@@ -93,6 +104,57 @@ pub fn work_stealing(tasks: &[Task], p: usize) -> Schedule {
     }
     let finish = clock.iter().map(|&c| if c == u64::MAX { 0 } else { c }).collect();
     Schedule { finish, placement, steals }
+}
+
+/// Schedule dependency chains of tasks over `p` workers.
+///
+/// Chain `c` is one in-flight subgraph training: its tasks execute in
+/// order (task `j` becomes ready when task `j-1` finishes), and chain
+/// `c`'s *home* worker is `c % p`. The simulation is greedy
+/// earliest-start: among every (pending chain, worker) pair it executes
+/// the one that can begin soonest, preferring the home worker on ties —
+/// running on any other worker counts as a steal. Fully deterministic:
+/// remaining ties break on the lowest worker id, then the lowest chain id.
+///
+/// Properties the tests pin down: a single chain serializes exactly
+/// (makespan = Σ cost, zero steals), `p = 1` never steals, and the
+/// makespan is bounded by `max(longest chain, total/p)`-style list
+/// scheduling from below and the serial sum from above.
+pub fn schedule_chains(chains: &[Vec<Task>], p: usize) -> Schedule {
+    assert!(p > 0, "need at least one worker");
+    let total: usize = chains.iter().map(Vec::len).sum();
+    let mut clock = vec![0u64; p];
+    let mut next = vec![0usize; chains.len()];
+    let mut ready_at = vec![0u64; chains.len()];
+    let mut placement = Vec::with_capacity(total);
+    let mut steals = 0u64;
+    for _ in 0..total {
+        // (start, stolen, worker, chain), minimized lexicographically.
+        let mut best: Option<(u64, bool, usize, usize)> = None;
+        for (c, chain) in chains.iter().enumerate() {
+            if next[c] >= chain.len() {
+                continue;
+            }
+            let home = c % p;
+            for (w, &wclock) in clock.iter().enumerate() {
+                let key = (wclock.max(ready_at[c]), w != home, w, c);
+                if best.is_none_or(|b| key < b) {
+                    best = Some(key);
+                }
+            }
+        }
+        let (start, stolen, w, c) = best.expect("tasks remain");
+        let task = &chains[c][next[c]];
+        next[c] += 1;
+        if stolen {
+            steals += 1;
+        }
+        let finish = start.saturating_add(task.cost);
+        clock[w] = finish;
+        ready_at[c] = finish;
+        placement.push((task.id, w));
+    }
+    Schedule { finish: clock, placement, steals }
 }
 
 #[cfg(test)]
@@ -193,5 +255,120 @@ mod tests {
         let ws = work_stealing(&tasks, 1);
         assert_eq!(ws.makespan(), 12);
         assert_eq!(ws.steals, 0);
+    }
+
+    #[test]
+    fn no_steals_when_single_worker() {
+        qcheck(
+            "p1-never-steals",
+            |r| skewed_tasks(r, 1 + r.below(48)),
+            |tasks| {
+                let ws = work_stealing(tasks, 1);
+                if ws.steals != 0 {
+                    return Err(format!("{} steals with one worker", ws.steals));
+                }
+                let want: u64 = tasks.iter().map(|t| t.cost).sum();
+                if ws.makespan() != want {
+                    return Err(format!("serial makespan {} != {want}", ws.makespan()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn placement_is_deterministic_for_a_fixed_seed() {
+        let mut rng = Rng::new(0xD5EED);
+        let tasks = skewed_tasks(&mut rng, 40);
+        let a = work_stealing(&tasks, 4);
+        let b = work_stealing(&tasks, 4);
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.finish, b.finish);
+        assert_eq!(a.steals, b.steals);
+        let chains: Vec<Vec<Task>> = tasks.chunks(5).map(<[Task]>::to_vec).collect();
+        let ca = schedule_chains(&chains, 4);
+        let cb = schedule_chains(&chains, 4);
+        assert_eq!(ca.placement, cb.placement);
+        assert_eq!(ca.finish, cb.finish);
+        assert_eq!(ca.steals, cb.steals);
+    }
+
+    #[test]
+    fn single_chain_serializes_without_steals() {
+        // One pipeline in flight ⇒ no overlap and no stealing, on any p:
+        // this is what keeps the width-1 pipelined clock identical to the
+        // sequential trainer's.
+        let chain = vec![
+            Task { id: 0, cost: 11 },
+            Task { id: 1, cost: 3 },
+            Task { id: 2, cost: 8 },
+        ];
+        for p in [1usize, 2, 4, 7] {
+            let s = schedule_chains(std::slice::from_ref(&chain), p);
+            assert_eq!(s.makespan(), 22, "p={p}");
+            assert_eq!(s.steals, 0, "p={p}");
+            assert_eq!(s.placement.len(), 3);
+        }
+    }
+
+    #[test]
+    fn independent_chains_overlap() {
+        let a = vec![Task { id: 0, cost: 5 }, Task { id: 1, cost: 5 }, Task { id: 2, cost: 5 }];
+        let b = vec![Task { id: 10, cost: 7 }, Task { id: 11, cost: 7 }, Task { id: 12, cost: 7 }];
+        let s = schedule_chains(&[a, b], 2);
+        // Each chain runs on its home worker: makespan = the longer chain.
+        assert_eq!(s.makespan(), 21);
+        assert_eq!(s.steals, 0);
+    }
+
+    #[test]
+    fn chain_schedule_conserves_and_bounds() {
+        qcheck(
+            "chains-conserve-and-bound",
+            |r| {
+                let nchains = 1 + r.below(6);
+                let p = 1 + r.below(6);
+                let chains: Vec<Vec<Task>> = (0..nchains)
+                    .map(|c| {
+                        (0..1 + r.below(5))
+                            .map(|j| Task {
+                                id: (c * 100 + j) as u64,
+                                cost: 1 + r.power_law(500, 2.0) as u64,
+                            })
+                            .collect()
+                    })
+                    .collect();
+                (chains, p)
+            },
+            |(chains, p)| {
+                let s = schedule_chains(chains, *p);
+                let total_tasks: usize = chains.iter().map(Vec::len).sum();
+                if s.placement.len() != total_tasks {
+                    return Err("task count mismatch".into());
+                }
+                let mut ids: Vec<u64> = s.placement.iter().map(|&(id, _)| id).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                if ids.len() != total_tasks {
+                    return Err("task placed twice or lost".into());
+                }
+                let serial: u64 = chains.iter().flatten().map(|t| t.cost).sum();
+                let longest: u64 =
+                    chains.iter().map(|c| c.iter().map(|t| t.cost).sum()).max().unwrap_or(0);
+                if s.makespan() > serial {
+                    return Err(format!("makespan {} beyond serial {serial}", s.makespan()));
+                }
+                if s.makespan() < longest {
+                    return Err(format!("makespan {} under longest chain {longest}", s.makespan()));
+                }
+                if *p == 1 && s.steals != 0 {
+                    return Err("steals on a single worker".into());
+                }
+                if *p == 1 && s.makespan() != serial {
+                    return Err("single worker must serialize".into());
+                }
+                Ok(())
+            },
+        );
     }
 }

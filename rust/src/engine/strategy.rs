@@ -81,6 +81,26 @@ impl BatchGenerator {
         self.clusters.as_ref().map_or(0, |c| c.count)
     }
 
+    /// Prefetch: build the *next* step's plan on a helper thread while
+    /// `work` (the current step's NN-TGAR execution) runs on this one.
+    /// The generator advances exactly as a sequential [`Self::next_plan`]
+    /// call after `work` would — plan order, RNG stream and numerics are
+    /// unchanged; only wall-clock overlaps. Used by
+    /// [`crate::coordinator::Coordinator`] to hide subgraph construction
+    /// behind the in-flight step.
+    pub fn next_plan_overlapped<R>(
+        &mut self,
+        g: &Graph,
+        dg: &DistGraph,
+        work: impl FnOnce() -> R,
+    ) -> (ActivePlan, R) {
+        std::thread::scope(|s| {
+            let handle = s.spawn(|| self.next_plan(g, dg));
+            let r = work();
+            (handle.join().expect("plan prefetch thread panicked"), r)
+        })
+    }
+
     /// Produce the next step's plan.
     pub fn next_plan(&mut self, g: &Graph, dg: &DistGraph) -> ActivePlan {
         match self.strategy.clone() {
@@ -338,6 +358,33 @@ mod tests {
             open.active_edge_count[1] > strict.active_edge_count[1],
             "2-hop boundary should admit outside sources at the far layer"
         );
+    }
+
+    #[test]
+    fn prefetch_overlap_preserves_plan_order() {
+        let (g, dg) = setup();
+        let mk = || {
+            BatchGenerator::new(
+                &g,
+                &dg,
+                StrategyKind::mini(0.02),
+                SamplingConfig::None,
+                2,
+                false,
+                11,
+            )
+        };
+        let mut seq = mk();
+        let mut ovl = mk();
+        let want: Vec<Vec<u32>> = (0..4).map(|_| seq.next_plan(&g, &dg).targets).collect();
+        let mut got = Vec::new();
+        let mut work_ran = 0usize;
+        for _ in 0..4 {
+            let (plan, ()) = ovl.next_plan_overlapped(&g, &dg, || work_ran += 1);
+            got.push(plan.targets);
+        }
+        assert_eq!(got, want);
+        assert_eq!(work_ran, 4);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! (modeled distributed time, per-phase breakdown, traffic, peak memory).
 
 use crate::cluster::ClusterSim;
-use crate::config::{ModelKind, TrainConfig};
+use crate::config::{ModelConfig, ModelKind, TrainConfig};
 use crate::graph::Graph;
 use crate::metrics::StageProfile;
 use crate::nn::params::ParameterManager;
@@ -11,11 +11,53 @@ use crate::nn::ModelParams;
 use crate::partition::{Edge1D, Partitioner};
 use crate::runtime::{NativeBackend, StageBackend};
 use crate::storage::DistGraph;
-use crate::tensor::ops;
+use crate::tensor::{ops, Tensor};
 use crate::tgar::{ActivePlan, Executor};
 use anyhow::Result;
 
 use super::strategy::BatchGenerator;
+
+/// Evaluation plan shared by the sequential and pipelined trainers: all
+/// `mask` nodes as targets, sampling-free, fixed eval RNG ("inference
+/// through a unified implementation with training"). One code path keeps
+/// the two trainers' bit-identity invariant edit-proof.
+pub(crate) fn eval_plan(
+    g: &Graph,
+    dg: &DistGraph,
+    model: &ModelConfig,
+    mask: &[bool],
+) -> ActivePlan {
+    let targets = g.labeled_nodes(mask);
+    let mut rng = crate::util::rng::Rng::new(0xEA1);
+    ActivePlan::build(
+        g,
+        dg,
+        targets,
+        model.layers,
+        crate::config::SamplingConfig::None,
+        model.kind == ModelKind::GatE,
+        &mut rng,
+    )
+}
+
+/// Final test metrics from full-graph logits: `(accuracy, f1, auc)` —
+/// binary tasks threshold at 0 and report F1/AUC, multi-class reports
+/// argmax accuracy. Shared by the sequential and pipelined trainers.
+pub(crate) fn test_metrics(g: &Graph, model: &ModelConfig, logits: &Tensor) -> (f64, f64, f64) {
+    let mask = &g.test_mask;
+    if model.binary {
+        let (f1, auc) = ops::binary_f1_auc(logits, &g.labels, mask);
+        // "accuracy" for binary = thresholded at 0.
+        let acc = (0..g.n)
+            .filter(|&v| mask[v])
+            .filter(|&v| (logits.at(v, 0) > 0.0) == (g.labels[v] == 1))
+            .count() as f64
+            / mask.iter().filter(|&&b| b).count().max(1) as f64;
+        (acc, f1, auc)
+    } else {
+        (ops::accuracy(logits, &g.labels, mask), 0.0, 0.0)
+    }
+}
 
 /// Outcome of a training run.
 #[derive(Clone, Debug)]
@@ -39,6 +81,11 @@ pub struct TrainReport {
     pub total_flops: u64,
     /// Peak live frame bytes over any partition (per-worker memory proxy).
     pub peak_part_bytes: usize,
+    /// L2 norm of the *latest* parameter version — a cheap fingerprint of
+    /// the whole gradient history, used by the golden determinism suite to
+    /// assert pipelined and sequential training applied bit-identical
+    /// updates.
+    pub latest_param_l2: f32,
     pub profile: StageProfile,
 }
 
@@ -80,17 +127,7 @@ impl<'a> Trainer<'a> {
     /// Evaluation plan: all nodes of `mask` as targets, sampling-free
     /// ("inference through a unified implementation with training").
     fn eval_plan(&self, mask: &[bool]) -> ActivePlan {
-        let targets = self.g.labeled_nodes(mask);
-        let mut rng = crate::util::rng::Rng::new(0xEA1);
-        ActivePlan::build(
-            self.g,
-            &self.dg,
-            targets,
-            self.cfg.model.layers,
-            crate::config::SamplingConfig::None,
-            self.needs_dst(),
-            &mut rng,
-        )
+        eval_plan(self.g, &self.dg, &self.cfg.model, mask)
     }
 
     /// Run the full training loop.
@@ -160,19 +197,7 @@ impl<'a> Trainer<'a> {
         let test_plan = self.eval_plan(&self.g.test_mask.clone());
         let logits =
             ex.infer_logits(&final_params, &test_plan, &mut self.sim, self.backend.as_mut());
-        let test_mask = self.g.test_mask.clone();
-        let (test_accuracy, f1, auc) = if model.binary {
-            let (f1, auc) = ops::binary_f1_auc(&logits, &self.g.labels, &test_mask);
-            // "accuracy" for binary = thresholded at 0.
-            let acc = (0..self.g.n)
-                .filter(|&v| test_mask[v])
-                .filter(|&v| (logits.at(v, 0) > 0.0) == (self.g.labels[v] == 1))
-                .count() as f64
-                / test_mask.iter().filter(|&&b| b).count().max(1) as f64;
-            (acc, f1, auc)
-        } else {
-            (ops::accuracy(&logits, &self.g.labels, &test_mask), 0.0, 0.0)
-        };
+        let (test_accuracy, f1, auc) = test_metrics(self.g, &model, &logits);
 
         Ok(TrainReport {
             losses,
@@ -188,8 +213,22 @@ impl<'a> Trainer<'a> {
             total_bytes: self.sim.total_bytes,
             total_flops: self.sim.total_flops,
             peak_part_bytes: peak_bytes,
+            latest_param_l2: pm.fetch_latest().1.l2_norm(),
             profile: ex.profile.clone(),
         })
+    }
+
+    /// Pipelined (hybrid-parallel) training: keep `cfg.pipeline_width`
+    /// subgraph trainings in flight, accumulate gradients over
+    /// `cfg.accum_window` steps, and model the overlapped makespan of the
+    /// phase tasks placed by the work-stealing scheduler — see
+    /// [`crate::coordinator`] for the task graph, staleness semantics and
+    /// clock model. With `pipeline_width = 1` and `accum_window = 1` the
+    /// result (loss series, parameters, modeled clock) is bit-identical
+    /// to [`Trainer::run`].
+    pub fn train_pipelined(&mut self) -> Result<crate::coordinator::PipelineReport> {
+        let coord = crate::coordinator::Coordinator::new(self.g, &self.dg, self.cfg.clone());
+        coord.run(&mut self.sim, self.backend.as_mut())
     }
 
     /// Run `steps` training steps and return only timing (scalability

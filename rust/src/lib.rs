@@ -13,10 +13,12 @@
 //!
 //! Architecture in this repository (three layers, Python never at runtime):
 //!
-//! * **L3 (this crate)** — the coordinator: graph storage, partitioning,
-//!   NN-TGAR execution, training strategies, multi-versioned parameters,
-//!   a simulated cluster with byte/flop accounting, baselines, and the
-//!   experiment drivers that regenerate every table/figure of the paper.
+//! * **L3 (this crate)** — graph storage, partitioning, NN-TGAR
+//!   execution, training strategies, multi-versioned parameters, the
+//!   [`coordinator`] keeping concurrent subgraph trainings in flight over
+//!   the work-stealing scheduler, a simulated cluster with byte/flop
+//!   accounting, baselines, and the experiment drivers that regenerate
+//!   every table/figure of the paper.
 //! * **L2 (`python/compile/model.py`)** — dense NN stage operators in JAX,
 //!   AOT-lowered once to HLO text artifacts.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the hot spot
@@ -54,6 +56,7 @@ pub mod nn;
 pub mod tgar;
 pub mod engine;
 pub mod cluster;
+pub mod coordinator;
 pub mod runtime;
 pub mod baselines;
 pub mod experiments;
@@ -61,6 +64,7 @@ pub mod experiments;
 /// Commonly used types, re-exported for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{CostModelConfig, ModelConfig, StrategyKind, TrainConfig};
+    pub use crate::coordinator::{Coordinator, PipelineReport};
     pub use crate::engine::trainer::{TrainReport, Trainer};
     pub use crate::graph::{Graph, GraphBuilder};
     pub use crate::nn::params::ParameterManager;

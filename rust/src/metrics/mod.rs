@@ -146,6 +146,46 @@ impl StageProfile {
     }
 }
 
+/// Overlap accounting for pipelined (hybrid-parallel) execution: the same
+/// phase tasks' serial modeled time vs their work-stealing makespan on the
+/// modeled cluster. Built by [`crate::coordinator::Coordinator`], which
+/// documents the clock model; a single pipeline in flight has
+/// `overlapped_secs == serial_secs` exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OverlapStats {
+    /// Sum of all phase-task durations — what the sequential clock charges.
+    pub serial_secs: f64,
+    /// Work-stealing makespan of the same tasks.
+    pub overlapped_secs: f64,
+    /// Phase tasks scheduled.
+    pub tasks: usize,
+    /// Successful steals during placement.
+    pub steals: u64,
+}
+
+impl OverlapStats {
+    /// Modeled seconds saved by overlap (exactly 0.0 with one pipeline).
+    pub fn gain_secs(&self) -> f64 {
+        (self.serial_secs - self.overlapped_secs).max(0.0)
+    }
+
+    /// serial / overlapped (1.0 when nothing overlapped).
+    pub fn speedup(&self) -> f64 {
+        if self.overlapped_secs > 0.0 {
+            self.serial_secs / self.overlapped_secs
+        } else {
+            1.0
+        }
+    }
+
+    pub fn merge(&mut self, other: &OverlapStats) {
+        self.serial_secs += other.serial_secs;
+        self.overlapped_secs += other.overlapped_secs;
+        self.tasks += other.tasks;
+        self.steals += other.steals;
+    }
+}
+
 /// Render rows as a GitHub-flavored markdown table (the experiment drivers
 /// print the paper's tables in this format).
 pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -216,6 +256,20 @@ mod tests {
         let pct: f64 = p.percentages().iter().map(|(_, x)| x).sum();
         assert!((pct - 100.0).abs() < 1e-6);
         assert_eq!(p.get("fwd").unwrap().calls, 2);
+    }
+
+    #[test]
+    fn overlap_stats_gain_and_speedup() {
+        let mut a = OverlapStats { serial_secs: 2.0, overlapped_secs: 1.0, tasks: 6, steals: 1 };
+        assert!((a.gain_secs() - 1.0).abs() < 1e-12);
+        assert!((a.speedup() - 2.0).abs() < 1e-12);
+        // One pipeline: overlapped == serial ⇒ gain exactly zero.
+        let single = OverlapStats { serial_secs: 3.5, overlapped_secs: 3.5, tasks: 3, steals: 0 };
+        assert_eq!(single.gain_secs(), 0.0);
+        assert_eq!(single.speedup(), 1.0);
+        a.merge(&single);
+        assert!((a.serial_secs - 5.5).abs() < 1e-12);
+        assert_eq!(a.tasks, 9);
     }
 
     #[test]

@@ -12,13 +12,28 @@ use super::{optim::Optimizer, ModelParams};
 use crate::config::{OptimizerKind, UpdateMode};
 use std::collections::VecDeque;
 
-#[derive(Debug, thiserror::Error)]
+// Hand-rolled Display/Error impls: `thiserror` is not in the vendored
+// crate set (sole external dependency is `anyhow`).
+#[derive(Debug)]
 pub enum ParamError {
-    #[error("version {0} evicted from the ring (live: {1}..={2})")]
     Evicted(u64, u64, u64),
-    #[error("version {requested} too stale: latest {latest}, max staleness {max}")]
     TooStale { requested: u64, latest: u64, max: usize },
 }
+
+impl std::fmt::Display for ParamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParamError::Evicted(v, lo, hi) => {
+                write!(f, "version {v} evicted from the ring (live: {lo}..={hi})")
+            }
+            ParamError::TooStale { requested, latest, max } => {
+                write!(f, "version {requested} too stale: latest {latest}, max staleness {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ParamError {}
 
 pub struct ParameterManager {
     versions: VecDeque<(u64, ModelParams)>,
@@ -29,6 +44,11 @@ pub struct ParameterManager {
     /// Pending gradient accumulation for the in-flight step.
     pending: Option<ModelParams>,
     pending_pushes: usize,
+    /// Staleness accounting for pipelined training: how many updates each
+    /// pushed gradient's parameter version lagged behind the latest.
+    stale_max: u64,
+    stale_sum: u64,
+    stale_n: u64,
 }
 
 impl ParameterManager {
@@ -49,6 +69,9 @@ impl ParameterManager {
             update_mode,
             pending: None,
             pending_pushes: 0,
+            stale_max: 0,
+            stale_sum: 0,
+            stale_n: 0,
         }
     }
 
@@ -93,6 +116,48 @@ impl ParameterManager {
 
     pub fn pending_pushes(&self) -> usize {
         self.pending_pushes
+    }
+
+    /// Push gradients that were computed against `fetched_version`,
+    /// recording how many updates that version lagged behind the latest at
+    /// push time — the staleness an in-flight pipelined step incurs when
+    /// other steps of its round already published updates.
+    pub fn push_grads_from(&mut self, grads: &ModelParams, fetched_version: u64) {
+        let lag = self.latest.saturating_sub(fetched_version);
+        self.stale_max = self.stale_max.max(lag);
+        self.stale_sum += lag;
+        self.stale_n += 1;
+        self.push_grads(grads);
+    }
+
+    /// `(max, mean)` staleness over every [`ParameterManager::push_grads_from`]
+    /// so far. `(0, 0.0)` for purely sequential training.
+    pub fn staleness(&self) -> (u64, f64) {
+        let mean = if self.stale_n == 0 {
+            0.0
+        } else {
+            self.stale_sum as f64 / self.stale_n as f64
+        };
+        (self.stale_max, mean)
+    }
+
+    /// Apply an accumulation window: average the pending gradient sum over
+    /// `window` pushed steps, then publish a new version.
+    ///
+    /// `window == 1` is exactly [`ParameterManager::update`] — the
+    /// bit-identical sequential path. `window > 1` is the pipelined-SGD
+    /// update: one optimizer step per window of concurrent subgraph
+    /// trainings. The window *averages* (unlike the in-step Reduce, which
+    /// sums partial gradients of the *same* batch) because each windowed
+    /// step is an independent mini-batch draw; averaging keeps the
+    /// effective step size of sequential SGD.
+    pub fn update_averaged(&mut self, window: usize) -> u64 {
+        assert!(window > 0, "empty accumulation window");
+        if window > 1 {
+            let pending = self.pending.as_mut().expect("update without pushed grads");
+            pending.scale(1.0 / window as f32);
+        }
+        self.update(window)
     }
 
     /// Apply the accumulated gradients (averaged over `expected_pushes` in
@@ -191,6 +256,53 @@ mod tests {
         let after = pm.fetch_latest().1.decoder.b[0];
         // SGD lr=0.1 on summed grad 2.0 → -0.2.
         assert!((before - after - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn update_averaged_window_one_is_bitwise_update() {
+        let mut a = mk();
+        let mut b = mk();
+        let mut g = a.fetch(0).unwrap().zeros_like();
+        g.decoder.b[0] = 0.3;
+        a.push_grads(&g);
+        a.update(1);
+        b.push_grads(&g);
+        b.update_averaged(1);
+        assert_eq!(a.fetch_latest().1, b.fetch_latest().1);
+    }
+
+    #[test]
+    fn update_averaged_divides_by_window() {
+        // Two identical grads averaged over a window of 2 must equal one
+        // plain update with that grad (SGD is linear in the gradient).
+        let mut a = mk();
+        let mut b = mk();
+        let mut g = a.fetch(0).unwrap().zeros_like();
+        g.decoder.b[0] = 1.0;
+        a.push_grads(&g);
+        a.update(1);
+        b.push_grads(&g);
+        b.push_grads(&g);
+        b.update_averaged(2);
+        let wa = a.fetch_latest().1.decoder.b[0];
+        let wb = b.fetch_latest().1.decoder.b[0];
+        assert!((wa - wb).abs() < 1e-7, "{wa} vs {wb}");
+    }
+
+    #[test]
+    fn staleness_accounting_tracks_lag() {
+        let mut pm = mk();
+        let g = pm.fetch(0).unwrap().zeros_like();
+        assert_eq!(pm.staleness(), (0, 0.0));
+        pm.push_grads_from(&g, 0); // lag 0
+        pm.update(1);
+        pm.push_grads_from(&g, 0); // lag 1
+        pm.update(1);
+        pm.push_grads_from(&g, 0); // lag 2
+        pm.update(1);
+        let (max, mean) = pm.staleness();
+        assert_eq!(max, 2);
+        assert!((mean - 1.0).abs() < 1e-12, "mean {mean}");
     }
 
     #[test]

@@ -183,6 +183,53 @@ mod tests {
     }
 
     #[test]
+    fn qcheck_labels_cover_every_node_with_contiguous_ids() {
+        // Cluster-batch indexes `members[label]` arrays straight off these
+        // labels, so every node must be labeled and the id space must have
+        // no holes (0..k all occupied).
+        crate::util::qcheck::qcheck_cases(
+            "louvain-contiguous-cover",
+            10,
+            |r| {
+                let spec = gen::SbmSpec {
+                    name: "qcheck-sbm".into(),
+                    n: 40 + r.below(160),
+                    communities: 2 + r.below(5),
+                    deg_in_comm: 4.0,
+                    deg_out_comm: 1.0,
+                    feat_dim: 4,
+                    noise: 0.2,
+                    label_noise: 0.0,
+                    skew: None,
+                    train_frac: 0.3,
+                    val_frac: 0.1,
+                    seed: r.next_u64(),
+                };
+                (spec, 1 + r.below(3))
+            },
+            |(spec, levels)| {
+                let g = gen::sbm(spec);
+                let labels = louvain_communities(&g, *levels);
+                if labels.len() != g.n {
+                    return Err(format!("{} labels for {} nodes", labels.len(), g.n));
+                }
+                let k = labels.iter().map(|&c| c as usize + 1).max().unwrap_or(0);
+                if k == 0 {
+                    return Err("no communities at all".into());
+                }
+                let mut seen = vec![false; k];
+                for &c in &labels {
+                    seen[c as usize] = true;
+                }
+                if let Some(hole) = seen.iter().position(|&b| !b) {
+                    return Err(format!("cluster ids not contiguous: id {hole} of {k} unused"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn handles_edgeless_graph() {
         let g = crate::graph::GraphBuilder::new("empty", 5).build(
             crate::tensor::Tensor::zeros(5, 1),

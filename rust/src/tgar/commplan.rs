@@ -169,7 +169,91 @@ mod tests {
     use crate::graph::gen;
     use crate::partition::{Partitioner, VertexCut};
     use crate::tgar::ActivePlan;
+    use crate::util::qcheck::qcheck_cases;
     use crate::util::rng::Rng;
+
+    /// Naive oracle: resolve each routed mirror row through the per-row
+    /// `HashMap` probe the seed executor used, and compare against the
+    /// dense table's flattened groups.
+    fn oracle_check(
+        dg: &DistGraph,
+        q: usize,
+        rt: &RouteTable,
+        lids: &[u32],
+        what: &str,
+    ) -> Result<(), String> {
+        let mut want: Vec<(u32, u32, u32)> = lids
+            .iter()
+            .map(|&lid| {
+                let gid = dg.parts[q].nodes[lid as usize];
+                let mq = dg.master_part(gid);
+                (mq, lid, dg.parts[mq as usize].lid_of[&gid])
+            })
+            .collect();
+        want.sort_unstable();
+        let mut got = Vec::with_capacity(rt.len());
+        for (mq, local, remote) in rt.groups() {
+            if mq == q {
+                return Err(format!("{what} part {q}: route to self"));
+            }
+            for (&lid, &mlid) in local.iter().zip(remote) {
+                got.push((mq as u32, lid, mlid));
+            }
+        }
+        if got != want {
+            return Err(format!("{what} part {q}: dense table disagrees with hash oracle"));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn qcheck_routes_match_hash_oracle_on_random_plans() {
+        let g = gen::citation_like("cora", 7);
+        let train = g.labeled_nodes(&g.train_mask);
+        qcheck_cases(
+            "commplan-route-oracle",
+            12,
+            |r| {
+                // (partitions, layers, targets, needs_dst, plan seed)
+                (2 + r.below(5), 1 + r.below(2), 1 + r.below(40), r.chance(0.5), r.next_u64())
+            },
+            |&(p, k, nt, needs_dst, seed)| {
+                let dg = DistGraph::build(&g, VertexCut.partition(&g, p));
+                let mut rng = Rng::new(seed);
+                let picks = rng.sample_indices(train.len(), nt.min(train.len()));
+                let targets: Vec<u32> = picks.iter().map(|&i| train[i]).collect();
+                let plan = ActivePlan::build(
+                    &g,
+                    &dg,
+                    targets,
+                    k,
+                    SamplingConfig::None,
+                    needs_dst,
+                    &mut rng,
+                );
+                for l in 1..=k {
+                    for q in 0..dg.p() {
+                        oracle_check(&dg, q, &plan.comm.sync[l][q], &plan.sync_in[l][q], "sync")?;
+                        oracle_check(
+                            &dg,
+                            q,
+                            &plan.comm.partial[l][q],
+                            &plan.partial_out[l][q],
+                            "partial",
+                        )?;
+                        let mut grad_lids = plan.sync_in[l][q].clone();
+                        if needs_dst {
+                            grad_lids.extend_from_slice(&plan.partial_out[l][q]);
+                            grad_lids.sort_unstable();
+                            grad_lids.dedup();
+                        }
+                        oracle_check(&dg, q, plan.comm.grad(l, q), &grad_lids, "grad")?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 
     #[test]
     fn route_table_matches_hash_derivation() {
