@@ -77,6 +77,7 @@ use crate::storage::DistGraph;
 use crate::tensor::ops;
 use crate::tgar::{ActivePlan, Executor};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Report of a pipelined run: the sequential-compatible [`TrainReport`]
 /// (its `sim_total` is the *overlapped* modeled clock) plus pipeline
@@ -153,6 +154,7 @@ impl<'a> Coordinator<'a> {
             self.needs_dst(),
             cfg.seed,
         );
+        gen.set_threads(cfg.threads);
         let mut ex = Executor::new(self.g, self.dg, &model);
 
         let has_val = self.g.val_mask.iter().any(|&b| b);
@@ -170,7 +172,10 @@ impl<'a> Coordinator<'a> {
         let mut in_window = 0usize;
         let mut rounds = 0usize;
         let mut step = 0usize;
-        let mut next_plan: Option<ActivePlan> =
+        // Plans are shared handles: the generator serves cached plans
+        // (global-batch always; cluster-batch from the second epoch on)
+        // as `Arc` clones, so holding one here copies no tables.
+        let mut next_plan: Option<Arc<ActivePlan>> =
             if epochs > 0 { Some(gen.next_plan(self.g, self.dg)) } else { None };
 
         while step < epochs {

@@ -5,17 +5,41 @@
 //!
 //! * **global-batch**: all labeled nodes, full graph active;
 //! * **mini-batch**: a random fraction of labeled nodes, k-hop reverse BFS;
-//! * **cluster-batch**: a random fraction of Louvain clusters; targets are
-//!   the labeled members; neighborhood restricted to the chosen clusters
+//! * **cluster-batch**: Louvain clusters grouped once (seeded shuffle)
+//!   into a fixed cover of batches cycled every epoch; targets are the
+//!   labeled members; neighborhood restricted to the batch's clusters
 //!   plus an optional boundary of `boundary_hops` hops (the paper's
 //!   extension over Cluster-GCN, appendix B).
+//!
+//! # Plan sharing and caching (§Perf)
+//!
+//! [`BatchGenerator::next_plan`] hands out `Arc<ActivePlan>` — plans are
+//! immutable once routed, so consumers share one allocation instead of
+//! deep-cloning node/edge/route tables. Sampling-free plans are
+//! deterministic per batch identity, which makes two of the strategies
+//! cacheable:
+//!
+//! * **global-batch** builds its full plan once at construction and every
+//!   step is an `Arc` clone (the old generator deep-cloned the cached
+//!   plan each step);
+//! * **cluster-batch** builds each cover batch's restricted, routed plan
+//!   on first use and replays the `Arc` on every later epoch — epochs ≥ 2
+//!   perform **zero** plan rebuilds ([`BatchGenerator::plan_cache_stats`]
+//!   counts hits/misses; asserted by the tests below).
+//!
+//! Mini-batch targets are freshly random each step, so those plans are
+//! rebuilt — but through the generator's persistent
+//! [`PlanScratch`], so construction cost stays proportional to the active
+//! subgraph.
 
 use crate::config::{SamplingConfig, StrategyKind};
 use crate::graph::Graph;
+use crate::metrics::PlanCacheStats;
 use crate::partition::louvain;
 use crate::storage::DistGraph;
-use crate::tgar::ActivePlan;
+use crate::tgar::{ActivePlan, PlanScratch};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Stateful batch generator for one training run.
 pub struct BatchGenerator {
@@ -24,17 +48,35 @@ pub struct BatchGenerator {
     k: usize,
     needs_dst: bool,
     train_nodes: Vec<u32>,
-    /// Louvain cluster id per node (cluster-batch only).
+    /// Louvain cover (cluster-batch only).
     clusters: Option<Clusters>,
-    /// Cached global plan (global-batch reuses it every epoch).
-    global_plan: Option<ActivePlan>,
+    /// Cached global plan (global-batch shares it every step).
+    global_plan: Option<Arc<ActivePlan>>,
+    /// Epoch-persistent construction scratch (stamped visited-markers).
+    scratch: PlanScratch,
+    cache: PlanCacheStats,
     rng: Rng,
 }
 
 struct Clusters {
-    of_node: Vec<u32>,
-    members: Vec<Vec<u32>>, // cluster -> labeled member nodes
     count: usize,
+    /// All nodes per cluster — filling the allowed mask on a cache miss
+    /// is O(batch nodes), not an O(|V|) `of_node` scan.
+    nodes_of: Vec<Vec<u32>>,
+    /// Fixed epoch cover: batches of cluster ids; step `t` uses batch
+    /// `t % groups.len()`. Batches without labeled members are dropped at
+    /// construction (they would train on nothing).
+    groups: Vec<Vec<u32>>,
+    /// Labeled target nodes per batch (precomputed).
+    group_targets: Vec<Vec<u32>>,
+    /// Cached routed plans per batch (sampling-free only).
+    plans: Vec<Option<Arc<ActivePlan>>>,
+    /// Reusable dense allowed mask: bits are set for the duration of one
+    /// cache-miss build and cleared right after, so the buffer is
+    /// all-false between builds (one allocation per run, not per step).
+    allowed_buf: Vec<bool>,
+    /// Next batch index in the cycle.
+    next: usize,
 }
 
 impl BatchGenerator {
@@ -47,20 +89,59 @@ impl BatchGenerator {
         needs_dst: bool,
         seed: u64,
     ) -> BatchGenerator {
+        let mut rng = Rng::new(seed ^ 0xBA7C4);
+        let mut cache = PlanCacheStats::default();
         let train_nodes = g.labeled_nodes(&g.train_mask);
-        let clusters = if matches!(strategy, StrategyKind::ClusterBatch { .. }) {
+        let clusters = if let StrategyKind::ClusterBatch { cluster_frac, .. } = strategy {
             let of_node = louvain::louvain_communities(g, 2);
             let count = of_node.iter().map(|&c| c as usize + 1).max().unwrap_or(1);
+            let mut nodes_of = vec![Vec::new(); count];
+            for (v, &cv) in of_node.iter().enumerate() {
+                nodes_of[cv as usize].push(v as u32);
+            }
             let mut members = vec![Vec::new(); count];
             for &v in &train_nodes {
                 members[of_node[v as usize] as usize].push(v);
             }
-            Some(Clusters { of_node, members, count })
+            // One seeded shuffle fixes the cover for the whole run: each
+            // epoch replays the same batches, which is what makes the
+            // per-batch plan cache exact.
+            let mut ids: Vec<u32> = (0..count as u32).collect();
+            rng.shuffle(&mut ids);
+            let per = ((count as f64 * cluster_frac).ceil() as usize).clamp(1, count);
+            let mut groups: Vec<Vec<u32>> = ids.chunks(per).map(|c| c.to_vec()).collect();
+            groups.retain(|grp| grp.iter().any(|&c| !members[c as usize].is_empty()));
+            if groups.is_empty() {
+                // No labeled cluster at all — one batch covering everything
+                // keeps the generator (and its fallback-free cache) total.
+                groups = vec![(0..count as u32).collect()];
+            }
+            let group_targets: Vec<Vec<u32>> = groups
+                .iter()
+                .map(|grp| {
+                    let mut t = Vec::new();
+                    for &c in grp {
+                        t.extend_from_slice(&members[c as usize]);
+                    }
+                    t
+                })
+                .collect();
+            let plans = vec![None; groups.len()];
+            Some(Clusters {
+                count,
+                nodes_of,
+                groups,
+                group_targets,
+                plans,
+                allowed_buf: vec![false; g.n],
+                next: 0,
+            })
         } else {
             None
         };
         let global_plan = if strategy == StrategyKind::GlobalBatch {
-            Some(ActivePlan::global(g, dg, k, needs_dst))
+            cache.misses += 1; // the one construction of the run
+            Some(Arc::new(ActivePlan::global(g, dg, k, needs_dst)))
         } else {
             None
         };
@@ -72,7 +153,9 @@ impl BatchGenerator {
             train_nodes,
             clusters,
             global_plan,
-            rng: Rng::new(seed ^ 0xBA7C4),
+            scratch: PlanScratch::new(),
+            cache,
+            rng,
         }
     }
 
@@ -81,11 +164,35 @@ impl BatchGenerator {
         self.clusters.as_ref().map_or(0, |c| c.count)
     }
 
+    /// Number of batches in the fixed cluster-batch cover (steps per
+    /// epoch); 0 for the other strategies.
+    pub fn num_cluster_batches(&self) -> usize {
+        self.clusters.as_ref().map_or(0, |c| c.groups.len())
+    }
+
+    /// The fixed cluster-batch cover: batch index → cluster ids.
+    pub fn cluster_batches(&self) -> Option<&[Vec<u32>]> {
+        self.clusters.as_ref().map(|c| c.groups.as_slice())
+    }
+
+    /// Plan-cache hit/miss counters (see [`PlanCacheStats`]).
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
+        self.cache
+    }
+
+    /// Pin the OS-thread count for the parallel plan-layer derivation —
+    /// the `TrainConfig::threads` knob (0 = auto, 1 = serial; numerics
+    /// bit-identical at any setting).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.scratch.set_threads(threads);
+    }
+
     /// Prefetch: build the *next* step's plan on a helper thread while
     /// `work` (the current step's NN-TGAR execution) runs on this one.
     /// The generator advances exactly as a sequential [`Self::next_plan`]
     /// call after `work` would — plan order, RNG stream and numerics are
-    /// unchanged; only wall-clock overlaps. Used by
+    /// unchanged; only wall-clock overlaps. The helper thread reuses the
+    /// generator's own [`PlanScratch`] (it moves `&mut self` in). Used by
     /// [`crate::coordinator::Coordinator`] to hide subgraph construction
     /// behind the in-flight step.
     pub fn next_plan_overlapped<R>(
@@ -93,7 +200,7 @@ impl BatchGenerator {
         g: &Graph,
         dg: &DistGraph,
         work: impl FnOnce() -> R,
-    ) -> (ActivePlan, R) {
+    ) -> (Arc<ActivePlan>, R) {
         std::thread::scope(|s| {
             let handle = s.spawn(|| self.next_plan(g, dg));
             let r = work();
@@ -101,16 +208,20 @@ impl BatchGenerator {
         })
     }
 
-    /// Produce the next step's plan.
-    pub fn next_plan(&mut self, g: &Graph, dg: &DistGraph) -> ActivePlan {
-        match self.strategy.clone() {
-            StrategyKind::GlobalBatch => self.global_plan.clone().expect("cached"),
+    /// Produce the next step's plan as a shared handle.
+    pub fn next_plan(&mut self, g: &Graph, dg: &DistGraph) -> Arc<ActivePlan> {
+        match &self.strategy {
+            StrategyKind::GlobalBatch => {
+                self.cache.hits += 1;
+                Arc::clone(self.global_plan.as_ref().expect("cached"))
+            }
             StrategyKind::MiniBatch { batch_frac } => {
-                let bs = ((self.train_nodes.len() as f64 * batch_frac).ceil() as usize)
+                let bs = ((self.train_nodes.len() as f64 * *batch_frac).ceil() as usize)
                     .clamp(1, self.train_nodes.len());
                 let picks = self.rng.sample_indices(self.train_nodes.len(), bs);
                 let targets: Vec<u32> = picks.iter().map(|&i| self.train_nodes[i]).collect();
-                ActivePlan::build(
+                self.cache.misses += 1;
+                Arc::new(ActivePlan::build_with(
                     g,
                     dg,
                     targets,
@@ -118,52 +229,73 @@ impl BatchGenerator {
                     self.sampling,
                     self.needs_dst,
                     &mut self.rng,
-                )
+                    &mut self.scratch,
+                ))
             }
-            StrategyKind::ClusterBatch { cluster_frac, boundary_hops } => {
-                let cl = self.clusters.as_ref().expect("clusters precomputed");
-                let nc = ((cl.count as f64 * cluster_frac).ceil() as usize).clamp(1, cl.count);
-                let picks = self.rng.sample_indices(cl.count, nc);
-                let mut targets = Vec::new();
-                let mut allowed = vec![false; g.n];
-                for &c in &picks {
-                    targets.extend_from_slice(&cl.members[c]);
-                    for (v, &cv) in cl.of_node.iter().enumerate() {
-                        if cv as usize == c {
-                            allowed[v] = true;
-                        }
+            StrategyKind::ClusterBatch { boundary_hops, .. } => {
+                let boundary_hops = *boundary_hops;
+                let cl = self.clusters.as_mut().expect("clusters precomputed");
+                let gi = cl.next;
+                cl.next = (cl.next + 1) % cl.groups.len();
+                // Sampling-free plans are deterministic per batch: replay
+                // the routed plan built on the batch's first use.
+                let cacheable = self.sampling == SamplingConfig::None;
+                if cacheable {
+                    if let Some(plan) = &cl.plans[gi] {
+                        self.cache.hits += 1;
+                        return Arc::clone(plan);
                     }
                 }
-                if targets.is_empty() {
-                    // Picked clusters had no labeled nodes — fall back to a
-                    // random labeled node to keep the step meaningful.
-                    let i = self.rng.below(self.train_nodes.len());
-                    targets.push(self.train_nodes[i]);
-                    allowed[self.train_nodes[i] as usize] = true;
+                self.cache.misses += 1;
+                for &c in &cl.groups[gi] {
+                    for &v in &cl.nodes_of[c as usize] {
+                        cl.allowed_buf[v as usize] = true;
+                    }
                 }
                 // Routes are rebuilt by the restriction below — skip the
                 // initial construction rather than paying it twice.
-                let mut plan = ActivePlan::build_unrouted(
+                let mut plan = ActivePlan::build_unrouted_with(
                     g,
                     dg,
-                    targets,
+                    cl.group_targets[gi].clone(),
                     self.k,
                     self.sampling,
                     self.needs_dst,
                     &mut self.rng,
+                    &mut self.scratch,
                 );
-                restrict_to_clusters(&mut plan, g, dg, &allowed, boundary_hops, self.needs_dst);
+                plan.restrict_nodes(
+                    g,
+                    dg,
+                    &cl.allowed_buf,
+                    boundary_hops,
+                    self.needs_dst,
+                    &mut self.scratch,
+                );
+                // Clear exactly the bits set above — the mask stays
+                // all-false between builds.
+                for &c in &cl.groups[gi] {
+                    for &v in &cl.nodes_of[c as usize] {
+                        cl.allowed_buf[v as usize] = false;
+                    }
+                }
+                let plan = Arc::new(plan);
+                if cacheable {
+                    cl.plans[gi] = Some(Arc::clone(&plan));
+                }
                 plan
             }
         }
     }
 }
 
-/// Restrict a plan to an allowed node set (cluster-batch; also reused by
-/// the GraphSAINT-style subgraph-sampling baseline): drop active edges whose source lies outside
-/// the chosen clusters, unless it is within `boundary_hops` hops of the
-/// cluster (hop counted from the targets' side — hop 0 is the layer
-/// closest to the targets). Recomputes the dependent node sets/routes.
+/// Restrict a plan to an allowed node set (cluster-batch): drop active
+/// edges whose source lies outside the chosen clusters, unless it is
+/// within `boundary_hops` hops of the cluster (hop counted from the
+/// targets' side — hop 0 is the layer closest to the targets). Recomputes
+/// the dependent node sets and routes through the same sparse stamped
+/// walk as the builder — work proportional to the plan's active edges,
+/// not `|V|`.
 pub fn restrict_to_clusters(
     plan: &mut ActivePlan,
     g: &Graph,
@@ -171,78 +303,9 @@ pub fn restrict_to_clusters(
     allowed: &[bool],
     boundary_hops: usize,
     needs_dst: bool,
+    scratch: &mut PlanScratch,
 ) {
-    let k = plan.k;
-    // Reset node activity above level k and rebuild top-down.
-    for l in 0..k {
-        plan.node_active[l].iter_mut().for_each(|b| *b = false);
-    }
-    for l in (1..=k).rev() {
-        let hop = k - l;
-        let outside_ok = hop < boundary_hops;
-        let (lower, upper) = plan.node_active.split_at_mut(l);
-        let mask_l = &upper[0];
-        let mask_lm1 = &mut lower[l - 1];
-        for (q, pv) in dg.parts.iter().enumerate() {
-            let mut kept = Vec::with_capacity(plan.edges_active[l][q].len());
-            let mut need_src = vec![false; pv.n_local()];
-            let mut need_dst = vec![false; pv.n_local()];
-            for &le in &plan.edges_active[l][q] {
-                let src = pv
-                    .csr_offsets
-                    .partition_point(|&o| o <= le as usize)
-                    .saturating_sub(1);
-                let dst = pv.csr_targets[le as usize] as usize;
-                let sgid = pv.nodes[src] as usize;
-                let dgid = pv.nodes[dst] as usize;
-                if !mask_l[dgid] {
-                    continue; // destination no longer active
-                }
-                if !allowed[sgid] && !outside_ok {
-                    continue; // outside the cluster and beyond the boundary
-                }
-                kept.push(le);
-                mask_lm1[sgid] = true;
-                need_src[src] = true;
-                need_dst[dst] = true;
-            }
-            plan.edges_active[l][q] = kept;
-            plan.sync_in[l][q] = (pv.n_masters..pv.n_local())
-                .filter(|&lid| need_src[lid] || (needs_dst && need_dst[lid]))
-                .map(|lid| lid as u32)
-                .collect();
-            plan.partial_out[l][q] = (pv.n_masters..pv.n_local())
-                .filter(|&lid| need_dst[lid])
-                .map(|lid| lid as u32)
-                .collect();
-        }
-        // Destinations at level l still need their h^{l-1}.
-        for v in 0..g.n {
-            if mask_l[v] {
-                mask_lm1[v] = true;
-            }
-        }
-    }
-    // Rebuild per-partition master lists + counters.
-    for l in 0..=k {
-        for (q, pv) in dg.parts.iter().enumerate() {
-            plan.masters_active[l][q] = (0..pv.n_masters as u32)
-                .filter(|&lid| plan.node_active[l][pv.nodes[lid as usize] as usize])
-                .collect();
-        }
-    }
-    plan.active_count = plan
-        .node_active
-        .iter()
-        .map(|m| m.iter().filter(|&&b| b).count())
-        .collect();
-    plan.active_edge_count = plan
-        .edges_active
-        .iter()
-        .map(|per_p| per_p.iter().map(Vec::len).sum())
-        .collect();
-    // The mirror lists changed — the precomputed routes must follow.
-    plan.rebuild_comm(dg);
+    plan.restrict_nodes(g, dg, allowed, boundary_hops, needs_dst, scratch);
 }
 
 #[cfg(test)]
@@ -307,21 +370,23 @@ mod tests {
             3,
         );
         assert!(bg.num_clusters() >= 2);
+        // Allowed clusters = the first batch of the fixed cover.
+        let allowed: std::collections::HashSet<u32> =
+            bg.cluster_batches().unwrap()[0].iter().copied().collect();
         let of_node = louvain::louvain_communities(&g, 2);
         let plan = bg.next_plan(&g, &dg);
-        // Allowed clusters = those containing targets.
-        let allowed: std::collections::HashSet<u32> =
-            plan.targets.iter().map(|&t| of_node[t as usize]).collect();
-        // Every active *source* node at any level must be in an allowed
-        // cluster (boundary_hops = 0 ⇒ strict Cluster-GCN semantics).
+        // Targets come from the batch's clusters…
+        for &t in &plan.targets {
+            assert!(allowed.contains(&of_node[t as usize]), "target {t} outside batch");
+        }
+        // …and every active *source* node at any level must be in an
+        // allowed cluster (boundary_hops = 0 ⇒ strict Cluster-GCN
+        // semantics).
         for l in 1..=2 {
             for (q, pv) in dg.parts.iter().enumerate() {
                 for &le in &plan.edges_active[l][q] {
-                    let src = pv
-                        .csr_offsets
-                        .partition_point(|&o| o <= le as usize)
-                        .saturating_sub(1);
-                    let sgid = pv.nodes[src] as usize;
+                    let src = pv.csr_sources_by_edge[le as usize];
+                    let sgid = pv.nodes[src as usize] as usize;
                     assert!(
                         allowed.contains(&of_node[sgid]),
                         "source {sgid} outside clusters at level {l}"
@@ -346,7 +411,7 @@ mod tests {
             );
             bg.next_plan(&g, &dg)
         };
-        // Same seed → same clusters picked → comparable plans.
+        // Same seed → same cover → same first batch → comparable plans.
         let strict = mk(0, 7);
         let open = mk(2, 7);
         assert_eq!(strict.targets, open.targets);
@@ -358,6 +423,88 @@ mod tests {
             open.active_edge_count[1] > strict.active_edge_count[1],
             "2-hop boundary should admit outside sources at the far layer"
         );
+    }
+
+    #[test]
+    fn cluster_batch_cover_partitions_the_labeled_clusters() {
+        let (g, dg) = setup();
+        let bg = BatchGenerator::new(
+            &g,
+            &dg,
+            StrategyKind::cluster(0.25, 0),
+            SamplingConfig::None,
+            2,
+            false,
+            11,
+        );
+        let groups = bg.cluster_batches().unwrap();
+        assert!(!groups.is_empty());
+        // Batches are disjoint and cover every cluster with labeled nodes.
+        let mut seen = std::collections::HashSet::new();
+        for grp in groups {
+            for &c in grp {
+                assert!(seen.insert(c), "cluster {c} appears in two batches");
+            }
+        }
+        let of_node = louvain::louvain_communities(&g, 2);
+        for &t in &g.labeled_nodes(&g.train_mask) {
+            assert!(
+                seen.contains(&of_node[t as usize]),
+                "labeled cluster {} missing from the cover",
+                of_node[t as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_batch_plans_cached_across_epochs() {
+        let (g, dg) = setup();
+        let mut bg = BatchGenerator::new(
+            &g,
+            &dg,
+            StrategyKind::cluster(0.2, 1),
+            SamplingConfig::None,
+            2,
+            false,
+            9,
+        );
+        let nb = bg.num_cluster_batches();
+        assert!(nb >= 2, "want a multi-batch cover, got {nb}");
+        let epoch1: Vec<_> = (0..nb).map(|_| bg.next_plan(&g, &dg)).collect();
+        let s1 = bg.plan_cache_stats();
+        assert_eq!(s1.misses as usize, nb, "first epoch builds every batch");
+        assert_eq!(s1.hits, 0);
+        for _epoch in 0..2 {
+            let again: Vec<_> = (0..nb).map(|_| bg.next_plan(&g, &dg)).collect();
+            for (a, b) in epoch1.iter().zip(&again) {
+                assert!(Arc::ptr_eq(a, b), "later epochs must replay the same Arc");
+            }
+        }
+        let s = bg.plan_cache_stats();
+        assert_eq!(s.misses as usize, nb, "epochs ≥ 2 performed a plan rebuild");
+        assert_eq!(s.hits as usize, 2 * nb);
+        assert!(s.hit_rate() > 0.6);
+    }
+
+    #[test]
+    fn cluster_batch_with_sampling_is_never_cached() {
+        let (g, dg) = setup();
+        let mut bg = BatchGenerator::new(
+            &g,
+            &dg,
+            StrategyKind::cluster(0.2, 1),
+            SamplingConfig::Neighbor { fanout: [4, 4, usize::MAX, usize::MAX] },
+            2,
+            false,
+            9,
+        );
+        let nb = bg.num_cluster_batches();
+        for _ in 0..2 * nb {
+            bg.next_plan(&g, &dg);
+        }
+        let s = bg.plan_cache_stats();
+        assert_eq!(s.misses as usize, 2 * nb, "sampling plans are step-random");
+        assert_eq!(s.hits, 0);
     }
 
     #[test]
@@ -376,19 +523,20 @@ mod tests {
         };
         let mut seq = mk();
         let mut ovl = mk();
-        let want: Vec<Vec<u32>> = (0..4).map(|_| seq.next_plan(&g, &dg).targets).collect();
+        let want: Vec<Vec<u32>> =
+            (0..4).map(|_| seq.next_plan(&g, &dg).targets.clone()).collect();
         let mut got = Vec::new();
         let mut work_ran = 0usize;
         for _ in 0..4 {
             let (plan, ()) = ovl.next_plan_overlapped(&g, &dg, || work_ran += 1);
-            got.push(plan.targets);
+            got.push(plan.targets.clone());
         }
         assert_eq!(got, want);
         assert_eq!(work_ran, 4);
     }
 
     #[test]
-    fn global_plan_is_reused() {
+    fn global_plan_is_shared_not_cloned() {
         let (g, dg) = setup();
         let mut bg = BatchGenerator::new(
             &g,
@@ -401,8 +549,11 @@ mod tests {
         );
         let a = bg.next_plan(&g, &dg);
         let b = bg.next_plan(&g, &dg);
+        assert!(Arc::ptr_eq(&a, &b), "global-batch must hand out one shared plan");
         assert_eq!(a.targets, b.targets);
         assert_eq!(a.active_count, vec![g.n; 3]);
         assert_eq!(b.active_edge_count[1], g.m);
+        let s = bg.plan_cache_stats();
+        assert_eq!((s.misses, s.hits), (1, 2));
     }
 }

@@ -20,7 +20,9 @@ use super::strategy::BatchGenerator;
 /// Evaluation plan shared by the sequential and pipelined trainers: all
 /// `mask` nodes as targets, sampling-free, fixed eval RNG ("inference
 /// through a unified implementation with training"). One code path keeps
-/// the two trainers' bit-identity invariant edit-proof.
+/// the two trainers' bit-identity invariant edit-proof. Built a handful
+/// of times per run (val plan once, test plan once), so it uses the
+/// one-shot [`ActivePlan::build`] rather than a persistent scratch.
 pub(crate) fn eval_plan(
     g: &Graph,
     dg: &DistGraph,
@@ -151,6 +153,7 @@ impl<'a> Trainer<'a> {
             self.needs_dst(),
             cfg.seed,
         );
+        gen.set_threads(cfg.threads);
         let mut ex = Executor::new(self.g, &self.dg, &model);
 
         let has_val = self.g.val_mask.iter().any(|&b| b);
@@ -164,6 +167,9 @@ impl<'a> Trainer<'a> {
         let mut peak_bytes = 0usize;
 
         for step in 0..cfg.epochs {
+            // `Arc<ActivePlan>` handle: cached strategies (global-batch
+            // always, cluster-batch after its first epoch) serve the same
+            // shared plan each step — no per-step deep clone or rebuild.
             let plan = gen.next_plan(self.g, &self.dg);
             let version = pm.latest_version();
             let params = pm.fetch(version)?.clone();
@@ -246,6 +252,7 @@ impl<'a> Trainer<'a> {
             self.needs_dst(),
             cfg.seed,
         );
+        gen.set_threads(cfg.threads);
         let mut ex = Executor::new(self.g, &self.dg, &model);
         self.sim.reset();
         let (mut fwd, mut bwd, mut reduce) = (0.0f64, 0.0f64, 0.0f64);

@@ -146,6 +146,37 @@ impl StageProfile {
     }
 }
 
+/// Plan-cache accounting for [`crate::engine::strategy::BatchGenerator`]:
+/// how many batch plans were served from the cache (`hits` — an
+/// `Arc` clone, no construction work) vs freshly built (`misses` — a full
+/// sparse-BFS + route build). Cluster-batch with sampling off builds each
+/// batch's plan exactly once, so from the second epoch on every step is a
+/// hit; global-batch builds once at generator construction; mini-batch
+/// plans are target-random and therefore always misses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Plans served as shared handles without rebuilding.
+    pub hits: u64,
+    /// Plans constructed (cache fill or uncacheable strategy).
+    pub misses: u64,
+}
+
+impl PlanCacheStats {
+    /// Total plans handed out.
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of plans served from cache (0 when nothing was served).
+    pub fn hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total() as f64
+        }
+    }
+}
+
 /// Overlap accounting for pipelined (hybrid-parallel) execution: the same
 /// phase tasks' serial modeled time vs their work-stealing makespan on the
 /// modeled cluster. Built by [`crate::coordinator::Coordinator`], which
@@ -256,6 +287,16 @@ mod tests {
         let pct: f64 = p.percentages().iter().map(|(_, x)| x).sum();
         assert!((pct - 100.0).abs() < 1e-6);
         assert_eq!(p.get("fwd").unwrap().calls, 2);
+    }
+
+    #[test]
+    fn plan_cache_stats_rates() {
+        let mut s = PlanCacheStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        s.misses = 3;
+        s.hits = 9;
+        assert_eq!(s.total(), 12);
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -31,6 +31,11 @@ pub struct PartitionView {
     pub n_masters: usize,
     /// Global id → local id (the private vertex-ID mapping of §4.2).
     pub lid_of: HashMap<u32, u32>,
+    /// Dense global id → local id companion to `lid_of`
+    /// ([`PartitionView::NO_LID`] when the node has no replica here). The
+    /// sparse plan builder probes partition membership per frontier node,
+    /// and an indexed load beats a hash probe on that hot path (§Perf).
+    pub lid_dense: Vec<u32>,
 
     /// Local CSR over the edges assigned to this partition. Local edge id =
     /// position in `csr_targets`; `edge_gids` maps back to global edge ids.
@@ -51,6 +56,9 @@ pub struct PartitionView {
 }
 
 impl PartitionView {
+    /// Sentinel in [`PartitionView::lid_dense`]: node not present here.
+    pub const NO_LID: u32 = u32::MAX;
+
     #[inline]
     pub fn n_local(&self) -> usize {
         self.nodes.len()
@@ -142,11 +150,16 @@ impl DistGraph {
             nodes.append(&mut mirrors);
             let lid_of: HashMap<u32, u32> =
                 nodes.iter().enumerate().map(|(l, &gid)| (gid, l as u32)).collect();
+            let mut lid_dense = vec![PartitionView::NO_LID; g.n];
+            for (l, &gid) in nodes.iter().enumerate() {
+                lid_dense[gid as usize] = l as u32;
+            }
             parts.push(PartitionView {
                 part: q as u32,
                 nodes,
                 n_masters,
                 lid_of,
+                lid_dense,
                 csr_offsets: Vec::new(),
                 csr_targets: Vec::new(),
                 csr_sources_by_edge: Vec::new(),
@@ -361,6 +374,21 @@ mod tests {
             for lid in 0..pv.n_local() {
                 if pv.csr_offsets[lid + 1] > pv.csr_offsets[lid] {
                     assert!(pv.is_master(lid as u32), "source {lid} is a mirror");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lid_dense_matches_hash_lookup() {
+        let g = gen::citation_like("cora", 7);
+        let plan = VertexCut.partition(&g, 4);
+        let dg = DistGraph::build(&g, plan);
+        for pv in &dg.parts {
+            for v in 0..g.n as u32 {
+                match pv.lid_of.get(&v) {
+                    Some(&lid) => assert_eq!(pv.lid_dense[v as usize], lid, "node {v}"),
+                    None => assert_eq!(pv.lid_dense[v as usize], PartitionView::NO_LID),
                 }
             }
         }

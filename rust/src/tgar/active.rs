@@ -14,21 +14,45 @@
 //! Optional fan-out sampling caps the in-edges taken per destination
 //! (GraphTheta itself trains sampling-free; the cap exists for the
 //! sampling baselines and §4.2's "a few sampling methods").
+//!
+//! # Sparse frontier construction (§Perf)
+//!
+//! The original builder allocated `(k+1)` dense `|V|`-sized masks per plan
+//! and scanned **every local node of every partition at every layer** —
+//! work and allocation proportional to the full graph even for a 1%
+//! mini-batch, the exact cost profile DistDGL attacks with distributed
+//! mini-batch generation. The current builder walks a **frontier**: per
+//! layer only the active destinations are visited (sorted by local id so
+//! the edge emission — and the sampling-RNG draw order — is identical to a
+//! dense scan), new sources are discovered through stamped visited-markers
+//! in an epoch-persistent [`PlanScratch`], and the per-partition
+//! edge/mirror derivation runs on scoped threads when no sampling RNG is
+//! in play (the [`crate::cluster::ClusterSim::exec_batch`] pattern:
+//! partition-order merge, bit-identical output at any thread count). The
+//! retired dense implementation survives as
+//! [`ActivePlan::build_dense_reference`], the oracle for
+//! `rust/tests/plan_equivalence.rs` and the `bench_hotpath` baseline.
+//!
+//! Active node sets are **nested** — a destination at level `l` also needs
+//! its `h^{l-1}`, so `active[l] ⊆ active[l-1]` — which lets the plan store
+//! one sorted id list per level and the scratch track a single
+//! `top_level` per node instead of `k+1` masks.
 
 use crate::config::SamplingConfig;
 use crate::graph::Graph;
-use crate::storage::DistGraph;
+use crate::storage::{DistGraph, PartitionView};
 use crate::tgar::commplan::CommPlan;
 use crate::util::rng::Rng;
 
 /// The participation plan for one batch.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ActivePlan {
     pub k: usize,
     /// Global target nodes (loss rows).
     pub targets: Vec<u32>,
-    /// `node_active[l][v]`: embedding `h^l_v` is needed. `l ∈ 0..=k`.
-    pub node_active: Vec<Vec<bool>>,
+    /// `active_nodes[l]`: sorted global ids whose embedding `h^l` is
+    /// needed (`l ∈ 0..=k`). Nested: `active_nodes[l] ⊆ active_nodes[l-1]`.
+    pub active_nodes: Vec<Vec<u32>>,
     /// `masters_active[l][q]`: local ids of partition `q`'s masters active
     /// at level `l`, sorted.
     pub masters_active: Vec<Vec<Vec<u32>>>,
@@ -57,10 +81,419 @@ pub struct ActivePlan {
     pub comm: CommPlan,
 }
 
+/// Reusable scratch for sparse plan construction. One instance lives in
+/// [`crate::engine::strategy::BatchGenerator`] for the whole training run,
+/// so the per-step builder allocates proportionally to the *active*
+/// subgraph, never to `|V|`.
+///
+/// # Stamp-invalidation invariant
+///
+/// No marker buffer is ever cleared between builds. A global-node slot is
+/// live iff `node_stamp[v] == node_epoch`; a per-partition first-touch
+/// slot is live iff it equals the current layer `tick`. Both counters
+/// strictly increase, so bumping them invalidates every slot in O(1); on
+/// the (practically unreachable) `u32` wrap-around the backing array is
+/// zeroed and the counter restarts, so a stale stamp can never collide
+/// with a live one. A `PlanScratch` may therefore be reused across
+/// builds, graphs and partitionings — [`PlanScratch::ensure`] re-sizes on
+/// mismatch — with no cross-build contamination.
+#[derive(Default)]
+pub struct PlanScratch {
+    /// OS threads for the per-partition layer derivation (0 = auto-detect,
+    /// 1 = serial). Results are bit-identical at any setting.
+    threads: usize,
+    /// Auto-detected thread count, resolved once on first use (0 = not
+    /// yet probed) so the per-layer hot path issues no syscalls.
+    auto_threads: usize,
+    /// Current build generation for `node_stamp`.
+    node_epoch: u32,
+    node_stamp: Vec<u32>,
+    /// Highest level at which the node is active (valid while stamped;
+    /// nesting makes one byte per node sufficient — see module docs).
+    top_level: Vec<u8>,
+    /// Active global ids in discovery order; the active set at level `l`
+    /// is the prefix recorded when layer `l`'s processing began.
+    order: Vec<u32>,
+    /// Current layer generation for the per-partition first-touch marks.
+    tick: u32,
+    parts: Vec<PartScratch>,
+}
+
+#[derive(Default)]
+struct PartScratch {
+    /// First-touch marks per local id (`== tick` ⇒ touched this layer).
+    src_mark: Vec<u32>,
+    dst_mark: Vec<u32>,
+    /// Local ids of active nodes present in this partition, in global
+    /// discovery order (grows as the frontier expands).
+    present: Vec<u32>,
+    /// Sorted active-destination lids of the layer being processed.
+    dsts: Vec<u32>,
+}
+
+impl PlanScratch {
+    pub fn new() -> PlanScratch {
+        PlanScratch::default()
+    }
+
+    /// Pin the OS-thread count used by the parallel layer derivation —
+    /// `TrainConfig::threads` semantics: 0 = auto-detect, 1 = serial
+    /// (note this differs from [`crate::cluster::ClusterSim::set_threads`],
+    /// where 0 clamps to serial — which is why the trainer guards that
+    /// call but not this one). Numerics are identical at any setting.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+    }
+
+    /// Thread count to use, probing `available_parallelism` only once.
+    fn effective_threads(&mut self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        if self.auto_threads == 0 {
+            self.auto_threads =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        }
+        self.auto_threads
+    }
+
+    /// Size the buffers for `(g, dg)`; a no-op when they already match.
+    fn ensure(&mut self, g: &Graph, dg: &DistGraph) {
+        if self.node_stamp.len() != g.n {
+            self.node_stamp = vec![0; g.n];
+            self.top_level = vec![0; g.n];
+            self.node_epoch = 0;
+        }
+        let stale = self.parts.len() != dg.p()
+            || self
+                .parts
+                .iter()
+                .zip(&dg.parts)
+                .any(|(ps, pv)| ps.src_mark.len() != pv.n_local());
+        if stale {
+            self.parts = dg
+                .parts
+                .iter()
+                .map(|pv| PartScratch {
+                    src_mark: vec![0; pv.n_local()],
+                    dst_mark: vec![0; pv.n_local()],
+                    present: Vec::new(),
+                    dsts: Vec::new(),
+                })
+                .collect();
+            self.tick = 0;
+        }
+    }
+
+    /// Start a build: invalidate every node stamp (O(1) epoch bump).
+    fn begin(&mut self) {
+        if self.node_epoch == u32::MAX {
+            self.node_stamp.iter_mut().for_each(|s| *s = 0);
+            self.node_epoch = 0;
+        }
+        self.node_epoch += 1;
+        self.order.clear();
+        for ps in &mut self.parts {
+            ps.present.clear();
+        }
+    }
+
+    /// Start a layer: invalidate every per-partition first-touch mark.
+    fn next_tick(&mut self) -> u32 {
+        if self.tick == u32::MAX {
+            for ps in &mut self.parts {
+                ps.src_mark.iter_mut().for_each(|s| *s = 0);
+                ps.dst_mark.iter_mut().for_each(|s| *s = 0);
+            }
+            self.tick = 0;
+        }
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Is `gid` active at `level` in the current build? (Stamp + nesting.)
+    #[inline]
+    fn is_active_at(&self, gid: u32, level: u8) -> bool {
+        let v = gid as usize;
+        self.node_stamp[v] == self.node_epoch && self.top_level[v] >= level
+    }
+
+    /// Mark `gid` active with the given top level, recording discovery
+    /// order and per-partition presence. No-op if already stamped (the
+    /// node is then active at a level ≥ `level` by nesting). Presence is
+    /// resolved through the master/mirror route tables — O(replicas) per
+    /// node, not O(p) — with the dense `lid_dense` arrays resolving each
+    /// mirror's local id without a hash probe.
+    fn stamp(&mut self, dg: &DistGraph, gid: u32, level: u8) {
+        let v = gid as usize;
+        if self.node_stamp[v] == self.node_epoch {
+            return;
+        }
+        self.node_stamp[v] = self.node_epoch;
+        self.top_level[v] = level;
+        self.order.push(gid);
+        let mq = dg.master_part(gid) as usize;
+        self.parts[mq].present.push(dg.master_lid(gid));
+        for &q in dg.mirror_targets(gid) {
+            let lid = dg.parts[q as usize].lid_dense[v];
+            debug_assert_ne!(lid, PartitionView::NO_LID, "mirror route without a replica");
+            self.parts[q as usize].present.push(lid);
+        }
+    }
+}
+
+/// Assemble one partition's mirror routes for one layer from its
+/// first-touch lists: `sync_in` = src-touched mirrors (∪ dst-touched when
+/// the model reads destination rows), `partial_out` = dst-touched
+/// mirrors; both ascending — the order a dense mirror scan emits. One
+/// recipe shared by the builder and the restriction, so the two can
+/// never drift apart.
+fn mirror_routes(
+    n_masters: u32,
+    touched_src: &[u32],
+    touched_dst: &[u32],
+    needs_dst: bool,
+) -> (Vec<u32>, Vec<u32>) {
+    let mut sync: Vec<u32> =
+        touched_src.iter().copied().filter(|&l| l >= n_masters).collect();
+    if needs_dst {
+        sync.extend(touched_dst.iter().copied().filter(|&l| l >= n_masters));
+    }
+    sync.sort_unstable();
+    sync.dedup();
+    let mut partial: Vec<u32> =
+        touched_dst.iter().copied().filter(|&l| l >= n_masters).collect();
+    partial.sort_unstable();
+    (sync, partial)
+}
+
+/// Per-partition output of one layer's sparse derivation.
+struct LayerPartOut {
+    edges: Vec<u32>,
+    sync_in: Vec<u32>,
+    partial_out: Vec<u32>,
+    /// Global ids of sources first touched in this partition this layer.
+    cand_srcs: Vec<u32>,
+}
+
+/// Walk the local CSC of the (sorted) active destinations of one
+/// partition: emit the taken edges, the mirror routes, and the candidate
+/// source gids for the next level. Visiting destinations in ascending
+/// local id keeps the edge emission — and every sampling-RNG draw — in
+/// exactly the order of a dense full-scan, which is what makes the sparse
+/// builder bitwise-equal to [`ActivePlan::build_dense_reference`].
+fn derive_layer_partition(
+    pv: &PartitionView,
+    ps: &mut PartScratch,
+    plen: usize,
+    fanout: usize,
+    needs_dst: bool,
+    tick: u32,
+    mut rng: Option<&mut Rng>,
+) -> LayerPartOut {
+    ps.dsts.clear();
+    ps.dsts.extend_from_slice(&ps.present[..plen]);
+    ps.dsts.sort_unstable();
+    let mut out = LayerPartOut {
+        edges: Vec::new(),
+        sync_in: Vec::new(),
+        partial_out: Vec::new(),
+        cand_srcs: Vec::new(),
+    };
+    let mut touched_src: Vec<u32> = Vec::new();
+    let mut touched_dst: Vec<u32> = Vec::new();
+    for i in 0..ps.dsts.len() {
+        let dst = ps.dsts[i] as usize;
+        let dgid = pv.nodes[dst];
+        let lo = pv.csc_offsets[dst];
+        let hi = pv.csc_offsets[dst + 1];
+        let deg = hi - lo;
+        // Sampling: self-loop is always kept, cap applies to the rest
+        // (GraphSAGE semantics).
+        let take_all = deg <= fanout;
+        let mut taken = 0usize;
+        for idx in lo..hi {
+            let s = pv.csc_sources[idx];
+            let le = pv.csc_leids[idx];
+            let sgid = pv.nodes[s as usize];
+            let is_self = sgid == dgid;
+            if !take_all && !is_self {
+                if taken >= fanout {
+                    continue;
+                }
+                // Bernoulli thinning approximating uniform fan-out
+                // sampling without a second pass.
+                let r = rng.as_mut().expect("sampling layers run serially with the shared RNG");
+                if !r.chance((fanout as f64 / deg as f64).min(1.0)) {
+                    continue;
+                }
+                taken += 1;
+            }
+            out.edges.push(le);
+            if ps.src_mark[s as usize] != tick {
+                ps.src_mark[s as usize] = tick;
+                touched_src.push(s);
+                out.cand_srcs.push(sgid);
+            }
+            if ps.dst_mark[dst] != tick {
+                ps.dst_mark[dst] = tick;
+                touched_dst.push(dst as u32);
+            }
+        }
+    }
+    let (sync, partial) =
+        mirror_routes(pv.n_masters as u32, &touched_src, &touched_dst, needs_dst);
+    out.sync_in = sync;
+    out.partial_out = partial;
+    out
+}
+
+/// Active destinations below which a layer is walked serially: on a tiny
+/// mini-batch frontier the scoped-thread spawn/join overhead exceeds the
+/// walk itself.
+const PARALLEL_FRONTIER_MIN: usize = 2048;
+
+/// Run one layer's per-partition derivation, in parallel on scoped
+/// threads when no sampling RNG is in play (the `exec_batch` pattern:
+/// contiguous partition chunks, outputs merged in partition order, so the
+/// result is bit-identical to the serial path at any thread count).
+fn run_layer(
+    dg: &DistGraph,
+    scratch: &mut PlanScratch,
+    plens: &[usize],
+    fanout: usize,
+    needs_dst: bool,
+    tick: u32,
+    rng: &mut Rng,
+) -> Vec<LayerPartOut> {
+    let p = dg.p();
+    let threads = scratch.effective_threads().min(p);
+    let frontier: usize = plens.iter().sum();
+    // Sampling draws come from one shared RNG stream and must happen in
+    // partition order — parallelize only the sampling-free case
+    // (GraphTheta's default training mode).
+    if fanout != usize::MAX || threads <= 1 || p <= 1 || frontier < PARALLEL_FRONTIER_MIN {
+        return (0..p)
+            .map(|q| {
+                derive_layer_partition(
+                    &dg.parts[q],
+                    &mut scratch.parts[q],
+                    plens[q],
+                    fanout,
+                    needs_dst,
+                    tick,
+                    Some(&mut *rng),
+                )
+            })
+            .collect();
+    }
+    let chunk = (p + threads - 1) / threads;
+    let mut slots: Vec<Option<LayerPartOut>> = Vec::new();
+    slots.resize_with(p, || None);
+    std::thread::scope(|s| {
+        let mut slot_rest: &mut [Option<LayerPartOut>] = &mut slots;
+        let mut ps_rest: &mut [PartScratch] = &mut scratch.parts;
+        let mut pv_rest: &[PartitionView] = &dg.parts;
+        let mut plen_rest: &[usize] = plens;
+        while !slot_rest.is_empty() {
+            let take = chunk.min(slot_rest.len());
+            let (slot_head, st) = std::mem::take(&mut slot_rest).split_at_mut(take);
+            slot_rest = st;
+            let (ps_head, pt) = std::mem::take(&mut ps_rest).split_at_mut(take);
+            ps_rest = pt;
+            let (pv_head, pvt) = pv_rest.split_at(take);
+            pv_rest = pvt;
+            let (plen_head, plt) = plen_rest.split_at(take);
+            plen_rest = plt;
+            s.spawn(move || {
+                for (((slot, ps), pv), &plen) in
+                    slot_head.iter_mut().zip(ps_head).zip(pv_head).zip(plen_head)
+                {
+                    *slot = Some(derive_layer_partition(
+                        pv, ps, plen, fanout, needs_dst, tick, None,
+                    ));
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("plan layer task panicked")).collect()
+}
+
+/// Assemble the plan's node-dependent fields from a finished scratch walk:
+/// per-level sorted active lists from the nested `top_level` marks, the
+/// per-partition master lists, targets routing and the counters. Shared
+/// by the sparse builder and the cluster-batch restriction.
+fn finish_plan(
+    dg: &DistGraph,
+    targets: Vec<u32>,
+    k: usize,
+    needs_dst: bool,
+    scratch: &PlanScratch,
+    lens: &[usize],
+    edges_active: Vec<Vec<Vec<u32>>>,
+    sync_in: Vec<Vec<Vec<u32>>>,
+    partial_out: Vec<Vec<Vec<u32>>>,
+) -> ActivePlan {
+    let p = dg.p();
+    let mut all: Vec<u32> = scratch.order.clone();
+    all.sort_unstable();
+    let mut active_nodes: Vec<Vec<u32>> = Vec::with_capacity(k + 1);
+    active_nodes.push(all.clone()); // level 0: every active node
+    for l in 1..=k {
+        active_nodes.push(
+            all.iter().copied().filter(|&v| scratch.top_level[v as usize] >= l as u8).collect(),
+        );
+    }
+    debug_assert!(
+        active_nodes.iter().enumerate().all(|(l, a)| a.len() == lens[l]),
+        "level prefix lengths disagree with top-level marks"
+    );
+
+    // A partition's masters are gid-sorted, so the globally gid-sorted
+    // walk emits each partition's master lids ascending — exactly the
+    // dense reference's scan order.
+    let mut masters_active = vec![vec![Vec::new(); p]; k + 1];
+    for (l, nodes) in active_nodes.iter().enumerate() {
+        for &gid in nodes {
+            let q = dg.master_part(gid) as usize;
+            masters_active[l][q].push(dg.master_lid(gid));
+        }
+    }
+
+    let mut targets_by_part = vec![Vec::new(); p];
+    for &t in &targets {
+        targets_by_part[dg.master_part(t) as usize].push(dg.master_lid(t));
+    }
+    for tq in targets_by_part.iter_mut() {
+        tq.sort_unstable();
+    }
+
+    let active_count = active_nodes.iter().map(Vec::len).collect();
+    let active_edge_count =
+        edges_active.iter().map(|per_p| per_p.iter().map(Vec::len).sum()).collect();
+
+    ActivePlan {
+        k,
+        targets,
+        active_nodes,
+        masters_active,
+        edges_active,
+        sync_in,
+        partial_out,
+        targets_by_part,
+        active_count,
+        active_edge_count,
+        needs_dst,
+        comm: CommPlan::default(),
+    }
+}
+
 impl ActivePlan {
-    /// Build the plan by reverse-BFS from `targets` through the local CSC
-    /// of every partition. `needs_dst` must be true for models whose
-    /// Gather reads the destination's projection too (GAT-E).
+    /// Build the plan by sparse reverse-BFS from `targets` through the
+    /// local CSC of every partition. `needs_dst` must be true for models
+    /// whose Gather reads the destination's projection too (GAT-E).
+    /// One-shot wrapper around [`ActivePlan::build_with`] for callers
+    /// without a persistent scratch (evaluation plans, tests, baselines).
     pub fn build(
         g: &Graph,
         dg: &DistGraph,
@@ -70,17 +503,337 @@ impl ActivePlan {
         needs_dst: bool,
         rng: &mut Rng,
     ) -> ActivePlan {
-        let mut plan = Self::build_unrouted(g, dg, targets, k, sampling, needs_dst, rng);
+        let mut scratch = PlanScratch::new();
+        Self::build_with(g, dg, targets, k, sampling, needs_dst, rng, &mut scratch)
+    }
+
+    /// [`ActivePlan::build`] reusing an epoch-persistent [`PlanScratch`]
+    /// — the per-step hot path: no `|V|`-proportional allocation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_with(
+        g: &Graph,
+        dg: &DistGraph,
+        targets: Vec<u32>,
+        k: usize,
+        sampling: SamplingConfig,
+        needs_dst: bool,
+        rng: &mut Rng,
+        scratch: &mut PlanScratch,
+    ) -> ActivePlan {
+        let mut plan =
+            Self::build_unrouted_with(g, dg, targets, k, sampling, needs_dst, rng, scratch);
         plan.rebuild_comm(dg);
         plan
     }
 
-    /// [`ActivePlan::build`] without the communication routes — for callers
-    /// that mutate the mirror lists before executing (global-batch
-    /// force-full, cluster-batch restriction) and would otherwise pay the
-    /// route construction twice. The returned plan MUST NOT reach the
-    /// executor until [`ActivePlan::rebuild_comm`] has run.
-    pub(crate) fn build_unrouted(
+    /// [`ActivePlan::build_with`] without the communication routes — for
+    /// callers that mutate the mirror lists before executing (cluster-batch
+    /// restriction) and would otherwise pay the route construction twice.
+    /// The returned plan MUST NOT reach the executor until
+    /// [`ActivePlan::rebuild_comm`] has run.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn build_unrouted_with(
+        g: &Graph,
+        dg: &DistGraph,
+        targets: Vec<u32>,
+        k: usize,
+        sampling: SamplingConfig,
+        needs_dst: bool,
+        rng: &mut Rng,
+        scratch: &mut PlanScratch,
+    ) -> ActivePlan {
+        let p = dg.p();
+        assert!(k < u8::MAX as usize, "layer count {k} exceeds the scratch level range");
+        scratch.ensure(g, dg);
+        scratch.begin();
+        for &t in &targets {
+            scratch.stamp(dg, t, k as u8);
+        }
+
+        let mut edges_active = vec![vec![Vec::new(); p]; k + 1];
+        let mut sync_in = vec![vec![Vec::new(); p]; k + 1];
+        let mut partial_out = vec![vec![Vec::new(); p]; k + 1];
+        let mut lens = vec![0usize; k + 1];
+
+        // Walk layers top-down: choose layer-l edges, derive level l-1.
+        for l in (1..=k).rev() {
+            lens[l] = scratch.order.len();
+            let hop = k - l; // 0 = closest to targets
+            let fanout = match sampling {
+                SamplingConfig::None => usize::MAX,
+                SamplingConfig::Neighbor { fanout } => {
+                    fanout.get(hop).copied().unwrap_or(usize::MAX)
+                }
+            };
+            // Presence-prefix snapshot: the active-at-level-l nodes of
+            // each partition (candidates stamped below extend `present`
+            // past this point for the next layer).
+            let plens: Vec<usize> = scratch.parts.iter().map(|ps| ps.present.len()).collect();
+            let tick = scratch.next_tick();
+            let outs = run_layer(dg, scratch, &plens, fanout, needs_dst, tick, rng);
+            for (q, out) in outs.into_iter().enumerate() {
+                for &sgid in &out.cand_srcs {
+                    scratch.stamp(dg, sgid, (l - 1) as u8);
+                }
+                edges_active[l][q] = out.edges;
+                sync_in[l][q] = out.sync_in;
+                partial_out[l][q] = out.partial_out;
+            }
+        }
+        lens[0] = scratch.order.len();
+
+        finish_plan(dg, targets, k, needs_dst, scratch, &lens, edges_active, sync_in, partial_out)
+    }
+
+    /// Rebuild the precomputed communication routes after the mirror lists
+    /// changed (plan surgery, e.g. the cluster-batch restriction).
+    pub fn rebuild_comm(&mut self, dg: &DistGraph) {
+        self.comm = CommPlan::build(dg, &self.sync_in, &self.partial_out, self.needs_dst);
+    }
+
+    /// Restrict this plan to an allowed node set (the cluster-batch
+    /// restriction; see [`crate::engine::strategy::restrict_to_clusters`]):
+    /// drop active edges whose source lies outside `allowed`, unless the
+    /// layer is within `boundary_hops` hops of the targets, then rebuild
+    /// the dependent node sets and routes through the same sparse stamped
+    /// walk as the builder — work proportional to the plan's active
+    /// edges, not `|V|`.
+    pub(crate) fn restrict_nodes(
+        &mut self,
+        g: &Graph,
+        dg: &DistGraph,
+        allowed: &[bool],
+        boundary_hops: usize,
+        needs_dst: bool,
+        scratch: &mut PlanScratch,
+    ) {
+        let k = self.k;
+        scratch.ensure(g, dg);
+        scratch.begin();
+        // Level k (the targets' level) is untouched by the restriction;
+        // the lower levels are rebuilt top-down from surviving edges.
+        for &t in &self.active_nodes[k] {
+            scratch.stamp(dg, t, k as u8);
+        }
+        let mut lens = vec![0usize; k + 1];
+        for l in (1..=k).rev() {
+            lens[l] = scratch.order.len();
+            let hop = k - l;
+            let outside_ok = hop < boundary_hops;
+            let tick = scratch.next_tick();
+            let mut cands: Vec<Vec<u32>> = Vec::with_capacity(dg.p());
+            for (q, pv) in dg.parts.iter().enumerate() {
+                let mut kept = Vec::with_capacity(self.edges_active[l][q].len());
+                let mut touched_src: Vec<u32> = Vec::new();
+                let mut touched_dst: Vec<u32> = Vec::new();
+                let mut cand: Vec<u32> = Vec::new();
+                for &le in &self.edges_active[l][q] {
+                    let src = pv.csr_sources_by_edge[le as usize] as usize;
+                    let dst = pv.csr_targets[le as usize] as usize;
+                    let sgid = pv.nodes[src];
+                    let dgid = pv.nodes[dst];
+                    if !scratch.is_active_at(dgid, l as u8) {
+                        continue; // destination no longer active
+                    }
+                    if !allowed[sgid as usize] && !outside_ok {
+                        continue; // outside the cluster, beyond the boundary
+                    }
+                    kept.push(le);
+                    if scratch.parts[q].src_mark[src] != tick {
+                        scratch.parts[q].src_mark[src] = tick;
+                        touched_src.push(src as u32);
+                        cand.push(sgid);
+                    }
+                    if scratch.parts[q].dst_mark[dst] != tick {
+                        scratch.parts[q].dst_mark[dst] = tick;
+                        touched_dst.push(dst as u32);
+                    }
+                }
+                self.edges_active[l][q] = kept;
+                let (sync, partial) =
+                    mirror_routes(pv.n_masters as u32, &touched_src, &touched_dst, needs_dst);
+                self.sync_in[l][q] = sync;
+                self.partial_out[l][q] = partial;
+                cands.push(cand);
+            }
+            // Merge in partition order — deterministic discovery order,
+            // and the stamped set stays "active at level l" for the whole
+            // layer (new stamps carry top_level = l-1).
+            for cand in cands {
+                for gid in cand {
+                    scratch.stamp(dg, gid, (l - 1) as u8);
+                }
+            }
+        }
+        lens[0] = scratch.order.len();
+
+        let targets = std::mem::take(&mut self.targets);
+        let edges = std::mem::take(&mut self.edges_active);
+        let sync = std::mem::take(&mut self.sync_in);
+        let partial = std::mem::take(&mut self.partial_out);
+        *self = finish_plan(dg, targets, k, needs_dst, scratch, &lens, edges, sync, partial);
+        // The mirror lists changed — the precomputed routes must follow.
+        self.rebuild_comm(dg);
+    }
+
+    /// The retired dense restriction — full `|V|` masks rebuilt top-down,
+    /// every mirror slot of every partition scanned per layer, source
+    /// lids re-derived by binary search — kept as the equivalence oracle
+    /// for [`ActivePlan::restrict_nodes`] in
+    /// `rust/tests/plan_equivalence.rs` (mirroring
+    /// [`ActivePlan::build_dense_reference`] for the builder). Not for
+    /// production use.
+    #[doc(hidden)]
+    pub fn restrict_dense_reference(
+        &mut self,
+        g: &Graph,
+        dg: &DistGraph,
+        allowed: &[bool],
+        boundary_hops: usize,
+        needs_dst: bool,
+    ) {
+        let k = self.k;
+        let n = g.n;
+        // Reset node activity below level k and rebuild top-down.
+        let mut node_active = vec![vec![false; n]; k + 1];
+        for &v in &self.active_nodes[k] {
+            node_active[k][v as usize] = true;
+        }
+        for l in (1..=k).rev() {
+            let hop = k - l;
+            let outside_ok = hop < boundary_hops;
+            let (lower, upper) = node_active.split_at_mut(l);
+            let mask_l = &upper[0];
+            let mask_lm1 = &mut lower[l - 1];
+            for (q, pv) in dg.parts.iter().enumerate() {
+                let mut kept = Vec::with_capacity(self.edges_active[l][q].len());
+                let mut need_src = vec![false; pv.n_local()];
+                let mut need_dst = vec![false; pv.n_local()];
+                for &le in &self.edges_active[l][q] {
+                    let src = pv
+                        .csr_offsets
+                        .partition_point(|&o| o <= le as usize)
+                        .saturating_sub(1);
+                    let dst = pv.csr_targets[le as usize] as usize;
+                    let sgid = pv.nodes[src] as usize;
+                    let dgid = pv.nodes[dst] as usize;
+                    if !mask_l[dgid] {
+                        continue; // destination no longer active
+                    }
+                    if !allowed[sgid] && !outside_ok {
+                        continue; // outside the cluster, beyond the boundary
+                    }
+                    kept.push(le);
+                    mask_lm1[sgid] = true;
+                    need_src[src] = true;
+                    need_dst[dst] = true;
+                }
+                self.edges_active[l][q] = kept;
+                self.sync_in[l][q] = (pv.n_masters..pv.n_local())
+                    .filter(|&lid| need_src[lid] || (needs_dst && need_dst[lid]))
+                    .map(|lid| lid as u32)
+                    .collect();
+                self.partial_out[l][q] = (pv.n_masters..pv.n_local())
+                    .filter(|&lid| need_dst[lid])
+                    .map(|lid| lid as u32)
+                    .collect();
+            }
+            // Destinations at level l still need their h^{l-1}.
+            for v in 0..n {
+                if mask_l[v] {
+                    mask_lm1[v] = true;
+                }
+            }
+        }
+        // Rebuild the dependent node sets and counters from the masks.
+        self.active_nodes = node_active
+            .iter()
+            .map(|mask| (0..n as u32).filter(|&v| mask[v as usize]).collect())
+            .collect();
+        for l in 0..=k {
+            for (q, pv) in dg.parts.iter().enumerate() {
+                self.masters_active[l][q] = (0..pv.n_masters as u32)
+                    .filter(|&lid| node_active[l][pv.nodes[lid as usize] as usize])
+                    .collect();
+            }
+        }
+        self.active_count = self.active_nodes.iter().map(Vec::len).collect();
+        self.active_edge_count = self
+            .edges_active
+            .iter()
+            .map(|per_p| per_p.iter().map(Vec::len).sum())
+            .collect();
+        self.rebuild_comm(dg);
+    }
+
+    /// Is `gid` active at level `l`? Binary search over the sorted level
+    /// list — for tests and tooling, not the executor hot path.
+    pub fn is_node_active(&self, l: usize, gid: u32) -> bool {
+        self.active_nodes[l].binary_search(&gid).is_ok()
+    }
+
+    /// Plan with **all** nodes active (global-batch): targets = labeled
+    /// training nodes, every edge active at every layer. Constructed
+    /// directly — no BFS, since the answer is "everything" (matching
+    /// "performs full graph convolutions across an entire graph").
+    pub fn global(g: &Graph, dg: &DistGraph, k: usize, needs_dst: bool) -> ActivePlan {
+        let p = dg.p();
+        let targets = g.labeled_nodes(&g.train_mask);
+        let all: Vec<u32> = (0..g.n as u32).collect();
+        let active_nodes = vec![all; k + 1];
+
+        let mut masters_active = vec![vec![Vec::new(); p]; k + 1];
+        let mut edges_active = vec![vec![Vec::new(); p]; k + 1];
+        let mut sync_in = vec![vec![Vec::new(); p]; k + 1];
+        let mut partial_out = vec![vec![Vec::new(); p]; k + 1];
+        for l in 0..=k {
+            for (q, pv) in dg.parts.iter().enumerate() {
+                masters_active[l][q] = (0..pv.n_masters as u32).collect();
+                if l >= 1 {
+                    edges_active[l][q] = (0..pv.m_local() as u32).collect();
+                    sync_in[l][q] = (pv.n_masters as u32..pv.n_local() as u32).collect();
+                    partial_out[l][q] = sync_in[l][q].clone();
+                }
+            }
+        }
+
+        let mut targets_by_part = vec![Vec::new(); p];
+        for &t in &targets {
+            targets_by_part[dg.master_part(t) as usize].push(dg.master_lid(t));
+        }
+        for tq in targets_by_part.iter_mut() {
+            tq.sort_unstable();
+        }
+
+        let active_count = vec![g.n; k + 1];
+        let active_edge_count = (0..=k).map(|l| if l == 0 { 0 } else { g.m }).collect();
+
+        let mut plan = ActivePlan {
+            k,
+            targets,
+            active_nodes,
+            masters_active,
+            edges_active,
+            sync_in,
+            partial_out,
+            targets_by_part,
+            active_count,
+            active_edge_count,
+            needs_dst,
+            comm: CommPlan::default(),
+        };
+        plan.rebuild_comm(dg);
+        plan
+    }
+
+    /// The retired dense builder — `(k+1)` full `|V|` masks, every local
+    /// node of every partition scanned per layer — kept verbatim (plus
+    /// the hoisted level-promotion pass) as the equivalence oracle for
+    /// `rust/tests/plan_equivalence.rs` and the `bench_hotpath` plan-build
+    /// baseline. Bitwise-identical output to [`ActivePlan::build`],
+    /// including the sampling-RNG stream. Not for production use.
+    #[doc(hidden)]
+    pub fn build_dense_reference(
         g: &Graph,
         dg: &DistGraph,
         targets: Vec<u32>,
@@ -100,15 +853,16 @@ impl ActivePlan {
         let mut sync_in = vec![vec![Vec::new(); p]; k + 1];
         let mut partial_out = vec![vec![Vec::new(); p]; k + 1];
 
-        // Walk layers top-down: choose layer-l edges, derive level l-1.
         for l in (1..=k).rev() {
             let (cur, rest) = node_active.split_at_mut(l);
-            let mask_l = &rest[0]; // node_active[l]
-            let mask_lm1 = &mut cur[l - 1]; // node_active[l-1]
-            let hop = k - l; // 0 = closest to targets
+            let mask_l = &rest[0];
+            let mask_lm1 = &mut cur[l - 1];
+            let hop = k - l;
             let fanout = match sampling {
                 SamplingConfig::None => usize::MAX,
-                SamplingConfig::Neighbor { fanout } => fanout.get(hop).copied().unwrap_or(usize::MAX),
+                SamplingConfig::Neighbor { fanout } => {
+                    fanout.get(hop).copied().unwrap_or(usize::MAX)
+                }
             };
             for (q, pv) in dg.parts.iter().enumerate() {
                 let mut need_src: Vec<bool> = vec![false; pv.n_local()];
@@ -121,8 +875,6 @@ impl ActivePlan {
                     let lo = pv.csc_offsets[dst];
                     let hi = pv.csc_offsets[dst + 1];
                     let deg = hi - lo;
-                    // Sampling: self-loop is always kept, cap applies to
-                    // the rest (GraphSAGE semantics).
                     let take_all = deg <= fanout;
                     let mut taken = 0usize;
                     for idx in lo..hi {
@@ -134,8 +886,6 @@ impl ActivePlan {
                             if taken >= fanout {
                                 continue;
                             }
-                            // Bernoulli thinning approximating uniform
-                            // fan-out sampling without a second pass.
                             if !rng.chance((fanout as f64 / deg as f64).min(1.0)) {
                                 continue;
                             }
@@ -147,15 +897,6 @@ impl ActivePlan {
                         need_dst[dst] = true;
                     }
                 }
-                // Destination embeddings at level l must also exist.
-                // (mask_l ⊆ mask_lm1 via self-loops, but make it explicit
-                // for graphs without self-loops.)
-                for v in 0..n {
-                    if mask_l[v] {
-                        mask_lm1[v] = true;
-                    }
-                }
-                // Mirror sync routes for this layer.
                 for lid in pv.n_masters..pv.n_local() {
                     let needs_n = need_src[lid] || (needs_dst && need_dst[lid]);
                     if needs_n {
@@ -166,9 +907,22 @@ impl ActivePlan {
                     }
                 }
             }
+            // Destination embeddings at level l must also exist
+            // (mask_l ⊆ mask_lm1 via self-loops, but make it explicit for
+            // graphs without self-loops). One pass per layer — this is
+            // partition-independent, so it lives outside the loop above.
+            for v in 0..n {
+                if mask_l[v] {
+                    mask_lm1[v] = true;
+                }
+            }
         }
 
-        // Per-partition active master lists per level.
+        let active_nodes: Vec<Vec<u32>> = node_active
+            .iter()
+            .map(|mask| (0..n as u32).filter(|&v| mask[v as usize]).collect())
+            .collect();
+
         let mut masters_active = vec![vec![Vec::new(); p]; k + 1];
         for l in 0..=k {
             for (q, pv) in dg.parts.iter().enumerate() {
@@ -180,29 +934,22 @@ impl ActivePlan {
             }
         }
 
-        // Targets per partition.
         let mut targets_by_part = vec![Vec::new(); p];
         for &t in &targets {
-            let q = dg.master_part(t) as usize;
-            targets_by_part[q].push(dg.master_lid(t));
+            targets_by_part[dg.master_part(t) as usize].push(dg.master_lid(t));
         }
         for tq in targets_by_part.iter_mut() {
             tq.sort_unstable();
         }
 
-        let active_count = node_active
-            .iter()
-            .map(|m| m.iter().filter(|&&b| b).count())
-            .collect();
-        let active_edge_count = edges_active
-            .iter()
-            .map(|per_p| per_p.iter().map(Vec::len).sum())
-            .collect();
+        let active_count = active_nodes.iter().map(Vec::len).collect();
+        let active_edge_count =
+            edges_active.iter().map(|per_p: &Vec<Vec<u32>>| per_p.iter().map(Vec::len).sum()).collect();
 
-        ActivePlan {
+        let mut plan = ActivePlan {
             k,
             targets,
-            node_active,
+            active_nodes,
             masters_active,
             edges_active,
             sync_in,
@@ -212,49 +959,7 @@ impl ActivePlan {
             active_edge_count,
             needs_dst,
             comm: CommPlan::default(),
-        }
-    }
-
-    /// Rebuild the precomputed communication routes after the mirror lists
-    /// changed (plan surgery, e.g. the cluster-batch restriction).
-    pub fn rebuild_comm(&mut self, dg: &DistGraph) {
-        self.comm = CommPlan::build(dg, &self.sync_in, &self.partial_out, self.needs_dst);
-    }
-
-    /// Plan with **all** nodes active (global-batch): targets = labeled
-    /// training nodes, every edge active at every layer.
-    pub fn global(g: &Graph, dg: &DistGraph, k: usize, needs_dst: bool) -> ActivePlan {
-        let targets = g.labeled_nodes(&g.train_mask);
-        let mut rng = Rng::new(0);
-        let mut plan =
-            ActivePlan::build_unrouted(g, dg, targets, k, SamplingConfig::None, needs_dst, &mut rng);
-        // Force-full: all nodes and edges at every level (targets' BFS may
-        // not reach disconnected parts, but global-batch computes them all
-        // — matching "performs full graph convolutions across an entire
-        // graph").
-        for l in 0..=k {
-            plan.node_active[l] = vec![true; g.n];
-        }
-        for l in 1..=k {
-            for (q, pv) in dg.parts.iter().enumerate() {
-                plan.edges_active[l][q] = (0..pv.m_local() as u32).collect();
-                plan.sync_in[l][q] = (pv.n_masters as u32..pv.n_local() as u32).collect();
-                plan.partial_out[l][q] = plan.sync_in[l][q].clone();
-                if !needs_dst {
-                    // sources only need sync; keep all mirrors for
-                    // simplicity of the full plan (they are all endpoints).
-                }
-            }
-        }
-        for l in 0..=k {
-            for (q, pv) in dg.parts.iter().enumerate() {
-                plan.masters_active[l][q] = (0..pv.n_masters as u32).collect();
-            }
-        }
-        plan.active_count = vec![g.n; k + 1];
-        plan.active_edge_count = (0..=k)
-            .map(|l| if l == 0 { 0 } else { g.m })
-            .collect();
+        };
         plan.rebuild_comm(dg);
         plan
     }
@@ -285,20 +990,43 @@ mod tests {
     }
 
     #[test]
+    fn active_levels_are_nested_and_sorted() {
+        let (g, dg) = setup();
+        let mut rng = Rng::new(6);
+        let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..12].to_vec();
+        let plan = ActivePlan::build(&g, &dg, targets, 3, SamplingConfig::None, false, &mut rng);
+        for l in 0..=3 {
+            assert!(plan.active_nodes[l].windows(2).all(|w| w[0] < w[1]), "level {l} unsorted");
+            assert_eq!(plan.active_nodes[l].len(), plan.active_count[l]);
+        }
+        for l in 1..=3 {
+            for &v in &plan.active_nodes[l] {
+                assert!(plan.is_node_active(l - 1, v), "nesting broken at level {l}, node {v}");
+            }
+        }
+    }
+
+    #[test]
     fn level_km1_is_exactly_sources_of_active_edges() {
         let (g, dg) = setup();
         let mut rng = Rng::new(2);
         let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..5].to_vec();
         let plan =
             ActivePlan::build(&g, &dg, targets.clone(), 1, SamplingConfig::None, false, &mut rng);
-        let mut want = vec![false; g.n];
+        let mut want: Vec<u32> = Vec::new();
+        let mut seen = vec![false; g.n];
         for &t in &targets {
-            want[t as usize] = true; // self at level l is kept
+            seen[t as usize] = true; // self at level l is kept
             for (s, _) in g.in_edges(t as usize) {
-                want[s as usize] = true;
+                seen[s as usize] = true;
             }
         }
-        assert_eq!(plan.node_active[0], want);
+        for v in 0..g.n as u32 {
+            if seen[v as usize] {
+                want.push(v);
+            }
+        }
+        assert_eq!(plan.active_nodes[0], want);
         // Active edge count equals total in-degree of targets.
         let total_in: usize = targets.iter().map(|&t| g.in_degree(t as usize)).sum();
         assert_eq!(plan.active_edge_count[1], total_in);
@@ -358,11 +1086,7 @@ mod tests {
                 let synced: std::collections::HashSet<u32> =
                     plan.sync_in[l][q].iter().copied().collect();
                 for &le in &plan.edges_active[l][q] {
-                    let lo = pv
-                        .csr_offsets
-                        .partition_point(|&o| o <= le as usize)
-                        .saturating_sub(1);
-                    let src = lo as u32;
+                    let src = pv.csr_sources_by_edge[le as usize];
                     assert!(
                         pv.is_master(src) || synced.contains(&src),
                         "edge {le} source {src} unreachable in part {q} layer {l}"
@@ -370,6 +1094,74 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sparse_builder_matches_dense_reference() {
+        let (g, dg) = setup();
+        let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..25].to_vec();
+        for needs_dst in [false, true] {
+            let mut ra = Rng::new(42);
+            let mut rb = Rng::new(42);
+            let sparse = ActivePlan::build(
+                &g,
+                &dg,
+                targets.clone(),
+                2,
+                SamplingConfig::None,
+                needs_dst,
+                &mut ra,
+            );
+            let dense = ActivePlan::build_dense_reference(
+                &g,
+                &dg,
+                targets.clone(),
+                2,
+                SamplingConfig::None,
+                needs_dst,
+                &mut rb,
+            );
+            assert_eq!(sparse, dense, "needs_dst={needs_dst}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let (g, dg) = setup();
+        let train = g.labeled_nodes(&g.train_mask);
+        let mut scratch = PlanScratch::new();
+        // Same batch built through a warm scratch must equal the cold
+        // build — the stamp-invalidation invariant at work.
+        let mk = |scratch: &mut PlanScratch| {
+            let mut rng = Rng::new(9);
+            ActivePlan::build_with(
+                &g,
+                &dg,
+                train[..15].to_vec(),
+                2,
+                SamplingConfig::None,
+                false,
+                &mut rng,
+                scratch,
+            )
+        };
+        let cold = mk(&mut scratch);
+        // Dirty the scratch with a different batch, then rebuild.
+        {
+            let mut rng = Rng::new(1);
+            ActivePlan::build_with(
+                &g,
+                &dg,
+                train[20..60].to_vec(),
+                3,
+                SamplingConfig::None,
+                true,
+                &mut rng,
+                &mut scratch,
+            );
+        }
+        let warm = mk(&mut scratch);
+        assert_eq!(cold, warm);
     }
 
     #[test]

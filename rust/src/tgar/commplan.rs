@@ -44,32 +44,49 @@ pub struct RouteTable {
 
 impl RouteTable {
     /// Build the route table for partition `q` from its mirror local ids.
-    /// `lids` must all be mirrors of `q` (checked in debug builds).
+    /// `lids` must all be mirrors of `q`, sorted ascending and distinct —
+    /// which every plan's mirror list is by construction (checked in
+    /// debug builds). Rows are bucketed by master partition in one
+    /// counting pass instead of a comparison sort: since the input lids
+    /// are already ascending, each peer group stays lid-sorted, producing
+    /// exactly the `(master_part, lid, master_lid)`-sorted layout the
+    /// retired sort emitted.
     pub fn build(dg: &DistGraph, q: usize, lids: &[u32]) -> RouteTable {
         let pv = &dg.parts[q];
-        let mut rows: Vec<(u32, u32, u32)> = lids
-            .iter()
-            .map(|&lid| {
-                debug_assert!(!pv.is_master(lid), "route row {lid} is a master of {q}");
-                let gid = pv.nodes[lid as usize];
-                (dg.master_part(gid), lid, dg.master_lid(gid))
-            })
-            .collect();
-        rows.sort_unstable();
+        let p = dg.p();
+        debug_assert!(
+            lids.windows(2).all(|w| w[0] < w[1]),
+            "mirror lids must be sorted and distinct"
+        );
+        let mut counts = vec![0u32; p];
+        for &lid in lids {
+            debug_assert!(!pv.is_master(lid), "route row {lid} is a master of {q}");
+            counts[dg.master_part(pv.nodes[lid as usize]) as usize] += 1;
+        }
         let mut rt = RouteTable {
             peers: Vec::new(),
             offsets: vec![0],
-            local: Vec::with_capacity(rows.len()),
-            remote: Vec::with_capacity(rows.len()),
+            local: vec![0; lids.len()],
+            remote: vec![0; lids.len()],
         };
-        for (mq, lid, mlid) in rows {
-            if rt.peers.last() != Some(&mq) {
-                rt.peers.push(mq);
-                rt.offsets.push(*rt.offsets.last().unwrap());
+        let mut cursor = vec![0u32; p];
+        let mut acc = 0u32;
+        for (mq, &c) in counts.iter().enumerate() {
+            cursor[mq] = acc;
+            if c > 0 {
+                debug_assert_ne!(mq, q, "a mirror's master is always remote");
+                rt.peers.push(mq as u32);
+                acc += c;
+                rt.offsets.push(acc);
             }
-            *rt.offsets.last_mut().unwrap() += 1;
-            rt.local.push(lid);
-            rt.remote.push(mlid);
+        }
+        for &lid in lids {
+            let gid = pv.nodes[lid as usize];
+            let mq = dg.master_part(gid) as usize;
+            let i = cursor[mq] as usize;
+            cursor[mq] += 1;
+            rt.local[i] = lid;
+            rt.remote[i] = dg.master_lid(gid);
         }
         rt
     }

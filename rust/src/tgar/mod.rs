@@ -11,6 +11,8 @@
 //! * [`active`] — the per-batch active sets: which nodes/edges participate
 //!   at each layer (this is what makes deep, sampling-free neighborhood
 //!   exploration affordable — storage is O(active), not O(subgraph copy)).
+//!   Plans are built by a sparse frontier walk over reusable stamped
+//!   scratch ([`PlanScratch`]), so construction cost is also O(active).
 //! * [`commplan`] — the precomputed master↔mirror communication routes:
 //!   dense CSR-style tables built once per plan, so the executor's
 //!   sync/combine supersteps do no per-row hashing or sorting.
@@ -22,6 +24,6 @@ pub mod active;
 pub mod commplan;
 pub mod executor;
 
-pub use active::ActivePlan;
+pub use active::{ActivePlan, PlanScratch};
 pub use commplan::{CommPlan, RouteTable};
 pub use executor::{Executor, StepResult};

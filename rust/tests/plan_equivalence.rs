@@ -1,0 +1,265 @@
+//! Sparse-vs-dense plan builder equivalence (ISSUE 3, perf_opt archetype).
+//!
+//! The sparse frontier builder (`ActivePlan::build` /
+//! `ActivePlan::build_with`) must produce plans **bitwise-equal** to the
+//! retired dense mask-scanning builder
+//! (`ActivePlan::build_dense_reference`): node sets per level, edge lists
+//! (order included), mirror sync/partial routes, route tables, counts —
+//! and, when neighbor sampling is on, it must consume the shared RNG
+//! stream in exactly the same order (checked by comparing the next draw
+//! after each build). `ActivePlan` derives `Eq`, so the whole plan —
+//! `CommPlan` route tables included — is compared in one shot.
+//!
+//! The suite sweeps random target batches over three generators ×
+//! p ∈ {1, 3, 4} × k ∈ {1, 2, 3}, with and without neighbor sampling,
+//! reusing **one** `PlanScratch` across every case — which also exercises
+//! the scratch's stamp-invalidation invariant across graphs and
+//! partitionings.
+
+use graphtheta::config::SamplingConfig;
+use graphtheta::engine::strategy::restrict_to_clusters;
+use graphtheta::graph::{gen, Graph};
+use graphtheta::partition::{Edge1D, Partitioner, VertexCut};
+use graphtheta::storage::DistGraph;
+use graphtheta::tgar::{ActivePlan, PlanScratch};
+use graphtheta::util::qcheck::qcheck_cases;
+use graphtheta::util::rng::Rng;
+
+/// Graphs × partitionings the property sweeps. VertexCut at p = 3 puts
+/// edge endpoints on foreign partitions (mirror-heavy plans); Edge1D keeps
+/// sources local (mirror-light plans); p = 1 has no mirrors at all.
+fn corpus() -> Vec<(Graph, Vec<DistGraph>)> {
+    let mk = |g: Graph| {
+        let dgs = vec![
+            DistGraph::build(&g, Edge1D::default().partition(&g, 1)),
+            DistGraph::build(&g, VertexCut.partition(&g, 3)),
+            DistGraph::build(&g, Edge1D::default().partition(&g, 4)),
+        ];
+        (g, dgs)
+    };
+    vec![
+        mk(gen::citation_like("cora", 7)),
+        mk(gen::citation_like("citeseer", 6)),
+        mk(gen::amazon_like()), // power-law degree skew
+    ]
+}
+
+fn check_case(
+    g: &Graph,
+    dg: &DistGraph,
+    targets: Vec<u32>,
+    k: usize,
+    sampling: SamplingConfig,
+    needs_dst: bool,
+    seed: u64,
+    scratch: &mut PlanScratch,
+) -> Result<(), String> {
+    let mut r_sparse = Rng::new(seed);
+    let mut r_dense = Rng::new(seed);
+    let sparse = ActivePlan::build_with(
+        g,
+        dg,
+        targets.clone(),
+        k,
+        sampling,
+        needs_dst,
+        &mut r_sparse,
+        scratch,
+    );
+    let dense =
+        ActivePlan::build_dense_reference(g, dg, targets, k, sampling, needs_dst, &mut r_dense);
+    if sparse != dense {
+        // Narrow the diff for the panic message.
+        for l in 0..=k {
+            if sparse.active_nodes[l] != dense.active_nodes[l] {
+                return Err(format!(
+                    "level {l} node sets differ: sparse {} vs dense {}",
+                    sparse.active_nodes[l].len(),
+                    dense.active_nodes[l].len()
+                ));
+            }
+            for q in 0..dg.p() {
+                if sparse.edges_active[l][q] != dense.edges_active[l][q] {
+                    return Err(format!("edges_active[{l}][{q}] differ"));
+                }
+                if sparse.sync_in[l][q] != dense.sync_in[l][q] {
+                    return Err(format!("sync_in[{l}][{q}] differ"));
+                }
+                if sparse.partial_out[l][q] != dense.partial_out[l][q] {
+                    return Err(format!("partial_out[{l}][{q}] differ"));
+                }
+            }
+        }
+        return Err("plans differ (masters/targets/comm tables)".into());
+    }
+    if r_sparse.next_u64() != r_dense.next_u64() {
+        return Err("builders consumed different RNG stream lengths".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn sparse_builder_equals_dense_reference_exhaustive() {
+    // Deterministic sweep: every (graph, p, k, sampling, needs_dst) cell
+    // at a small fixed batch, one shared scratch throughout.
+    let corpus = corpus();
+    let mut scratch = PlanScratch::new();
+    for (gi, (g, dgs)) in corpus.iter().enumerate() {
+        let train = g.labeled_nodes(&g.train_mask);
+        for dg in dgs {
+            for k in 1..=3usize {
+                for (si, sampling) in [
+                    SamplingConfig::None,
+                    SamplingConfig::Neighbor { fanout: [3, 2, 2, usize::MAX] },
+                ]
+                .into_iter()
+                .enumerate()
+                {
+                    let needs_dst = (k + si) % 2 == 0;
+                    let nt = 12.min(train.len());
+                    let targets = train[..nt].to_vec();
+                    let seed = (gi as u64) << 8 | (dg.p() as u64) << 4 | k as u64;
+                    if let Err(msg) = check_case(
+                        g,
+                        dg,
+                        targets,
+                        k,
+                        sampling,
+                        needs_dst,
+                        seed,
+                        &mut scratch,
+                    ) {
+                        panic!(
+                            "graph {gi} p={} k={k} sampling={si} needs_dst={needs_dst}: {msg}",
+                            dg.p()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn qcheck_sparse_equals_dense_on_random_batches() {
+    let corpus = corpus();
+    // qcheck properties are `Fn`, so the shared scratch sits in a RefCell.
+    let scratch = std::cell::RefCell::new(PlanScratch::new());
+    qcheck_cases(
+        "sparse-dense-plan-equivalence",
+        48,
+        |r| {
+            // (graph idx, partitioning idx, k, target count, sampling?,
+            //  needs_dst, build seed)
+            (
+                r.below(3),
+                r.below(3),
+                1 + r.below(3),
+                1 + r.below(60),
+                r.chance(0.5),
+                r.chance(0.5),
+                r.next_u64(),
+            )
+        },
+        |&(gi, di, k, nt, sample, needs_dst, seed)| {
+            let (g, dgs) = &corpus[gi];
+            let dg = &dgs[di];
+            let train = g.labeled_nodes(&g.train_mask);
+            let mut pick = Rng::new(seed ^ 0x7A26E7);
+            let idx = pick.sample_indices(train.len(), nt.min(train.len()));
+            let targets: Vec<u32> = idx.iter().map(|&i| train[i]).collect();
+            let sampling = if sample {
+                SamplingConfig::Neighbor { fanout: [4, 3, 2, usize::MAX] }
+            } else {
+                SamplingConfig::None
+            };
+            check_case(
+                g,
+                dg,
+                targets,
+                k,
+                sampling,
+                needs_dst,
+                seed,
+                &mut scratch.borrow_mut(),
+            )
+        },
+    );
+}
+
+#[test]
+fn sparse_restriction_matches_dense_reference() {
+    // The cluster-batch restriction was rewritten as the same sparse
+    // stamped walk as the builder; pin it against the retired dense
+    // restriction across partitionings, boundary depths and both Gather
+    // modes (needs_dst toggles the sync-route union).
+    let corpus = corpus();
+    let mut scratch = PlanScratch::new();
+    for (gi, (g, dgs)) in corpus.iter().enumerate() {
+        let train = g.labeled_nodes(&g.train_mask);
+        for dg in dgs {
+            for boundary in 0..=2usize {
+                for needs_dst in [false, true] {
+                    let mut rng = Rng::new(0xC1 + gi as u64 * 31 + boundary as u64);
+                    let targets = train[..40.min(train.len())].to_vec();
+                    let base = ActivePlan::build(
+                        g,
+                        dg,
+                        targets,
+                        2,
+                        SamplingConfig::None,
+                        needs_dst,
+                        &mut rng,
+                    );
+                    // Deterministic pseudo-cluster stripe: 2/3 of nodes
+                    // allowed, so every boundary depth admits real work.
+                    let allowed: Vec<bool> = (0..g.n).map(|v| v % 3 != 0).collect();
+                    let mut sparse = base.clone();
+                    restrict_to_clusters(
+                        &mut sparse,
+                        g,
+                        dg,
+                        &allowed,
+                        boundary,
+                        needs_dst,
+                        &mut scratch,
+                    );
+                    let mut dense = base.clone();
+                    dense.restrict_dense_reference(g, dg, &allowed, boundary, needs_dst);
+                    assert_eq!(
+                        sparse,
+                        dense,
+                        "graph {gi} p={} boundary={boundary} needs_dst={needs_dst}",
+                        dg.p()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn global_plan_matches_dense_force_full_shape() {
+    // `ActivePlan::global` is built directly (no BFS); pin its shape
+    // against first principles so the direct construction cannot drift.
+    let g = gen::citation_like("pubmed", 3);
+    let dg = DistGraph::build(&g, VertexCut.partition(&g, 4));
+    let plan = ActivePlan::global(&g, &dg, 2, false);
+    for l in 0..=2 {
+        assert_eq!(plan.active_nodes[l].len(), g.n);
+        assert!(plan.active_nodes[l].windows(2).all(|w| w[0] < w[1]));
+    }
+    let masters: usize = plan.masters_active[2].iter().map(Vec::len).sum();
+    assert_eq!(masters, g.n);
+    for l in 1..=2 {
+        let edges: usize = plan.edges_active[l].iter().map(Vec::len).sum();
+        assert_eq!(edges, g.m);
+        for (q, pv) in dg.parts.iter().enumerate() {
+            assert_eq!(plan.sync_in[l][q].len(), pv.n_mirrors());
+            assert_eq!(plan.partial_out[l][q], plan.sync_in[l][q]);
+        }
+    }
+    let targets = g.labeled_nodes(&g.train_mask);
+    let routed: usize = plan.targets_by_part.iter().map(Vec::len).sum();
+    assert_eq!(routed, targets.len());
+}
