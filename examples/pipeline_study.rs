@@ -1,21 +1,59 @@
-//! Pipeline study: sweep the hybrid-parallel coordinator's width ×
-//! accumulation-window grid on a mini-batch workload and report modeled
-//! makespan, overlap speedup, steal counts, staleness and accuracy
-//! (the §4.3 concurrency claim as a runnable tool).
+//! Pipeline study: sweep the hybrid-parallel coordinator's knobs on a
+//! mini-batch workload and report modeled makespan, overlap speedup,
+//! steal counts, staleness, replays and accuracy — the §4.3 flexible
+//! training strategy as a runnable tool.
+//!
+//! Two sweeps:
+//!
+//! 1. `pipeline_width × accum_window` (synchronous rounds) — the PR 2
+//!    grid;
+//! 2. `update_mode × schedule_policy` at a fixed width — synchronous
+//!    rounds vs asynchronous bounded staleness at several bounds, under
+//!    round-robin vs locality-aware chain placement, with the replay
+//!    counters that price a too-tight bound.
 //!
 //! ```bash
 //! cargo run --release --example pipeline_study [-- dataset workers steps]
 //! ```
+//!
+//! `GT_STUDY_SMOKE=1` shrinks the run to a couple of steps per
+//! configuration (numbers are meaningless; the point is that every code
+//! path executes) — CI runs this so the study cannot rot.
 
-use graphtheta::config::{ModelConfig, StrategyKind, TrainConfig};
+use graphtheta::config::{ModelConfig, SchedulePolicy, StrategyKind, TrainConfig, UpdateMode};
 use graphtheta::engine::trainer::Trainer;
+use graphtheta::graph::Graph;
 use graphtheta::metrics::markdown_table;
 
+fn study_cfg(
+    g: &Graph,
+    steps: usize,
+    width: usize,
+    window: usize,
+    mode: UpdateMode,
+    policy: SchedulePolicy,
+) -> TrainConfig {
+    TrainConfig::builder()
+        .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+        .strategy(StrategyKind::mini(0.3))
+        .epochs(steps)
+        .eval_every(5)
+        .lr(0.03)
+        .seed(7)
+        .pipeline_width(width)
+        .accum_window(window)
+        .update_mode(mode)
+        .schedule_policy(policy)
+        .build()
+}
+
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("GT_STUDY_SMOKE").is_ok();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let dataset = args.first().map(String::as_str).unwrap_or("cora");
     let p: usize = args.get(1).and_then(|x| x.parse().ok()).unwrap_or(8);
-    let steps: usize = args.get(2).and_then(|x| x.parse().ok()).unwrap_or(40);
+    let steps: usize =
+        if smoke { 2 } else { args.get(2).and_then(|x| x.parse().ok()).unwrap_or(40) };
 
     let g = match dataset {
         "cora" | "citeseer" | "pubmed" => graphtheta::graph::gen::citation_like(dataset, 7),
@@ -23,20 +61,24 @@ fn main() -> anyhow::Result<()> {
         "amazon" => graphtheta::graph::gen::amazon_like(),
         other => anyhow::bail!("unknown dataset {other}"),
     };
-    println!("dataset {dataset}: n={} m={} p={p} steps={steps}\n", g.n, g.m);
+    println!(
+        "dataset {dataset}: n={} m={} p={p} steps={steps}{}\n",
+        g.n,
+        g.m,
+        if smoke { "  [SMOKE]" } else { "" }
+    );
 
+    // Sweep 1: synchronous width × window grid.
     let mut rows = Vec::new();
     for &(width, window) in &[(1usize, 1usize), (2, 1), (2, 2), (4, 1), (4, 4), (8, 4)] {
-        let cfg = TrainConfig::builder()
-            .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
-            .strategy(StrategyKind::mini(0.3))
-            .epochs(steps)
-            .eval_every(5)
-            .lr(0.03)
-            .seed(7)
-            .pipeline_width(width)
-            .accum_window(window)
-            .build();
+        let cfg = study_cfg(
+            &g,
+            steps,
+            width,
+            window,
+            UpdateMode::Synchronous,
+            SchedulePolicy::RoundRobin,
+        );
         let mut t = Trainer::new(&g, cfg, p)?;
         let r = t.train_pipelined()?;
         rows.push(vec![
@@ -68,7 +110,55 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "width 1 / window 1 is bit-identical to the sequential trainer;\n\
-         wider pipelines trade bounded staleness for overlapped makespan."
+         wider pipelines trade bounded staleness for overlapped makespan.\n"
+    );
+
+    // Sweep 2: update mode × placement policy at a fixed width. Staleness
+    // bounds below width − 1 pay for freshness with replays.
+    let width = if smoke { 2 } else { 4 };
+    let mut modes: Vec<(String, UpdateMode)> = vec![("sync".into(), UpdateMode::Synchronous)];
+    for s in [0usize, 1, 3] {
+        modes.push((format!("async s={s}"), UpdateMode::Asynchronous { max_staleness: s }));
+    }
+    let mut rows = Vec::new();
+    for (mode_name, mode) in &modes {
+        for policy in [SchedulePolicy::RoundRobin, SchedulePolicy::LocalityAware] {
+            let cfg = study_cfg(&g, steps, width, 1, *mode, policy);
+            let mut t = Trainer::new(&g, cfg, p)?;
+            let r = t.train_pipelined()?;
+            let (replays, replay_secs) =
+                r.async_stats.map_or((0, 0.0), |s| (s.replays, s.replay_secs));
+            rows.push(vec![
+                mode_name.clone(),
+                policy.name().to_string(),
+                format!("{:.4}", r.train.sim_total),
+                format!("{:.2}x", r.overlap.speedup()),
+                r.overlap.steals.to_string(),
+                format!("{}/{:.2}", r.max_staleness, r.mean_staleness),
+                format!("{replays} ({replay_secs:.4}s)"),
+                format!("{:.4}", r.train.test_accuracy),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &[
+                &format!("mode (width={width})"),
+                "placement",
+                "makespan (model s)",
+                "overlap speedup",
+                "steals",
+                "staleness max/mean",
+                "replays",
+                "test acc",
+            ],
+            &rows,
+        )
+    );
+    println!(
+        "async bounds ≥ width−1 never replay and drop the round barrier;\n\
+         tighter bounds buy fresher gradients with replayed steps."
     );
     Ok(())
 }

@@ -211,7 +211,8 @@ mod tests {
         c.socket_node_budget = {
             // pick a budget between the two measured edge volumes
             let probe = |layers| {
-                let r = step_time(&g, &GraphLearnConfig { socket_node_budget: f64::INFINITY, ..c.clone() }, 8, layers, SETTING_LARGE);
+                let cfg = GraphLearnConfig { socket_node_budget: f64::INFINITY, ..c.clone() };
+                let r = step_time(&g, &cfg, 8, layers, SETTING_LARGE);
                 let _ = r.secs;
                 r.sampled_nodes as f64
             };

@@ -151,8 +151,35 @@ pub enum OptimizerKind {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum UpdateMode {
     Synchronous,
-    /// Bounded-staleness asynchronous updates.
+    /// Bounded-staleness asynchronous updates: a gradient computed against
+    /// a parameter version lagging the latest by more than `max_staleness`
+    /// is rejected at push time and the step is replayed against fresh
+    /// parameters (see [`crate::coordinator::Coordinator::run_async`]).
     Asynchronous { max_staleness: usize },
+}
+
+/// Placement policy for the pipelined coordinator's phase-task chains
+/// (see [`crate::engine::scheduler`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Chain `c`'s home worker is `c % p` — the deterministic baseline the
+    /// golden suite pins.
+    #[default]
+    RoundRobin,
+    /// A chain's home is the dominant partition of its step's plan (most
+    /// active edges + communication route rows), and steals prefer affine
+    /// workers. Numerics are identical to [`SchedulePolicy::RoundRobin`];
+    /// only the modeled makespan moves.
+    LocalityAware,
+}
+
+impl SchedulePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulePolicy::RoundRobin => "round-robin",
+            SchedulePolicy::LocalityAware => "locality",
+        }
+    }
 }
 
 /// Neighbor sampling applied during subgraph construction (§4.2 implements
@@ -194,6 +221,9 @@ pub struct TrainConfig {
     /// update — the pipelined-SGD window bounding staleness. 1 = update
     /// after every step, exactly sequential SGD.
     pub accum_window: usize,
+    /// How the coordinator places phase-task chains on the modeled
+    /// cluster's workers.
+    pub schedule_policy: SchedulePolicy,
 }
 
 impl TrainConfig {
@@ -219,6 +249,7 @@ pub struct TrainConfigBuilder {
     threads: Option<usize>,
     pipeline_width: Option<usize>,
     accum_window: Option<usize>,
+    schedule_policy: Option<SchedulePolicy>,
 }
 
 impl TrainConfigBuilder {
@@ -282,6 +313,10 @@ impl TrainConfigBuilder {
         self.accum_window = Some(a);
         self
     }
+    pub fn schedule_policy(mut self, s: SchedulePolicy) -> Self {
+        self.schedule_policy = Some(s);
+        self
+    }
 
     pub fn build(self) -> TrainConfig {
         TrainConfig {
@@ -300,6 +335,7 @@ impl TrainConfigBuilder {
             threads: self.threads.unwrap_or(0),
             pipeline_width: self.pipeline_width.unwrap_or(1).max(1),
             accum_window: self.accum_window.unwrap_or(1).max(1),
+            schedule_policy: self.schedule_policy.unwrap_or_default(),
         }
     }
 }
@@ -375,6 +411,7 @@ pub fn config_from_kv(
         "model", "hidden", "layers", "strategy", "batch_frac", "cluster_frac",
         "boundary_hops", "optimizer", "lr", "weight_decay", "epochs", "eval_every",
         "seed", "backend", "fanout", "binary", "threads", "pipeline_width", "accum_window",
+        "update_mode", "max_staleness", "schedule_policy",
     ];
     for k in kv.keys() {
         if !known.contains(&k.as_str()) {
@@ -420,8 +457,28 @@ pub fn config_from_kv(
         "adamw" => OptimizerKind::AdamW,
         other => return Err(format!("unknown optimizer {other}")),
     };
+    let update_mode = match kv.get("update_mode").map(String::as_str).unwrap_or("sync") {
+        "sync" | "synchronous" => {
+            if kv.contains_key("max_staleness") {
+                return Err("max_staleness requires update_mode = async".into());
+            }
+            UpdateMode::Synchronous
+        }
+        "async" | "asynchronous" => {
+            UpdateMode::Asynchronous { max_staleness: get_u("max_staleness", 0)? }
+        }
+        other => return Err(format!("unknown update_mode {other}")),
+    };
+    let schedule_policy =
+        match kv.get("schedule_policy").map(String::as_str).unwrap_or("round-robin") {
+            "round-robin" | "rr" => SchedulePolicy::RoundRobin,
+            "locality" | "locality-aware" => SchedulePolicy::LocalityAware,
+            other => return Err(format!("unknown schedule_policy {other}")),
+        };
     Ok(b
         .optimizer(opt)
+        .update_mode(update_mode)
+        .schedule_policy(schedule_policy)
         .lr(get_f("lr", 0.01)? as f32)
         .weight_decay(get_f("weight_decay", 5e-4)? as f32)
         .epochs(get_u("epochs", 100)?)
@@ -468,6 +525,33 @@ mod tests {
         let kv = parse_kv("pipeline_width = 8\naccum_window = 4\n").unwrap();
         let c = config_from_kv(&kv, 8, 2, 0).unwrap();
         assert_eq!((c.pipeline_width, c.accum_window), (8, 4));
+    }
+
+    #[test]
+    fn update_mode_and_policy_via_builder_and_kv() {
+        let c = TrainConfig::builder().model(ModelConfig::gcn(8, 8, 2, 1)).build();
+        assert_eq!(c.update_mode, UpdateMode::Synchronous);
+        assert_eq!(c.schedule_policy, SchedulePolicy::RoundRobin);
+        let c = TrainConfig::builder()
+            .model(ModelConfig::gcn(8, 8, 2, 1))
+            .update_mode(UpdateMode::Asynchronous { max_staleness: 2 })
+            .schedule_policy(SchedulePolicy::LocalityAware)
+            .build();
+        assert_eq!(c.update_mode, UpdateMode::Asynchronous { max_staleness: 2 });
+        assert_eq!(c.schedule_policy, SchedulePolicy::LocalityAware);
+        let kv = parse_kv("update_mode = async\nmax_staleness = 3\nschedule_policy = locality\n")
+            .unwrap();
+        let c = config_from_kv(&kv, 8, 2, 0).unwrap();
+        assert_eq!(c.update_mode, UpdateMode::Asynchronous { max_staleness: 3 });
+        assert_eq!(c.schedule_policy, SchedulePolicy::LocalityAware);
+        // max_staleness without async is a configuration error, as are
+        // unknown mode/policy names.
+        let kv = parse_kv("max_staleness = 3\n").unwrap();
+        assert!(config_from_kv(&kv, 8, 2, 0).is_err());
+        let kv = parse_kv("update_mode = sometimes\n").unwrap();
+        assert!(config_from_kv(&kv, 8, 2, 0).is_err());
+        let kv = parse_kv("schedule_policy = psychic\n").unwrap();
+        assert!(config_from_kv(&kv, 8, 2, 0).is_err());
     }
 
     #[test]

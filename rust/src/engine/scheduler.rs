@@ -8,7 +8,7 @@
 //! runs as a deterministic simulation that reports the resulting makespan,
 //! which is what the ablation benches compare against static assignment.
 //!
-//! Two entry points:
+//! Three entry points:
 //!
 //! * [`work_stealing`] — independent tasks (the original makespan model,
 //!   still used for synthetic load-balance studies and unit tests);
@@ -18,6 +18,16 @@
 //!   chain and none across chains of the same parameter version. This is
 //!   what [`crate::coordinator::Coordinator`] places on the modeled
 //!   cluster to derive the overlapped makespan of pipelined training.
+//! * [`schedule_chains_opts`] — the same greedy simulation with three
+//!   optional extensions: explicit *home* workers per chain (locality-aware
+//!   placement: a chain's home is the partition its active edges live in,
+//!   see [`locality_placement`]), per-chain steal-preference ranks (steals
+//!   go to the most *affine* worker first rather than the lowest id), and
+//!   an in-flight *width* bound (chain `c` is admitted only once chain
+//!   `c − width` fully executed — the asynchronous trainer's sliding
+//!   window, with no round barriers). With every option at its default the
+//!   schedule is bit-identical to [`schedule_chains`], which is what keeps
+//!   the old placement available as the deterministic golden baseline.
 
 /// A schedulable unit of work.
 #[derive(Clone, Debug, PartialEq)]
@@ -121,29 +131,72 @@ pub fn work_stealing(tasks: &[Task], p: usize) -> Schedule {
 /// makespan is bounded by `max(longest chain, total/p)`-style list
 /// scheduling from below and the serial sum from above.
 pub fn schedule_chains(chains: &[Vec<Task>], p: usize) -> Schedule {
+    schedule_chains_opts(chains, p, &ScheduleOpts::default())
+}
+
+/// Placement options for [`schedule_chains_opts`]. The default value
+/// reproduces [`schedule_chains`] exactly.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleOpts {
+    /// Home worker per chain; `None` is the `chain % p` baseline.
+    pub homes: Option<Vec<usize>>,
+    /// Steal-preference rank per chain per worker (`prefs[c][w]`, lower is
+    /// more affine; the home must rank 0). `None` prefers lower worker ids
+    /// on ties — the baseline tie-break.
+    pub prefs: Option<Vec<Vec<usize>>>,
+    /// In-flight bound: chain `c` becomes admissible only once chain
+    /// `c − width` has fully executed. 0 means unbounded — every chain is
+    /// ready at time 0, the synchronous round model.
+    pub width: usize,
+}
+
+/// [`schedule_chains`] with explicit placement options — see
+/// [`ScheduleOpts`]. Fully deterministic for any option combination:
+/// remaining ties break on steal-preference rank, then the lowest worker
+/// id, then the lowest chain id.
+pub fn schedule_chains_opts(chains: &[Vec<Task>], p: usize, opts: &ScheduleOpts) -> Schedule {
     assert!(p > 0, "need at least one worker");
+    if let Some(h) = &opts.homes {
+        assert_eq!(h.len(), chains.len(), "one home per chain");
+    }
     let total: usize = chains.iter().map(Vec::len).sum();
     let mut clock = vec![0u64; p];
     let mut next = vec![0usize; chains.len()];
     let mut ready_at = vec![0u64; chains.len()];
+    // Completion time of each fully-executed chain (empty chains complete
+    // at 0), gating admission under the width bound.
+    let mut done_at: Vec<Option<u64>> =
+        chains.iter().map(|chain| if chain.is_empty() { Some(0) } else { None }).collect();
     let mut placement = Vec::with_capacity(total);
     let mut steals = 0u64;
     for _ in 0..total {
-        // (start, stolen, worker, chain), minimized lexicographically.
-        let mut best: Option<(u64, bool, usize, usize)> = None;
+        // (start, stolen, pref, worker, chain), minimized lexicographically.
+        let mut best: Option<(u64, bool, usize, usize, usize)> = None;
         for (c, chain) in chains.iter().enumerate() {
             if next[c] >= chain.len() {
                 continue;
             }
-            let home = c % p;
+            // The lowest unfinished chain is always admissible (everything
+            // below it is done), so this scan can never deadlock.
+            let released = if opts.width > 0 && c >= opts.width {
+                match done_at[c - opts.width] {
+                    Some(t) => t,
+                    None => continue,
+                }
+            } else {
+                0
+            };
+            let home = opts.homes.as_ref().map_or(c % p, |h| h[c]);
+            let ready = ready_at[c].max(released);
             for (w, &wclock) in clock.iter().enumerate() {
-                let key = (wclock.max(ready_at[c]), w != home, w, c);
+                let pref = opts.prefs.as_ref().map_or(0, |pr| pr[c][w]);
+                let key = (wclock.max(ready), w != home, pref, w, c);
                 if best.is_none_or(|b| key < b) {
                     best = Some(key);
                 }
             }
         }
-        let (start, stolen, w, c) = best.expect("tasks remain");
+        let (start, stolen, _pref, w, c) = best.expect("tasks remain");
         let task = &chains[c][next[c]];
         next[c] += 1;
         if stolen {
@@ -152,9 +205,35 @@ pub fn schedule_chains(chains: &[Vec<Task>], p: usize) -> Schedule {
         let finish = start.saturating_add(task.cost);
         clock[w] = finish;
         ready_at[c] = finish;
+        if next[c] == chains[c].len() {
+            done_at[c] = Some(finish);
+        }
         placement.push((task.id, w));
     }
     Schedule { finish: clock, placement, steals }
+}
+
+/// Derive locality-aware placement from per-worker load weights (one row
+/// per chain, `weights[c][q]` = the load chain `c`'s plan puts on
+/// partition/worker `q` — active edges plus communication route rows, see
+/// [`crate::tgar::ActivePlan::partition_weights`]). The home is the
+/// dominant partition; the steal-preference ranks order workers by
+/// descending weight (ties on the lower id), so a starved worker picks up
+/// the chain it is most affine to first.
+pub fn locality_placement(weights: &[Vec<u64>], p: usize) -> (Vec<usize>, Vec<Vec<usize>>) {
+    let mut homes = Vec::with_capacity(weights.len());
+    let mut prefs = Vec::with_capacity(weights.len());
+    for w in weights {
+        let mut order: Vec<usize> = (0..p).collect();
+        order.sort_by_key(|&q| (std::cmp::Reverse(w.get(q).copied().unwrap_or(0)), q));
+        let mut rank = vec![0usize; p];
+        for (r, &q) in order.iter().enumerate() {
+            rank[q] = r;
+        }
+        homes.push(order[0]);
+        prefs.push(rank);
+    }
+    (homes, prefs)
 }
 
 #[cfg(test)]
@@ -319,6 +398,113 @@ mod tests {
         // Each chain runs on its home worker: makespan = the longer chain.
         assert_eq!(s.makespan(), 21);
         assert_eq!(s.steals, 0);
+    }
+
+    #[test]
+    fn default_opts_reproduce_baseline_bitwise() {
+        qcheck(
+            "opts-default-is-baseline",
+            |r| {
+                let nchains = 1 + r.below(6);
+                let p = 1 + r.below(6);
+                let chains: Vec<Vec<Task>> = (0..nchains)
+                    .map(|c| {
+                        (0..1 + r.below(5))
+                            .map(|j| Task {
+                                id: (c * 100 + j) as u64,
+                                cost: 1 + r.power_law(500, 2.0) as u64,
+                            })
+                            .collect()
+                    })
+                    .collect();
+                (chains, p)
+            },
+            |(chains, p)| {
+                let base = schedule_chains(chains, *p);
+                let opts = schedule_chains_opts(chains, *p, &ScheduleOpts::default());
+                if base.placement != opts.placement
+                    || base.finish != opts.finish
+                    || base.steals != opts.steals
+                {
+                    return Err("default opts diverged from baseline".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn width_one_serializes_any_worker_count() {
+        // One chain in flight at a time ⇒ strictly serial execution: this
+        // is what keeps the async width-1 clock identical to the
+        // sequential trainer's.
+        let mut chains: Vec<Vec<Task>> = Vec::new();
+        for c in 0u64..4 {
+            chains.push((0..3).map(|j| Task { id: c * 3 + j, cost: 2 + c }).collect());
+        }
+        let serial: u64 = chains.iter().flatten().map(|t| t.cost).sum();
+        for p in [1usize, 2, 4, 7] {
+            let opts = ScheduleOpts { width: 1, ..ScheduleOpts::default() };
+            let s = schedule_chains_opts(&chains, p, &opts);
+            assert_eq!(s.makespan(), serial, "p={p}");
+        }
+    }
+
+    #[test]
+    fn width_bound_admits_sliding_window() {
+        // Four identical 1-task chains, homes on distinct workers: width 2
+        // runs them two-abreast (makespan 2), unbounded runs all four at
+        // once (makespan 1).
+        let chains: Vec<Vec<Task>> = (0u64..4).map(|c| vec![Task { id: c, cost: 1 }]).collect();
+        let unbounded = schedule_chains_opts(&chains, 4, &ScheduleOpts::default());
+        assert_eq!(unbounded.makespan(), 1);
+        let opts = ScheduleOpts { width: 2, ..ScheduleOpts::default() };
+        let s = schedule_chains_opts(&chains, 4, &opts);
+        assert_eq!(s.makespan(), 2);
+    }
+
+    #[test]
+    fn explicit_homes_pin_chains_without_steals() {
+        // One chain whose home is worker 3: every task must run there and
+        // nothing counts as a steal.
+        let chain = vec![Task { id: 0, cost: 4 }, Task { id: 1, cost: 4 }];
+        let opts = ScheduleOpts { homes: Some(vec![3]), ..ScheduleOpts::default() };
+        let s = schedule_chains_opts(std::slice::from_ref(&chain), 4, &opts);
+        assert!(s.placement.iter().all(|&(_, w)| w == 3));
+        assert_eq!(s.steals, 0);
+        assert_eq!(s.finish[3], 8);
+    }
+
+    #[test]
+    fn steals_prefer_affine_workers() {
+        // Two chains share home 0; chain 1 ranks worker 2 as its best
+        // steal target. When worker 0 is busy with chain 0, chain 1's
+        // first task must land on worker 2, not the lower-id worker 1.
+        let chains = vec![
+            vec![Task { id: 0, cost: 10 }, Task { id: 1, cost: 10 }],
+            vec![Task { id: 10, cost: 10 }, Task { id: 11, cost: 10 }],
+        ];
+        let opts = ScheduleOpts {
+            homes: Some(vec![0, 0]),
+            prefs: Some(vec![vec![0, 1, 2], vec![0, 2, 1]]),
+            width: 0,
+        };
+        let s = schedule_chains_opts(&chains, 3, &opts);
+        let worker_of = |id: u64| s.placement.iter().find(|&&(t, _)| t == id).unwrap().1;
+        assert_eq!(worker_of(0), 0, "chain 0 starts on the shared home");
+        assert_eq!(worker_of(10), 2, "chain 1 steals to its most affine worker");
+        assert!(s.steals >= 1);
+    }
+
+    #[test]
+    fn locality_placement_ranks_by_weight() {
+        let weights = vec![vec![3u64, 9, 1, 9], vec![0, 0, 0, 0]];
+        let (homes, prefs) = locality_placement(&weights, 4);
+        // Dominant partition wins; weight ties break on the lower id.
+        assert_eq!(homes, vec![1, 0]);
+        assert_eq!(prefs[0], vec![2, 0, 3, 1]);
+        // All-zero weights degrade to the identity preference order.
+        assert_eq!(prefs[1], vec![0, 1, 2, 3]);
     }
 
     #[test]

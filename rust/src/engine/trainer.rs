@@ -229,7 +229,13 @@ impl<'a> Trainer<'a> {
     /// `cfg.accum_window` steps, and model the overlapped makespan of the
     /// phase tasks placed by the work-stealing scheduler — see
     /// [`crate::coordinator`] for the task graph, staleness semantics and
-    /// clock model. With `pipeline_width = 1` and `accum_window = 1` the
+    /// clock model. `cfg.update_mode` picks the engine: synchronous
+    /// rounds, or the bounded-staleness sliding window with push-time
+    /// rejection and replay
+    /// ([`crate::coordinator::Coordinator::run_async`]);
+    /// `cfg.schedule_policy` picks round-robin or locality-aware chain
+    /// placement. With `pipeline_width = 1` and `accum_window = 1` (and
+    /// either `Synchronous` or `Asynchronous { max_staleness: 0 }`) the
     /// result (loss series, parameters, modeled clock) is bit-identical
     /// to [`Trainer::run`].
     pub fn train_pipelined(&mut self) -> Result<crate::coordinator::PipelineReport> {

@@ -120,9 +120,10 @@ pub fn work_stealing_ablation(_fast: bool) -> String {
             ws.steals.to_string(),
         ]);
     }
+    let headers = ["workers", "static makespan", "stealing makespan", "gain", "steals"];
     format!(
         "## Ablation — work-stealing scheduler (§4.3) on skewed subgraph tasks\n\n{}\n",
-        markdown_table(&["workers", "static makespan", "stealing makespan", "gain", "steals"], &rows)
+        markdown_table(&headers, &rows)
     )
 }
 

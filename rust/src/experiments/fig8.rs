@@ -44,13 +44,9 @@ pub fn run(fast: bool) -> String {
                 super::fmt_s(cur.2 / steps as f64),
             ]);
         }
-        out.push_str(&format!(
-            "### {label}\n\n{}\n",
-            markdown_table(
-                &["workers", "fwd speedup (eff)", "bwd speedup (eff)", "step speedup (eff)", "s/step"],
-                &rows
-            )
-        ));
+        let headers =
+            ["workers", "fwd speedup (eff)", "bwd speedup (eff)", "step speedup (eff)", "s/step"];
+        out.push_str(&format!("### {label}\n\n{}\n", markdown_table(&headers, &rows)));
     }
     out.push_str(
         "Shape expected from the paper: all strategies scale to the largest worker \

@@ -19,7 +19,13 @@ fn reddit_cost() -> CostModelConfig {
     }
 }
 
-fn scaling_table(g: &Graph, layers_list: &[usize], workers: &[usize], batch_frac: f64, steps: usize) -> (String, Vec<Vec<f64>>) {
+fn scaling_table(
+    g: &Graph,
+    layers_list: &[usize],
+    workers: &[usize],
+    batch_frac: f64,
+    steps: usize,
+) -> (String, Vec<Vec<f64>>) {
     let mut rows = Vec::new();
     let mut secs_all = Vec::new();
     for &layers in layers_list {

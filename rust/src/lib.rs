@@ -63,7 +63,9 @@ pub mod experiments;
 
 /// Commonly used types, re-exported for examples and downstream users.
 pub mod prelude {
-    pub use crate::config::{CostModelConfig, ModelConfig, StrategyKind, TrainConfig};
+    pub use crate::config::{
+        CostModelConfig, ModelConfig, SchedulePolicy, StrategyKind, TrainConfig, UpdateMode,
+    };
     pub use crate::coordinator::{Coordinator, PipelineReport};
     pub use crate::engine::trainer::{TrainReport, Trainer};
     pub use crate::graph::{Graph, GraphBuilder};

@@ -217,6 +217,42 @@ impl OverlapStats {
     }
 }
 
+/// Rejection/replay accounting for the asynchronous bounded-staleness
+/// trainer ([`crate::coordinator::Coordinator::run_async`]): every gradient
+/// push is checked against the staleness bound at push time; a rejected
+/// push re-runs its step's forward/backward against fresh parameters (a
+/// *replay*), and the replay's modeled cost is charged to the clock.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AsyncStats {
+    /// Gradient pushes attempted: one per step plus one per replay.
+    pub pushes: u64,
+    /// Pushes rejected for exceeding `max_staleness`.
+    pub rejected: u64,
+    /// Steps re-executed against fresh parameters (one per rejection).
+    pub replays: u64,
+    /// Modeled seconds spent re-running rejected steps — the price the
+    /// sync-vs-async trade-off pays for a too-tight staleness bound.
+    pub replay_secs: f64,
+}
+
+impl AsyncStats {
+    /// Fraction of push attempts that were rejected (0 when none pushed).
+    pub fn rejection_rate(&self) -> f64 {
+        if self.pushes == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.pushes as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &AsyncStats) {
+        self.pushes += other.pushes;
+        self.rejected += other.rejected;
+        self.replays += other.replays;
+        self.replay_secs += other.replay_secs;
+    }
+}
+
 /// Render rows as a GitHub-flavored markdown table (the experiment drivers
 /// print the paper's tables in this format).
 pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -311,6 +347,21 @@ mod tests {
         a.merge(&single);
         assert!((a.serial_secs - 5.5).abs() < 1e-12);
         assert_eq!(a.tasks, 9);
+    }
+
+    #[test]
+    fn async_stats_rates_and_merge() {
+        let mut a = AsyncStats::default();
+        assert_eq!(a.rejection_rate(), 0.0);
+        a.pushes = 10;
+        a.rejected = 2;
+        a.replays = 2;
+        a.replay_secs = 0.5;
+        assert!((a.rejection_rate() - 0.2).abs() < 1e-12);
+        let b = AsyncStats { pushes: 2, rejected: 2, replays: 2, replay_secs: 0.25 };
+        a.merge(&b);
+        assert_eq!((a.pushes, a.rejected, a.replays), (12, 4, 4));
+        assert!((a.replay_secs - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -130,6 +130,32 @@ impl ParameterManager {
         self.push_grads(grads);
     }
 
+    /// Push gradients computed against `fetched_version`, enforcing the
+    /// asynchronous staleness bound *at push time*: if that version lags
+    /// the latest by more than `max_staleness` updates, the push is
+    /// rejected — nothing is accumulated, no staleness is recorded — and
+    /// the caller must recompute against fresher parameters (the
+    /// coordinator's replay path). Synchronous mode never rejects. Returns
+    /// the lag the applied push incurred.
+    pub fn try_push_grads_from(
+        &mut self,
+        grads: &ModelParams,
+        fetched_version: u64,
+    ) -> Result<u64, ParamError> {
+        let lag = self.latest.saturating_sub(fetched_version);
+        if let UpdateMode::Asynchronous { max_staleness } = self.update_mode {
+            if lag as usize > max_staleness {
+                return Err(ParamError::TooStale {
+                    requested: fetched_version,
+                    latest: self.latest,
+                    max: max_staleness,
+                });
+            }
+        }
+        self.push_grads_from(grads, fetched_version);
+        Ok(lag)
+    }
+
     /// `(max, mean)` staleness over every [`ParameterManager::push_grads_from`]
     /// so far. `(0, 0.0)` for purely sequential training.
     pub fn staleness(&self) -> (u64, f64) {
@@ -303,6 +329,42 @@ mod tests {
         let (max, mean) = pm.staleness();
         assert_eq!(max, 2);
         assert!((mean - 1.0).abs() < 1e-12, "mean {mean}");
+    }
+
+    #[test]
+    fn try_push_rejects_stale_without_accumulating() {
+        let cfg = ModelConfig::gcn(4, 4, 2, 1);
+        let mut pm = ParameterManager::new(
+            ModelParams::init(&cfg, 1),
+            OptimizerKind::Sgd,
+            0.1,
+            0.0,
+            UpdateMode::Asynchronous { max_staleness: 1 },
+        );
+        let g = pm.fetch_latest().1.zeros_like();
+        for _ in 0..3 {
+            pm.push_grads(&g);
+            pm.update(1);
+        }
+        // latest = 3: version 2 lags by 1 (within bound), version 0 by 3.
+        assert_eq!(pm.try_push_grads_from(&g, 2).unwrap(), 1);
+        assert_eq!(pm.pending_pushes(), 1);
+        let err = pm.try_push_grads_from(&g, 0).unwrap_err();
+        assert!(matches!(err, ParamError::TooStale { requested: 0, latest: 3, max: 1 }));
+        // The rejected push accumulated nothing and recorded no staleness.
+        assert_eq!(pm.pending_pushes(), 1);
+        assert_eq!(pm.staleness().0, 1);
+    }
+
+    #[test]
+    fn try_push_never_rejects_in_synchronous_mode() {
+        let mut pm = mk();
+        let g = pm.fetch_latest().1.zeros_like();
+        for _ in 0..5 {
+            pm.push_grads(&g);
+            pm.update(1);
+        }
+        assert_eq!(pm.try_push_grads_from(&g, 0).unwrap(), 5);
     }
 
     #[test]

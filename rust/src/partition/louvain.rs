@@ -71,9 +71,10 @@ fn one_level(adj: &[Vec<(u32, f32)>]) -> Vec<u32> {
             let base = weight_to.get(&cur).copied().unwrap_or(0.0);
             let mut best = (cur, 0.0f32);
             for (&c, &w_in) in weight_to.iter() {
-                let gain = (w_in - base) - deg[v] * (comm_deg[c as usize] - comm_deg[cur as usize]) / total;
-                if gain > best.1 + 1e-9 || (c < best.0 && (gain - best.1).abs() <= 1e-9 && gain > 0.0)
-                {
+                let delta_deg = comm_deg[c as usize] - comm_deg[cur as usize];
+                let gain = (w_in - base) - deg[v] * delta_deg / total;
+                let tie = c < best.0 && (gain - best.1).abs() <= 1e-9 && gain > 0.0;
+                if gain > best.1 + 1e-9 || tie {
                     best = (c, gain);
                 }
             }

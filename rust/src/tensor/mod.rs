@@ -95,7 +95,11 @@ impl Tensor {
 
     /// Matrix product `self @ b` — blocked i-k-j loop (row-major friendly).
     pub fn matmul(&self, b: &Tensor) -> Tensor {
-        assert_eq!(self.cols, b.rows, "matmul inner dim: {}x{} @ {}x{}", self.rows, self.cols, b.rows, b.cols);
+        assert_eq!(
+            self.cols, b.rows,
+            "matmul inner dim: {}x{} @ {}x{}",
+            self.rows, self.cols, b.rows, b.cols
+        );
         let (m, k, n) = (self.rows, self.cols, b.cols);
         let mut out = Tensor::zeros(m, n);
         ops::gemm_acc(&self.data, &b.data, &mut out.data, m, k, n);

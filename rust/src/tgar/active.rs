@@ -302,7 +302,10 @@ fn derive_layer_partition(
     };
     let mut touched_src: Vec<u32> = Vec::new();
     let mut touched_dst: Vec<u32> = Vec::new();
-    for i in 0..ps.dsts.len() {
+    // Index-based: the body stamps `ps.src_mark`/`ps.dst_mark` while
+    // reading `ps.dsts`, so iterating a borrow of the list would not
+    // borrow-check. `dsts` holds exactly the `plen` present entries.
+    for i in 0..plen {
         let dst = ps.dsts[i] as usize;
         let dgid = pv.nodes[dst];
         let lo = pv.csc_offsets[dst];
@@ -423,6 +426,7 @@ fn run_layer(
 /// per-level sorted active lists from the nested `top_level` marks, the
 /// per-partition master lists, targets routing and the counters. Shared
 /// by the sparse builder and the cluster-batch restriction.
+#[allow(clippy::too_many_arguments)]
 fn finish_plan(
     dg: &DistGraph,
     targets: Vec<u32>,
@@ -589,6 +593,39 @@ impl ActivePlan {
     /// changed (plan surgery, e.g. the cluster-batch restriction).
     pub fn rebuild_comm(&mut self, dg: &DistGraph) {
         self.comm = CommPlan::build(dg, &self.sync_in, &self.partial_out, self.needs_dst);
+    }
+
+    /// Per-partition load this plan puts on the modeled cluster: active
+    /// edges (the Gather/backward compute) plus master↔mirror route rows
+    /// (the sync/combine communication) summed over every layer. This is
+    /// what the locality-aware scheduler
+    /// ([`crate::engine::scheduler::locality_placement`]) uses to pick a
+    /// step's home worker and steal preference.
+    pub fn partition_weights(&self) -> Vec<u64> {
+        let p = self.targets_by_part.len();
+        let mut w = vec![0u64; p];
+        for l in 1..=self.k {
+            for (q, wq) in w.iter_mut().enumerate() {
+                *wq += self.edges_active[l][q].len() as u64
+                    + self.comm.sync[l][q].len() as u64
+                    + self.comm.partial[l][q].len() as u64;
+            }
+        }
+        w
+    }
+
+    /// The partition carrying the most of this plan's load (ties break on
+    /// the lower id) — the locality-aware home worker for the step's phase
+    /// chain.
+    pub fn dominant_partition(&self) -> usize {
+        let w = self.partition_weights();
+        let mut best = 0usize;
+        for (q, &wq) in w.iter().enumerate() {
+            if wq > w[best] {
+                best = q;
+            }
+        }
+        best
     }
 
     /// Restrict this plan to an allowed node set (the cluster-batch
@@ -943,8 +980,10 @@ impl ActivePlan {
         }
 
         let active_count = active_nodes.iter().map(Vec::len).collect();
-        let active_edge_count =
-            edges_active.iter().map(|per_p: &Vec<Vec<u32>>| per_p.iter().map(Vec::len).sum()).collect();
+        let active_edge_count = edges_active
+            .iter()
+            .map(|per_p: &Vec<Vec<u32>>| per_p.iter().map(Vec::len).sum())
+            .collect();
 
         let mut plan = ActivePlan {
             k,
@@ -987,6 +1026,33 @@ mod tests {
         assert!(plan.active_count[0] >= plan.active_count[1]);
         assert!(plan.active_count[1] >= plan.active_count[2]);
         assert_eq!(plan.active_count[2], 10);
+    }
+
+    #[test]
+    fn partition_weights_cover_edges_and_routes() {
+        let (g, dg) = setup();
+        let mut rng = Rng::new(4);
+        let targets: Vec<u32> = g.labeled_nodes(&g.train_mask)[..10].to_vec();
+        let plan = ActivePlan::build(&g, &dg, targets, 2, SamplingConfig::None, false, &mut rng);
+        let w = plan.partition_weights();
+        assert_eq!(w.len(), dg.p());
+        let edges: u64 = (1..=plan.k)
+            .flat_map(|l| plan.edges_active[l].iter())
+            .map(|e| e.len() as u64)
+            .sum();
+        let routes: u64 = (1..=plan.k)
+            .map(|l| {
+                (0..dg.p())
+                    .map(|q| (plan.comm.sync[l][q].len() + plan.comm.partial[l][q].len()) as u64)
+                    .sum::<u64>()
+            })
+            .sum();
+        assert_eq!(w.iter().sum::<u64>(), edges + routes);
+        // The dominant partition is the argmax (ties on the lower id).
+        let dom = plan.dominant_partition();
+        assert!(w.iter().all(|&x| x <= w[dom]));
+        assert!(w.iter().take(dom).all(|&x| x < w[dom]));
+        assert!(w[dom] > 0, "a 2-hop plan on 4 partitions must touch edges");
     }
 
     #[test]

@@ -387,9 +387,12 @@ impl<'a> Executor<'a> {
                 let hk = self.frames[q].get("h", k).unwrap();
                 let x = hk.gather_rows(idx);
                 let (loss_q, gx, gw, gb) = sim.exec(q, || {
-                    let logits = backend.proj(&x, &params.decoder.w, &params.decoder.b, Activation::None);
-                    let labels: Vec<u32> =
-                        idx.iter().map(|&lid| self.g.labels[pv.nodes[lid as usize] as usize]).collect();
+                    let logits =
+                        backend.proj(&x, &params.decoder.w, &params.decoder.b, Activation::None);
+                    let labels: Vec<u32> = idx
+                        .iter()
+                        .map(|&lid| self.g.labels[pv.nodes[lid as usize] as usize])
+                        .collect();
                     let mask = vec![true; idx.len()];
                     let (mean_loss, mut glogits) = if self.model.binary {
                         ops::bce_logits_weighted(&logits, &labels, &mask, self.model.pos_weight)
@@ -606,8 +609,8 @@ impl<'a> Executor<'a> {
                     .map(|(q, ((gn, h_prev, mut gh_prev), mut be))| {
                         let idx = &plan.masters_active[k - 1][q];
                         (q, move || {
-                            let gwb =
-                                bwd_transform_part(idx, &h_prev, &gn, &mut gh_prev, lp, be.as_mut());
+                            let be = be.as_mut();
+                            let gwb = bwd_transform_part(idx, &h_prev, &gn, &mut gh_prev, lp, be);
                             (gn, h_prev, gh_prev, gwb)
                         })
                     })
@@ -652,7 +655,9 @@ impl<'a> Executor<'a> {
             self.profile_scope_owned(&format!("bwd:L{k}:NN-T'"), |me| {
                 me.stage_bwd_apply(k, plan, sim)
             });
-            self.profile_scope_owned(&format!("bwd:L{k}:sync"), |me| me.stage_bwd_sync(k, plan, sim));
+            self.profile_scope_owned(&format!("bwd:L{k}:sync"), |me| {
+                me.stage_bwd_sync(k, plan, sim)
+            });
             self.profile_scope_owned(&format!("bwd:L{k}:NN-G'"), |me| {
                 me.stage_bwd_gather(k, params, plan, sim, grads)
             });

@@ -1,0 +1,227 @@
+//! Asynchronous bounded-staleness training suite (ISSUE 4).
+//!
+//! Pins the async trainer's contract:
+//!
+//! * `Asynchronous { max_staleness: 0 }` at `pipeline_width = 1` is
+//!   **bit-identical** to `Synchronous` (loss series, parameter-L2
+//!   fingerprint, modeled clock) for all three training strategies;
+//! * rejection/replay counts are deterministic for a fixed seed, and no
+//!   *applied* push ever exceeds the staleness bound (property test over
+//!   random width/bound/step combinations);
+//! * with `max_staleness ≥ width − 1` nothing is replayed and the sliding
+//!   window strictly beats the synchronous round trainer's modeled
+//!   makespan at matched step count;
+//! * a too-tight bound rejects, replays, and charges the replay cost.
+
+use graphtheta::config::{ModelConfig, SchedulePolicy, StrategyKind, TrainConfig, UpdateMode};
+use graphtheta::engine::trainer::Trainer;
+use graphtheta::graph::{gen, Graph};
+use graphtheta::util::qcheck::qcheck_cases;
+
+fn base_cfg(g: &Graph, strategy: StrategyKind, epochs: usize) -> TrainConfig {
+    TrainConfig::builder()
+        .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+        .strategy(strategy)
+        .epochs(epochs)
+        .eval_every(5)
+        .lr(0.05)
+        .seed(7)
+        .build()
+}
+
+fn strategies() -> Vec<(&'static str, StrategyKind)> {
+    vec![
+        ("global-batch", StrategyKind::GlobalBatch),
+        ("mini-batch", StrategyKind::mini(0.3)),
+        ("cluster-batch", StrategyKind::cluster(0.3, 1)),
+    ]
+}
+
+#[test]
+fn async_zero_staleness_width_one_matches_synchronous_bitwise() {
+    let g = gen::citation_like("cora", 7);
+    for (name, strategy) in strategies() {
+        let sync = {
+            let mut t = Trainer::new(&g, base_cfg(&g, strategy.clone(), 8), 4).unwrap();
+            t.train_pipelined().unwrap()
+        };
+        let asyn = {
+            let mut cfg = base_cfg(&g, strategy.clone(), 8);
+            cfg.update_mode = UpdateMode::Asynchronous { max_staleness: 0 };
+            let mut t = Trainer::new(&g, cfg, 4).unwrap();
+            t.train_pipelined().unwrap()
+        };
+        assert_eq!(sync.train.losses, asyn.train.losses, "{name}: loss series diverged");
+        assert_eq!(
+            sync.train.latest_param_l2.to_bits(),
+            asyn.train.latest_param_l2.to_bits(),
+            "{name}: parameter fingerprint diverged"
+        );
+        assert_eq!(
+            sync.train.sim_total.to_bits(),
+            asyn.train.sim_total.to_bits(),
+            "{name}: modeled clock diverged"
+        );
+        assert_eq!(
+            sync.train.test_accuracy.to_bits(),
+            asyn.train.test_accuracy.to_bits(),
+            "{name}: test accuracy diverged"
+        );
+        let stats = asyn.async_stats.expect("async run reports stats");
+        assert_eq!(stats.rejected, 0, "{name}: width 1 at bound 0 must never reject");
+        assert_eq!(stats.replays, 0);
+        assert_eq!(asyn.max_staleness, 0);
+        assert_eq!(asyn.overlap.gain_secs(), 0.0, "{name}: width 1 must not overlap");
+    }
+}
+
+#[test]
+fn async_rejection_replay_deterministic_and_bounded() {
+    let g = gen::citation_like("citeseer", 6);
+    qcheck_cases(
+        "async-replay-deterministic-bounded",
+        6,
+        |r| {
+            let width = 1 + r.below(5);
+            let max_staleness = r.below(4);
+            let steps = 4 + r.below(8);
+            let seed = 1 + r.below(1000) as u64;
+            (width, max_staleness, steps, seed)
+        },
+        |&(width, max_staleness, steps, seed)| {
+            let run = || {
+                let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), steps);
+                cfg.seed = seed;
+                cfg.pipeline_width = width;
+                cfg.update_mode = UpdateMode::Asynchronous { max_staleness };
+                let mut t = Trainer::new(&g, cfg, 4).map_err(|e| e.to_string())?;
+                t.train_pipelined().map_err(|e| e.to_string())
+            };
+            let a = run()?;
+            let b = run()?;
+            let sa = a.async_stats.expect("async stats");
+            let sb = b.async_stats.expect("async stats");
+            if sa != sb {
+                return Err(format!("stats not deterministic: {sa:?} vs {sb:?}"));
+            }
+            if a.train.losses != b.train.losses {
+                return Err("loss series not deterministic".into());
+            }
+            if a.train.sim_total.to_bits() != b.train.sim_total.to_bits() {
+                return Err("modeled clock not deterministic".into());
+            }
+            // No applied push may exceed the bound.
+            if a.max_staleness > max_staleness as u64 {
+                return Err(format!(
+                    "applied staleness {} beyond bound {max_staleness}",
+                    a.max_staleness
+                ));
+            }
+            if sa.replays != sa.rejected {
+                return Err(format!("every rejection must replay exactly once: {sa:?}"));
+            }
+            // One push per step plus one per replay.
+            if sa.pushes != steps as u64 + sa.replays {
+                return Err(format!("push accounting off: {sa:?}, steps {steps}"));
+            }
+            // Lag above width − 1 is impossible, so a bound that wide
+            // never rejects.
+            if max_staleness + 1 >= width && sa.rejected != 0 {
+                return Err(format!(
+                    "bound {max_staleness} ≥ width {width} − 1 must not reject: {sa:?}"
+                ));
+            }
+            if a.train.losses.len() != steps {
+                return Err("step count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn async_window_strictly_beats_synchronous_makespan() {
+    // Matched step count, matched width, staleness bound wide enough that
+    // nothing replays: the barrier-free sliding window must strictly beat
+    // the synchronous round trainer's modeled makespan, while both run
+    // the same per-step serial work.
+    let g = gen::citation_like("cora", 7);
+    let mk = |mode: UpdateMode| {
+        let mut cfg = base_cfg(&g, StrategyKind::mini(0.5), 24);
+        cfg.eval_every = usize::MAX;
+        cfg.pipeline_width = 2;
+        cfg.update_mode = mode;
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.train_pipelined().unwrap()
+    };
+    let sync = mk(UpdateMode::Synchronous);
+    let asyn = mk(UpdateMode::Asynchronous { max_staleness: 1 });
+    assert_eq!(asyn.async_stats.unwrap().replays, 0, "bound width − 1 must not replay");
+    // Same plans ⇒ identical modeled per-step costs ⇒ identical serial
+    // work; only the schedule differs.
+    assert!(
+        (sync.serial_clock() - asyn.serial_clock()).abs() <= 1e-9 * sync.serial_clock().max(1.0),
+        "serial clocks diverged: {} vs {}",
+        sync.serial_clock(),
+        asyn.serial_clock()
+    );
+    assert!(
+        asyn.train.sim_total < sync.train.sim_total,
+        "async makespan {} not below synchronous {}",
+        asyn.train.sim_total,
+        sync.train.sim_total
+    );
+    assert!(asyn.max_staleness <= 1);
+}
+
+#[test]
+fn async_replay_cost_is_charged() {
+    // Width 4 at bound 0: every steady-state push replays, the replay
+    // seconds are charged, and the per-step serial work roughly doubles
+    // relative to the no-replay run at the same step count.
+    let g = gen::citation_like("citeseer", 6);
+    let mk = |max_staleness: usize| {
+        let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), 12);
+        cfg.eval_every = usize::MAX;
+        cfg.pipeline_width = 4;
+        cfg.update_mode = UpdateMode::Asynchronous { max_staleness };
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.train_pipelined().unwrap()
+    };
+    let tight = mk(0);
+    let wide = mk(3);
+    let st = tight.async_stats.unwrap();
+    assert_eq!(st.rejected, 11, "all but the first push lag at bound 0");
+    assert_eq!(st.replays, 11);
+    assert!(st.replay_secs > 0.0);
+    assert!(st.rejection_rate() > 0.4);
+    assert_eq!(wide.async_stats.unwrap().replays, 0);
+    assert!(
+        tight.overlap.serial_secs > 1.5 * wide.overlap.serial_secs,
+        "replays must charge serial work: {} vs {}",
+        tight.overlap.serial_secs,
+        wide.overlap.serial_secs
+    );
+    // The bound is honored even under heavy replay.
+    assert_eq!(tight.max_staleness, 0);
+}
+
+#[test]
+fn async_locality_policy_keeps_numerics() {
+    let g = gen::citation_like("citeseer", 6);
+    let mk = |policy: SchedulePolicy| {
+        let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), 10);
+        cfg.pipeline_width = 3;
+        cfg.update_mode = UpdateMode::Asynchronous { max_staleness: 2 };
+        cfg.schedule_policy = policy;
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.train_pipelined().unwrap()
+    };
+    let rr = mk(SchedulePolicy::RoundRobin);
+    let loc = mk(SchedulePolicy::LocalityAware);
+    assert_eq!(rr.train.losses, loc.train.losses);
+    assert_eq!(rr.train.latest_param_l2.to_bits(), loc.train.latest_param_l2.to_bits());
+    assert_eq!(rr.async_stats.unwrap(), loc.async_stats.unwrap());
+    assert_eq!(rr.overlap.serial_secs.to_bits(), loc.overlap.serial_secs.to_bits());
+    assert_eq!(loc.policy, SchedulePolicy::LocalityAware);
+}

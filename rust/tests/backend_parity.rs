@@ -31,7 +31,8 @@ fn pjrt_proj_matches_native_exactly_padded() {
     let mut native = NativeBackend;
     let mut rng = Rng::new(41);
 
-    for (rows, d_in, d_out) in [(100usize, 128usize, 32usize), (128, 32, 32), (7, 32, 7), (513, 128, 32)] {
+    let shapes = [(100usize, 128usize, 32usize), (128, 32, 32), (7, 32, 7), (513, 128, 32)];
+    for (rows, d_in, d_out) in shapes {
         let x = Tensor::randn(rows, d_in, 1.0, &mut rng);
         let w = Tensor::randn(d_in, d_out, 0.5, &mut rng);
         let b: Vec<f32> = (0..d_out).map(|_| rng.normal() * 0.1).collect();

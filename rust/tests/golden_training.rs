@@ -11,7 +11,7 @@
 //!   mini-batch workload while keeping final test accuracy within 1%
 //!   absolute of width 1 (the paper's hybrid-parallel claim, §4.3).
 
-use graphtheta::config::{ModelConfig, StrategyKind, TrainConfig};
+use graphtheta::config::{ModelConfig, SchedulePolicy, StrategyKind, TrainConfig};
 use graphtheta::engine::trainer::{TrainReport, Trainer};
 use graphtheta::graph::{gen, Graph};
 
@@ -142,6 +142,45 @@ fn pipelined_width2_strictly_faster_within_one_percent_accuracy() {
     let (a1, a2) = (w1.train.test_accuracy, w2.train.test_accuracy);
     assert!(a1 > 0.45, "width-1 mini-batch failed to learn: {a1}");
     assert!((a1 - a2).abs() <= 0.01 + 1e-9, "accuracy drifted: width1 {a1} vs width2 {a2}");
+}
+
+#[test]
+fn both_schedule_policies_are_golden() {
+    // The SchedulePolicy knob moves chain placement only. Pin both: each
+    // policy is bit-stable across runs, the numerics (losses, parameters)
+    // agree between policies, and the serial work is policy-independent —
+    // only the overlapped makespan may differ.
+    let g = gen::citation_like("cora", 7);
+    let mk = |policy: SchedulePolicy| {
+        let cfg = TrainConfig::builder()
+            .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+            .strategy(StrategyKind::mini(0.5))
+            .epochs(12)
+            .eval_every(5)
+            .lr(0.03)
+            .seed(7)
+            .pipeline_width(4)
+            .schedule_policy(policy)
+            .build();
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.train_pipelined().unwrap()
+    };
+    let rr_a = mk(SchedulePolicy::RoundRobin);
+    let rr_b = mk(SchedulePolicy::RoundRobin);
+    let loc_a = mk(SchedulePolicy::LocalityAware);
+    let loc_b = mk(SchedulePolicy::LocalityAware);
+    assert_reports_bitwise_equal(&rr_a.train, &rr_b.train, "round-robin");
+    assert_reports_bitwise_equal(&loc_a.train, &loc_b.train, "locality");
+    assert_eq!(rr_a.overlap.steals, rr_b.overlap.steals);
+    assert_eq!(loc_a.overlap.steals, loc_b.overlap.steals);
+    // Numerics agree across policies; serial work is identical.
+    assert_eq!(rr_a.train.losses, loc_a.train.losses, "placement must not touch numerics");
+    assert_eq!(rr_a.train.latest_param_l2.to_bits(), loc_a.train.latest_param_l2.to_bits());
+    assert_eq!(
+        rr_a.overlap.serial_secs.to_bits(),
+        loc_a.overlap.serial_secs.to_bits(),
+        "serial work is policy-independent"
+    );
 }
 
 #[test]

@@ -44,6 +44,7 @@ fn corpus() -> Vec<(Graph, Vec<DistGraph>)> {
     ]
 }
 
+#[allow(clippy::too_many_arguments)]
 fn check_case(
     g: &Graph,
     dg: &DistGraph,
