@@ -19,6 +19,8 @@ pub enum Command {
     Infer,
     /// Persist a checkpoint.
     Checkpoint { step: u64 },
+    /// Roll back to the checkpoint at `step` (failure recovery).
+    Restore { step: u64 },
     Shutdown,
 }
 
@@ -40,6 +42,10 @@ pub struct Master {
     pub checkpoints: Vec<u64>,
     /// Threshold of missed heartbeats before a worker is declared dead.
     pub max_misses: u32,
+    /// Heartbeats/misses addressed to ranks outside `0..p` — exactly what
+    /// a fault-injection harness produces. Ignored, but counted so tests
+    /// can assert the protocol noticed instead of panicking.
+    pub unknown_ranks: u64,
 }
 
 impl Master {
@@ -51,6 +57,7 @@ impl Master {
             heartbeat_misses: vec![0; p],
             checkpoints: Vec::new(),
             max_misses: 3,
+            unknown_ranks: 0,
         }
     }
 
@@ -70,16 +77,43 @@ impl Master {
         addressed
     }
 
-    /// A worker heartbeat arrived.
+    /// Append `cmd` to every live worker's command log **without**
+    /// touching the simulated network. Checkpoint directives use this: the
+    /// 64-byte control envelope is negligible next to training traffic,
+    /// and keeping it off the ledgers preserves the bit-identity of
+    /// checkpoint-enabled no-failure runs with the golden baselines.
+    pub fn log_broadcast(&mut self, cmd: Command) -> Vec<usize> {
+        let mut addressed = Vec::new();
+        for w in 0..self.p {
+            if self.health[w] == Health::Dead {
+                continue;
+            }
+            self.log.push((w, cmd.clone()));
+            addressed.push(w);
+        }
+        addressed
+    }
+
+    /// A worker heartbeat arrived. Heartbeats from ranks outside the
+    /// cluster are counted and ignored.
     pub fn heartbeat(&mut self, w: usize) {
+        if w >= self.p {
+            self.unknown_ranks += 1;
+            return;
+        }
         self.heartbeat_misses[w] = 0;
         if self.health[w] != Health::Dead {
             self.health[w] = Health::Alive;
         }
     }
 
-    /// A heartbeat interval elapsed without word from `w`.
+    /// A heartbeat interval elapsed without word from `w`. Misses for
+    /// ranks outside the cluster are counted and ignored.
     pub fn miss(&mut self, w: usize) {
+        if w >= self.p {
+            self.unknown_ranks += 1;
+            return;
+        }
         if self.health[w] == Health::Dead {
             return;
         }
@@ -91,8 +125,10 @@ impl Master {
         };
     }
 
+    /// Health of `w`; ranks outside the cluster read as [`Health::Dead`]
+    /// (nothing outside the cluster may be scheduled on).
     pub fn health_of(&self, w: usize) -> Health {
-        self.health[w]
+        self.health.get(w).copied().unwrap_or(Health::Dead)
     }
 
     pub fn live_workers(&self) -> usize {
@@ -152,6 +188,37 @@ mod tests {
         assert_eq!(m.restore_point(25), Some(10));
         assert_eq!(m.restore_point(30), Some(30));
         assert_eq!(m.restore_point(5), None);
+    }
+
+    #[test]
+    fn stray_ranks_are_counted_not_fatal() {
+        // A fault-injection schedule can name ranks the cluster never had;
+        // the master must shrug, not panic (the old unchecked indexing
+        // was a latent out-of-bounds).
+        let mut m = Master::new(2);
+        m.heartbeat(7);
+        m.miss(7);
+        m.miss(usize::MAX);
+        assert_eq!(m.unknown_ranks, 3);
+        assert_eq!(m.live_workers(), 2, "stray ranks must not affect real workers");
+        assert_eq!(m.health_of(7), Health::Dead, "outside ranks read as dead");
+        assert_eq!(m.health_of(0), Health::Alive);
+    }
+
+    #[test]
+    fn log_broadcast_skips_sim_and_dead_workers() {
+        let mut sim = ClusterSim::new(3, CostModelConfig::default());
+        let mut m = Master::new(3);
+        for _ in 0..3 {
+            m.miss(1);
+        }
+        let addressed = m.log_broadcast(Command::Checkpoint { step: 4 });
+        assert_eq!(addressed, vec![0, 2]);
+        assert_eq!(m.log.len(), 2);
+        assert_eq!(sim.total_msgs, 0, "checkpoint directives charge no modeled traffic");
+        // The charged broadcast still works alongside it.
+        m.broadcast(Command::Restore { step: 4 }, &mut sim);
+        assert_eq!(sim.total_msgs, 2);
     }
 
     #[test]

@@ -51,6 +51,12 @@ pub struct ClusterSim {
     pub cfg: CostModelConfig,
     pub p: usize,
     acc: Vec<WorkerAcc>,
+    /// Partition → physical worker. Identity until a failure re-homes a
+    /// dead worker's partition onto a survivor ([`ClusterSim::reassign`]):
+    /// the survivor then carries both partitions' compute and traffic, so
+    /// post-failure supersteps are modeled slower — the degraded-cluster
+    /// cost of running on fewer machines.
+    owner: Vec<usize>,
     /// Modeled wall-clock, seconds.
     pub clock: f64,
     pub supersteps: u64,
@@ -68,6 +74,7 @@ impl ClusterSim {
             cfg,
             p,
             acc: vec![WorkerAcc::default(); p],
+            owner: (0..p).collect(),
             clock: 0.0,
             supersteps: 0,
             total_flops: 0,
@@ -83,10 +90,30 @@ impl ClusterSim {
         self.exec_threads = threads.max(1);
     }
 
+    /// Physical worker currently executing partition `rank` (identity
+    /// until failure re-homing; ranks ≥ `p` denote the master and map to
+    /// themselves).
+    pub fn owner_of(&self, rank: usize) -> usize {
+        if rank < self.p {
+            self.owner[rank]
+        } else {
+            rank
+        }
+    }
+
+    /// Re-home partition `part`'s execution onto physical worker `to`
+    /// (failure recovery). All of `part`'s subsequent compute and traffic
+    /// is charged to `to`; messages between co-owned partitions become
+    /// local and free.
+    pub fn reassign(&mut self, part: usize, to: usize) {
+        assert!(part < self.p && to < self.p, "reassign within the cluster");
+        self.owner[part] = to;
+    }
+
     /// Execute `f` as logical worker `w`, crediting its FLOPs.
     pub fn exec<R>(&mut self, w: usize, f: impl FnOnce() -> R) -> R {
         let (r, led): (R, Ledger) = measured(f);
-        self.acc[w].flops += led.flops;
+        self.acc[self.owner[w]].flops += led.flops;
         self.total_flops += led.flops;
         r
     }
@@ -139,7 +166,7 @@ impl ClusterSim {
             .into_iter()
             .map(|slot| {
                 let (w, r, led) = slot.expect("worker task panicked");
-                self.acc[w].flops += led.flops;
+                self.acc[self.owner[w]].flops += led.flops;
                 self.total_flops += led.flops;
                 r
             })
@@ -148,8 +175,11 @@ impl ClusterSim {
 
     /// Record a `from → to` message of `bytes` payload. A `from` rank of
     /// `p` (or beyond) denotes the master/control plane: its traffic is
-    /// counted in the totals but does not slow any worker.
+    /// counted in the totals but does not slow any worker. Partitions are
+    /// resolved to their physical owner first, so messages between
+    /// co-homed partitions (after failure re-homing) are local and free.
     pub fn send(&mut self, from: usize, to: usize, bytes: u64) {
+        let (from, to) = (self.owner_of(from), self.owner_of(to));
         if from == to {
             return; // local move, free
         }
@@ -206,7 +236,8 @@ impl ClusterSim {
     }
 
     /// Reset the clock & totals (e.g. between measured phases) while
-    /// keeping the configuration.
+    /// keeping the configuration and the partition→owner mapping (the
+    /// cluster topology survives a measurement reset).
     pub fn reset(&mut self) {
         self.acc.iter_mut().for_each(|a| *a = WorkerAcc::default());
         self.clock = 0.0;
@@ -339,6 +370,38 @@ mod tests {
         assert!(sim.exec_batch(empty).is_empty());
         let one: Vec<(usize, _)> = vec![(1, || 7u32)];
         assert_eq!(sim.exec_batch(one), vec![7]);
+    }
+
+    #[test]
+    fn reassigned_partition_piles_work_on_the_survivor() {
+        // Two partitions with equal work on separate workers take one
+        // unit; re-homed onto one survivor they take two.
+        let run = |rehome: bool| {
+            let mut sim = ClusterSim::new(2, cfg());
+            if rehome {
+                sim.reassign(1, 0);
+            }
+            sim.exec(0, || add_flops(1_000_000));
+            sim.exec(1, || add_flops(1_000_000));
+            sim.superstep()
+        };
+        let healthy = run(false);
+        let degraded = run(true);
+        let want = 2_000_000.0 / 1e9 + 1e-3;
+        assert!((degraded - want).abs() < 1e-9, "degraded {degraded}");
+        assert!(degraded > healthy);
+    }
+
+    #[test]
+    fn sends_between_co_homed_partitions_are_free() {
+        let mut sim = ClusterSim::new(3, cfg());
+        sim.reassign(2, 0);
+        sim.send(0, 2, 1 << 20); // both live on physical worker 0 now
+        sim.send(2, 1, 100); // still remote, charged to the owner
+        assert_eq!(sim.total_msgs, 1);
+        assert_eq!(sim.total_bytes, 100);
+        assert_eq!(sim.owner_of(2), 0);
+        assert_eq!(sim.owner_of(7), 7, "master ranks map to themselves");
     }
 
     #[test]

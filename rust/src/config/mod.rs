@@ -182,6 +182,78 @@ impl SchedulePolicy {
     }
 }
 
+/// Fault-tolerance plan (paper Figure 2: the master "monitors health,
+/// manages checkpoints and directs the learning procedure").
+///
+/// Steps are counted in **applied optimizer updates** (parameter versions),
+/// which is the unit all three trainers share: the sequential and
+/// asynchronous trainers publish one update per step, the synchronous
+/// pipelined trainer one per accumulation window.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Checkpoint the parameter-manager state every this many applied
+    /// updates (0 disables periodic checkpoints). The initial state is
+    /// always an implicit checkpoint while fault handling is active, so a
+    /// failure schedule without periodic checkpoints restores to step 0.
+    pub checkpoint_every: usize,
+    /// Deterministic failure injections: `(applied-update step, worker
+    /// rank)`. When training reaches the named update count the worker is
+    /// declared dead, training restores from the newest checkpoint at or
+    /// before that step, and the lost updates are replayed on the
+    /// survivors. Ranks outside the cluster are counted and ignored (see
+    /// [`crate::cluster::master::Master`]); an entry that would kill the
+    /// last survivor is skipped.
+    pub fail_at: Vec<(u64, usize)>,
+}
+
+impl FaultPlan {
+    /// Whether any fault machinery (checkpointing or failure injection)
+    /// should run at all. Inactive plans keep the trainers on their
+    /// bit-identical golden paths.
+    pub fn is_active(&self) -> bool {
+        self.checkpoint_every > 0 || !self.fail_at.is_empty()
+    }
+
+    /// Deterministic pseudo-random schedule for studies and property
+    /// tests: up to `failures` distinct update steps in `1..=max_step`,
+    /// each killing a worker in `0..p`. Same seed ⇒ same schedule ⇒ (with
+    /// everything else fixed) bit-identical runs.
+    pub fn seeded(
+        seed: u64,
+        failures: usize,
+        max_step: u64,
+        p: usize,
+        checkpoint_every: usize,
+    ) -> FaultPlan {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0xFA17);
+        let mut steps = std::collections::BTreeSet::new();
+        while steps.len() < failures && (steps.len() as u64) < max_step {
+            steps.insert(1 + rng.below(max_step as usize) as u64);
+        }
+        let fail_at = steps.into_iter().map(|s| (s, rng.below(p.max(1)))).collect();
+        FaultPlan { checkpoint_every, fail_at }
+    }
+
+    /// Parse a failure schedule from the kv-config format: comma-separated
+    /// `step:worker` pairs, e.g. `fail_at = 6:1, 9:0`.
+    pub fn parse_fail_at(s: &str) -> Result<Vec<(u64, usize)>, String> {
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (st, w) = part
+                .split_once(':')
+                .ok_or_else(|| format!("bad fail_at entry {part}: expected step:worker"))?;
+            let step = st.trim().parse().map_err(|_| format!("bad fail_at step {st}"))?;
+            let worker = w.trim().parse().map_err(|_| format!("bad fail_at worker {w}"))?;
+            out.push((step, worker));
+        }
+        Ok(out)
+    }
+}
+
 /// Neighbor sampling applied during subgraph construction (§4.2 implements
 /// "a few sampling methods, including random neighbor sampling").
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -224,6 +296,9 @@ pub struct TrainConfig {
     /// How the coordinator places phase-task chains on the modeled
     /// cluster's workers.
     pub schedule_policy: SchedulePolicy,
+    /// Checkpointing and deterministic failure injection (inactive by
+    /// default — see [`FaultPlan`]).
+    pub fault: FaultPlan,
 }
 
 impl TrainConfig {
@@ -250,6 +325,7 @@ pub struct TrainConfigBuilder {
     pipeline_width: Option<usize>,
     accum_window: Option<usize>,
     schedule_policy: Option<SchedulePolicy>,
+    fault: Option<FaultPlan>,
 }
 
 impl TrainConfigBuilder {
@@ -317,6 +393,10 @@ impl TrainConfigBuilder {
         self.schedule_policy = Some(s);
         self
     }
+    pub fn fault(mut self, f: FaultPlan) -> Self {
+        self.fault = Some(f);
+        self
+    }
 
     pub fn build(self) -> TrainConfig {
         TrainConfig {
@@ -336,6 +416,7 @@ impl TrainConfigBuilder {
             pipeline_width: self.pipeline_width.unwrap_or(1).max(1),
             accum_window: self.accum_window.unwrap_or(1).max(1),
             schedule_policy: self.schedule_policy.unwrap_or_default(),
+            fault: self.fault.unwrap_or_default(),
         }
     }
 }
@@ -411,7 +492,7 @@ pub fn config_from_kv(
         "model", "hidden", "layers", "strategy", "batch_frac", "cluster_frac",
         "boundary_hops", "optimizer", "lr", "weight_decay", "epochs", "eval_every",
         "seed", "backend", "fanout", "binary", "threads", "pipeline_width", "accum_window",
-        "update_mode", "max_staleness", "schedule_policy",
+        "update_mode", "max_staleness", "schedule_policy", "checkpoint_every", "fail_at",
     ];
     for k in kv.keys() {
         if !known.contains(&k.as_str()) {
@@ -475,10 +556,18 @@ pub fn config_from_kv(
             "locality" | "locality-aware" => SchedulePolicy::LocalityAware,
             other => return Err(format!("unknown schedule_policy {other}")),
         };
+    let fault = FaultPlan {
+        checkpoint_every: get_u("checkpoint_every", 0)?,
+        fail_at: match kv.get("fail_at") {
+            Some(s) => FaultPlan::parse_fail_at(s)?,
+            None => Vec::new(),
+        },
+    };
     Ok(b
         .optimizer(opt)
         .update_mode(update_mode)
         .schedule_policy(schedule_policy)
+        .fault(fault)
         .lr(get_f("lr", 0.01)? as f32)
         .weight_decay(get_f("weight_decay", 5e-4)? as f32)
         .epochs(get_u("epochs", 100)?)
@@ -552,6 +641,38 @@ mod tests {
         assert!(config_from_kv(&kv, 8, 2, 0).is_err());
         let kv = parse_kv("schedule_policy = psychic\n").unwrap();
         assert!(config_from_kv(&kv, 8, 2, 0).is_err());
+    }
+
+    #[test]
+    fn fault_plan_via_builder_and_kv() {
+        let c = TrainConfig::builder().model(ModelConfig::gcn(8, 8, 2, 1)).build();
+        assert!(!c.fault.is_active(), "faults are off by default");
+        let c = TrainConfig::builder()
+            .model(ModelConfig::gcn(8, 8, 2, 1))
+            .fault(FaultPlan { checkpoint_every: 4, fail_at: vec![(6, 1)] })
+            .build();
+        assert!(c.fault.is_active());
+        assert_eq!(c.fault.fail_at, vec![(6, 1)]);
+        let kv = parse_kv("checkpoint_every = 4\nfail_at = 6:1, 9:0\n").unwrap();
+        let c = config_from_kv(&kv, 8, 2, 0).unwrap();
+        assert_eq!(c.fault.checkpoint_every, 4);
+        assert_eq!(c.fault.fail_at, vec![(6, 1), (9, 0)]);
+        // Malformed schedules fail loudly.
+        let kv = parse_kv("fail_at = 6@1\n").unwrap();
+        assert!(config_from_kv(&kv, 8, 2, 0).is_err());
+        let kv = parse_kv("fail_at = six:1\n").unwrap();
+        assert!(config_from_kv(&kv, 8, 2, 0).is_err());
+    }
+
+    #[test]
+    fn seeded_fault_plan_is_deterministic_and_bounded() {
+        let a = FaultPlan::seeded(7, 3, 10, 4, 2);
+        let b = FaultPlan::seeded(7, 3, 10, 4, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.fail_at.len(), 3);
+        assert!(a.fail_at.windows(2).all(|w| w[0].0 < w[1].0), "sorted distinct steps");
+        assert!(a.fail_at.iter().all(|&(s, w)| (1..=10).contains(&s) && w < 4));
+        assert_ne!(a, FaultPlan::seeded(8, 3, 10, 4, 2));
     }
 
     #[test]

@@ -108,11 +108,54 @@
 //! replayed step extends its own chain by another
 //! forward → backward → reduce triple, so the replay cost lands on the
 //! same in-flight slot it delays in a real cluster.
+//!
+//! # Fault tolerance and the recovery clock model
+//!
+//! With an active [`crate::config::FaultPlan`] both engines run under a
+//! [`FaultController`] (see [`crate::engine::fault`] for the full
+//! protocol): the master checkpoints the [`ParameterManager`] every
+//! `checkpoint_every` applied updates, and a scheduled failure kills a
+//! worker, rolls the manager back to [`Master::restore_point`], re-homes
+//! the dead partition onto the least-loaded survivor, and replays the
+//! lost updates. The clock model extends naturally:
+//!
+//! * **Checkpoints are free on the clock** — directives go through the
+//!   master's ledger-free command log, so a checkpoint-enabled run with
+//!   no failures is *bit-identical* to the golden baselines.
+//! * **Recovery is charged serially** — the `Restore` broadcast, the
+//!   checkpoint-state transfer to the survivors (one dedicated
+//!   superstep), and every replayed training step land on the serial
+//!   clock; [`FaultStats::recovery_secs`] measures the whole window from
+//!   the failure until training regains the failure step.
+//! * **Degraded supersteps** — re-homing makes the survivor carry two
+//!   partitions' compute ([`ClusterSim::reassign`]), so every
+//!   post-failure superstep is modeled slower.
+//! * **Degraded schedules** — chains stop placing on dead workers
+//!   ([`ScheduleOpts::alive`]), and chains homed there re-map to the next
+//!   live rank. The synchronous engine applies the mask per round (only
+//!   post-failure rounds degrade); the async engine schedules its single
+//!   end-of-run timeline on the *final* survivor set — conservative for
+//!   the pre-failure prefix, which simply earns less overlap credit.
+//!   Chains of rolled-back async steps leave the schedule entirely: their
+//!   executed cost stays on the serial clock as unoverlapped (wasted)
+//!   work.
+//!
+//! Determinism survives recovery: with the same failure schedule two
+//! identically-seeded runs are bit-identical (`rust/tests/fault_tolerance.rs`).
+//! Best-val model tracking spans rollbacks by design — each evaluation
+//! publishes its candidate to the master, so the copy survives the
+//! worker (see [`crate::engine::fault`]).
+//!
+//! [`Master::restore_point`]: crate::cluster::master::Master::restore_point
+//! [`FaultStats::recovery_secs`]: crate::metrics::FaultStats::recovery_secs
+//! [`ClusterSim::reassign`]: crate::cluster::ClusterSim::reassign
+//! [`ScheduleOpts::alive`]: crate::engine::scheduler::ScheduleOpts::alive
 
 use crate::cluster::ClusterSim;
 use crate::config::{ModelKind, SchedulePolicy, TrainConfig, UpdateMode};
+use crate::engine::fault::FaultController;
 use crate::engine::scheduler::{
-    locality_placement, schedule_chains_opts, Schedule, ScheduleOpts, Task,
+    locality_placement, remap_dead_homes, schedule_chains_opts, Schedule, ScheduleOpts, Task,
 };
 use crate::engine::strategy::BatchGenerator;
 use crate::engine::trainer::{eval_plan, test_metrics, TrainReport};
@@ -234,6 +277,12 @@ impl<'a> Coordinator<'a> {
         let val_plan =
             if has_val { Some(eval_plan(self.g, self.dg, &model, &self.g.val_mask)) } else { None };
 
+        let mut fault = if cfg.fault.is_active() {
+            Some(FaultController::new(&cfg.fault, self.dg.p(), &pm))
+        } else {
+            None
+        };
+
         let epochs = cfg.epochs;
         let mut losses = Vec::with_capacity(epochs);
         let (mut sim_fwd, mut sim_bwd) = (0.0f64, 0.0f64);
@@ -251,91 +300,137 @@ impl<'a> Coordinator<'a> {
         let mut next_plan: Option<Arc<ActivePlan>> =
             if epochs > 0 { Some(gen.next_plan(self.g, self.dg)) } else { None };
 
-        while step < epochs {
-            let round_n = width.min(epochs - step);
-            rounds += 1;
-            // Every step of this round pins the round-start version.
-            let version = pm.latest_version();
-            let params = pm.fetch(version)?.clone();
-            let mut chain_costs: Vec<[f64; 3]> = Vec::with_capacity(round_n);
-            let mut chain_weights: Vec<Vec<u64>> = Vec::new();
-            for _ in 0..round_n {
-                let plan = next_plan.take().expect("plan prefetched");
-                if cfg.schedule_policy == SchedulePolicy::LocalityAware && round_n >= 2 {
-                    chain_weights.push(plan.partition_weights());
-                }
-                let res = if step + 1 < epochs {
-                    // Hide the next plan's subgraph construction behind
-                    // this step's NN-TGAR execution.
-                    let (np, res) = gen.next_plan_overlapped(self.g, self.dg, || {
-                        ex.train_step(&params, &plan, sim, backend)
-                    });
-                    next_plan = Some(np);
-                    res
-                } else {
-                    ex.train_step(&params, &plan, sim, backend)
-                };
-                peak_bytes = peak_bytes.max(res.peak_part_bytes);
-                sim_fwd += res.t_forward;
-                sim_bwd += res.t_backward;
-                losses.push(res.loss);
-                chain_costs.push([res.t_forward, res.t_backward, res.t_reduce]);
-                pm.push_grads_from(&res.grads, version);
-                in_window += 1;
-                if in_window == window {
-                    pm.update_averaged(window);
-                    in_window = 0;
-                }
-                step += 1;
-                if has_val && step % cfg.eval_every == 0 {
-                    let mark = sim.mark();
-                    let latest = pm.fetch_latest().1.clone();
-                    let logits =
-                        ex.infer_logits(&latest, val_plan.as_ref().unwrap(), sim, backend);
-                    let acc = ops::accuracy(&logits, &self.g.labels, &self.g.val_mask);
-                    if acc > best_val {
-                        best_val = acc;
-                        best_params = Some(latest);
+        // The outer loop exists for fault recovery only: a failure at the
+        // trailing window flush rewinds `step` and re-enters the rounds.
+        'training: loop {
+            while step < epochs {
+                let round_n = width.min(epochs - step);
+                rounds += 1;
+                // Every step of this round pins the round-start version.
+                let version = pm.latest_version();
+                let params = pm.fetch(version)?.clone();
+                let mut chain_costs: Vec<[f64; 3]> = Vec::with_capacity(round_n);
+                let mut chain_weights: Vec<Vec<u64>> = Vec::new();
+                let mut restored = None;
+                for _ in 0..round_n {
+                    // Replay after a failure can outrun the prefetch
+                    // (which stops at the nominal last step): fall back to
+                    // a direct build.
+                    let plan =
+                        next_plan.take().unwrap_or_else(|| gen.next_plan(self.g, self.dg));
+                    if cfg.schedule_policy == SchedulePolicy::LocalityAware && round_n >= 2 {
+                        chain_weights.push(plan.partition_weights());
                     }
-                    eval_secs += sim.since(mark);
+                    let res = if step + 1 < epochs {
+                        // Hide the next plan's subgraph construction behind
+                        // this step's NN-TGAR execution.
+                        let (np, res) = gen.next_plan_overlapped(self.g, self.dg, || {
+                            ex.train_step(&params, &plan, sim, backend)
+                        });
+                        next_plan = Some(np);
+                        res
+                    } else {
+                        ex.train_step(&params, &plan, sim, backend)
+                    };
+                    peak_bytes = peak_bytes.max(res.peak_part_bytes);
+                    sim_fwd += res.t_forward;
+                    sim_bwd += res.t_backward;
+                    losses.truncate(step);
+                    losses.push(res.loss);
+                    chain_costs.push([res.t_forward, res.t_backward, res.t_reduce]);
+                    pm.push_grads_from(&res.grads, version);
+                    in_window += 1;
+                    if in_window == window {
+                        pm.update_averaged(window);
+                        in_window = 0;
+                        if let Some(fc) = fault.as_mut() {
+                            restored = fc.after_update(sim, &mut pm);
+                        }
+                    }
+                    step += 1;
+                    if let Some(r) = restored {
+                        // Failure: the manager was rolled back to update
+                        // `r`; rewind to that update's step (updates
+                        // publish every `window` steps) and abort the
+                        // round — the steps executed so far still get
+                        // scheduled below.
+                        step = (r as usize * window).min(epochs);
+                        in_window = 0;
+                        losses.truncate(step);
+                        break;
+                    }
+                    if has_val && step % cfg.eval_every == 0 {
+                        let mark = sim.mark();
+                        let latest = pm.fetch_latest().1.clone();
+                        let logits =
+                            ex.infer_logits(&latest, val_plan.as_ref().unwrap(), sim, backend);
+                        let acc = ops::accuracy(&logits, &self.g.labels, &self.g.val_mask);
+                        if acc > best_val {
+                            best_val = acc;
+                            best_params = Some(latest);
+                        }
+                        eval_secs += sim.since(mark);
+                    }
+                }
+                // Clock model for the round (see module docs). An aborted
+                // round schedules only the chains it actually executed.
+                let serial: f64 = chain_costs.iter().map(|c| c[0] + c[1] + c[2]).sum();
+                if chain_costs.len() >= 2 {
+                    let chains: Vec<Vec<Task>> = chain_costs
+                        .iter()
+                        .enumerate()
+                        .map(|(c, phases)| {
+                            phases
+                                .iter()
+                                .enumerate()
+                                .map(|(j, &dt)| Task {
+                                    id: (c * 3 + j) as u64,
+                                    cost: (dt * 1e9).round() as u64,
+                                })
+                                .collect()
+                        })
+                        .collect();
+                    let sched = place_chains(
+                        &chains,
+                        &chain_weights,
+                        self.dg.p(),
+                        cfg.schedule_policy,
+                        0,
+                        fault.as_ref().and_then(|fc| fc.dead_mask()),
+                    );
+                    let serial_ns: u64 = chains.iter().flatten().map(|t| t.cost).sum();
+                    let gain_ns = serial_ns.saturating_sub(sched.makespan());
+                    overlap.serial_secs += serial;
+                    overlap.overlapped_secs += serial - gain_ns as f64 * 1e-9;
+                    overlap.tasks += 3 * chain_costs.len();
+                    overlap.steals += sched.steals;
+                } else {
+                    // One chain cannot overlap: gain is exactly zero, keeping
+                    // the width-1 clock bit-identical to `Trainer::run`.
+                    overlap.serial_secs += serial;
+                    overlap.overlapped_secs += serial;
+                    overlap.tasks += 3 * chain_costs.len();
                 }
             }
-            // Clock model for the round (see module docs).
-            let serial: f64 = chain_costs.iter().map(|c| c[0] + c[1] + c[2]).sum();
-            if round_n >= 2 {
-                let chains: Vec<Vec<Task>> = chain_costs
-                    .iter()
-                    .enumerate()
-                    .map(|(c, phases)| {
-                        phases
-                            .iter()
-                            .enumerate()
-                            .map(|(j, &dt)| Task {
-                                id: (c * 3 + j) as u64,
-                                cost: (dt * 1e9).round() as u64,
-                            })
-                            .collect()
-                    })
-                    .collect();
-                let sched =
-                    place_chains(&chains, &chain_weights, self.dg.p(), cfg.schedule_policy, 0);
-                let serial_ns: u64 = chains.iter().flatten().map(|t| t.cost).sum();
-                let gain_ns = serial_ns.saturating_sub(sched.makespan());
-                overlap.serial_secs += serial;
-                overlap.overlapped_secs += serial - gain_ns as f64 * 1e-9;
-                overlap.tasks += 3 * round_n;
-                overlap.steals += sched.steals;
-            } else {
-                // One chain cannot overlap: gain is exactly zero, keeping
-                // the width-1 clock bit-identical to `Trainer::run`.
-                overlap.serial_secs += serial;
-                overlap.overlapped_secs += serial;
-                overlap.tasks += 3;
+            if in_window > 0 {
+                pm.update_averaged(in_window);
+                in_window = 0;
+                if let Some(fc) = fault.as_mut() {
+                    if let Some(r) = fc.after_update(sim, &mut pm) {
+                        // Failure at the trailing flush: rewind and replay.
+                        step = (r as usize * window).min(epochs);
+                        losses.truncate(step);
+                        continue 'training;
+                    }
+                }
             }
+            break;
         }
-        if in_window > 0 {
-            pm.update_averaged(in_window);
-        }
+
+        let fault_stats = fault.map(|mut fc| {
+            fc.finish(sim);
+            fc.stats
+        });
 
         // Final evaluation — the same code path as the sequential trainer.
         let final_params = best_params.unwrap_or_else(|| pm.fetch_latest().1.clone());
@@ -362,6 +457,7 @@ impl<'a> Coordinator<'a> {
             total_flops: sim.total_flops,
             peak_part_bytes: peak_bytes,
             latest_param_l2,
+            fault: fault_stats,
             profile: ex.profile.clone(),
         };
         Ok(PipelineReport {
@@ -390,9 +486,12 @@ impl<'a> Coordinator<'a> {
     ///
     /// Updates publish per completed step (classic async SGD);
     /// `accum_window` is a synchronous-mode knob and is ignored here. The
-    /// loss series records each step's *originally observed* loss — a
-    /// replay changes the applied gradient, the clock and the
-    /// [`AsyncStats`], not the series.
+    /// loss series records each step's **applied** loss: a replayed step
+    /// replaces its admission-time entry with the loss of the gradient
+    /// that was actually optimized, so the reported curve matches the
+    /// parameter trajectory (at `max_staleness = 0` the series is
+    /// bit-identical to the sequential trainer's at any width —
+    /// `rust/tests/async_training.rs` pins this).
     pub fn run_async(
         &self,
         sim: &mut ClusterSim,
@@ -428,6 +527,12 @@ impl<'a> Coordinator<'a> {
         let val_plan =
             if has_val { Some(eval_plan(self.g, self.dg, &model, &self.g.val_mask)) } else { None };
 
+        let mut fault = if cfg.fault.is_active() {
+            Some(FaultController::new(&cfg.fault, self.dg.p(), &pm))
+        } else {
+            None
+        };
+
         let epochs = cfg.epochs;
         let locality = cfg.schedule_policy == SchedulePolicy::LocalityAware;
         let mut losses = Vec::with_capacity(epochs);
@@ -455,7 +560,10 @@ impl<'a> Coordinator<'a> {
             while step < epochs && inflight.len() < width {
                 let version = pm.latest_version();
                 let params = pm.fetch(version)?.clone();
-                let plan = next_plan.take().expect("plan prefetched");
+                // Replay after a failure can outrun the prefetch (which
+                // stops at the nominal last step): fall back to a direct
+                // build.
+                let plan = next_plan.take().unwrap_or_else(|| gen.next_plan(self.g, self.dg));
                 if locality {
                     chain_weights.push(plan.partition_weights());
                 }
@@ -503,12 +611,36 @@ impl<'a> Coordinator<'a> {
                     chains[f.chain].push(Task { id: task_id, cost: (dt * 1e9).round() as u64 });
                     task_id += 1;
                 }
+                // The replay's gradient is what actually optimizes the
+                // parameters: the series records its loss, replacing the
+                // stale admission-time entry (which would misstate the
+                // curve the run optimized).
+                losses[f.chain] = res.loss;
                 stats.pushes += 1;
                 pm.try_push_grads_from(&res.grads, fresh_version)
                     .expect("a replayed push is fresh by construction");
             }
             pm.update_averaged(1);
             completed += 1;
+            if let Some(fc) = fault.as_mut() {
+                if let Some(r) = fc.after_update(sim, &mut pm) {
+                    // Failure: the manager rolled back to update `r`. The
+                    // in-flight window is lost with the dead worker, and
+                    // admission/completion rewind to the restore point;
+                    // re-admitted steps draw fresh batches. Chains of the
+                    // lost steps leave the schedule (their executed cost
+                    // stays on the serial clock — unrecovered, hence
+                    // unoverlapped, work).
+                    let r = r as usize;
+                    inflight.clear();
+                    step = r;
+                    completed = r;
+                    losses.truncate(r);
+                    chains.truncate(r);
+                    chain_weights.truncate(if locality { r } else { 0 });
+                    continue;
+                }
+            }
             if has_val && completed % cfg.eval_every == 0 {
                 let mark = sim.mark();
                 let latest = pm.fetch_latest().1.clone();
@@ -524,8 +656,17 @@ impl<'a> Coordinator<'a> {
 
         // Clock model (module docs): one admission-constrained schedule
         // over every chain of the run — chain `c` is released when chain
-        // `c − width` finishes, with no round barriers.
-        let sched = place_chains(&chains, &chain_weights, self.dg.p(), cfg.schedule_policy, width);
+        // `c − width` finishes, with no round barriers. After a failure
+        // the whole timeline is (conservatively) scheduled on the
+        // survivors — see "Fault tolerance" in the module docs.
+        let sched = place_chains(
+            &chains,
+            &chain_weights,
+            self.dg.p(),
+            cfg.schedule_policy,
+            width,
+            fault.as_ref().and_then(|fc| fc.dead_mask()),
+        );
         let serial_ns: u64 = chains.iter().flatten().map(|t| t.cost).sum();
         let gain_ns = serial_ns.saturating_sub(sched.makespan());
         let overlap = OverlapStats {
@@ -534,6 +675,10 @@ impl<'a> Coordinator<'a> {
             tasks: chains.iter().map(Vec::len).sum(),
             steals: sched.steals,
         };
+        let fault_stats = fault.map(|mut fc| {
+            fc.finish(sim);
+            fc.stats
+        });
 
         // Final evaluation — the same code path as the sequential trainer.
         let final_params = best_params.unwrap_or_else(|| pm.fetch_latest().1.clone());
@@ -560,6 +705,7 @@ impl<'a> Coordinator<'a> {
             total_flops: sim.total_flops,
             peak_part_bytes: peak_bytes,
             latest_param_l2,
+            fault: fault_stats,
             profile: ex.profile.clone(),
         };
         Ok(PipelineReport {
@@ -594,23 +740,42 @@ struct InFlightStep {
 
 /// Place one set of chains under `policy` (`width` 0 = no admission bound,
 /// the synchronous round model; otherwise the async sliding window).
+/// `alive` is the post-failure worker mask: dead workers execute nothing
+/// and their homed chains re-home onto survivors; `None` (the healthy
+/// cluster) keeps the bit-identical baseline schedule.
 fn place_chains(
     chains: &[Vec<Task>],
     weights: &[Vec<u64>],
     p: usize,
     policy: SchedulePolicy,
     width: usize,
+    alive: Option<&[bool]>,
 ) -> Schedule {
+    let alive_vec = alive.map(<[bool]>::to_vec);
     match policy {
         SchedulePolicy::RoundRobin => {
-            schedule_chains_opts(chains, p, &ScheduleOpts { width, ..ScheduleOpts::default() })
-        }
-        SchedulePolicy::LocalityAware => {
-            let (homes, prefs) = locality_placement(weights, p);
+            // Homes stay implicit (`c % p`) on a healthy cluster; with
+            // dead workers they must be explicit so they can re-map.
+            let homes = alive.map(|al| {
+                let mut homes: Vec<usize> = (0..chains.len()).map(|c| c % p).collect();
+                remap_dead_homes(&mut homes, al);
+                homes
+            });
             schedule_chains_opts(
                 chains,
                 p,
-                &ScheduleOpts { homes: Some(homes), prefs: Some(prefs), width },
+                &ScheduleOpts { homes, alive: alive_vec, width, ..ScheduleOpts::default() },
+            )
+        }
+        SchedulePolicy::LocalityAware => {
+            let (mut homes, prefs) = locality_placement(weights, p);
+            if let Some(al) = alive {
+                remap_dead_homes(&mut homes, al);
+            }
+            schedule_chains_opts(
+                chains,
+                p,
+                &ScheduleOpts { homes: Some(homes), prefs: Some(prefs), width, alive: alive_vec },
             )
         }
     }

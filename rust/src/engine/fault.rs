@@ -1,0 +1,340 @@
+//! Fault-tolerant training: the glue between the [`Master`] control plane
+//! (paper Figure 2: the master "monitors health, manages checkpoints and
+//! directs the learning procedure") and the training loops.
+//!
+//! Running 1,024 small-memory dockers is only credible with failure
+//! handling, and DistDGL-style systems treat coordinated checkpointing as
+//! table stakes. The [`FaultController`] makes failure a first-class,
+//! *deterministic* scenario on the modeled cluster:
+//!
+//! * **Checkpoints** — every `checkpoint_every` applied updates the
+//!   controller snapshots the [`ParameterManager`] (parameters + optimizer
+//!   moments + version counter) and logs a `Checkpoint` command to every
+//!   live worker through the master. Checkpoint directives use the
+//!   ledger-free [`Master::log_broadcast`], so a checkpoint-enabled run
+//!   with no failures stays **bit-identical** to the golden baselines
+//!   (clock, traffic, numerics — `rust/tests/fault_tolerance.rs` pins
+//!   this). The initial state is an implicit step-0 checkpoint, so every
+//!   failure has a restore point.
+//! * **Failure injection** — [`crate::config::FaultPlan::fail_at`] is a
+//!   deterministic schedule of `(applied-update step, worker)` entries.
+//!   When training reaches the named update count, the survivors
+//!   heartbeat, the victim goes silent until the master declares it
+//!   [`Health::Dead`], and recovery begins. Stray ranks are counted by the
+//!   master and ignored; an entry that would kill the last survivor is
+//!   skipped (the run must finish).
+//! * **Recovery** — the master picks [`Master::restore_point`] (never a
+//!   step after the failure), the manager rolls back via
+//!   [`ParameterManager::restore`], the dead worker's partitions re-home
+//!   onto the least-loaded survivor ([`ClusterSim::reassign`] — the
+//!   survivor then carries both partitions' compute), and the master
+//!   broadcasts `Restore` while the survivors re-fetch the checkpoint
+//!   state from its lowest-rank live holder. The transfer plus a recovery
+//!   barrier superstep land on the modeled clock, and the driver replays
+//!   the lost updates. Everything from the failure until training regains
+//!   the failure step is charged to [`FaultStats::recovery_secs`].
+//!
+//! Replayed steps draw **fresh batches**: the restore rewinds parameters
+//! and optimizer state, not the batch generator's RNG stream, exactly like
+//! a real job that resumes from a checkpoint and keeps consuming its data
+//! stream. Two identically-seeded runs with the same failure schedule are
+//! therefore bit-identical to *each other* (the determinism the test
+//! suite pins), while a failure run converges to within the usual
+//! mini-batch noise of the failure-free run at matched applied-update
+//! count.
+//!
+//! Best-validation model tracking deliberately **spans rollbacks**: every
+//! evaluation publishes its candidate model to the master (an
+//! early-stopping checkpoint, ledger-free like the periodic checkpoint
+//! directives), so a best-val model evaluated on a later-rolled-back
+//! timeline remains eligible for the final test — the master held a copy
+//! before the worker died.
+
+use crate::cluster::master::{Command, Health, Master};
+use crate::cluster::ClusterSim;
+use crate::config::FaultPlan;
+use crate::metrics::FaultStats;
+use crate::nn::params::{ParamSnapshot, ParameterManager};
+
+/// Checkpoint snapshots retained (newest last). A restore always targets
+/// the newest checkpoint at or before the failure step — which is the
+/// newest checkpoint, period, since checkpoints never outrun the applied
+/// count — so a short history bounds memory without stranding a restore.
+const RETAINED_SNAPSHOTS: usize = 4;
+
+/// Drives checkpointing, failure injection and recovery for all three
+/// training loops (sequential, synchronous rounds, async sliding window).
+/// The loops call [`FaultController::after_update`] once per published
+/// parameter version and rewind their step counters when it returns a
+/// restore point.
+pub struct FaultController {
+    master: Master,
+    checkpoint_every: usize,
+    /// Failure schedule, sorted by step; `next_fail` indexes the next
+    /// entry to fire.
+    fail_at: Vec<(u64, usize)>,
+    next_fail: usize,
+    /// Retained checkpoints, ascending by step.
+    snapshots: Vec<(u64, ParamSnapshot)>,
+    /// Liveness cache, kept in lockstep with the (controller-owned)
+    /// master's health by [`FaultController::fail`].
+    alive: Vec<bool>,
+    /// Open recovery window: (failure step to regain, clock mark at the
+    /// failure).
+    recovering: Option<(u64, f64)>,
+    pub stats: FaultStats,
+}
+
+impl FaultController {
+    /// Start fault handling over `p` workers. Takes the implicit step-0
+    /// checkpoint from `pm`'s current (initial) state. Schedule entries at
+    /// step 0 (before any update exists) fire at the first applied update
+    /// instead of silently never firing.
+    pub fn new(plan: &FaultPlan, p: usize, pm: &ParameterManager) -> FaultController {
+        let mut fail_at: Vec<(u64, usize)> =
+            plan.fail_at.iter().map(|&(s, w)| (s.max(1), w)).collect();
+        fail_at.sort_unstable();
+        let mut master = Master::new(p);
+        master.record_checkpoint(0);
+        FaultController {
+            master,
+            checkpoint_every: plan.checkpoint_every,
+            fail_at,
+            next_fail: 0,
+            snapshots: vec![(0, pm.snapshot())],
+            alive: vec![true; p],
+            recovering: None,
+            stats: FaultStats { checkpoints: 1, ..FaultStats::default() },
+        }
+    }
+
+    /// The control plane, for protocol assertions (command log, health,
+    /// checkpoint registry).
+    pub fn master(&self) -> &Master {
+        &self.master
+    }
+
+    /// `Some(mask)` once any worker died — the coordinator re-homes its
+    /// chains with it; `None` while the full cluster is healthy, which
+    /// keeps the scheduler on its bit-identical default path.
+    pub fn dead_mask(&self) -> Option<&[bool]> {
+        if self.alive.iter().all(|&a| a) {
+            None
+        } else {
+            Some(&self.alive)
+        }
+    }
+
+    /// Hook called after every published parameter version. Closes any
+    /// open recovery window, takes a due checkpoint, and injects the next
+    /// scheduled failure. Returns `Some(restore_step)` when a failure
+    /// fired: the caller must rewind its loop to that applied-update count
+    /// (the manager is already rolled back).
+    pub fn after_update(
+        &mut self,
+        sim: &mut ClusterSim,
+        pm: &mut ParameterManager,
+    ) -> Option<u64> {
+        let applied = pm.latest_version();
+        if let Some((target, mark)) = self.recovering {
+            if applied >= target {
+                self.stats.recovery_secs += sim.since(mark);
+                self.recovering = None;
+            }
+        }
+        if self.checkpoint_every > 0 && applied % self.checkpoint_every as u64 == 0 {
+            self.checkpoint(applied, pm);
+        }
+        if self.next_fail < self.fail_at.len() && self.fail_at[self.next_fail].0 == applied {
+            let (step, worker) = self.fail_at[self.next_fail];
+            self.next_fail += 1;
+            return self.fail(step, worker, sim, pm);
+        }
+        None
+    }
+
+    /// Close any recovery window still open when the run ends (safety
+    /// net; a window normally closes inside [`FaultController::after_update`]).
+    pub fn finish(&mut self, sim: &ClusterSim) {
+        if let Some((_, mark)) = self.recovering.take() {
+            self.stats.recovery_secs += sim.since(mark);
+        }
+    }
+
+    fn checkpoint(&mut self, applied: u64, pm: &ParameterManager) {
+        self.master.record_checkpoint(applied);
+        self.master.log_broadcast(Command::Checkpoint { step: applied });
+        self.stats.checkpoints += 1;
+        let snap = pm.snapshot();
+        // A replayed trajectory re-checkpoints the same step with fresh
+        // state: replace, never duplicate (the rolled-back timeline's
+        // snapshot must not resurrect).
+        match self.snapshots.iter_mut().find(|(s, _)| *s == applied) {
+            Some(slot) => slot.1 = snap,
+            None => {
+                self.snapshots.push((applied, snap));
+                if self.snapshots.len() > RETAINED_SNAPSHOTS {
+                    self.snapshots.remove(0);
+                }
+            }
+        }
+    }
+
+    fn fail(
+        &mut self,
+        step: u64,
+        worker: usize,
+        sim: &mut ClusterSim,
+        pm: &mut ParameterManager,
+    ) -> Option<u64> {
+        let p = self.master.p;
+        if worker >= p {
+            // Stray rank from the schedule: exercised against the
+            // bounds-checked master — counted, ignored, nobody dies.
+            self.master.miss(worker);
+            return None;
+        }
+        if !self.alive[worker] || self.alive.iter().filter(|&&a| a).count() == 1 {
+            // Already dead, or the last survivor: skip the injection.
+            return None;
+        }
+        // Heartbeat round: survivors report in; the victim stays silent
+        // until the master's miss threshold declares it dead.
+        for w in 0..p {
+            if w != worker && self.alive[w] {
+                self.master.heartbeat(w);
+            }
+        }
+        for _ in 0..self.master.max_misses {
+            self.master.miss(worker);
+        }
+        debug_assert_eq!(self.master.health_of(worker), Health::Dead);
+        self.alive[worker] = false;
+        self.stats.failures += 1;
+        let mark = sim.mark();
+
+        // Re-home every partition the dead worker carried onto the
+        // least-loaded survivor (ties to the lowest rank) — the survivor
+        // then carries both partitions' compute and traffic. The sim's
+        // partition→owner mapping is the single source of truth.
+        let mut load = vec![0usize; p];
+        for part in 0..p {
+            load[sim.owner_of(part)] += 1;
+        }
+        for part in 0..p {
+            if sim.owner_of(part) == worker {
+                let to = (0..p)
+                    .filter(|&w| self.alive[w])
+                    .min_by_key(|&w| (load[w], w))
+                    .expect("a survivor exists");
+                load[to] += 1;
+                sim.reassign(part, to);
+            }
+        }
+
+        // Restore from the newest checkpoint at or before the failure.
+        let restore = self.master.restore_point(step).expect("implicit step-0 checkpoint");
+        debug_assert!(restore <= step, "restore point after the failure");
+        let snap = &self
+            .snapshots
+            .iter()
+            .rev()
+            .find(|(s, _)| *s == restore)
+            .expect("restore-point snapshot retained")
+            .1;
+        pm.restore(snap);
+
+        // The master directs recovery; survivors re-fetch the checkpoint
+        // state from its lowest-rank live holder. The transfer plus the
+        // recovery barrier superstep are the modeled restore cost.
+        let bytes = snap.bytes() as u64;
+        self.master.broadcast(Command::Restore { step: restore }, sim);
+        let holder = (0..p).find(|&w| self.alive[w]).expect("a survivor exists");
+        for w in 0..p {
+            if self.alive[w] && w != holder {
+                sim.send(holder, w, bytes);
+            }
+        }
+        sim.superstep();
+
+        self.stats.restored_steps += step - restore;
+        self.recovering = Some((step, mark));
+        Some(restore)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CostModelConfig, ModelConfig, OptimizerKind, UpdateMode};
+    use crate::nn::ModelParams;
+
+    fn pm() -> ParameterManager {
+        let cfg = ModelConfig::gcn(4, 4, 2, 1);
+        ParameterManager::new(
+            ModelParams::init(&cfg, 1),
+            OptimizerKind::Sgd,
+            0.1,
+            0.0,
+            UpdateMode::Synchronous,
+        )
+    }
+
+    fn advance(pm: &mut ParameterManager) {
+        let g = pm.fetch_latest().1.clone();
+        pm.push_grads(&g);
+        pm.update(1);
+    }
+
+    #[test]
+    fn checkpoints_and_failure_restore_flow() {
+        let plan = FaultPlan { checkpoint_every: 2, fail_at: vec![(3, 1)] };
+        let mut pm = pm();
+        let mut fc = FaultController::new(&plan, 4, &pm);
+        let mut sim = ClusterSim::new(4, CostModelConfig::default());
+        assert_eq!(fc.stats.checkpoints, 1, "implicit step-0 checkpoint");
+        advance(&mut pm); // applied 1
+        assert_eq!(fc.after_update(&mut sim, &mut pm), None);
+        advance(&mut pm); // applied 2 → checkpoint
+        assert_eq!(fc.after_update(&mut sim, &mut pm), None);
+        assert_eq!(fc.stats.checkpoints, 2);
+        advance(&mut pm); // applied 3 → failure of worker 1
+        let clock_before = sim.clock;
+        assert_eq!(fc.after_update(&mut sim, &mut pm), Some(2));
+        assert_eq!(pm.latest_version(), 2, "manager rolled back to the checkpoint");
+        assert_eq!(fc.stats.failures, 1);
+        assert_eq!(fc.stats.restored_steps, 1);
+        assert!(sim.clock > clock_before, "restore charges the modeled clock");
+        assert_eq!(fc.master().health_of(1), Health::Dead);
+        assert_eq!(fc.dead_mask(), Some(&[true, false, true, true][..]));
+        assert_eq!(sim.owner_of(1), 0, "dead partition re-homed to a survivor");
+        // Replay regains step 3 and closes the recovery window.
+        advance(&mut pm);
+        assert_eq!(fc.after_update(&mut sim, &mut pm), None);
+        assert!(fc.stats.recovery_secs > 0.0);
+        // The command log carries both directives.
+        let log = &fc.master().log;
+        assert!(log.iter().any(|(_, c)| matches!(c, Command::Checkpoint { step: 2 })));
+        assert!(log.iter().any(|(_, c)| matches!(c, Command::Restore { step: 2 })));
+    }
+
+    #[test]
+    fn stray_ranks_and_last_survivor_are_skipped() {
+        let plan = FaultPlan { checkpoint_every: 0, fail_at: vec![(1, 9), (2, 0), (3, 1)] };
+        let mut pm = pm();
+        let mut fc = FaultController::new(&plan, 2, &pm);
+        let mut sim = ClusterSim::new(2, CostModelConfig::default());
+        advance(&mut pm);
+        assert_eq!(fc.after_update(&mut sim, &mut pm), None, "stray rank: nobody dies");
+        assert_eq!(fc.master().unknown_ranks, 1);
+        advance(&mut pm);
+        assert_eq!(fc.after_update(&mut sim, &mut pm), Some(0), "restore to the implicit step 0");
+        assert_eq!(fc.stats.failures, 1);
+        // Only worker 1 is left: the schedule may not kill it.
+        for _ in 0..3 {
+            advance(&mut pm);
+            assert_eq!(fc.after_update(&mut sim, &mut pm), None);
+        }
+        assert_eq!(fc.stats.failures, 1, "last survivor is never killed");
+    }
+}

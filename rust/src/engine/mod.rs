@@ -1,8 +1,10 @@
 //! The training engine: strategies (global/mini/cluster-batch), the
 //! GraphView abstraction, the trainer driving NN-TGAR steps against the
-//! ParameterManager, and the work-stealing task scheduler of §4.3.
+//! ParameterManager, the work-stealing task scheduler of §4.3, and the
+//! fault controller wiring the master control plane into training.
 
 pub mod strategy;
 pub mod graphview;
+pub mod fault;
 pub mod scheduler;
 pub mod trainer;

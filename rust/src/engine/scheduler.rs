@@ -18,16 +18,19 @@
 //!   chain and none across chains of the same parameter version. This is
 //!   what [`crate::coordinator::Coordinator`] places on the modeled
 //!   cluster to derive the overlapped makespan of pipelined training.
-//! * [`schedule_chains_opts`] — the same greedy simulation with three
+//! * [`schedule_chains_opts`] — the same greedy simulation with four
 //!   optional extensions: explicit *home* workers per chain (locality-aware
 //!   placement: a chain's home is the partition its active edges live in,
 //!   see [`locality_placement`]), per-chain steal-preference ranks (steals
-//!   go to the most *affine* worker first rather than the lowest id), and
-//!   an in-flight *width* bound (chain `c` is admitted only once chain
+//!   go to the most *affine* worker first rather than the lowest id), an
+//!   in-flight *width* bound (chain `c` is admitted only once chain
 //!   `c − width` fully executed — the asynchronous trainer's sliding
-//!   window, with no round barriers). With every option at its default the
-//!   schedule is bit-identical to [`schedule_chains`], which is what keeps
-//!   the old placement available as the deterministic golden baseline.
+//!   window, with no round barriers), and a worker *liveness* mask (dead
+//!   workers execute nothing; homes re-map onto survivors via
+//!   [`remap_dead_homes`] — the fault-recovery path). With every option at
+//!   its default the schedule is bit-identical to [`schedule_chains`],
+//!   which is what keeps the old placement available as the deterministic
+//!   golden baseline.
 
 /// A schedulable unit of work.
 #[derive(Clone, Debug, PartialEq)]
@@ -85,35 +88,27 @@ pub fn work_stealing(tasks: &[Task], p: usize) -> Schedule {
         let task = if let Some(t) = deques[w].pop() {
             t
         } else {
-            // Steal from the victim with the largest queued cost.
-            let victim = (0..p)
+            // Steal from the victim with the largest queued cost. With
+            // `remaining > 0` every unplaced task sits in some deque, so a
+            // victim always exists. (An idle-forever fallback used to live
+            // here; it was unreachable, and its `u64::MAX → 0` finish
+            // mapping would have zeroed a worker's real finish time had it
+            // ever fired.)
+            let v = (0..p)
                 .filter(|&v| !deques[v].is_empty())
-                .max_by_key(|&v| deques[v].iter().map(|t| t.cost).sum::<u64>());
-            match victim {
-                Some(v) => {
-                    steals += 1;
-                    // Steal the biggest task (classic steal-half heuristic
-                    // degenerates to steal-biggest for our coarse tasks).
-                    let (bi, _) = deques[v]
-                        .iter()
-                        .enumerate()
-                        .max_by_key(|(_, t)| t.cost)
-                        .unwrap();
-                    deques[v].remove(bi)
-                }
-                None => {
-                    // Nothing to steal; idle this worker forever.
-                    clock[w] = u64::MAX;
-                    continue;
-                }
-            }
+                .max_by_key(|&v| deques[v].iter().map(|t| t.cost).sum::<u64>())
+                .expect("remaining > 0 implies a non-empty deque");
+            steals += 1;
+            // Steal the biggest task (classic steal-half heuristic
+            // degenerates to steal-biggest for our coarse tasks).
+            let (bi, _) = deques[v].iter().enumerate().max_by_key(|(_, t)| t.cost).unwrap();
+            deques[v].remove(bi)
         };
         clock[w] = clock[w].saturating_add(task.cost);
         placement.push((task.id, w));
         remaining -= 1;
     }
-    let finish = clock.iter().map(|&c| if c == u64::MAX { 0 } else { c }).collect();
-    Schedule { finish, placement, steals }
+    Schedule { finish: clock, placement, steals }
 }
 
 /// Schedule dependency chains of tasks over `p` workers.
@@ -148,6 +143,11 @@ pub struct ScheduleOpts {
     /// `c − width` has fully executed. 0 means unbounded — every chain is
     /// ready at time 0, the synchronous round model.
     pub width: usize,
+    /// Liveness mask over the `p` workers: dead workers never execute (or
+    /// steal) anything. `None` means everyone is alive — the bit-identical
+    /// baseline. Homes must point at live workers (see
+    /// [`remap_dead_homes`]).
+    pub alive: Option<Vec<bool>>,
 }
 
 /// [`schedule_chains`] with explicit placement options — see
@@ -158,6 +158,10 @@ pub fn schedule_chains_opts(chains: &[Vec<Task>], p: usize, opts: &ScheduleOpts)
     assert!(p > 0, "need at least one worker");
     if let Some(h) = &opts.homes {
         assert_eq!(h.len(), chains.len(), "one home per chain");
+    }
+    if let Some(al) = &opts.alive {
+        assert_eq!(al.len(), p, "one liveness flag per worker");
+        assert!(al.iter().any(|&a| a), "need at least one live worker");
     }
     let total: usize = chains.iter().map(Vec::len).sum();
     let mut clock = vec![0u64; p];
@@ -189,6 +193,9 @@ pub fn schedule_chains_opts(chains: &[Vec<Task>], p: usize, opts: &ScheduleOpts)
             let home = opts.homes.as_ref().map_or(c % p, |h| h[c]);
             let ready = ready_at[c].max(released);
             for (w, &wclock) in clock.iter().enumerate() {
+                if opts.alive.as_ref().is_some_and(|al| !al[w]) {
+                    continue; // dead workers execute nothing
+                }
                 let pref = opts.prefs.as_ref().map_or(0, |pr| pr[c][w]);
                 let key = (wclock.max(ready), w != home, pref, w, c);
                 if best.is_none_or(|b| key < b) {
@@ -211,6 +218,21 @@ pub fn schedule_chains_opts(chains: &[Vec<Task>], p: usize, opts: &ScheduleOpts)
         placement.push((task.id, w));
     }
     Schedule { finish: clock, placement, steals }
+}
+
+/// Remap chain homes off dead workers: a dead home moves to the next live
+/// worker in cyclic rank order (deterministic). Used by the coordinator to
+/// re-home a dead partition's chains onto survivors after a failure.
+pub fn remap_dead_homes(homes: &mut [usize], alive: &[bool]) {
+    let p = alive.len();
+    for h in homes.iter_mut() {
+        if !alive[*h] {
+            *h = (1..=p)
+                .map(|d| (*h + d) % p)
+                .find(|&w| alive[w])
+                .expect("at least one live worker");
+        }
+    }
 }
 
 /// Derive locality-aware placement from per-worker load weights (one row
@@ -487,13 +509,44 @@ mod tests {
         let opts = ScheduleOpts {
             homes: Some(vec![0, 0]),
             prefs: Some(vec![vec![0, 1, 2], vec![0, 2, 1]]),
-            width: 0,
+            ..ScheduleOpts::default()
         };
         let s = schedule_chains_opts(&chains, 3, &opts);
         let worker_of = |id: u64| s.placement.iter().find(|&&(t, _)| t == id).unwrap().1;
         assert_eq!(worker_of(0), 0, "chain 0 starts on the shared home");
         assert_eq!(worker_of(10), 2, "chain 1 steals to its most affine worker");
         assert!(s.steals >= 1);
+    }
+
+    #[test]
+    fn dead_workers_are_never_scheduled() {
+        // Worker 1 is dead: its homed chain re-homes to the next live
+        // worker and nothing ever executes on it.
+        let chains: Vec<Vec<Task>> = (0u64..4)
+            .map(|c| vec![Task { id: c, cost: 3 }, Task { id: 10 + c, cost: 3 }])
+            .collect();
+        let alive = vec![true, false, true, true];
+        let mut homes: Vec<usize> = (0..4).collect();
+        remap_dead_homes(&mut homes, &alive);
+        assert_eq!(homes, vec![0, 2, 2, 3], "dead home moves to the next live rank");
+        let opts =
+            ScheduleOpts { homes: Some(homes), alive: Some(alive), ..ScheduleOpts::default() };
+        let s = schedule_chains_opts(&chains, 4, &opts);
+        assert!(s.placement.iter().all(|&(_, w)| w != 1), "dead worker executed a task");
+        assert_eq!(s.finish[1], 0);
+        assert_eq!(s.placement.len(), 8);
+    }
+
+    #[test]
+    fn all_alive_mask_is_bitwise_baseline() {
+        let chains: Vec<Vec<Task>> =
+            (0u64..3).map(|c| vec![Task { id: c, cost: 2 + c }]).collect();
+        let base = schedule_chains(&chains, 3);
+        let opts = ScheduleOpts { alive: Some(vec![true; 3]), ..ScheduleOpts::default() };
+        let s = schedule_chains_opts(&chains, 3, &opts);
+        assert_eq!(base.placement, s.placement);
+        assert_eq!(base.finish, s.finish);
+        assert_eq!(base.steals, s.steals);
     }
 
     #[test]

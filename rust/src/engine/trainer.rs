@@ -4,8 +4,9 @@
 
 use crate::cluster::ClusterSim;
 use crate::config::{ModelConfig, ModelKind, TrainConfig};
+use crate::engine::fault::FaultController;
 use crate::graph::Graph;
-use crate::metrics::StageProfile;
+use crate::metrics::{FaultStats, StageProfile};
 use crate::nn::params::ParameterManager;
 use crate::nn::ModelParams;
 use crate::partition::{Edge1D, Partitioner};
@@ -88,6 +89,9 @@ pub struct TrainReport {
     /// assert pipelined and sequential training applied bit-identical
     /// updates.
     pub latest_param_l2: f32,
+    /// Checkpoint/failure/recovery accounting — `Some` exactly when the
+    /// run's [`crate::config::FaultPlan`] was active.
+    pub fault: Option<FaultStats>,
     pub profile: StageProfile,
 }
 
@@ -159,6 +163,16 @@ impl<'a> Trainer<'a> {
         let has_val = self.g.val_mask.iter().any(|&b| b);
         let val_plan = if has_val { Some(self.eval_plan(&self.g.val_mask.clone())) } else { None };
 
+        // Fault handling (checkpoints + deterministic failure injection)
+        // is inactive by default; when active, the controller's hook after
+        // each update is side-effect-free until a checkpoint is due or a
+        // failure fires, keeping no-failure runs bit-identical.
+        let mut fault = if cfg.fault.is_active() {
+            Some(FaultController::new(&cfg.fault, self.dg.p(), &pm))
+        } else {
+            None
+        };
+
         let mut losses = Vec::with_capacity(cfg.epochs);
         let mut sim_fwd = 0.0f64;
         let mut sim_bwd = 0.0f64;
@@ -166,7 +180,11 @@ impl<'a> Trainer<'a> {
         let mut best_params: Option<ModelParams> = None;
         let mut peak_bytes = 0usize;
 
-        for step in 0..cfg.epochs {
+        // One iteration per applied update; a failure rolls the version
+        // counter back and the loop replays the lost steps on the
+        // survivors (fresh batches — the generator's stream keeps going,
+        // like a real job resuming from a checkpoint).
+        while (pm.latest_version() as usize) < cfg.epochs {
             // `Arc<ActivePlan>` handle: cached strategies (global-batch
             // always, cluster-batch after its first epoch) serve the same
             // shared plan each step — no per-step deep clone or rebuild.
@@ -177,11 +195,14 @@ impl<'a> Trainer<'a> {
             peak_bytes = peak_bytes.max(res.peak_part_bytes);
             sim_fwd += res.t_forward;
             sim_bwd += res.t_backward;
+            // The series holds one loss per *applied* update: a replayed
+            // step replaces the rolled-back entry.
+            losses.truncate(version as usize);
             losses.push(res.loss);
             pm.push_grads(&res.grads);
             pm.update(1);
 
-            if has_val && (step + 1) % cfg.eval_every == 0 {
+            if has_val && pm.latest_version() as usize % cfg.eval_every == 0 {
                 let (_, latest) = pm.fetch_latest();
                 let latest = latest.clone();
                 let logits = ex.infer_logits(
@@ -196,7 +217,17 @@ impl<'a> Trainer<'a> {
                     best_params = Some(latest);
                 }
             }
+            if let Some(fc) = fault.as_mut() {
+                // On failure the manager is rolled back; the while
+                // condition replays from the restore point.
+                fc.after_update(&mut self.sim, &mut pm);
+            }
         }
+
+        let fault_stats = fault.map(|mut fc| {
+            fc.finish(&self.sim);
+            fc.stats
+        });
 
         // Final evaluation: best-val model if tracked, else latest.
         let final_params = best_params.unwrap_or_else(|| pm.fetch_latest().1.clone());
@@ -220,6 +251,7 @@ impl<'a> Trainer<'a> {
             total_flops: self.sim.total_flops,
             peak_part_bytes: peak_bytes,
             latest_param_l2: pm.fetch_latest().1.l2_norm(),
+            fault: fault_stats,
             profile: ex.profile.clone(),
         })
     }

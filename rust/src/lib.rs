@@ -64,7 +64,8 @@ pub mod experiments;
 /// Commonly used types, re-exported for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{
-        CostModelConfig, ModelConfig, SchedulePolicy, StrategyKind, TrainConfig, UpdateMode,
+        CostModelConfig, FaultPlan, ModelConfig, SchedulePolicy, StrategyKind, TrainConfig,
+        UpdateMode,
     };
     pub use crate::coordinator::{Coordinator, PipelineReport};
     pub use crate::engine::trainer::{TrainReport, Trainer};

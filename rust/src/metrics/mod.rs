@@ -253,6 +253,45 @@ impl AsyncStats {
     }
 }
 
+/// Fault-tolerance accounting for checkpointed training (see
+/// [`crate::engine::fault::FaultController`]): checkpoints taken through
+/// the master's command log, failures injected, updates rolled back and
+/// replayed, and the modeled seconds the recovery cost — the restore
+/// broadcast, the checkpoint-state transfer to the survivors, and the
+/// replayed training steps, all charged to the modeled clock.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// Checkpoints recorded (includes the implicit step-0 snapshot, and
+    /// counts a replayed checkpoint step again).
+    pub checkpoints: u64,
+    /// Workers the master declared dead on an injected failure.
+    pub failures: u64,
+    /// Applied updates rolled back and re-run
+    /// (Σ failure step − restore point).
+    pub restored_steps: u64,
+    /// Modeled seconds from each failure until training regained the
+    /// failure step (0 exactly when `failures == 0`).
+    pub recovery_secs: f64,
+}
+
+impl FaultStats {
+    /// Mean updates lost per failure (0 when nothing failed).
+    pub fn mean_restored(&self) -> f64 {
+        if self.failures == 0 {
+            0.0
+        } else {
+            self.restored_steps as f64 / self.failures as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.checkpoints += other.checkpoints;
+        self.failures += other.failures;
+        self.restored_steps += other.restored_steps;
+        self.recovery_secs += other.recovery_secs;
+    }
+}
+
 /// Render rows as a GitHub-flavored markdown table (the experiment drivers
 /// print the paper's tables in this format).
 pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -362,6 +401,21 @@ mod tests {
         a.merge(&b);
         assert_eq!((a.pushes, a.rejected, a.replays), (12, 4, 4));
         assert!((a.replay_secs - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_stats_rates_and_merge() {
+        let mut a = FaultStats::default();
+        assert_eq!(a.mean_restored(), 0.0);
+        a.checkpoints = 3;
+        a.failures = 2;
+        a.restored_steps = 5;
+        a.recovery_secs = 0.5;
+        assert!((a.mean_restored() - 2.5).abs() < 1e-12);
+        let b = FaultStats { checkpoints: 1, failures: 1, restored_steps: 1, recovery_secs: 0.25 };
+        a.merge(&b);
+        assert_eq!((a.checkpoints, a.failures, a.restored_steps), (4, 3, 6));
+        assert!((a.recovery_secs - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -9,13 +9,15 @@ use crate::config::OptimizerKind;
 use std::collections::HashMap;
 
 /// First/second-moment state per parameter slot.
-#[derive(Default, Debug)]
+#[derive(Clone, Default, Debug)]
 struct Slot {
     m: Vec<f32>,
     v: Vec<f32>,
 }
 
-#[derive(Debug)]
+// `Clone` so the fault-tolerance checkpoint can snapshot the moments
+// alongside the parameters (`ParameterManager::snapshot`).
+#[derive(Clone, Debug)]
 pub struct Optimizer {
     pub kind: OptimizerKind,
     pub lr: f32,
@@ -41,6 +43,12 @@ impl Optimizer {
             t: 0,
             slots: HashMap::new(),
         }
+    }
+
+    /// Bytes of moment state a checkpoint must persist (0 for SGD; two
+    /// f32 moments per parameter once Adam/AdamW touched a slot).
+    pub fn state_bytes(&self) -> usize {
+        self.slots.values().map(|s| (s.m.len() + s.v.len()) * std::mem::size_of::<f32>()).sum()
     }
 
     /// Apply one update step: `params ← params - lr·direction(grads)`.

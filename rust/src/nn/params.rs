@@ -215,6 +215,60 @@ impl ParameterManager {
     pub fn live_versions(&self) -> usize {
         self.versions.len()
     }
+
+    /// Snapshot everything a failure restore needs: the latest parameter
+    /// version, the optimizer moments, the version counter, and the
+    /// staleness accounting. This is what the master's checkpoint store
+    /// holds (paper Figure 2: the master "manages checkpoints").
+    pub fn snapshot(&self) -> ParamSnapshot {
+        let (version, params) = self.fetch_latest();
+        ParamSnapshot {
+            version,
+            params: params.clone(),
+            optimizer: self.optimizer.clone(),
+            stale: (self.stale_max, self.stale_sum, self.stale_n),
+        }
+    }
+
+    /// Roll the manager back to `snap`: the version ring collapses to the
+    /// snapshot version, pending gradient accumulation is dropped (it
+    /// belonged to the lost timeline), and the optimizer moments and
+    /// staleness accounting rewind with the parameters. Training resumed
+    /// from here is bit-deterministic given the same subsequent inputs.
+    pub fn restore(&mut self, snap: &ParamSnapshot) {
+        self.versions.clear();
+        self.versions.push_back((snap.version, snap.params.clone()));
+        self.latest = snap.version;
+        self.pending = None;
+        self.pending_pushes = 0;
+        self.optimizer = snap.optimizer.clone();
+        (self.stale_max, self.stale_sum, self.stale_n) = snap.stale;
+    }
+}
+
+/// A consistent checkpoint of the [`ParameterManager`] — parameters,
+/// optimizer moments and version counter. Opaque outside this module;
+/// produced by [`ParameterManager::snapshot`] and consumed by
+/// [`ParameterManager::restore`].
+#[derive(Clone, Debug)]
+pub struct ParamSnapshot {
+    version: u64,
+    params: ModelParams,
+    optimizer: Optimizer,
+    stale: (u64, u64, u64),
+}
+
+impl ParamSnapshot {
+    /// The applied-update count (parameter version) this snapshot froze.
+    pub fn step(&self) -> u64 {
+        self.version
+    }
+
+    /// Serialized size of the checkpoint (parameters + optimizer
+    /// moments) — what the recovery path charges the modeled network for.
+    pub fn bytes(&self) -> usize {
+        self.params.bytes() + self.optimizer.state_bytes()
+    }
 }
 
 #[cfg(test)]
@@ -365,6 +419,53 @@ mod tests {
             pm.update(1);
         }
         assert_eq!(pm.try_push_grads_from(&g, 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn snapshot_restore_rewinds_bit_exactly() {
+        // Two managers with Adam (moment state matters): run both to step
+        // 2, snapshot, advance one divergent step, restore, then apply the
+        // same gradient to each — states must be bit-identical.
+        let cfg = ModelConfig::gcn(4, 4, 2, 1);
+        let mk = || {
+            ParameterManager::new(
+                ModelParams::init(&cfg, 1),
+                OptimizerKind::Adam,
+                0.1,
+                0.0,
+                UpdateMode::Synchronous,
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let mut g = a.fetch(0).unwrap().zeros_like();
+        g.decoder.b[0] = 0.7;
+        for pm in [&mut a, &mut b] {
+            pm.push_grads(&g);
+            pm.update(1);
+            pm.push_grads(&g);
+            pm.update(1);
+        }
+        let snap = a.snapshot();
+        assert_eq!(snap.step(), 2);
+        assert!(snap.bytes() > 0);
+        // `a` wanders off (extra update + a pending push), then restores.
+        let mut g2 = g.clone();
+        g2.decoder.b[0] = -3.0;
+        a.push_grads(&g2);
+        a.update(1);
+        a.push_grads(&g2);
+        a.restore(&snap);
+        assert_eq!(a.latest_version(), 2);
+        assert_eq!(a.pending_pushes(), 0, "pending grads belong to the lost timeline");
+        assert_eq!(a.live_versions(), 1, "ring collapses to the snapshot version");
+        // Same next step on both ⇒ bit-identical parameters (moments
+        // rewound too — a stale optimizer `t` would diverge Adam).
+        a.push_grads(&g);
+        a.update(1);
+        b.push_grads(&g);
+        b.update(1);
+        assert_eq!(a.fetch_latest().1, b.fetch_latest().1);
+        assert_eq!(a.latest_version(), b.latest_version());
     }
 
     #[test]

@@ -154,6 +154,18 @@ impl<'a> Parser<'a> {
             .map(Json::Num)
             .ok_or_else(|| self.err("bad number"))
     }
+    /// Four hex digits of a `\u` escape (the `\u` itself already consumed).
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.i + 4 > self.b.len() {
+            return Err(self.err("short \\u"));
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| self.err("bad \\u"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u"))?;
+        self.i += 4;
+        Ok(cp)
+    }
+
     fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut out = String::new();
@@ -174,21 +186,63 @@ impl<'a> Parser<'a> {
                         b'r' => out.push('\r'),
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
-                        b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                return Err(self.err("short \\u"));
+                        b'u' => match self.hex4()? {
+                            // High surrogate: must pair with an immediately
+                            // following `\uDC00..=\uDFFF` low surrogate to
+                            // form one astral code point (RFC 8259 §7 /
+                            // UTF-16). Decoding the halves one code unit at
+                            // a time would turn `😀` into two U+FFFD.
+                            hi @ 0xD800..=0xDBFF => {
+                                let save = self.i;
+                                let lo = if self.b.get(self.i) == Some(&b'\\')
+                                    && self.b.get(self.i + 1) == Some(&b'u')
+                                {
+                                    self.i += 2;
+                                    Some(self.hex4()?)
+                                } else {
+                                    None
+                                };
+                                match lo {
+                                    Some(lo @ 0xDC00..=0xDFFF) => {
+                                        let cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                                    }
+                                    _ => {
+                                        // Lone high surrogate → U+FFFD; a
+                                        // following non-surrogate escape
+                                        // decodes on its own.
+                                        out.push('\u{fffd}');
+                                        self.i = save;
+                                    }
+                                }
                             }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|_| self.err("bad \\u"))?;
-                            let cp =
-                                u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u"))?;
-                            self.i += 4;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                        }
+                            // Lone low surrogate → U+FFFD (documented
+                            // policy: replacement, not a parse error).
+                            0xDC00..=0xDFFF => out.push('\u{fffd}'),
+                            cp => out.push(char::from_u32(cp).unwrap_or('\u{fffd}')),
+                        },
                         _ => return Err(self.err("bad escape")),
                     }
                 }
-                _ => out.push(c as char),
+                _ if c < 0x80 => out.push(c as char),
+                _ => {
+                    // Multi-byte UTF-8 sequence: the input is a valid
+                    // `&str`, so copy the whole sequence through instead of
+                    // mangling it byte-by-byte into Latin-1.
+                    let start = self.i - 1;
+                    let len = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    if start + len > self.b.len() {
+                        return Err(self.err("bad utf-8"));
+                    }
+                    let s = std::str::from_utf8(&self.b[start..start + len])
+                        .map_err(|_| self.err("bad utf-8"))?;
+                    out.push_str(s);
+                    self.i = start + len;
+                }
             }
         }
     }
@@ -327,5 +381,41 @@ mod tests {
     fn negative_and_exponent_numbers() {
         let v = Json::parse("[-1.5e3, 0.25]").unwrap();
         assert_eq!(v.as_arr().unwrap()[0].as_f64().unwrap(), -1500.0);
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_to_astral_chars() {
+        // U+1F600 😀 as a UTF-16 surrogate pair; both hex cases.
+        let v = Json::parse(r#""\uD83D\uDE00""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+        let v = Json::parse(r#""ok \ud83d\ude00!""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "ok 😀!");
+        // BMP escapes are untouched.
+        let v = Json::parse(r#""\u00e9\u4e2d""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "é中");
+    }
+
+    #[test]
+    fn lone_surrogates_become_replacement_chars() {
+        // Lone high, lone low, and a high followed by a non-surrogate
+        // escape (which must still decode on its own).
+        assert_eq!(Json::parse(r#""\uD83D""#).unwrap().as_str().unwrap(), "\u{fffd}");
+        assert_eq!(Json::parse(r#""\uDE00""#).unwrap().as_str().unwrap(), "\u{fffd}");
+        assert_eq!(Json::parse(r#""\uD83Dx""#).unwrap().as_str().unwrap(), "\u{fffd}x");
+        assert_eq!(Json::parse(r#""\uD83DA""#).unwrap().as_str().unwrap(), "\u{fffd}A");
+    }
+
+    #[test]
+    fn non_ascii_strings_round_trip() {
+        // Raw multi-byte UTF-8 (the writer emits it unescaped) must
+        // survive parse → print → parse unchanged — including astral
+        // chars, which the old byte-at-a-time reader mangled.
+        let s = Json::Str("héllo 中文 😀".to_string());
+        let reparsed = Json::parse(&s.to_string()).unwrap();
+        assert_eq!(s, reparsed);
+        // And an escaped pair re-parses equal to the raw form.
+        let escaped = Json::parse(r#""\uD83D\uDE00""#).unwrap();
+        let raw = Json::parse("\"😀\"").unwrap();
+        assert_eq!(escaped, raw);
     }
 }

@@ -140,6 +140,39 @@ fn async_rejection_replay_deterministic_and_bounded() {
 }
 
 #[test]
+fn async_replay_records_the_applied_loss() {
+    // At bound 0 every steady-state push is rejected and replayed against
+    // the freshest parameters, so each *applied* gradient — and its loss —
+    // is exactly what the sequential trainer computes on the same plan
+    // sequence: the loss series and the parameter fingerprint must match
+    // `Trainer::run` bit-for-bit at any width. (Regression: the series
+    // used to keep the stale admission-time loss, so the reported curve
+    // misstated what the run actually optimized.)
+    let g = gen::citation_like("citeseer", 6);
+    let seq = {
+        let mut t = Trainer::new(&g, base_cfg(&g, StrategyKind::mini(0.3), 10), 4).unwrap();
+        t.run().unwrap()
+    };
+    for width in [2usize, 4] {
+        let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), 10);
+        cfg.pipeline_width = width;
+        cfg.update_mode = UpdateMode::Asynchronous { max_staleness: 0 };
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        let r = t.train_pipelined().unwrap();
+        assert!(r.async_stats.unwrap().replays > 0, "width {width} at bound 0 must replay");
+        assert_eq!(
+            seq.losses, r.train.losses,
+            "width {width}: the series must hold the applied (replayed) losses"
+        );
+        assert_eq!(
+            seq.latest_param_l2.to_bits(),
+            r.train.latest_param_l2.to_bits(),
+            "width {width}: bound-0 replay applies the sequential gradients"
+        );
+    }
+}
+
+#[test]
 fn async_window_strictly_beats_synchronous_makespan() {
     // Matched step count, matched width, staleness bound wide enough that
     // nothing replays: the barrier-free sliding window must strictly beat

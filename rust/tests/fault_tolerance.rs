@@ -1,0 +1,311 @@
+//! Fault-tolerance suite (ISSUE 5): the Master control plane wired into
+//! real training.
+//!
+//! Pins the subsystem's load-bearing invariants:
+//!
+//! * **Checkpointing is free when nothing fails** — with `checkpoint_every`
+//!   set and an empty failure schedule, the sequential trainer, the
+//!   synchronous pipelined coordinator and the async sliding window are
+//!   all **bit-identical** to their fault-free selves (losses, parameter
+//!   fingerprint, modeled clock, traffic, FLOPs): the golden baselines
+//!   hold with the checkpoint subsystem on.
+//! * **Determinism survives recovery** — with the same failure schedule,
+//!   two identically-seeded runs are bit-identical to each other, for
+//!   explicit and for seeded schedules (qcheck), across all three
+//!   training loops.
+//! * **Recovery is charged and bounded** — `FaultStats.recovery_secs > 0`
+//!   lands on the modeled clock, `restore_point` never returns a step
+//!   after the failure, and the final accuracy of a failure run stays
+//!   within 1% absolute of the failure-free run at matched applied-update
+//!   count.
+//! * The master shrugs at stray ranks instead of panicking.
+
+use graphtheta::cluster::master::Master;
+use graphtheta::config::{FaultPlan, ModelConfig, StrategyKind, TrainConfig, UpdateMode};
+use graphtheta::engine::trainer::{TrainReport, Trainer};
+use graphtheta::graph::{gen, Graph};
+use graphtheta::util::qcheck::{qcheck, qcheck_cases};
+
+fn base_cfg(g: &Graph, strategy: StrategyKind, epochs: usize) -> TrainConfig {
+    TrainConfig::builder()
+        .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+        .strategy(strategy)
+        .epochs(epochs)
+        .eval_every(5)
+        .lr(0.05)
+        .seed(7)
+        .build()
+}
+
+fn assert_reports_bitwise_equal(a: &TrainReport, b: &TrainReport, what: &str) {
+    assert_eq!(a.losses, b.losses, "{what}: loss series diverged");
+    assert_eq!(
+        a.latest_param_l2.to_bits(),
+        b.latest_param_l2.to_bits(),
+        "{what}: parameter fingerprint diverged"
+    );
+    assert_eq!(a.sim_total.to_bits(), b.sim_total.to_bits(), "{what}: modeled clock diverged");
+    assert_eq!(
+        a.test_accuracy.to_bits(),
+        b.test_accuracy.to_bits(),
+        "{what}: test accuracy diverged"
+    );
+    assert_eq!(a.total_flops, b.total_flops, "{what}: FLOP accounting diverged");
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: traffic accounting diverged");
+}
+
+#[test]
+fn checkpointing_without_failures_is_bitwise_golden() {
+    // Golden-suite addition: checkpoint-enabled/no-failure runs must be
+    // bitwise-equal to `Trainer::run` and to both pipelined modes.
+    let g = gen::citation_like("cora", 7);
+    let with_ckpt = |mut cfg: TrainConfig| {
+        cfg.fault = FaultPlan { checkpoint_every: 2, fail_at: Vec::new() };
+        cfg
+    };
+
+    // Sequential.
+    let plain = {
+        let mut t = Trainer::new(&g, base_cfg(&g, StrategyKind::mini(0.3), 8), 4).unwrap();
+        t.run().unwrap()
+    };
+    let ckpt = {
+        let mut t =
+            Trainer::new(&g, with_ckpt(base_cfg(&g, StrategyKind::mini(0.3), 8)), 4).unwrap();
+        t.run().unwrap()
+    };
+    assert_reports_bitwise_equal(&plain, &ckpt, "sequential");
+    let fs = ckpt.fault.expect("active plan reports stats");
+    // Implicit step-0 snapshot + every 2nd of 8 updates.
+    assert_eq!(fs.checkpoints, 5);
+    assert_eq!(fs.failures, 0);
+    assert_eq!(fs.restored_steps, 0);
+    assert_eq!(fs.recovery_secs, 0.0);
+    assert!(plain.fault.is_none(), "inactive plan reports no stats");
+
+    // Synchronous rounds and the async sliding window.
+    for (name, mode, width) in [
+        ("sync w4", UpdateMode::Synchronous, 4usize),
+        ("async w4 s3", UpdateMode::Asynchronous { max_staleness: 3 }, 4),
+    ] {
+        let mk = |fault: bool| {
+            let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), 8);
+            cfg.pipeline_width = width;
+            cfg.update_mode = mode;
+            if fault {
+                cfg = with_ckpt(cfg);
+            }
+            let mut t = Trainer::new(&g, cfg, 4).unwrap();
+            t.train_pipelined().unwrap()
+        };
+        let plain = mk(false);
+        let ckpt = mk(true);
+        assert_reports_bitwise_equal(&plain.train, &ckpt.train, name);
+        assert_eq!(plain.overlap, ckpt.overlap, "{name}: overlap accounting diverged");
+        let fs = ckpt.train.fault.expect("active plan reports stats");
+        assert_eq!(fs.failures, 0, "{name}");
+        assert!(fs.checkpoints > 0, "{name}");
+        assert_eq!(fs.recovery_secs, 0.0, "{name}");
+    }
+}
+
+#[test]
+fn injected_failure_recovers_deterministically() {
+    let g = gen::citation_like("citeseer", 6);
+    let run = || {
+        let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), 12);
+        cfg.fault = FaultPlan { checkpoint_every: 4, fail_at: vec![(6, 1)] };
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_reports_bitwise_equal(&a, &b, "failure run");
+    let fs = a.fault.unwrap();
+    assert_eq!(fs, b.fault.unwrap(), "fault stats must be deterministic");
+    assert_eq!(fs.failures, 1);
+    assert_eq!(fs.restored_steps, 2, "failure at 6 restores to the checkpoint at 4");
+    assert!(fs.recovery_secs > 0.0, "recovery must charge the modeled clock");
+    assert_eq!(a.losses.len(), 12, "one loss per applied update");
+
+    // The failure-free twin finishes the same applied-update count in
+    // less modeled time (the failure run paid restore + replay + a
+    // degraded two-partitions-per-survivor tail).
+    let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), 12);
+    cfg.fault = FaultPlan { checkpoint_every: 4, fail_at: Vec::new() };
+    let mut t = Trainer::new(&g, cfg, 4).unwrap();
+    let free = t.run().unwrap();
+    assert!(
+        a.sim_total > free.sim_total,
+        "failure run {} not slower than failure-free {}",
+        a.sim_total,
+        free.sim_total
+    );
+}
+
+#[test]
+fn pipelined_and_async_failure_runs_are_deterministic() {
+    let g = gen::citation_like("citeseer", 6);
+    for (name, mode, width, window) in [
+        ("sync w4 a2", UpdateMode::Synchronous, 4usize, 2usize),
+        ("async w3 s1", UpdateMode::Asynchronous { max_staleness: 1 }, 3, 1),
+    ] {
+        let run = || {
+            let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), 12);
+            cfg.pipeline_width = width;
+            cfg.accum_window = window;
+            cfg.update_mode = mode;
+            cfg.fault = FaultPlan { checkpoint_every: 2, fail_at: vec![(3, 0), (5, 2)] };
+            let mut t = Trainer::new(&g, cfg, 4).unwrap();
+            t.train_pipelined().unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_reports_bitwise_equal(&a.train, &b.train, name);
+        let fa = a.train.fault.unwrap();
+        assert_eq!(fa, b.train.fault.unwrap(), "{name}: fault stats diverged");
+        assert_eq!(fa.failures, 2, "{name}");
+        assert!(fa.recovery_secs > 0.0, "{name}");
+        assert_eq!(a.overlap.steals, b.overlap.steals, "{name}: schedule diverged");
+        assert_eq!(a.train.losses.len(), 12, "{name}: one loss per applied update");
+        if let (Some(sa), Some(sb)) = (a.async_stats, b.async_stats) {
+            assert_eq!(sa, sb, "{name}: async stats diverged");
+        }
+    }
+}
+
+#[test]
+fn failure_accuracy_within_one_percent_at_matched_updates() {
+    // Acceptance criterion: the failure run's final test accuracy stays
+    // within 1% absolute of the failure-free run at matched
+    // applied-update count (the replayed steps train on fresh batches, so
+    // the runs differ by ordinary mini-batch noise, not by lost updates).
+    let g = gen::citation_like("cora", 7);
+    let cfg = |fail_at: Vec<(u64, usize)>| {
+        TrainConfig::builder()
+            .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+            .strategy(StrategyKind::mini(0.5))
+            .epochs(60)
+            .eval_every(5)
+            .lr(0.03)
+            .seed(7)
+            .fault(FaultPlan { checkpoint_every: 10, fail_at })
+            .build()
+    };
+    let free = {
+        let mut t = Trainer::new(&g, cfg(Vec::new()), 4).unwrap();
+        t.run().unwrap()
+    };
+    let failed = {
+        let mut t = Trainer::new(&g, cfg(vec![(23, 2)]), 4).unwrap();
+        t.run().unwrap()
+    };
+    let fs = failed.fault.unwrap();
+    assert_eq!(fs.failures, 1);
+    assert_eq!(fs.restored_steps, 3, "failure at 23 restores to the checkpoint at 20");
+    assert!(fs.recovery_secs > 0.0);
+    assert_eq!(failed.losses.len(), 60, "matched applied-update count");
+    let (a_free, a_fail) = (free.test_accuracy, failed.test_accuracy);
+    assert!(a_free > 0.45, "failure-free run failed to learn: {a_free}");
+    assert!(
+        (a_free - a_fail).abs() <= 0.01 + 1e-9,
+        "accuracy drifted: failure-free {a_free} vs failure {a_fail}"
+    );
+}
+
+#[test]
+fn seeded_schedules_recover_deterministically() {
+    // qcheck property: for any seeded failure schedule, recovery
+    // determinism holds (two identically-seeded runs are bit-identical)
+    // and the run still applies exactly `epochs` updates.
+    let g = gen::citation_like("citeseer", 6);
+    qcheck_cases(
+        "seeded-fault-determinism",
+        5,
+        |r| {
+            let seed = 1 + r.below(1000) as u64;
+            let failures = 1 + r.below(2);
+            let checkpoint_every = 1 + r.below(4);
+            (seed, failures, checkpoint_every)
+        },
+        |&(seed, failures, checkpoint_every)| {
+            let epochs = 9usize;
+            let plan = FaultPlan::seeded(seed, failures, epochs as u64 - 1, 4, checkpoint_every);
+            let run = || {
+                let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), epochs);
+                cfg.seed = seed;
+                cfg.fault = plan.clone();
+                let mut t = Trainer::new(&g, cfg, 4).map_err(|e| e.to_string())?;
+                t.run().map_err(|e| e.to_string())
+            };
+            let a = run()?;
+            let b = run()?;
+            if a.losses != b.losses {
+                return Err("loss series not deterministic".into());
+            }
+            if a.sim_total.to_bits() != b.sim_total.to_bits() {
+                return Err("modeled clock not deterministic".into());
+            }
+            if a.latest_param_l2.to_bits() != b.latest_param_l2.to_bits() {
+                return Err("parameters not deterministic".into());
+            }
+            let (fa, fb) = (a.fault.unwrap(), b.fault.unwrap());
+            if fa != fb {
+                return Err(format!("fault stats diverged: {fa:?} vs {fb:?}"));
+            }
+            if fa.failures > 0 && fa.recovery_secs <= 0.0 {
+                return Err("failures without recovery cost".into());
+            }
+            if a.losses.len() != epochs {
+                return Err(format!("expected {epochs} applied updates, got {}", a.losses.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn restore_point_never_returns_a_step_after_the_failure() {
+    // qcheck property on the master's checkpoint registry itself.
+    qcheck(
+        "restore-point-bound",
+        |r| {
+            let n = r.below(8);
+            let ckpts: Vec<u64> = (0..n).map(|_| r.below(100) as u64).collect();
+            let query = r.below(100) as u64;
+            (ckpts, query)
+        },
+        |(ckpts, query)| {
+            let mut m = Master::new(1);
+            for &c in ckpts {
+                m.record_checkpoint(c);
+            }
+            match m.restore_point(*query) {
+                Some(s) if s > *query => {
+                    Err(format!("restore_point({query}) returned later step {s}"))
+                }
+                Some(s) if !ckpts.contains(&s) => Err(format!("unknown checkpoint {s}")),
+                None if ckpts.iter().any(|&c| c <= *query) => {
+                    Err("missed an eligible checkpoint".into())
+                }
+                _ => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn stray_ranks_in_the_schedule_are_harmless() {
+    // A schedule naming ranks the cluster never had must neither panic
+    // nor kill anyone — the master counts and ignores them.
+    let g = gen::citation_like("citeseer", 6);
+    let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), 8);
+    cfg.fault = FaultPlan { checkpoint_every: 2, fail_at: vec![(3, 99), (5, usize::MAX)] };
+    let mut t = Trainer::new(&g, cfg, 4).unwrap();
+    let r = t.run().unwrap();
+    let fs = r.fault.unwrap();
+    assert_eq!(fs.failures, 0, "stray ranks must not count as failures");
+    assert_eq!(fs.restored_steps, 0);
+    assert_eq!(fs.recovery_secs, 0.0);
+    assert_eq!(r.losses.len(), 8);
+}
