@@ -131,6 +131,37 @@ impl Master {
         self.health.get(w).copied().unwrap_or(Health::Dead)
     }
 
+    /// An operator-directed re-admission of a [`Health::Dead`] worker at a
+    /// checkpoint boundary. Unlike a stray heartbeat (which can never
+    /// revive the dead — see [`Master::heartbeat`]), a rejoin is an
+    /// explicit control-plane decision. Returns whether `w` actually
+    /// transitioned back to [`Health::Alive`]; live or suspect workers and
+    /// out-of-cluster ranks are left unchanged (the latter counted).
+    pub fn rejoin(&mut self, w: usize) -> bool {
+        if w >= self.p {
+            self.unknown_ranks += 1;
+            return false;
+        }
+        if self.health[w] != Health::Dead {
+            return false;
+        }
+        self.health[w] = Health::Alive;
+        self.heartbeat_misses[w] = 0;
+        true
+    }
+
+    /// Per-worker mask of currently [`Health::Suspect`] workers, or `None`
+    /// when nobody is suspected. The scheduler consumes this as a
+    /// steal-avoidance mask: a worker that has missed heartbeats keeps its
+    /// own chains but is not handed extra work before the verdict.
+    pub fn suspects(&self) -> Option<Vec<bool>> {
+        if self.health.iter().any(|h| matches!(h, Health::Suspect(_))) {
+            Some(self.health.iter().map(|h| matches!(h, Health::Suspect(_))).collect())
+        } else {
+            None
+        }
+    }
+
     pub fn live_workers(&self) -> usize {
         self.health.iter().filter(|&&h| h != Health::Dead).count()
     }
@@ -219,6 +250,43 @@ mod tests {
         // The charged broadcast still works alongside it.
         m.broadcast(Command::Restore { step: 4 }, &mut sim);
         assert_eq!(sim.total_msgs, 2);
+    }
+
+    #[test]
+    fn rejoin_revives_only_the_dead() {
+        let mut m = Master::new(3);
+        for _ in 0..3 {
+            m.miss(1);
+        }
+        assert_eq!(m.health_of(1), Health::Dead);
+        assert!(m.rejoin(1));
+        assert_eq!(m.health_of(1), Health::Alive);
+        assert_eq!(m.live_workers(), 3);
+        // Rejoining a live worker is a no-op; stray ranks are counted.
+        assert!(!m.rejoin(0));
+        assert!(!m.rejoin(9));
+        assert_eq!(m.unknown_ranks, 1);
+        // A suspect is not dead — rejoin leaves the state machine alone.
+        m.miss(2);
+        assert!(!m.rejoin(2));
+        assert_eq!(m.health_of(2), Health::Suspect(1));
+    }
+
+    #[test]
+    fn suspects_mask_tracks_missed_heartbeats() {
+        let mut m = Master::new(3);
+        assert!(m.suspects().is_none());
+        m.miss(1);
+        assert_eq!(m.suspects(), Some(vec![false, true, false]));
+        // Death removes the worker from the suspect mask entirely.
+        m.miss(1);
+        m.miss(1);
+        assert!(m.suspects().is_none());
+        // A heartbeat clears suspicion.
+        m.miss(0);
+        assert_eq!(m.suspects(), Some(vec![true, false, false]));
+        m.heartbeat(0);
+        assert!(m.suspects().is_none());
     }
 
     #[test]

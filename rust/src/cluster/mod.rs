@@ -31,11 +31,43 @@
 //! is layered on top by [`crate::coordinator`], which reads phase
 //! durations off this clock (via [`ClusterSim::mark`]/[`ClusterSim::since`]
 //! and the executor's per-phase times) and never mutates it.
+//!
+//! # Network and clock model under an unreliable network
+//!
+//! An installed [`NetPlan`] (see [`ClusterSim::set_net`]) layers
+//! deterministic unreliability under [`ClusterSim::send`]. Each remote
+//! message draws per-attempt losses from a pure hash of
+//! `(seed, message sequence, attempt, link)`; a lost attempt costs the
+//! sender one `timeout` plus capped exponential backoff before the
+//! retransmission. What **is** charged to the modeled clock:
+//!
+//! - retransmitted bytes and messages — they re-enter the superstep's
+//!   communication term (and the `total_bytes`/`total_msgs` ledgers);
+//! - the sender's accumulated timeout + backoff wait — added to its
+//!   superstep time *undiscounted* by the overlap factor `σ`, because a
+//!   worker waiting on an ack is stalled, not computing;
+//! - per-worker slowdown multipliers (scaling a worker's whole superstep
+//!   term) and transient latency-spike windows (scaling the comm term of
+//!   every worker while open).
+//!
+//! What is **not** charged: the numerics. Payloads always arrive —
+//! delivery is forced after `max_retries` failed attempts — so parameters,
+//! gradients and losses are bitwise identical at any loss rate below 1.0;
+//! only the clock, the byte/message totals, and
+//! [`CommStats`](crate::metrics::CommStats) (sends, retries, timeouts,
+//! retransmitted bytes, backoff seconds — [`ClusterSim::comm`]) move.
+//! Master/control-plane sends (`from ≥ p`) retry too, but their wait slows
+//! no worker; only the totals see the copies. With no plan installed every
+//! path above compiles down to the original perfect-network arithmetic,
+//! bit-for-bit.
 
 pub mod master;
+pub mod net;
+
+pub use net::NetPlan;
 
 use crate::config::CostModelConfig;
-use crate::metrics::{measured, Ledger};
+use crate::metrics::{measured, CommStats, Ledger};
 
 /// Per-worker accumulators for the current superstep.
 #[derive(Clone, Copy, Debug, Default)]
@@ -66,6 +98,15 @@ pub struct ClusterSim {
     /// OS threads [`ClusterSim::exec_batch`] spreads logical workers over
     /// (1 = serial). Defaults to the machine's available parallelism.
     pub exec_threads: usize,
+    /// Unreliable-network model, if one is installed (see the module docs'
+    /// network section). `None` is the bit-identical perfect-network path.
+    net: Option<NetPlan>,
+    /// Per-worker timeout + backoff seconds accumulated this superstep.
+    wait: Vec<f64>,
+    /// Logical remote-message sequence number (loss-draw coordinate).
+    net_seq: u64,
+    /// Retry/timeout/backoff counters (all zero without a [`NetPlan`]).
+    pub comm: CommStats,
 }
 
 impl ClusterSim {
@@ -81,6 +122,10 @@ impl ClusterSim {
             total_bytes: 0,
             total_msgs: 0,
             exec_threads: default_exec_threads(),
+            net: None,
+            wait: vec![0.0; p],
+            net_seq: 0,
+            comm: CommStats::default(),
         }
     }
 
@@ -88,6 +133,18 @@ impl ClusterSim {
     /// (1 forces serial execution; results are identical either way).
     pub fn set_threads(&mut self, threads: usize) {
         self.exec_threads = threads.max(1);
+    }
+
+    /// Install an unreliable-network plan (module docs, network section).
+    /// Inactive plans are discarded, keeping the simulator on the
+    /// perfect-network path that is bit-identical to the golden baselines.
+    pub fn set_net(&mut self, plan: NetPlan) {
+        self.net = if plan.is_active() { Some(plan) } else { None };
+    }
+
+    /// The installed network plan, if any.
+    pub fn net(&self) -> Option<&NetPlan> {
+        self.net.as_ref()
     }
 
     /// Physical worker currently executing partition `rank` (identity
@@ -178,38 +235,98 @@ impl ClusterSim {
     /// counted in the totals but does not slow any worker. Partitions are
     /// resolved to their physical owner first, so messages between
     /// co-homed partitions (after failure re-homing) are local and free.
+    ///
+    /// Under an installed [`NetPlan`] the message may need retransmissions:
+    /// each lost attempt charges the sender one timeout plus backoff and
+    /// re-sends the payload (module docs, network section). The payload is
+    /// delivered either way — retries are modeled cost, never data loss.
     pub fn send(&mut self, from: usize, to: usize, bytes: u64) {
         let (from, to) = (self.owner_of(from), self.owner_of(to));
         if from == to {
             return; // local move, free
         }
+        // Extra delivery attempts beyond the first, under a NetPlan.
+        let mut retries: u64 = 0;
+        if self.net.is_some() {
+            self.comm.sends += 1;
+            let seq = self.net_seq;
+            self.net_seq += 1;
+            let (lost, wait, backoff) = {
+                let net = self.net.as_ref().expect("net checked above");
+                let mut lost = 0u32;
+                let mut wait = 0.0f64;
+                let mut backoff = 0.0f64;
+                while lost < net.max_retries && net.dropped(seq, lost, from, to) {
+                    let b = net.backoff(lost);
+                    wait += net.timeout + b;
+                    backoff += b;
+                    lost += 1;
+                }
+                (lost, wait, backoff)
+            };
+            if lost > 0 {
+                retries = lost as u64;
+                self.comm.timeouts += 1;
+                self.comm.retries += retries;
+                self.comm.retrans_bytes += bytes * retries;
+                self.comm.backoff_secs += backoff;
+                if from < self.p {
+                    self.wait[from] += wait;
+                }
+            }
+        }
+        let copies = 1 + retries;
         if from < self.p {
-            self.acc[from].bytes_out += bytes;
-            self.acc[from].msgs_out += 1;
+            self.acc[from].bytes_out += bytes * copies;
+            self.acc[from].msgs_out += copies;
         }
         let _ = to;
-        self.total_bytes += bytes;
-        self.total_msgs += 1;
+        self.total_bytes += bytes * copies;
+        self.total_msgs += copies;
     }
 
     /// Close the current superstep: advance the modeled clock by the
     /// slowest worker's time and reset the per-worker accumulators.
     /// Returns the superstep's duration.
+    ///
+    /// Under a [`NetPlan`], a worker's time additionally carries its
+    /// slowdown multiplier, any open latency-spike window on the comm
+    /// term, and the timeout/backoff seconds its sends accumulated (not
+    /// discounted by overlap — a sender waiting on an ack is stalled).
     pub fn superstep(&mut self) -> f64 {
         let c = &self.cfg;
         let mut t_max = 0.0f64;
-        for a in &self.acc {
-            let compute = a.flops as f64 / c.worker_flops;
-            let comm = a.bytes_out as f64 / c.bandwidth + c.latency * a.msgs_out as f64;
-            let t = compute + (1.0 - c.overlap) * comm;
-            if t > t_max {
-                t_max = t;
+        match &self.net {
+            None => {
+                for a in &self.acc {
+                    let compute = a.flops as f64 / c.worker_flops;
+                    let comm =
+                        a.bytes_out as f64 / c.bandwidth + c.latency * a.msgs_out as f64;
+                    let t = compute + (1.0 - c.overlap) * comm;
+                    if t > t_max {
+                        t_max = t;
+                    }
+                }
+            }
+            Some(net) => {
+                let spike = net.spike_factor(self.supersteps);
+                for (w, a) in self.acc.iter().enumerate() {
+                    let compute = a.flops as f64 / c.worker_flops;
+                    let comm =
+                        a.bytes_out as f64 / c.bandwidth + c.latency * a.msgs_out as f64;
+                    let t = net.slow_factor(w) * (compute + (1.0 - c.overlap) * comm * spike)
+                        + self.wait[w];
+                    if t > t_max {
+                        t_max = t;
+                    }
+                }
             }
         }
         let dt = t_max + c.superstep_overhead;
         self.clock += dt;
         self.supersteps += 1;
         self.acc.iter_mut().for_each(|a| *a = WorkerAcc::default());
+        self.wait.iter_mut().for_each(|x| *x = 0.0);
         dt
     }
 
@@ -245,6 +362,9 @@ impl ClusterSim {
         self.total_flops = 0;
         self.total_bytes = 0;
         self.total_msgs = 0;
+        self.wait.iter_mut().for_each(|x| *x = 0.0);
+        self.net_seq = 0;
+        self.comm = CommStats::default();
     }
 }
 
@@ -421,5 +541,104 @@ mod tests {
         sim.exec(0, || add_flops(3_000_000));
         sim.exec(1, || add_flops(1_000_000));
         assert!((sim.current_imbalance() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inactive_net_plan_is_never_installed() {
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.set_net(NetPlan::default());
+        assert!(sim.net().is_none());
+        sim.send(0, 1, 1000);
+        assert_eq!(sim.comm, CommStats::default());
+    }
+
+    #[test]
+    fn lossy_sends_retry_and_charge_only_the_clock() {
+        // Loss is capped at 0.95 per link, so individual sends may still
+        // deliver first try — assert the structural invariants over many.
+        let n = 200u64;
+        let mut lossy = ClusterSim::new(2, cfg());
+        lossy.set_net(NetPlan { loss: 1.0, seed: 1, ..NetPlan::default() });
+        let mut clean = ClusterSim::new(2, cfg());
+        for _ in 0..n {
+            lossy.send(0, 1, 1000);
+            clean.send(0, 1, 1000);
+        }
+        let comm = lossy.comm;
+        assert_eq!(comm.sends, n);
+        assert!(comm.retries > 0, "≥ 0.5 loss per attempt never retried");
+        assert!(comm.timeouts > 0 && comm.timeouts <= comm.sends);
+        assert_eq!(comm.retrans_bytes, 1000 * comm.retries);
+        assert!(comm.backoff_secs > 0.0);
+        // Every payload delivered both ways; only copies and time differ.
+        assert_eq!(lossy.total_bytes, 1000 * (n + comm.retries));
+        assert_eq!(lossy.total_msgs, n + comm.retries);
+        assert_eq!(clean.total_bytes, 1000 * n);
+        let (dl, dc) = (lossy.superstep(), clean.superstep());
+        assert!(dl > dc, "lossy superstep {dl} ≤ clean {dc}");
+        // Wait resets with the superstep: an idle superstep is overhead-only.
+        let idle = lossy.superstep();
+        assert!((idle - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_loss_net_plan_keeps_the_clock_bitwise() {
+        // A plan active only via straggler_factor draws no losses and must
+        // not move the clock at all relative to no plan.
+        let run = |with_net: bool| {
+            let mut sim = ClusterSim::new(3, cfg());
+            if with_net {
+                sim.set_net(NetPlan { straggler_factor: 2.0, ..NetPlan::default() });
+                assert!(sim.net().is_some());
+            }
+            sim.exec(0, || add_flops(2_000_000));
+            sim.send(0, 1, 12_345);
+            sim.send(2, 0, 777);
+            sim.superstep();
+            sim.clock
+        };
+        assert_eq!(run(false).to_bits(), run(true).to_bits());
+    }
+
+    #[test]
+    fn slowdown_and_spikes_scale_the_superstep() {
+        let base = {
+            let mut sim = ClusterSim::new(2, cfg());
+            sim.exec(0, || add_flops(1_000_000));
+            sim.superstep()
+        };
+        // Worker 0 slowed 3×: its compute term triples.
+        let slow = {
+            let mut sim = ClusterSim::new(2, cfg());
+            sim.set_net(NetPlan { slowdown: vec![(0, 3.0)], ..NetPlan::default() });
+            sim.exec(0, || add_flops(1_000_000));
+            sim.superstep()
+        };
+        let want = 3.0 * 1_000_000.0 / 1e9 + 1e-3;
+        assert!((slow - want).abs() < 1e-9, "slow {slow} want {want}");
+        assert!(slow > base);
+        // A spike window multiplies the comm term while open, then closes.
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.set_net(NetPlan { spikes: vec![(0, 1, 4.0)], ..NetPlan::default() });
+        sim.send(0, 1, 1_000_000);
+        let spiked = sim.superstep();
+        let want = 0.5 * 4.0 * (1_000_000.0 / 1e9 + 1e-6) + 1e-3;
+        assert!((spiked - want).abs() < 1e-9, "spiked {spiked} want {want}");
+        sim.send(0, 1, 1_000_000);
+        let after = sim.superstep(); // superstep 1: window closed
+        assert!(after < spiked);
+    }
+
+    #[test]
+    fn reset_clears_network_state() {
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.set_net(NetPlan { loss: 1.0, ..NetPlan::default() });
+        sim.send(0, 1, 1000);
+        assert!(sim.comm.sends > 0);
+        sim.reset();
+        assert_eq!(sim.comm, CommStats::default());
+        assert_eq!(sim.net_seq, 0);
+        assert!(sim.wait.iter().all(|&x| x == 0.0));
+        assert!(sim.net().is_some(), "the plan itself survives a reset");
     }
 }

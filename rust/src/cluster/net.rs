@@ -1,0 +1,324 @@
+//! Deterministic unreliable-network model for the cluster simulator.
+//!
+//! The paper's headline run is 1,024 small dockers on a shared Alipay
+//! cluster (§V) — an environment of lost messages, transient latency
+//! spikes, and chronically slow workers. A [`NetPlan`] layers exactly that
+//! under [`ClusterSim::send`](crate::cluster::ClusterSim::send) and the
+//! superstep clock, while keeping the repo's core determinism contract:
+//! **the plan only moves the modeled clock**. Losses are drawn from a pure
+//! hash of `(seed, message sequence, attempt, link)` — not a stateful RNG —
+//! so the simulated numerics never observe the network, delivery is forced
+//! after `max_retries` failed attempts (training terminates at any loss
+//! rate below 1.0), and a lossy run's parameters are bitwise identical to
+//! the zero-loss run's. Only [`CommStats`](crate::metrics::CommStats), the
+//! clock, and byte totals differ.
+
+use crate::config::ConfigError;
+use crate::util::{hash64, hash64_pair};
+use crate::util::rng::Rng;
+
+/// A seeded description of everything wrong with the network: per-link
+/// message-loss probability (with deterministic per-link jitter), transient
+/// latency-spike windows, per-worker slowdown multipliers, and the retry /
+/// timeout / capped-exponential-backoff policy the senders follow.
+///
+/// The default plan is *inactive* ([`NetPlan::is_active`] is `false`) and
+/// is never installed into the simulator, keeping the perfect-network
+/// clock path bit-identical to the pre-NetPlan golden baselines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetPlan {
+    /// Seed for all loss draws and per-link jitter.
+    pub seed: u64,
+    /// Base per-attempt message-loss probability in `[0, 1)`; each directed
+    /// link jitters this by a deterministic factor in `[0.5, 1.5)`.
+    pub loss: f64,
+    /// Seconds a sender waits before declaring an attempt lost.
+    pub timeout: f64,
+    /// First retry's backoff in seconds; doubles per attempt.
+    pub backoff_base: f64,
+    /// Upper bound on a single backoff interval, in seconds.
+    pub backoff_cap: f64,
+    /// Attempts after which delivery is forced (retries are modeled cost,
+    /// never data loss — see the module docs).
+    pub max_retries: u32,
+    /// `(worker, factor)` compute/comm slowdown multipliers (factor > 1 is
+    /// slower). Workers not listed run at full speed.
+    pub slowdown: Vec<(usize, f64)>,
+    /// `(start, end, factor)` latency-spike windows over superstep indices
+    /// (`start ≤ superstep < end`): the comm term of every worker is
+    /// multiplied by `factor` while a window is open.
+    pub spikes: Vec<(u64, u64, f64)>,
+    /// Straggler-mitigation trigger for the pipelined coordinator: a worker
+    /// whose modeled round finish exceeds the median by this factor has its
+    /// queued chains shed. `0` disables mitigation.
+    pub straggler_factor: f64,
+}
+
+impl Default for NetPlan {
+    fn default() -> NetPlan {
+        NetPlan {
+            seed: 0,
+            loss: 0.0,
+            timeout: 1e-3,
+            backoff_base: 5e-4,
+            backoff_cap: 8e-3,
+            max_retries: 5,
+            slowdown: Vec::new(),
+            spikes: Vec::new(),
+            straggler_factor: 0.0,
+        }
+    }
+}
+
+impl NetPlan {
+    /// Whether the plan perturbs anything. Inactive plans are not installed
+    /// into the simulator at all (the bit-identical perfect-network path).
+    pub fn is_active(&self) -> bool {
+        self.loss > 0.0
+            || !self.slowdown.is_empty()
+            || !self.spikes.is_empty()
+            || self.straggler_factor > 0.0
+    }
+
+    /// A deterministic randomized plan for a `p`-worker cluster: moderate
+    /// base loss, one or two slowed workers, one latency-spike window.
+    pub fn seeded(seed: u64, p: usize) -> NetPlan {
+        let mut rng = Rng::new(seed ^ 0x4E57);
+        let loss = 0.02 + 0.18 * rng.f64();
+        let mut workers: Vec<usize> = (0..p).collect();
+        rng.shuffle(&mut workers);
+        let slowed = (1 + rng.below(2)).min(p);
+        let slowdown: Vec<(usize, f64)> = workers
+            .into_iter()
+            .take(slowed)
+            .map(|w| (w, 1.5 + 2.5 * rng.f64()))
+            .collect();
+        let start = rng.below(16) as u64;
+        let len = 4 + rng.below(12) as u64;
+        let spikes = vec![(start, start + len, 2.0 + 3.0 * rng.f64())];
+        NetPlan { seed, loss, slowdown, spikes, ..NetPlan::default() }
+    }
+
+    /// Loss probability of the directed link `from → to`: the base rate
+    /// jittered by a deterministic per-link factor in `[0.5, 1.5)`, capped
+    /// below certain loss so forced delivery stays an edge case.
+    pub fn loss_of(&self, from: usize, to: usize) -> f64 {
+        if self.loss <= 0.0 {
+            return 0.0;
+        }
+        let h = hash64_pair(self.seed ^ 0x11CC, ((from as u64) << 32) | to as u64);
+        let jitter = 0.5 + u01(h);
+        (self.loss * jitter).min(0.95)
+    }
+
+    /// Whether attempt `attempt` of logical message `seq` on `from → to`
+    /// is lost. A pure hash draw — no state, so the zero-loss and lossy
+    /// runs consume identical RNG streams everywhere else.
+    pub fn dropped(&self, seq: u64, attempt: u32, from: usize, to: usize) -> bool {
+        let p = self.loss_of(from, to);
+        if p <= 0.0 {
+            return false;
+        }
+        let link = ((attempt as u64) << 48) ^ ((from as u64) << 24) ^ to as u64;
+        let h = hash64(self.seed ^ hash64_pair(seq, link));
+        u01(h) < p
+    }
+
+    /// Backoff charged before retry `attempt` (0-based): capped exponential.
+    pub fn backoff(&self, attempt: u32) -> f64 {
+        (self.backoff_base * 2f64.powi(attempt.min(30) as i32)).min(self.backoff_cap)
+    }
+
+    /// Execution-speed multiplier of worker `w` (1.0 when not slowed).
+    pub fn slow_factor(&self, w: usize) -> f64 {
+        self.slowdown
+            .iter()
+            .find(|&&(sw, _)| sw == w)
+            .map_or(1.0, |&(_, f)| f.max(1e-6))
+    }
+
+    /// Combined latency-spike multiplier for `superstep` (1.0 outside all
+    /// windows; overlapping windows multiply).
+    pub fn spike_factor(&self, superstep: u64) -> f64 {
+        let mut f = 1.0;
+        for &(start, end, m) in &self.spikes {
+            if (start..end).contains(&superstep) {
+                f *= m.max(0.0);
+            }
+        }
+        f
+    }
+
+    /// Parse a `worker:factor, worker:factor` slowdown list.
+    pub fn parse_slowdown(s: &str) -> Result<Vec<(usize, f64)>, ConfigError> {
+        let bad = |v: &str| ConfigError::bad("net_slowdown", v, "worker:factor,…");
+        let mut out = Vec::new();
+        for item in s.split(',').map(str::trim).filter(|x| !x.is_empty()) {
+            let (w, f) = item.split_once(':').ok_or_else(|| bad(item))?;
+            let w: usize = w.trim().parse().map_err(|_| bad(item))?;
+            let f: f64 = f.trim().parse().map_err(|_| bad(item))?;
+            if !f.is_finite() || f <= 0.0 {
+                return Err(bad(item));
+            }
+            out.push((w, f));
+        }
+        Ok(out)
+    }
+
+    /// Parse a `start:end:factor, …` latency-spike list.
+    pub fn parse_spikes(s: &str) -> Result<Vec<(u64, u64, f64)>, ConfigError> {
+        let bad = |v: &str| ConfigError::bad("net_spikes", v, "start:end:factor,…");
+        let mut out = Vec::new();
+        for item in s.split(',').map(str::trim).filter(|x| !x.is_empty()) {
+            let mut parts = item.split(':');
+            let (a, b, c) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(a), Some(b), Some(c), None) => (a, b, c),
+                _ => return Err(bad(item)),
+            };
+            let start: u64 = a.trim().parse().map_err(|_| bad(item))?;
+            let end: u64 = b.trim().parse().map_err(|_| bad(item))?;
+            let factor: f64 = c.trim().parse().map_err(|_| bad(item))?;
+            if end <= start || !factor.is_finite() || factor < 0.0 {
+                return Err(bad(item));
+            }
+            out.push((start, end, factor));
+        }
+        Ok(out)
+    }
+
+    /// Serialize to kv-config pairs, emitting only keys that differ from
+    /// the default so `parse → to_kv → parse` is the identity.
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let d = NetPlan::default();
+        let mut out = Vec::new();
+        let mut put = |k: &str, v: String| out.push((k.to_string(), v));
+        if self.seed != d.seed {
+            put("net_seed", self.seed.to_string());
+        }
+        if self.loss != d.loss {
+            put("net_loss", self.loss.to_string());
+        }
+        if self.timeout != d.timeout {
+            put("net_timeout", self.timeout.to_string());
+        }
+        if self.backoff_base != d.backoff_base {
+            put("net_backoff_base", self.backoff_base.to_string());
+        }
+        if self.backoff_cap != d.backoff_cap {
+            put("net_backoff_cap", self.backoff_cap.to_string());
+        }
+        if self.max_retries != d.max_retries {
+            put("net_retries", self.max_retries.to_string());
+        }
+        if !self.slowdown.is_empty() {
+            let items: Vec<String> =
+                self.slowdown.iter().map(|(w, f)| format!("{w}:{f}")).collect();
+            put("net_slowdown", items.join(","));
+        }
+        if !self.spikes.is_empty() {
+            let items: Vec<String> =
+                self.spikes.iter().map(|(s, e, f)| format!("{s}:{e}:{f}")).collect();
+            put("net_spikes", items.join(","));
+        }
+        if self.straggler_factor != d.straggler_factor {
+            put("net_straggler_factor", self.straggler_factor.to_string());
+        }
+        out
+    }
+}
+
+/// Map a hash to a uniform f64 in `[0, 1)` (same construction as
+/// [`Rng::f64`], but stateless).
+#[inline]
+fn u01(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inactive_and_lossless() {
+        let p = NetPlan::default();
+        assert!(!p.is_active());
+        assert_eq!(p.loss_of(0, 1), 0.0);
+        assert!(!p.dropped(0, 0, 0, 1));
+        assert_eq!(p.slow_factor(3), 1.0);
+        assert_eq!(p.spike_factor(7), 1.0);
+        assert!(p.to_kv().is_empty());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_bounded() {
+        let a = NetPlan::seeded(9, 4);
+        let b = NetPlan::seeded(9, 4);
+        assert_eq!(a, b);
+        assert!(a.is_active());
+        assert!(a.loss > 0.0 && a.loss < 1.0);
+        assert!(!a.slowdown.is_empty());
+        assert!(a.slowdown.iter().all(|&(w, f)| w < 4 && f > 1.0));
+        assert_ne!(a, NetPlan::seeded(10, 4));
+    }
+
+    #[test]
+    fn loss_draws_are_pure_and_link_jittered() {
+        let p = NetPlan { loss: 0.5, seed: 3, ..NetPlan::default() };
+        // Purity: same coordinates, same outcome.
+        for seq in 0..64 {
+            assert_eq!(p.dropped(seq, 0, 0, 1), p.dropped(seq, 0, 0, 1));
+        }
+        // Jitter keeps every link within [0.5, 1.5)× base, capped.
+        for from in 0..4 {
+            for to in 0..4 {
+                let l = p.loss_of(from, to);
+                assert!((0.25..0.95 + 1e-12).contains(&l), "link loss {l}");
+            }
+        }
+        // Roughly the configured rate over many draws on one link.
+        let hits = (0..4000).filter(|&s| p.dropped(s, 0, 0, 1)).count();
+        let rate = hits as f64 / 4000.0;
+        let expect = p.loss_of(0, 1);
+        assert!((rate - expect).abs() < 0.05, "rate {rate} vs {expect}");
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let p = NetPlan::default();
+        assert_eq!(p.backoff(0), p.backoff_base);
+        assert_eq!(p.backoff(1), p.backoff_base * 2.0);
+        assert_eq!(p.backoff(20), p.backoff_cap);
+        // Monotone non-decreasing.
+        for a in 0..10 {
+            assert!(p.backoff(a + 1) >= p.backoff(a));
+        }
+    }
+
+    #[test]
+    fn spike_windows_multiply() {
+        let p = NetPlan {
+            spikes: vec![(2, 5, 3.0), (4, 6, 2.0)],
+            ..NetPlan::default()
+        };
+        assert_eq!(p.spike_factor(1), 1.0);
+        assert_eq!(p.spike_factor(2), 3.0);
+        assert_eq!(p.spike_factor(4), 6.0);
+        assert_eq!(p.spike_factor(5), 2.0);
+        assert_eq!(p.spike_factor(6), 1.0);
+    }
+
+    #[test]
+    fn parsers_reject_malformed_values_with_typed_errors() {
+        assert!(NetPlan::parse_slowdown("0:2.0, 3:1.5").is_ok());
+        assert!(NetPlan::parse_slowdown("").unwrap().is_empty());
+        for bad in ["x:2.0", "0", "0:abc", "0:-1.0", "0:0"] {
+            let err = NetPlan::parse_slowdown(bad).unwrap_err();
+            assert!(err.to_string().contains("net_slowdown"), "{err}");
+        }
+        assert!(NetPlan::parse_spikes("0:4:2.0,8:12:3.5").is_ok());
+        for bad in ["1:0:2.0", "1:2", "1:2:3:4", "a:b:c", "1:2:-1"] {
+            let err = NetPlan::parse_spikes(bad).unwrap_err();
+            assert!(err.to_string().contains("net_spikes"), "{err}");
+        }
+    }
+}

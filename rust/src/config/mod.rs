@@ -5,7 +5,40 @@
 //! launcher (`graphtheta train --config run.conf`) works like other
 //! training frameworks' YAML/TOML launchers.
 
+pub use crate::cluster::net::NetPlan;
 use std::collections::BTreeMap;
+
+/// A typed kv-config value failure: which key, what value arrived, what
+/// shape was expected. Plan parsers ([`FaultPlan`], [`NetPlan`]) return
+/// this instead of panicking on malformed schedules; `From<ConfigError>
+/// for String` keeps `?` working inside the string-error
+/// [`config_from_kv`] boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConfigError {
+    pub key: &'static str,
+    pub value: String,
+    pub expected: String,
+}
+
+impl ConfigError {
+    pub fn bad(key: &'static str, value: &str, expected: &str) -> ConfigError {
+        ConfigError { key, value: value.to_string(), expected: expected.to_string() }
+    }
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bad value for {}: {:?} (expected {})", self.key, self.value, self.expected)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<ConfigError> for String {
+    fn from(e: ConfigError) -> String {
+        e.to_string()
+    }
+}
 
 /// Which GNN encoder to train.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -194,24 +227,54 @@ pub struct FaultPlan {
     /// Checkpoint the parameter-manager state every this many applied
     /// updates (0 disables periodic checkpoints). The initial state is
     /// always an implicit checkpoint while fault handling is active, so a
-    /// failure schedule without periodic checkpoints restores to step 0.
+    /// failure schedule without periodic checkpoints restores to step 0
+    /// (a *cold restart*, counted in
+    /// [`crate::metrics::FaultStats::cold_restarts`]).
     pub checkpoint_every: usize,
     /// Deterministic failure injections: `(applied-update step, worker
     /// rank)`. When training reaches the named update count the worker is
-    /// declared dead, training restores from the newest checkpoint at or
-    /// before that step, and the lost updates are replayed on the
-    /// survivors. Ranks outside the cluster are counted and ignored (see
-    /// [`crate::cluster::master::Master`]); an entry that would kill the
-    /// last survivor is skipped.
+    /// declared dead, training restores from the newest intact checkpoint
+    /// at or before that step, and the lost updates are replayed on the
+    /// survivors. All entries at one step fire as a single concurrent
+    /// failure event (one rollback). Ranks outside the cluster are counted
+    /// and ignored (see [`crate::cluster::master::Master`]); with no
+    /// quorum, an event that would kill every worker sheds victims until
+    /// one survivor remains.
     pub fail_at: Vec<(u64, usize)>,
+    /// Minimum survivors a failure event may leave. 0 (default) disables
+    /// the rule; ≥ 1 makes a breaching event abort training with the typed
+    /// [`crate::engine::fault::FaultError::QuorumLost`] instead of limping
+    /// on with too few workers to host all partitions.
+    pub quorum: usize,
+    /// Deterministic rejoins: `(applied-update step, worker rank)`. A dead
+    /// worker re-admitted at the first checkpoint boundary at or after the
+    /// named step; partitions re-balance back to their identity owners and
+    /// the worker fetches current parameter state. Entries naming live or
+    /// stray workers are consumed without effect.
+    pub rejoin_at: Vec<(u64, usize)>,
+    /// Checkpoint steps whose *stored* snapshot is corrupted on write
+    /// (seeded single-bit flip; live training state is untouched). The
+    /// restore path detects these via CRC and falls back to the previous
+    /// intact snapshot.
+    pub corrupt_at: Vec<u64>,
+    /// Transient suspicion injections: `(applied-update step, worker
+    /// rank)`. The worker misses one heartbeat, turns
+    /// [`crate::cluster::master::Health::Suspect`] for one update (the
+    /// scheduler steal-avoids it), then recovers on its next heartbeat.
+    pub suspect_at: Vec<(u64, usize)>,
 }
 
 impl FaultPlan {
-    /// Whether any fault machinery (checkpointing or failure injection)
-    /// should run at all. Inactive plans keep the trainers on their
-    /// bit-identical golden paths.
+    /// Whether any fault machinery (checkpointing or any injection
+    /// schedule) should run at all. Inactive plans keep the trainers on
+    /// their bit-identical golden paths. A bare `quorum` with nothing to
+    /// enforce it against stays inactive.
     pub fn is_active(&self) -> bool {
-        self.checkpoint_every > 0 || !self.fail_at.is_empty()
+        self.checkpoint_every > 0
+            || !self.fail_at.is_empty()
+            || !self.rejoin_at.is_empty()
+            || !self.corrupt_at.is_empty()
+            || !self.suspect_at.is_empty()
     }
 
     /// Deterministic pseudo-random schedule for studies and property
@@ -231,26 +294,69 @@ impl FaultPlan {
             steps.insert(1 + rng.below(max_step as usize) as u64);
         }
         let fail_at = steps.into_iter().map(|s| (s, rng.below(p.max(1)))).collect();
-        FaultPlan { checkpoint_every, fail_at }
+        FaultPlan { checkpoint_every, fail_at, ..FaultPlan::default() }
+    }
+
+    /// Parse a comma-separated `step:worker` pair list — the shared format
+    /// of `fail_at`, `rejoin_at` and `suspect_at`.
+    pub fn parse_step_worker_pairs(
+        key: &'static str,
+        s: &str,
+    ) -> Result<Vec<(u64, usize)>, ConfigError> {
+        let bad = |v: &str| ConfigError::bad(key, v, "step:worker,…");
+        let mut out = Vec::new();
+        for item in s.split(',').map(str::trim).filter(|x| !x.is_empty()) {
+            let (st, w) = item.split_once(':').ok_or_else(|| bad(item))?;
+            let step = st.trim().parse().map_err(|_| bad(item))?;
+            let worker = w.trim().parse().map_err(|_| bad(item))?;
+            out.push((step, worker));
+        }
+        Ok(out)
+    }
+
+    /// Parse a comma-separated step list (`corrupt_at`).
+    pub fn parse_steps(key: &'static str, s: &str) -> Result<Vec<u64>, ConfigError> {
+        s.split(',')
+            .map(str::trim)
+            .filter(|x| !x.is_empty())
+            .map(|item| item.parse().map_err(|_| ConfigError::bad(key, item, "step,…")))
+            .collect()
     }
 
     /// Parse a failure schedule from the kv-config format: comma-separated
     /// `step:worker` pairs, e.g. `fail_at = 6:1, 9:0`.
     pub fn parse_fail_at(s: &str) -> Result<Vec<(u64, usize)>, String> {
+        Ok(Self::parse_step_worker_pairs("fail_at", s)?)
+    }
+
+    /// Serialize to kv-config pairs, emitting only keys that differ from
+    /// the default so `parse → to_kv → parse` is the identity.
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let pairs = |v: &[(u64, usize)]| {
+            v.iter().map(|(s, w)| format!("{s}:{w}")).collect::<Vec<_>>().join(",")
+        };
         let mut out = Vec::new();
-        for part in s.split(',') {
-            let part = part.trim();
-            if part.is_empty() {
-                continue;
-            }
-            let (st, w) = part
-                .split_once(':')
-                .ok_or_else(|| format!("bad fail_at entry {part}: expected step:worker"))?;
-            let step = st.trim().parse().map_err(|_| format!("bad fail_at step {st}"))?;
-            let worker = w.trim().parse().map_err(|_| format!("bad fail_at worker {w}"))?;
-            out.push((step, worker));
+        let mut put = |k: &str, v: String| out.push((k.to_string(), v));
+        if self.checkpoint_every != 0 {
+            put("checkpoint_every", self.checkpoint_every.to_string());
         }
-        Ok(out)
+        if !self.fail_at.is_empty() {
+            put("fail_at", pairs(&self.fail_at));
+        }
+        if self.quorum != 0 {
+            put("quorum", self.quorum.to_string());
+        }
+        if !self.rejoin_at.is_empty() {
+            put("rejoin_at", pairs(&self.rejoin_at));
+        }
+        if !self.corrupt_at.is_empty() {
+            let items: Vec<String> = self.corrupt_at.iter().map(u64::to_string).collect();
+            put("corrupt_at", items.join(","));
+        }
+        if !self.suspect_at.is_empty() {
+            put("suspect_at", pairs(&self.suspect_at));
+        }
+        out
     }
 }
 
@@ -299,6 +405,10 @@ pub struct TrainConfig {
     /// Checkpointing and deterministic failure injection (inactive by
     /// default — see [`FaultPlan`]).
     pub fault: FaultPlan,
+    /// Unreliable-network model: loss/retry/backoff, slowdowns, latency
+    /// spikes, straggler mitigation (inactive by default — see
+    /// [`NetPlan`]). Moves only the modeled clock, never the numerics.
+    pub net: NetPlan,
 }
 
 impl TrainConfig {
@@ -326,6 +436,7 @@ pub struct TrainConfigBuilder {
     accum_window: Option<usize>,
     schedule_policy: Option<SchedulePolicy>,
     fault: Option<FaultPlan>,
+    net: Option<NetPlan>,
 }
 
 impl TrainConfigBuilder {
@@ -397,6 +508,10 @@ impl TrainConfigBuilder {
         self.fault = Some(f);
         self
     }
+    pub fn net(mut self, n: NetPlan) -> Self {
+        self.net = Some(n);
+        self
+    }
 
     pub fn build(self) -> TrainConfig {
         TrainConfig {
@@ -417,6 +532,7 @@ impl TrainConfigBuilder {
             accum_window: self.accum_window.unwrap_or(1).max(1),
             schedule_policy: self.schedule_policy.unwrap_or_default(),
             fault: self.fault.unwrap_or_default(),
+            net: self.net.unwrap_or_default(),
         }
     }
 }
@@ -493,6 +609,9 @@ pub fn config_from_kv(
         "boundary_hops", "optimizer", "lr", "weight_decay", "epochs", "eval_every",
         "seed", "backend", "fanout", "binary", "threads", "pipeline_width", "accum_window",
         "update_mode", "max_staleness", "schedule_policy", "checkpoint_every", "fail_at",
+        "quorum", "rejoin_at", "corrupt_at", "suspect_at", "net_seed", "net_loss",
+        "net_timeout", "net_backoff_base", "net_backoff_cap", "net_retries", "net_slowdown",
+        "net_spikes", "net_straggler_factor",
     ];
     for k in kv.keys() {
         if !known.contains(&k.as_str()) {
@@ -556,18 +675,51 @@ pub fn config_from_kv(
             "locality" | "locality-aware" => SchedulePolicy::LocalityAware,
             other => return Err(format!("unknown schedule_policy {other}")),
         };
+    let pairs = |key: &'static str| -> Result<Vec<(u64, usize)>, String> {
+        match kv.get(key) {
+            Some(s) => Ok(FaultPlan::parse_step_worker_pairs(key, s)?),
+            None => Ok(Vec::new()),
+        }
+    };
     let fault = FaultPlan {
         checkpoint_every: get_u("checkpoint_every", 0)?,
-        fail_at: match kv.get("fail_at") {
-            Some(s) => FaultPlan::parse_fail_at(s)?,
+        fail_at: pairs("fail_at")?,
+        quorum: get_u("quorum", 0)?,
+        rejoin_at: pairs("rejoin_at")?,
+        corrupt_at: match kv.get("corrupt_at") {
+            Some(s) => FaultPlan::parse_steps("corrupt_at", s)?,
             None => Vec::new(),
         },
+        suspect_at: pairs("suspect_at")?,
     };
+    let nd = NetPlan::default();
+    let net = NetPlan {
+        seed: get_u("net_seed", nd.seed as usize)? as u64,
+        loss: get_f("net_loss", nd.loss)?,
+        timeout: get_f("net_timeout", nd.timeout)?,
+        backoff_base: get_f("net_backoff_base", nd.backoff_base)?,
+        backoff_cap: get_f("net_backoff_cap", nd.backoff_cap)?,
+        max_retries: get_u("net_retries", nd.max_retries as usize)? as u32,
+        slowdown: match kv.get("net_slowdown") {
+            Some(s) => NetPlan::parse_slowdown(s)?,
+            None => Vec::new(),
+        },
+        spikes: match kv.get("net_spikes") {
+            Some(s) => NetPlan::parse_spikes(s)?,
+            None => Vec::new(),
+        },
+        straggler_factor: get_f("net_straggler_factor", nd.straggler_factor)?,
+    };
+    if !(0.0..1.0).contains(&net.loss) {
+        return Err(ConfigError::bad("net_loss", &net.loss.to_string(), "probability in [0, 1)")
+            .into());
+    }
     Ok(b
         .optimizer(opt)
         .update_mode(update_mode)
         .schedule_policy(schedule_policy)
         .fault(fault)
+        .net(net)
         .lr(get_f("lr", 0.01)? as f32)
         .weight_decay(get_f("weight_decay", 5e-4)? as f32)
         .epochs(get_u("epochs", 100)?)
@@ -649,19 +801,72 @@ mod tests {
         assert!(!c.fault.is_active(), "faults are off by default");
         let c = TrainConfig::builder()
             .model(ModelConfig::gcn(8, 8, 2, 1))
-            .fault(FaultPlan { checkpoint_every: 4, fail_at: vec![(6, 1)] })
+            .fault(FaultPlan { checkpoint_every: 4, fail_at: vec![(6, 1)], ..FaultPlan::default() })
             .build();
         assert!(c.fault.is_active());
         assert_eq!(c.fault.fail_at, vec![(6, 1)]);
-        let kv = parse_kv("checkpoint_every = 4\nfail_at = 6:1, 9:0\n").unwrap();
+        let kv = parse_kv(
+            "checkpoint_every = 4\nfail_at = 6:1, 9:0\nquorum = 2\nrejoin_at = 8:1\n\
+             corrupt_at = 4, 8\nsuspect_at = 3:0\n",
+        )
+        .unwrap();
         let c = config_from_kv(&kv, 8, 2, 0).unwrap();
         assert_eq!(c.fault.checkpoint_every, 4);
         assert_eq!(c.fault.fail_at, vec![(6, 1), (9, 0)]);
-        // Malformed schedules fail loudly.
-        let kv = parse_kv("fail_at = 6@1\n").unwrap();
-        assert!(config_from_kv(&kv, 8, 2, 0).is_err());
-        let kv = parse_kv("fail_at = six:1\n").unwrap();
-        assert!(config_from_kv(&kv, 8, 2, 0).is_err());
+        assert_eq!(c.fault.quorum, 2);
+        assert_eq!(c.fault.rejoin_at, vec![(8, 1)]);
+        assert_eq!(c.fault.corrupt_at, vec![4, 8]);
+        assert_eq!(c.fault.suspect_at, vec![(3, 0)]);
+        // Malformed schedules fail loudly, with the key named.
+        for bad in ["fail_at = 6@1\n", "fail_at = six:1\n", "rejoin_at = 4\n",
+            "suspect_at = 1:x\n", "corrupt_at = 2;3\n"]
+        {
+            let kv = parse_kv(bad).unwrap();
+            let err = config_from_kv(&kv, 8, 2, 0).unwrap_err();
+            let key = bad.split(' ').next().unwrap();
+            assert!(err.contains(key), "error {err:?} must name {key}");
+        }
+    }
+
+    #[test]
+    fn fault_and_net_plans_round_trip_through_kv() {
+        // parse → to_kv → parse is the identity for every key.
+        let text = "checkpoint_every = 3\nfail_at = 5:1,9:0\nquorum = 2\nrejoin_at = 7:1\n\
+                    corrupt_at = 3,6\nsuspect_at = 2:0\nnet_seed = 11\nnet_loss = 0.25\n\
+                    net_timeout = 0.002\nnet_backoff_base = 0.001\nnet_backoff_cap = 0.016\n\
+                    net_retries = 7\nnet_slowdown = 1:2.5,3:1.5\nnet_spikes = 2:6:3.5\n\
+                    net_straggler_factor = 1.75\n";
+        let c = config_from_kv(&parse_kv(text).unwrap(), 8, 2, 0).unwrap();
+        let mut emitted = String::new();
+        for (k, v) in c.fault.to_kv().into_iter().chain(c.net.to_kv()) {
+            emitted.push_str(&format!("{k} = {v}\n"));
+        }
+        let c2 = config_from_kv(&parse_kv(&emitted).unwrap(), 8, 2, 0).unwrap();
+        assert_eq!(c.fault, c2.fault);
+        assert_eq!(c.net, c2.net);
+        // Default plans emit nothing at all.
+        assert!(FaultPlan::default().to_kv().is_empty());
+        assert!(NetPlan::default().to_kv().is_empty());
+    }
+
+    #[test]
+    fn net_plan_via_kv_with_typed_errors() {
+        let c = config_from_kv(&BTreeMap::new(), 8, 2, 0).unwrap();
+        assert!(!c.net.is_active(), "network faults are off by default");
+        let kv = parse_kv("net_loss = 0.1\nnet_slowdown = 0:3.0\n").unwrap();
+        let c = config_from_kv(&kv, 8, 2, 0).unwrap();
+        assert!(c.net.is_active());
+        assert_eq!(c.net.loss, 0.1);
+        assert_eq!(c.net.slowdown, vec![(0, 3.0)]);
+        for (bad, key) in [
+            ("net_loss = 1.5\n", "net_loss"),
+            ("net_loss = -0.1\n", "net_loss"),
+            ("net_slowdown = 0\n", "net_slowdown"),
+            ("net_spikes = 5:2:1.0\n", "net_spikes"),
+        ] {
+            let err = config_from_kv(&parse_kv(bad).unwrap(), 8, 2, 0).unwrap_err();
+            assert!(err.contains(key), "error {err:?} must name {key}");
+        }
     }
 
     #[test]

@@ -160,7 +160,7 @@ use crate::engine::scheduler::{
 use crate::engine::strategy::BatchGenerator;
 use crate::engine::trainer::{eval_plan, test_metrics, TrainReport};
 use crate::graph::Graph;
-use crate::metrics::{AsyncStats, OverlapStats};
+use crate::metrics::{AsyncStats, OverlapStats, StragglerStats};
 use crate::nn::params::ParameterManager;
 use crate::nn::ModelParams;
 use crate::runtime::StageBackend;
@@ -197,6 +197,9 @@ pub struct PipelineReport {
     pub policy: SchedulePolicy,
     /// Rejection/replay telemetry (`None` under synchronous updates).
     pub async_stats: Option<AsyncStats>,
+    /// Straggler-mitigation telemetry (`None` unless the active
+    /// [`NetPlan`](crate::cluster::NetPlan) sets `straggler_factor > 0`).
+    pub straggler: Option<StragglerStats>,
 }
 
 impl PipelineReport {
@@ -235,6 +238,13 @@ impl<'a> Coordinator<'a> {
         sim: &mut ClusterSim,
         backend: &mut dyn StageBackend,
     ) -> Result<PipelineReport> {
+        // An active network plan layers message loss, latency spikes and
+        // chronic slowdowns under the modeled clock (numerics untouched —
+        // see the `cluster` module docs). Idempotent when the trainer
+        // already installed the same plan.
+        if self.cfg.net.is_active() {
+            sim.set_net(self.cfg.net.clone());
+        }
         match self.cfg.update_mode {
             UpdateMode::Synchronous => self.run_sync(sim, backend),
             UpdateMode::Asynchronous { .. } => self.run_async(sim, backend),
@@ -282,6 +292,11 @@ impl<'a> Coordinator<'a> {
         } else {
             None
         };
+        // Chronic per-worker slowdowns from the network plan stretch task
+        // costs in the schedule; `None` keeps the bit-identical baseline.
+        let slow: Option<Vec<f64>> = (cfg.net.is_active() && !cfg.net.slowdown.is_empty())
+            .then(|| (0..self.dg.p()).map(|w| cfg.net.slow_factor(w)).collect());
+        let mut straggler = StragglerStats::default();
 
         let epochs = cfg.epochs;
         let mut losses = Vec::with_capacity(epochs);
@@ -344,7 +359,7 @@ impl<'a> Coordinator<'a> {
                         pm.update_averaged(window);
                         in_window = 0;
                         if let Some(fc) = fault.as_mut() {
-                            restored = fc.after_update(sim, &mut pm);
+                            restored = fc.after_update(sim, &mut pm)?;
                         }
                     }
                     step += 1;
@@ -393,10 +408,16 @@ impl<'a> Coordinator<'a> {
                     let sched = place_chains(
                         &chains,
                         &chain_weights,
-                        self.dg.p(),
-                        cfg.schedule_policy,
-                        0,
-                        fault.as_ref().and_then(|fc| fc.dead_mask()),
+                        &Placement {
+                            p: self.dg.p(),
+                            policy: cfg.schedule_policy,
+                            width: 0,
+                            alive: fault.as_ref().and_then(|fc| fc.dead_mask()),
+                            avoid: fault.as_ref().and_then(|fc| fc.suspect_mask()),
+                            slow: slow.clone(),
+                            straggler_factor: cfg.net.straggler_factor,
+                        },
+                        &mut straggler,
                     );
                     let serial_ns: u64 = chains.iter().flatten().map(|t| t.cost).sum();
                     let gain_ns = serial_ns.saturating_sub(sched.makespan());
@@ -416,7 +437,7 @@ impl<'a> Coordinator<'a> {
                 pm.update_averaged(in_window);
                 in_window = 0;
                 if let Some(fc) = fault.as_mut() {
-                    if let Some(r) = fc.after_update(sim, &mut pm) {
+                    if let Some(r) = fc.after_update(sim, &mut pm)? {
                         // Failure at the trailing flush: rewind and replay.
                         step = (r as usize * window).min(epochs);
                         losses.truncate(step);
@@ -458,6 +479,7 @@ impl<'a> Coordinator<'a> {
             peak_part_bytes: peak_bytes,
             latest_param_l2,
             fault: fault_stats,
+            comm: cfg.net.is_active().then_some(sim.comm),
             profile: ex.profile.clone(),
         };
         Ok(PipelineReport {
@@ -472,6 +494,7 @@ impl<'a> Coordinator<'a> {
             mean_staleness,
             policy: cfg.schedule_policy,
             async_stats: None,
+            straggler: (cfg.net.straggler_factor > 0.0).then_some(straggler),
         })
     }
 
@@ -532,6 +555,9 @@ impl<'a> Coordinator<'a> {
         } else {
             None
         };
+        let slow: Option<Vec<f64>> = (cfg.net.is_active() && !cfg.net.slowdown.is_empty())
+            .then(|| (0..self.dg.p()).map(|w| cfg.net.slow_factor(w)).collect());
+        let mut straggler = StragglerStats::default();
 
         let epochs = cfg.epochs;
         let locality = cfg.schedule_policy == SchedulePolicy::LocalityAware;
@@ -623,7 +649,7 @@ impl<'a> Coordinator<'a> {
             pm.update_averaged(1);
             completed += 1;
             if let Some(fc) = fault.as_mut() {
-                if let Some(r) = fc.after_update(sim, &mut pm) {
+                if let Some(r) = fc.after_update(sim, &mut pm)? {
                     // Failure: the manager rolled back to update `r`. The
                     // in-flight window is lost with the dead worker, and
                     // admission/completion rewind to the restore point;
@@ -662,10 +688,16 @@ impl<'a> Coordinator<'a> {
         let sched = place_chains(
             &chains,
             &chain_weights,
-            self.dg.p(),
-            cfg.schedule_policy,
-            width,
-            fault.as_ref().and_then(|fc| fc.dead_mask()),
+            &Placement {
+                p: self.dg.p(),
+                policy: cfg.schedule_policy,
+                width,
+                alive: fault.as_ref().and_then(|fc| fc.dead_mask()),
+                avoid: fault.as_ref().and_then(|fc| fc.suspect_mask()),
+                slow: slow.clone(),
+                straggler_factor: cfg.net.straggler_factor,
+            },
+            &mut straggler,
         );
         let serial_ns: u64 = chains.iter().flatten().map(|t| t.cost).sum();
         let gain_ns = serial_ns.saturating_sub(sched.makespan());
@@ -706,6 +738,7 @@ impl<'a> Coordinator<'a> {
             peak_part_bytes: peak_bytes,
             latest_param_l2,
             fault: fault_stats,
+            comm: cfg.net.is_active().then_some(sim.comm),
             profile: ex.profile.clone(),
         };
         Ok(PipelineReport {
@@ -720,6 +753,7 @@ impl<'a> Coordinator<'a> {
             mean_staleness,
             policy: cfg.schedule_policy,
             async_stats: Some(stats),
+            straggler: (cfg.net.straggler_factor > 0.0).then_some(straggler),
         })
     }
 }
@@ -738,47 +772,123 @@ struct InFlightStep {
     grads: ModelParams,
 }
 
-/// Place one set of chains under `policy` (`width` 0 = no admission bound,
-/// the synchronous round model; otherwise the async sliding window).
-/// `alive` is the post-failure worker mask: dead workers execute nothing
-/// and their homed chains re-home onto survivors; `None` (the healthy
-/// cluster) keeps the bit-identical baseline schedule.
+/// Placement inputs beyond the chains themselves: cluster shape, policy,
+/// the failure/suspicion masks, and the network plan's slowdown model.
+/// Every optional field at `None` (and `straggler_factor ≤ 0`) keeps the
+/// bit-identical baseline schedule.
+struct Placement<'a> {
+    p: usize,
+    policy: SchedulePolicy,
+    /// Admission bound (0 = no bound, the synchronous round model).
+    width: usize,
+    /// Post-failure liveness mask: dead workers execute nothing and their
+    /// homed chains re-home onto survivors.
+    alive: Option<&'a [bool]>,
+    /// Suspected workers (missed heartbeats, not yet dead): they keep the
+    /// chains homed on them but receive no steals.
+    avoid: Option<Vec<bool>>,
+    /// Per-worker cost multipliers from the network plan's chronic
+    /// slowdowns.
+    slow: Option<Vec<f64>>,
+    /// Straggler-detection threshold: a live worker whose finish time
+    /// exceeds `factor ×` the live-worker median is flagged. ≤ 0 disables
+    /// mitigation.
+    straggler_factor: f64,
+}
+
+/// Place one set of chains under `ctx`, then — with straggler mitigation
+/// enabled — re-place with the flagged workers' queued chains shed
+/// (re-homed, steals avoided) and keep whichever schedule has the smaller
+/// makespan. Detection and shed accounting accumulates into `stats`.
 fn place_chains(
     chains: &[Vec<Task>],
     weights: &[Vec<u64>],
-    p: usize,
-    policy: SchedulePolicy,
-    width: usize,
-    alive: Option<&[bool]>,
+    ctx: &Placement<'_>,
+    stats: &mut StragglerStats,
 ) -> Schedule {
-    let alive_vec = alive.map(<[bool]>::to_vec);
-    match policy {
+    let p = ctx.p;
+    let alive_vec = ctx.alive.map(<[bool]>::to_vec);
+    // Homes stay implicit (`c % p`) on a healthy round-robin cluster; as
+    // soon as anything can move them (dead re-homing, straggler shedding)
+    // they must be explicit.
+    let (homes, prefs) = match ctx.policy {
         SchedulePolicy::RoundRobin => {
-            // Homes stay implicit (`c % p`) on a healthy cluster; with
-            // dead workers they must be explicit so they can re-map.
-            let homes = alive.map(|al| {
+            let homes = (ctx.alive.is_some() || ctx.straggler_factor > 0.0).then(|| {
                 let mut homes: Vec<usize> = (0..chains.len()).map(|c| c % p).collect();
-                remap_dead_homes(&mut homes, al);
+                if let Some(al) = ctx.alive {
+                    remap_dead_homes(&mut homes, al);
+                }
                 homes
             });
-            schedule_chains_opts(
-                chains,
-                p,
-                &ScheduleOpts { homes, alive: alive_vec, width, ..ScheduleOpts::default() },
-            )
+            (homes, None)
         }
         SchedulePolicy::LocalityAware => {
             let (mut homes, prefs) = locality_placement(weights, p);
-            if let Some(al) = alive {
+            if let Some(al) = ctx.alive {
                 remap_dead_homes(&mut homes, al);
             }
-            schedule_chains_opts(
-                chains,
-                p,
-                &ScheduleOpts { homes: Some(homes), prefs: Some(prefs), width, alive: alive_vec },
-            )
+            (Some(homes), Some(prefs))
         }
+    };
+    let base = schedule_chains_opts(
+        chains,
+        p,
+        &ScheduleOpts {
+            homes: homes.clone(),
+            prefs: prefs.clone(),
+            width: ctx.width,
+            alive: alive_vec.clone(),
+            avoid: ctx.avoid.clone(),
+            slow: ctx.slow.clone(),
+        },
+    );
+    if ctx.straggler_factor <= 0.0 || p < 2 {
+        return base;
     }
+    // Detection: compare every live worker's finish time against the live
+    // median (deterministic — finish times are integer nanoseconds).
+    stats.checks += 1;
+    let live = |w: usize| ctx.alive.is_none_or(|al| al[w]);
+    let mut finishes: Vec<u64> = (0..p).filter(|&w| live(w)).map(|w| base.finish[w]).collect();
+    finishes.sort_unstable();
+    let median = finishes[finishes.len() / 2];
+    let bar = median as f64 * ctx.straggler_factor;
+    let stragglers: Vec<bool> =
+        (0..p).map(|w| live(w) && median > 0 && (base.finish[w] as f64) > bar).collect();
+    let flagged = stragglers.iter().filter(|&&s| s).count();
+    if flagged == 0 || flagged == finishes.len() {
+        // Nothing flagged, or nowhere left to shed to.
+        return base;
+    }
+    stats.detections += flagged as u64;
+    // Mitigation: shed the flagged workers' queued chains — re-home them
+    // onto the non-straggler live pool and avoid further steals onto the
+    // stragglers — and keep the re-placement only if it is strictly
+    // faster.
+    let ok: Vec<bool> = (0..p).map(|w| live(w) && !stragglers[w]).collect();
+    let mut homes2 = homes.unwrap_or_else(|| (0..chains.len()).map(|c| c % p).collect());
+    let sheds = homes2.iter().filter(|&&h| stragglers[h]).count() as u64;
+    remap_dead_homes(&mut homes2, &ok);
+    let avoid2: Vec<bool> =
+        (0..p).map(|w| stragglers[w] || ctx.avoid.as_ref().is_some_and(|av| av[w])).collect();
+    let mitigated = schedule_chains_opts(
+        chains,
+        p,
+        &ScheduleOpts {
+            homes: Some(homes2),
+            prefs,
+            width: ctx.width,
+            alive: alive_vec,
+            avoid: Some(avoid2),
+            slow: ctx.slow.clone(),
+        },
+    );
+    if mitigated.makespan() < base.makespan() {
+        stats.sheds += sheds;
+        stats.saved_secs += (base.makespan() - mitigated.makespan()) as f64 * 1e-9;
+        return mitigated;
+    }
+    base
 }
 
 #[cfg(test)]

@@ -19,20 +19,47 @@
 //! * **Failure injection** — [`crate::config::FaultPlan::fail_at`] is a
 //!   deterministic schedule of `(applied-update step, worker)` entries.
 //!   When training reaches the named update count, the survivors
-//!   heartbeat, the victim goes silent until the master declares it
-//!   [`Health::Dead`], and recovery begins. Stray ranks are counted by the
-//!   master and ignored; an entry that would kill the last survivor is
-//!   skipped (the run must finish).
-//! * **Recovery** — the master picks [`Master::restore_point`] (never a
-//!   step after the failure), the manager rolls back via
-//!   [`ParameterManager::restore`], the dead worker's partitions re-home
-//!   onto the least-loaded survivor ([`ClusterSim::reassign`] — the
-//!   survivor then carries both partitions' compute), and the master
-//!   broadcasts `Restore` while the survivors re-fetch the checkpoint
-//!   state from its lowest-rank live holder. The transfer plus a recovery
-//!   barrier superstep land on the modeled clock, and the driver replays
-//!   the lost updates. Everything from the failure until training regains
-//!   the failure step is charged to [`FaultStats::recovery_secs`].
+//!   heartbeat, the victims go silent until the master declares them
+//!   [`Health::Dead`], and recovery begins. **Concurrent failures** — all
+//!   entries at one step — form a single failure event: one rollback,
+//!   however many workers died; a failure landing while a previous
+//!   recovery window is still open (cascading) extends that window
+//!   instead of losing its mark. Stray ranks are counted by the master and
+//!   ignored. With [`crate::config::FaultPlan::quorum`] at its default 0,
+//!   an event that would kill every live worker sheds victims until one
+//!   survivor remains (the run must finish); with a quorum ≥ 1, an event
+//!   that would leave fewer survivors than the quorum aborts with the
+//!   typed [`FaultError::QuorumLost`] — never a panic — because that few
+//!   survivors can no longer credibly host all partitions.
+//! * **Recovery** — the controller walks its retained snapshots newest →
+//!   oldest (never past the failure step), **verifying each snapshot's
+//!   CRC** ([`ParamSnapshot::verify`]): corrupt snapshots (seeded
+//!   injection via [`crate::config::FaultPlan::corrupt_at`]) are skipped
+//!   and counted in [`FaultStats::corrupt_skipped`], falling back to the
+//!   previous intact restore point. If no intact snapshot precedes the
+//!   failure (`checkpoint_every = 0`, a too-early failure, or blanket
+//!   corruption), training degrades gracefully: it restarts from the
+//!   pristine initial parameter state, counting the warning in
+//!   [`FaultStats::cold_restarts`]. The manager rolls back via
+//!   [`ParameterManager::restore`], every dead worker's partitions re-home
+//!   onto the least-loaded survivors ([`ClusterSim::reassign`]), and the
+//!   master broadcasts `Restore` while the survivors re-fetch the
+//!   checkpoint state from its lowest-rank live holder. The transfer plus
+//!   a recovery barrier superstep land on the modeled clock, and the
+//!   driver replays the lost updates. Everything from the failure until
+//!   training regains the failure step is charged to
+//!   [`FaultStats::recovery_secs`].
+//! * **Rejoin** — [`crate::config::FaultPlan::rejoin_at`] re-admits dead
+//!   workers at the next checkpoint boundary (an explicit control-plane
+//!   decision — stray heartbeats still cannot revive the dead). Partitions
+//!   re-balance back to their identity owners, the rejoined worker fetches
+//!   the current parameter state (transfer + barrier superstep on the
+//!   modeled clock), and [`FaultStats::rejoins`] counts it.
+//! * **Suspicion** — [`crate::config::FaultPlan::suspect_at`] injects
+//!   single heartbeat misses: the worker turns [`Health::Suspect`] for one
+//!   update (the scheduler steal-avoids it via
+//!   [`FaultController::suspect_mask`]) and recovers on its next
+//!   heartbeat — the degraded-trust stage *before* a death verdict.
 //!
 //! Replayed steps draw **fresh batches**: the restore rewinds parameters
 //! and optimizer state, not the batch generator's RNG stream, exactly like
@@ -55,12 +82,38 @@ use crate::cluster::ClusterSim;
 use crate::config::FaultPlan;
 use crate::metrics::FaultStats;
 use crate::nn::params::{ParamSnapshot, ParameterManager};
+use crate::util::hash64;
 
-/// Checkpoint snapshots retained (newest last). A restore always targets
-/// the newest checkpoint at or before the failure step — which is the
-/// newest checkpoint, period, since checkpoints never outrun the applied
-/// count — so a short history bounds memory without stranding a restore.
+/// Checkpoint snapshots retained (newest last). A restore walks the
+/// history newest → oldest past any corrupt entries, so a short history
+/// bounds memory while still giving the integrity check somewhere to fall
+/// back to; the pristine initial state is kept separately and is always
+/// the restore of last resort.
 const RETAINED_SNAPSHOTS: usize = 4;
+
+/// Typed recovery failures. Training loops surface these as errors (they
+/// convert into `anyhow::Error` at the binary boundary) — an impossible
+/// recovery must never panic mid-run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultError {
+    /// A failure event would leave fewer survivors than the configured
+    /// quorum — too few workers remain to credibly host all partitions.
+    QuorumLost { step: u64, survivors: usize, quorum: usize },
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultError::QuorumLost { step, survivors, quorum } => write!(
+                f,
+                "quorum lost at step {step}: {survivors} survivor(s) remain but the \
+                 quorum requires {quorum} to host all partitions"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
 
 /// Drives checkpointing, failure injection and recovery for all three
 /// training loops (sequential, synchronous rounds, async sliding window).
@@ -70,14 +123,28 @@ const RETAINED_SNAPSHOTS: usize = 4;
 pub struct FaultController {
     master: Master,
     checkpoint_every: usize,
+    /// Minimum survivors a failure event may leave (0 disables the rule).
+    quorum: usize,
     /// Failure schedule, sorted by step; `next_fail` indexes the next
-    /// entry to fire.
+    /// entry to fire. Same-step entries fire as one concurrent event.
     fail_at: Vec<(u64, usize)>,
     next_fail: usize,
-    /// Retained checkpoints, ascending by step.
+    /// Rejoin schedule, sorted by step; entries fire at the first
+    /// checkpoint boundary at or after their step.
+    rejoin_at: Vec<(u64, usize)>,
+    next_rejoin: usize,
+    /// Transient-suspicion schedule, sorted by step.
+    suspect_at: Vec<(u64, usize)>,
+    next_suspect: usize,
+    /// Checkpoint steps whose stored snapshot is corrupted on write.
+    corrupt_at: Vec<u64>,
+    /// The pristine initial parameter state — the implicit step-0
+    /// checkpoint and the restore of last resort. Never corrupted.
+    initial: ParamSnapshot,
+    /// Retained periodic checkpoints, ascending by step.
     snapshots: Vec<(u64, ParamSnapshot)>,
     /// Liveness cache, kept in lockstep with the (controller-owned)
-    /// master's health by [`FaultController::fail`].
+    /// master's health by [`FaultController::fail_many`] and rejoins.
     alive: Vec<bool>,
     /// Open recovery window: (failure step to regain, clock mark at the
     /// failure).
@@ -91,17 +158,28 @@ impl FaultController {
     /// step 0 (before any update exists) fire at the first applied update
     /// instead of silently never firing.
     pub fn new(plan: &FaultPlan, p: usize, pm: &ParameterManager) -> FaultController {
-        let mut fail_at: Vec<(u64, usize)> =
-            plan.fail_at.iter().map(|&(s, w)| (s.max(1), w)).collect();
-        fail_at.sort_unstable();
+        let clamp_sort = |entries: &[(u64, usize)]| {
+            let mut v: Vec<(u64, usize)> = entries.iter().map(|&(s, w)| (s.max(1), w)).collect();
+            v.sort_unstable();
+            v
+        };
+        let mut corrupt_at = plan.corrupt_at.clone();
+        corrupt_at.sort_unstable();
         let mut master = Master::new(p);
         master.record_checkpoint(0);
         FaultController {
             master,
             checkpoint_every: plan.checkpoint_every,
-            fail_at,
+            quorum: plan.quorum,
+            fail_at: clamp_sort(&plan.fail_at),
             next_fail: 0,
-            snapshots: vec![(0, pm.snapshot())],
+            rejoin_at: clamp_sort(&plan.rejoin_at),
+            next_rejoin: 0,
+            suspect_at: clamp_sort(&plan.suspect_at),
+            next_suspect: 0,
+            corrupt_at,
+            initial: pm.snapshot(),
+            snapshots: Vec::new(),
             alive: vec![true; p],
             recovering: None,
             stats: FaultStats { checkpoints: 1, ..FaultStats::default() },
@@ -125,16 +203,27 @@ impl FaultController {
         }
     }
 
+    /// `Some(mask)` while any worker is [`Health::Suspect`] — the
+    /// coordinator steal-avoids those workers until the verdict; `None`
+    /// while nobody is suspected, which keeps the scheduler on its
+    /// bit-identical default path.
+    pub fn suspect_mask(&self) -> Option<Vec<bool>> {
+        self.master.suspects()
+    }
+
     /// Hook called after every published parameter version. Closes any
-    /// open recovery window, takes a due checkpoint, and injects the next
-    /// scheduled failure. Returns `Some(restore_step)` when a failure
-    /// fired: the caller must rewind its loop to that applied-update count
-    /// (the manager is already rolled back).
+    /// open recovery window, takes a due checkpoint (with scheduled
+    /// corruption), processes rejoins at checkpoint boundaries, injects
+    /// transient suspicions, and fires every scheduled failure at this
+    /// step as one concurrent event. Returns `Ok(Some(restore_step))` when
+    /// a failure fired: the caller must rewind its loop to that
+    /// applied-update count (the manager is already rolled back). Returns
+    /// [`FaultError::QuorumLost`] when the event would breach the quorum.
     pub fn after_update(
         &mut self,
         sim: &mut ClusterSim,
         pm: &mut ParameterManager,
-    ) -> Option<u64> {
+    ) -> Result<Option<u64>, FaultError> {
         let applied = pm.latest_version();
         if let Some((target, mark)) = self.recovering {
             if applied >= target {
@@ -142,15 +231,51 @@ impl FaultController {
                 self.recovering = None;
             }
         }
-        if self.checkpoint_every > 0 && applied % self.checkpoint_every as u64 == 0 {
+        // Suspects from the previous update answer their next heartbeat
+        // (real failures drive misses straight to the death threshold in
+        // `fail_many`, so only transient suspicions linger here).
+        for w in 0..self.master.p {
+            if self.alive[w] && matches!(self.master.health_of(w), Health::Suspect(_)) {
+                self.master.heartbeat(w);
+            }
+        }
+        let boundary = self.checkpoint_every == 0
+            || applied % self.checkpoint_every as u64 == 0;
+        if self.checkpoint_every > 0 && boundary {
             self.checkpoint(applied, pm);
         }
-        if self.next_fail < self.fail_at.len() && self.fail_at[self.next_fail].0 == applied {
-            let (step, worker) = self.fail_at[self.next_fail];
-            self.next_fail += 1;
-            return self.fail(step, worker, sim, pm);
+        // Dead workers rejoin at checkpoint boundaries (or at their named
+        // step when periodic checkpointing is off). An entry naming a
+        // still-live worker is consumed without effect.
+        while boundary
+            && self.next_rejoin < self.rejoin_at.len()
+            && self.rejoin_at[self.next_rejoin].0 <= applied
+        {
+            let (_, w) = self.rejoin_at[self.next_rejoin];
+            self.next_rejoin += 1;
+            self.rejoin(w, sim, pm);
         }
-        None
+        // Transient suspicion: one heartbeat miss marks the worker
+        // Suspect; it answers the next update's heartbeat round above.
+        while self.next_suspect < self.suspect_at.len()
+            && self.suspect_at[self.next_suspect].0 <= applied
+        {
+            let (_, w) = self.suspect_at[self.next_suspect];
+            self.next_suspect += 1;
+            self.master.miss(w); // strays counted; dead workers unaffected
+        }
+        // Concurrent failures: every schedule entry at this step joins a
+        // single failure event — one rollback, however many workers died.
+        let mut group: Vec<usize> = Vec::new();
+        while self.next_fail < self.fail_at.len() && self.fail_at[self.next_fail].0 == applied {
+            group.push(self.fail_at[self.next_fail].1);
+            self.next_fail += 1;
+        }
+        if group.is_empty() {
+            Ok(None)
+        } else {
+            self.fail_many(applied, &group, sim, pm)
+        }
     }
 
     /// Close any recovery window still open when the run ends (safety
@@ -178,70 +303,143 @@ impl FaultController {
                 }
             }
         }
+        // Scheduled storage corruption: flip one seeded bit in the stored
+        // copy (the live parameters are untouched). The restore-time CRC
+        // walk detects and skips it. A replayed checkpoint of the same
+        // step is re-corrupted — the schedule is per step, deterministic.
+        if self.corrupt_at.binary_search(&applied).is_ok() {
+            if let Some(slot) = self.snapshots.iter_mut().find(|(s, _)| *s == applied) {
+                slot.1.corrupt(hash64(applied ^ 0xC0AB));
+            }
+        }
     }
 
-    fn fail(
+    /// Re-admit a dead worker: master state machine first, then partition
+    /// re-balance (every partition whose identity owner is alive returns
+    /// home) and a modeled state transfer + barrier superstep.
+    fn rejoin(&mut self, worker: usize, sim: &mut ClusterSim, pm: &ParameterManager) {
+        if !self.master.rejoin(worker) {
+            return; // live, suspect, or stray — counted/ignored by the master
+        }
+        let p = self.master.p;
+        self.alive[worker] = true;
+        self.stats.rejoins += 1;
+        for part in 0..p {
+            if self.alive[part] && sim.owner_of(part) != part {
+                sim.reassign(part, part);
+            }
+        }
+        // The rejoined worker fetches current parameter state from its
+        // lowest-rank live peer before taking work.
+        let bytes = pm.state_bytes() as u64;
+        if let Some(holder) = (0..p).find(|&w| self.alive[w] && w != worker) {
+            sim.send(holder, worker, bytes);
+        }
+        self.master.broadcast(Command::LoadPartition { part: worker as u32 }, sim);
+        sim.superstep();
+    }
+
+    /// One failure event: every victim in `workers` dies at `step`, then a
+    /// single rollback recovers the cluster. Stray ranks are counted and
+    /// dropped; duplicate and already-dead victims are dropped. With no
+    /// quorum configured, victims are shed (highest-listed first) until
+    /// one survivor remains; with a quorum, breaching it is a typed error.
+    fn fail_many(
         &mut self,
         step: u64,
-        worker: usize,
+        workers: &[usize],
         sim: &mut ClusterSim,
         pm: &mut ParameterManager,
-    ) -> Option<u64> {
+    ) -> Result<Option<u64>, FaultError> {
         let p = self.master.p;
-        if worker >= p {
-            // Stray rank from the schedule: exercised against the
-            // bounds-checked master — counted, ignored, nobody dies.
-            self.master.miss(worker);
-            return None;
+        let mut victims: Vec<usize> = Vec::new();
+        for &w in workers {
+            if w >= p {
+                // Stray rank from the schedule: exercised against the
+                // bounds-checked master — counted, ignored, nobody dies.
+                self.master.miss(w);
+            } else if self.alive[w] && !victims.contains(&w) {
+                victims.push(w);
+            }
         }
-        if !self.alive[worker] || self.alive.iter().filter(|&&a| a).count() == 1 {
-            // Already dead, or the last survivor: skip the injection.
-            return None;
+        if victims.is_empty() {
+            return Ok(None);
         }
-        // Heartbeat round: survivors report in; the victim stays silent
-        // until the master's miss threshold declares it dead.
+        let live = self.alive.iter().filter(|&&a| a).count();
+        if self.quorum > 0 {
+            if live - victims.len() < self.quorum {
+                return Err(FaultError::QuorumLost {
+                    step,
+                    survivors: live - victims.len(),
+                    quorum: self.quorum,
+                });
+            }
+        } else if victims.len() >= live {
+            // Legacy rule: the run must finish — keep one survivor.
+            victims.truncate(live - 1);
+            if victims.is_empty() {
+                return Ok(None);
+            }
+        }
+        // Heartbeat round: survivors report in; the victims stay silent
+        // until the master's miss threshold declares them dead.
         for w in 0..p {
-            if w != worker && self.alive[w] {
+            if self.alive[w] && !victims.contains(&w) {
                 self.master.heartbeat(w);
             }
         }
-        for _ in 0..self.master.max_misses {
-            self.master.miss(worker);
+        for &v in &victims {
+            for _ in 0..self.master.max_misses {
+                self.master.miss(v);
+            }
+            debug_assert_eq!(self.master.health_of(v), Health::Dead);
+            self.alive[v] = false;
         }
-        debug_assert_eq!(self.master.health_of(worker), Health::Dead);
-        self.alive[worker] = false;
-        self.stats.failures += 1;
+        self.stats.failures += victims.len() as u64;
         let mark = sim.mark();
 
-        // Re-home every partition the dead worker carried onto the
-        // least-loaded survivor (ties to the lowest rank) — the survivor
-        // then carries both partitions' compute and traffic. The sim's
+        // Re-home every partition a dead worker carried onto the
+        // least-loaded survivor (ties to the lowest rank) — survivors then
+        // carry the extra partitions' compute and traffic. The sim's
         // partition→owner mapping is the single source of truth.
         let mut load = vec![0usize; p];
         for part in 0..p {
             load[sim.owner_of(part)] += 1;
         }
         for part in 0..p {
-            if sim.owner_of(part) == worker {
+            if !self.alive[sim.owner_of(part)] {
                 let to = (0..p)
                     .filter(|&w| self.alive[w])
                     .min_by_key(|&w| (load[w], w))
-                    .expect("a survivor exists");
+                    .expect("quorum/survivor guards keep at least one worker");
                 load[to] += 1;
                 sim.reassign(part, to);
             }
         }
 
-        // Restore from the newest checkpoint at or before the failure.
-        let restore = self.master.restore_point(step).expect("implicit step-0 checkpoint");
+        // Restore from the newest *intact* checkpoint at or before the
+        // failure; corrupt snapshots are skipped (counted), and when no
+        // intact one precedes the failure the run cold-restarts from the
+        // pristine initial state.
+        let mut chosen: Option<(u64, &ParamSnapshot)> = None;
+        for (s, snap) in self.snapshots.iter().rev() {
+            if *s > step {
+                continue;
+            }
+            if snap.verify() {
+                chosen = Some((*s, snap));
+                break;
+            }
+            self.stats.corrupt_skipped += 1;
+        }
+        let (restore, snap) = match chosen {
+            Some((s, snap)) => (s, snap),
+            None => {
+                self.stats.cold_restarts += 1;
+                (0, &self.initial)
+            }
+        };
         debug_assert!(restore <= step, "restore point after the failure");
-        let snap = &self
-            .snapshots
-            .iter()
-            .rev()
-            .find(|(s, _)| *s == restore)
-            .expect("restore-point snapshot retained")
-            .1;
         pm.restore(snap);
 
         // The master directs recovery; survivors re-fetch the checkpoint
@@ -258,8 +456,14 @@ impl FaultController {
         sim.superstep();
 
         self.stats.restored_steps += step - restore;
-        self.recovering = Some((step, mark));
-        Some(restore)
+        // Cascading failure inside an open recovery window: extend the
+        // window to the newer target but keep the earliest mark so the
+        // whole degraded stretch is charged once.
+        self.recovering = Some(match self.recovering.take() {
+            Some((target, first_mark)) => (target.max(step), first_mark),
+            None => (step, mark),
+        });
+        Ok(Some(restore))
     }
 }
 
@@ -288,19 +492,20 @@ mod tests {
 
     #[test]
     fn checkpoints_and_failure_restore_flow() {
-        let plan = FaultPlan { checkpoint_every: 2, fail_at: vec![(3, 1)] };
+        let plan =
+            FaultPlan { checkpoint_every: 2, fail_at: vec![(3, 1)], ..FaultPlan::default() };
         let mut pm = pm();
         let mut fc = FaultController::new(&plan, 4, &pm);
         let mut sim = ClusterSim::new(4, CostModelConfig::default());
         assert_eq!(fc.stats.checkpoints, 1, "implicit step-0 checkpoint");
         advance(&mut pm); // applied 1
-        assert_eq!(fc.after_update(&mut sim, &mut pm), None);
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
         advance(&mut pm); // applied 2 → checkpoint
-        assert_eq!(fc.after_update(&mut sim, &mut pm), None);
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
         assert_eq!(fc.stats.checkpoints, 2);
         advance(&mut pm); // applied 3 → failure of worker 1
         let clock_before = sim.clock;
-        assert_eq!(fc.after_update(&mut sim, &mut pm), Some(2));
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), Some(2));
         assert_eq!(pm.latest_version(), 2, "manager rolled back to the checkpoint");
         assert_eq!(fc.stats.failures, 1);
         assert_eq!(fc.stats.restored_steps, 1);
@@ -310,7 +515,7 @@ mod tests {
         assert_eq!(sim.owner_of(1), 0, "dead partition re-homed to a survivor");
         // Replay regains step 3 and closes the recovery window.
         advance(&mut pm);
-        assert_eq!(fc.after_update(&mut sim, &mut pm), None);
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
         assert!(fc.stats.recovery_secs > 0.0);
         // The command log carries both directives.
         let log = &fc.master().log;
@@ -320,21 +525,186 @@ mod tests {
 
     #[test]
     fn stray_ranks_and_last_survivor_are_skipped() {
-        let plan = FaultPlan { checkpoint_every: 0, fail_at: vec![(1, 9), (2, 0), (3, 1)] };
+        let plan = FaultPlan {
+            checkpoint_every: 0,
+            fail_at: vec![(1, 9), (2, 0), (3, 1)],
+            ..FaultPlan::default()
+        };
         let mut pm = pm();
         let mut fc = FaultController::new(&plan, 2, &pm);
         let mut sim = ClusterSim::new(2, CostModelConfig::default());
         advance(&mut pm);
-        assert_eq!(fc.after_update(&mut sim, &mut pm), None, "stray rank: nobody dies");
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None, "stray rank: nobody dies");
         assert_eq!(fc.master().unknown_ranks, 1);
         advance(&mut pm);
-        assert_eq!(fc.after_update(&mut sim, &mut pm), Some(0), "restore to the implicit step 0");
+        assert_eq!(
+            fc.after_update(&mut sim, &mut pm).unwrap(),
+            Some(0),
+            "restore to the implicit step 0"
+        );
         assert_eq!(fc.stats.failures, 1);
+        assert_eq!(fc.stats.cold_restarts, 1, "no periodic checkpoint: cold restart, counted");
         // Only worker 1 is left: the schedule may not kill it.
         for _ in 0..3 {
             advance(&mut pm);
-            assert_eq!(fc.after_update(&mut sim, &mut pm), None);
+            assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
         }
         assert_eq!(fc.stats.failures, 1, "last survivor is never killed");
+    }
+
+    #[test]
+    fn concurrent_failures_are_one_event_with_one_rollback() {
+        let plan = FaultPlan {
+            checkpoint_every: 2,
+            fail_at: vec![(3, 1), (3, 2), (3, 2), (3, 7)],
+            ..FaultPlan::default()
+        };
+        let mut pm = pm();
+        let mut fc = FaultController::new(&plan, 4, &pm);
+        let mut sim = ClusterSim::new(4, CostModelConfig::default());
+        for _ in 0..3 {
+            advance(&mut pm);
+            if pm.latest_version() < 3 {
+                assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
+            }
+        }
+        // Applied 3: workers 1 and 2 die together (the duplicate and the
+        // stray rank are dropped); one rollback covers both.
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), Some(2));
+        assert_eq!(fc.stats.failures, 2);
+        assert_eq!(fc.stats.restored_steps, 1, "one rollback term for the whole event");
+        assert_eq!(fc.master().unknown_ranks, 1);
+        assert_eq!(fc.master().health_of(1), Health::Dead);
+        assert_eq!(fc.master().health_of(2), Health::Dead);
+        assert_eq!(fc.dead_mask(), Some(&[true, false, false, true][..]));
+        // Both orphaned partitions re-homed onto live workers, spread by load.
+        assert!(fc.dead_mask().unwrap()[sim.owner_of(1)]);
+        assert!(fc.dead_mask().unwrap()[sim.owner_of(2)]);
+        assert_ne!(sim.owner_of(1), sim.owner_of(2), "load balance spreads the orphans");
+    }
+
+    #[test]
+    fn quorum_breach_is_a_typed_error_not_a_panic() {
+        let plan = FaultPlan {
+            checkpoint_every: 2,
+            fail_at: vec![(2, 1), (2, 2)],
+            quorum: 3,
+            ..FaultPlan::default()
+        };
+        let mut pm = pm();
+        let mut fc = FaultController::new(&plan, 4, &pm);
+        let mut sim = ClusterSim::new(4, CostModelConfig::default());
+        advance(&mut pm);
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
+        advance(&mut pm);
+        let err = fc.after_update(&mut sim, &mut pm).unwrap_err();
+        assert_eq!(err, FaultError::QuorumLost { step: 2, survivors: 2, quorum: 3 });
+        assert!(err.to_string().contains("quorum"), "error names the quorum rule: {err}");
+    }
+
+    #[test]
+    fn corrupt_checkpoint_falls_back_to_previous_intact_snapshot() {
+        let plan = FaultPlan {
+            checkpoint_every: 2,
+            fail_at: vec![(5, 1)],
+            corrupt_at: vec![4],
+            ..FaultPlan::default()
+        };
+        let mut pm = pm();
+        let mut fc = FaultController::new(&plan, 4, &pm);
+        let mut sim = ClusterSim::new(4, CostModelConfig::default());
+        for _ in 0..4 {
+            advance(&mut pm);
+            assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
+        }
+        advance(&mut pm); // applied 5 → failure; checkpoint 4 is corrupt
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), Some(2));
+        assert_eq!(pm.latest_version(), 2, "fell back past the corrupt snapshot");
+        assert_eq!(fc.stats.corrupt_skipped, 1);
+        assert_eq!(fc.stats.cold_restarts, 0);
+        assert_eq!(fc.stats.restored_steps, 3);
+    }
+
+    #[test]
+    fn blanket_corruption_cold_restarts_from_initial_state() {
+        let plan = FaultPlan {
+            checkpoint_every: 1,
+            fail_at: vec![(2, 0)],
+            corrupt_at: vec![1, 2],
+            ..FaultPlan::default()
+        };
+        let mut pm = pm();
+        let snap0 = pm.snapshot();
+        let mut fc = FaultController::new(&plan, 2, &pm);
+        let mut sim = ClusterSim::new(2, CostModelConfig::default());
+        advance(&mut pm);
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
+        advance(&mut pm);
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), Some(0));
+        assert_eq!(fc.stats.corrupt_skipped, 2, "both periodic checkpoints were corrupt");
+        assert_eq!(fc.stats.cold_restarts, 1);
+        assert_eq!(pm.latest_version(), 0);
+        assert_eq!(
+            pm.snapshot().digest(),
+            snap0.digest(),
+            "cold restart restores the pristine initial state"
+        );
+    }
+
+    #[test]
+    fn rejoin_waits_for_checkpoint_boundary_and_rebalances() {
+        let plan = FaultPlan {
+            checkpoint_every: 2,
+            fail_at: vec![(2, 1)],
+            rejoin_at: vec![(3, 1), (3, 9)],
+            ..FaultPlan::default()
+        };
+        let mut pm = pm();
+        let mut fc = FaultController::new(&plan, 3, &pm);
+        let mut sim = ClusterSim::new(3, CostModelConfig::default());
+        advance(&mut pm);
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
+        advance(&mut pm);
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), Some(2));
+        assert_eq!(fc.master().health_of(1), Health::Dead);
+        assert_ne!(sim.owner_of(1), 1, "orphan lives on a survivor");
+        // Applied 3 is not a checkpoint boundary: the rejoin waits.
+        advance(&mut pm);
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
+        assert_eq!(fc.stats.rejoins, 0);
+        // Applied 4 is a boundary: worker 1 rejoins, partitions go home.
+        advance(&mut pm);
+        let clock_before = sim.clock;
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
+        assert_eq!(fc.stats.rejoins, 1, "the stray rejoin entry is dropped");
+        assert_eq!(fc.master().health_of(1), Health::Alive);
+        assert_eq!(fc.dead_mask(), None);
+        assert_eq!(sim.owner_of(1), 1, "partition re-balanced back home");
+        assert!(sim.clock > clock_before, "rejoin state transfer charges the clock");
+        assert!(fc
+            .master()
+            .log
+            .iter()
+            .any(|(_, c)| matches!(c, Command::LoadPartition { part: 1 })));
+    }
+
+    #[test]
+    fn transient_suspicion_avoids_then_clears() {
+        let plan =
+            FaultPlan { checkpoint_every: 0, suspect_at: vec![(1, 1)], ..FaultPlan::default() };
+        let mut pm = pm();
+        let mut fc = FaultController::new(&plan, 3, &pm);
+        let mut sim = ClusterSim::new(3, CostModelConfig::default());
+        assert_eq!(fc.suspect_mask(), None);
+        advance(&mut pm);
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
+        assert_eq!(fc.suspect_mask(), Some(vec![false, true, false]));
+        assert_eq!(fc.master().health_of(1), Health::Suspect(1));
+        assert_eq!(fc.dead_mask(), None, "suspicion is not death");
+        // The next update's heartbeat round clears the suspicion.
+        advance(&mut pm);
+        assert_eq!(fc.after_update(&mut sim, &mut pm).unwrap(), None);
+        assert_eq!(fc.suspect_mask(), None);
+        assert_eq!(fc.master().health_of(1), Health::Alive);
     }
 }

@@ -18,19 +18,22 @@
 //!   chain and none across chains of the same parameter version. This is
 //!   what [`crate::coordinator::Coordinator`] places on the modeled
 //!   cluster to derive the overlapped makespan of pipelined training.
-//! * [`schedule_chains_opts`] — the same greedy simulation with four
-//!   optional extensions: explicit *home* workers per chain (locality-aware
+//! * [`schedule_chains_opts`] — the same greedy simulation with optional
+//!   extensions: explicit *home* workers per chain (locality-aware
 //!   placement: a chain's home is the partition its active edges live in,
 //!   see [`locality_placement`]), per-chain steal-preference ranks (steals
 //!   go to the most *affine* worker first rather than the lowest id), an
 //!   in-flight *width* bound (chain `c` is admitted only once chain
 //!   `c − width` fully executed — the asynchronous trainer's sliding
-//!   window, with no round barriers), and a worker *liveness* mask (dead
+//!   window, with no round barriers), a worker *liveness* mask (dead
 //!   workers execute nothing; homes re-map onto survivors via
-//!   [`remap_dead_homes`] — the fault-recovery path). With every option at
-//!   its default the schedule is bit-identical to [`schedule_chains`],
-//!   which is what keeps the old placement available as the deterministic
-//!   golden baseline.
+//!   [`remap_dead_homes`] — the fault-recovery path), a soft steal
+//!   *avoidance* mask (suspect workers and flagged stragglers keep their
+//!   homed chains but receive no steals), and per-worker *slowdown*
+//!   factors stretching task costs (the straggler-detection cost surface).
+//!   With every option at its default the schedule is bit-identical to
+//!   [`schedule_chains`], which is what keeps the old placement available
+//!   as the deterministic golden baseline.
 
 /// A schedulable unit of work.
 #[derive(Clone, Debug, PartialEq)]
@@ -148,6 +151,17 @@ pub struct ScheduleOpts {
     /// baseline. Homes must point at live workers (see
     /// [`remap_dead_homes`]).
     pub alive: Option<Vec<bool>>,
+    /// Soft steal-avoidance mask over the `p` workers: an avoided worker
+    /// still executes chains homed on it but never receives steals — the
+    /// treatment for [`Health::Suspect`](crate::cluster::master::Health)
+    /// workers (missed heartbeats, not yet declared dead) and for flagged
+    /// stragglers. `None` avoids nobody — the bit-identical baseline.
+    pub avoid: Option<Vec<bool>>,
+    /// Per-worker execution-speed multiplier applied to task costs on that
+    /// worker (> 1.0 is slower — chronically slow machines under a
+    /// [`NetPlan`](crate::cluster::NetPlan)). `None` is uniform speed — the
+    /// bit-identical baseline.
+    pub slow: Option<Vec<f64>>,
 }
 
 /// [`schedule_chains`] with explicit placement options — see
@@ -162,6 +176,13 @@ pub fn schedule_chains_opts(chains: &[Vec<Task>], p: usize, opts: &ScheduleOpts)
     if let Some(al) = &opts.alive {
         assert_eq!(al.len(), p, "one liveness flag per worker");
         assert!(al.iter().any(|&a| a), "need at least one live worker");
+    }
+    if let Some(av) = &opts.avoid {
+        assert_eq!(av.len(), p, "one avoidance flag per worker");
+    }
+    if let Some(sl) = &opts.slow {
+        assert_eq!(sl.len(), p, "one speed factor per worker");
+        assert!(sl.iter().all(|&f| f.is_finite() && f > 0.0), "speed factors must be positive");
     }
     let total: usize = chains.iter().map(Vec::len).sum();
     let mut clock = vec![0u64; p];
@@ -196,6 +217,9 @@ pub fn schedule_chains_opts(chains: &[Vec<Task>], p: usize, opts: &ScheduleOpts)
                 if opts.alive.as_ref().is_some_and(|al| !al[w]) {
                     continue; // dead workers execute nothing
                 }
+                if w != home && opts.avoid.as_ref().is_some_and(|av| av[w]) {
+                    continue; // no steals onto avoided (suspect) workers
+                }
                 let pref = opts.prefs.as_ref().map_or(0, |pr| pr[c][w]);
                 let key = (wclock.max(ready), w != home, pref, w, c);
                 if best.is_none_or(|b| key < b) {
@@ -209,7 +233,13 @@ pub fn schedule_chains_opts(chains: &[Vec<Task>], p: usize, opts: &ScheduleOpts)
         if stolen {
             steals += 1;
         }
-        let finish = start.saturating_add(task.cost);
+        // A slowed worker stretches the task; the default path must stay
+        // bit-identical, so only scale when a factor is present.
+        let cost = match &opts.slow {
+            Some(sl) => ((task.cost as f64) * sl[w]).round() as u64,
+            None => task.cost,
+        };
+        let finish = start.saturating_add(cost);
         clock[w] = finish;
         ready_at[c] = finish;
         if next[c] == chains[c].len() {
@@ -547,6 +577,79 @@ mod tests {
         assert_eq!(base.placement, s.placement);
         assert_eq!(base.finish, s.finish);
         assert_eq!(base.steals, s.steals);
+    }
+
+    #[test]
+    fn avoided_workers_keep_their_chains_but_receive_no_steals() {
+        // Two chains homed on worker 0; workers 1 and 2 are idle. Without
+        // avoidance chain 1's first task steals to worker 1 (lowest id);
+        // with worker 1 suspect it must go to worker 2 instead.
+        let chains = vec![
+            vec![Task { id: 0, cost: 10 }, Task { id: 1, cost: 10 }],
+            vec![Task { id: 10, cost: 10 }, Task { id: 11, cost: 10 }],
+        ];
+        let homes = Some(vec![0, 0]);
+        let base = schedule_chains_opts(
+            &chains,
+            3,
+            &ScheduleOpts { homes: homes.clone(), ..ScheduleOpts::default() },
+        );
+        let avoided = schedule_chains_opts(
+            &chains,
+            3,
+            &ScheduleOpts {
+                homes: homes.clone(),
+                avoid: Some(vec![false, true, false]),
+                ..ScheduleOpts::default()
+            },
+        );
+        let worker_of = |s: &Schedule, id: u64| {
+            s.placement.iter().find(|&&(t, _)| t == id).unwrap().1
+        };
+        assert_eq!(worker_of(&base, 10), 1, "baseline steals to the lowest id");
+        assert_eq!(worker_of(&avoided, 10), 2, "suspect worker receives no steals");
+        assert_eq!(avoided.finish[1], 0, "nothing landed on the suspect");
+        // A chain homed ON the suspect worker still runs there: the mask is
+        // soft (the worker is slow to answer, not dead).
+        let homed = schedule_chains_opts(
+            &[vec![Task { id: 20, cost: 5 }]],
+            3,
+            &ScheduleOpts {
+                homes: Some(vec![1]),
+                avoid: Some(vec![false, true, false]),
+                ..ScheduleOpts::default()
+            },
+        );
+        assert_eq!(worker_of(&homed, 20), 1, "homed chain still runs on the suspect");
+        // No-avoidance mask is the bitwise baseline.
+        let none = schedule_chains_opts(
+            &chains,
+            3,
+            &ScheduleOpts { homes, avoid: Some(vec![false; 3]), ..ScheduleOpts::default() },
+        );
+        assert_eq!(none.placement, base.placement);
+        assert_eq!(none.finish, base.finish);
+    }
+
+    #[test]
+    fn slow_factors_stretch_costs_on_the_slow_worker() {
+        let chains: Vec<Vec<Task>> = (0u64..2).map(|c| vec![Task { id: c, cost: 10 }]).collect();
+        let opts = ScheduleOpts {
+            slow: Some(vec![1.0, 2.5]),
+            ..ScheduleOpts::default()
+        };
+        let s = schedule_chains_opts(&chains, 2, &opts);
+        assert_eq!(s.finish[0], 10);
+        assert_eq!(s.finish[1], 25, "slow worker's task stretched 2.5×");
+        // Unit factors are the bitwise baseline.
+        let base = schedule_chains(&chains, 2);
+        let unit = schedule_chains_opts(
+            &chains,
+            2,
+            &ScheduleOpts { slow: Some(vec![1.0; 2]), ..ScheduleOpts::default() },
+        );
+        assert_eq!(base.placement, unit.placement);
+        assert_eq!(base.finish, unit.finish);
     }
 
     #[test]

@@ -6,7 +6,7 @@ use crate::cluster::ClusterSim;
 use crate::config::{ModelConfig, ModelKind, TrainConfig};
 use crate::engine::fault::FaultController;
 use crate::graph::Graph;
-use crate::metrics::{FaultStats, StageProfile};
+use crate::metrics::{CommStats, FaultStats, StageProfile};
 use crate::nn::params::ParameterManager;
 use crate::nn::ModelParams;
 use crate::partition::{Edge1D, Partitioner};
@@ -92,6 +92,9 @@ pub struct TrainReport {
     /// Checkpoint/failure/recovery accounting — `Some` exactly when the
     /// run's [`crate::config::FaultPlan`] was active.
     pub fault: Option<FaultStats>,
+    /// Retry/timeout/backoff accounting — `Some` exactly when the run's
+    /// [`crate::config::NetPlan`] was active.
+    pub comm: Option<CommStats>,
     pub profile: StageProfile,
 }
 
@@ -116,6 +119,11 @@ impl<'a> Trainer<'a> {
         let mut sim = ClusterSim::new(dg.p(), cfg.cost);
         if cfg.threads > 0 {
             sim.set_threads(cfg.threads);
+        }
+        // An active unreliable-network plan layers under every send; an
+        // inactive one is never installed (bit-identical legacy path).
+        if cfg.net.is_active() {
+            sim.set_net(cfg.net.clone());
         }
         let backend: Box<dyn StageBackend> = if cfg.use_pjrt {
             let dir = std::path::Path::new("artifacts");
@@ -219,8 +227,9 @@ impl<'a> Trainer<'a> {
             }
             if let Some(fc) = fault.as_mut() {
                 // On failure the manager is rolled back; the while
-                // condition replays from the restore point.
-                fc.after_update(&mut self.sim, &mut pm);
+                // condition replays from the restore point. A quorum
+                // breach surfaces as a typed error, never a panic.
+                fc.after_update(&mut self.sim, &mut pm)?;
             }
         }
 
@@ -252,6 +261,7 @@ impl<'a> Trainer<'a> {
             peak_part_bytes: peak_bytes,
             latest_param_l2: pm.fetch_latest().1.l2_norm(),
             fault: fault_stats,
+            comm: cfg.net.is_active().then_some(self.sim.comm),
             profile: ex.profile.clone(),
         })
     }

@@ -253,6 +253,81 @@ impl AsyncStats {
     }
 }
 
+/// Unreliable-network accounting for the modeled cluster (see the
+/// network/clock-model section of the [`crate::cluster`] module docs): a
+/// [`crate::cluster::NetPlan`] draws deterministic per-attempt message
+/// losses; every lost attempt costs the sender a timeout plus capped
+/// exponential backoff and a retransmission, all charged to the modeled
+/// clock only — payloads still arrive, so the numerics are untouched.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommStats {
+    /// Logical remote sends attempted (each may need several attempts).
+    pub sends: u64,
+    /// Retransmissions: extra attempts beyond the first, summed over sends.
+    pub retries: u64,
+    /// Logical sends that hit at least one timeout before delivering.
+    pub timeouts: u64,
+    /// Payload bytes sent again on retransmission attempts.
+    pub retrans_bytes: u64,
+    /// Modeled seconds spent in exponential backoff (excludes the timeouts
+    /// themselves, which are charged separately to the sender's superstep).
+    pub backoff_secs: f64,
+}
+
+impl CommStats {
+    /// Mean retransmissions per logical send (0 when nothing was sent).
+    pub fn retry_rate(&self) -> f64 {
+        if self.sends == 0 {
+            0.0
+        } else {
+            self.retries as f64 / self.sends as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &CommStats) {
+        self.sends += other.sends;
+        self.retries += other.retries;
+        self.timeouts += other.timeouts;
+        self.retrans_bytes += other.retrans_bytes;
+        self.backoff_secs += other.backoff_secs;
+    }
+}
+
+/// Straggler-mitigation accounting for the pipelined coordinator: each
+/// round's chain schedule is checked for workers whose modeled finish time
+/// exceeds the round median by `NetPlan::straggler_factor`; flagged workers
+/// have their queued chains shed (re-homed, steals avoided) and the
+/// schedule with the smaller makespan wins.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StragglerStats {
+    /// Chain schedules examined for stragglers.
+    pub checks: u64,
+    /// Straggler workers flagged across all checks.
+    pub detections: u64,
+    /// Chains re-homed off flagged workers.
+    pub sheds: u64,
+    /// Modeled makespan seconds saved by accepted mitigations.
+    pub saved_secs: f64,
+}
+
+impl StragglerStats {
+    /// Mean stragglers flagged per examined schedule (0 when none checked).
+    pub fn detection_rate(&self) -> f64 {
+        if self.checks == 0 {
+            0.0
+        } else {
+            self.detections as f64 / self.checks as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &StragglerStats) {
+        self.checks += other.checks;
+        self.detections += other.detections;
+        self.sheds += other.sheds;
+        self.saved_secs += other.saved_secs;
+    }
+}
+
 /// Fault-tolerance accounting for checkpointed training (see
 /// [`crate::engine::fault::FaultController`]): checkpoints taken through
 /// the master's command log, failures injected, updates rolled back and
@@ -267,11 +342,23 @@ pub struct FaultStats {
     /// Workers the master declared dead on an injected failure.
     pub failures: u64,
     /// Applied updates rolled back and re-run
-    /// (Σ failure step − restore point).
+    /// (Σ failure step − restore point, one term per failure *event* — a
+    /// concurrent multi-worker failure rolls back once).
     pub restored_steps: u64,
     /// Modeled seconds from each failure until training regained the
     /// failure step (0 exactly when `failures == 0`).
     pub recovery_secs: f64,
+    /// Dead workers re-admitted at a checkpoint boundary
+    /// (`FaultPlan::rejoin_at`), partitions re-balanced back home.
+    pub rejoins: u64,
+    /// Snapshots skipped during restore because their CRC failed
+    /// verification (seeded corruption, `FaultPlan::corrupt_at`).
+    pub corrupt_skipped: u64,
+    /// Restores that fell all the way back to the initial parameter state —
+    /// no intact snapshot preceded the failure (e.g. `checkpoint_every = 0`,
+    /// or every retained snapshot was corrupt). Training degrades
+    /// gracefully instead of aborting; each occurrence is this warning.
+    pub cold_restarts: u64,
 }
 
 impl FaultStats {
@@ -289,6 +376,9 @@ impl FaultStats {
         self.failures += other.failures;
         self.restored_steps += other.restored_steps;
         self.recovery_secs += other.recovery_secs;
+        self.rejoins += other.rejoins;
+        self.corrupt_skipped += other.corrupt_skipped;
+        self.cold_restarts += other.cold_restarts;
     }
 }
 
@@ -412,10 +502,55 @@ mod tests {
         a.restored_steps = 5;
         a.recovery_secs = 0.5;
         assert!((a.mean_restored() - 2.5).abs() < 1e-12);
-        let b = FaultStats { checkpoints: 1, failures: 1, restored_steps: 1, recovery_secs: 0.25 };
+        let b = FaultStats {
+            checkpoints: 1,
+            failures: 1,
+            restored_steps: 1,
+            recovery_secs: 0.25,
+            rejoins: 2,
+            corrupt_skipped: 1,
+            cold_restarts: 1,
+        };
         a.merge(&b);
         assert_eq!((a.checkpoints, a.failures, a.restored_steps), (4, 3, 6));
         assert!((a.recovery_secs - 0.75).abs() < 1e-12);
+        assert_eq!((a.rejoins, a.corrupt_skipped, a.cold_restarts), (2, 1, 1));
+    }
+
+    #[test]
+    fn comm_stats_rates_and_merge() {
+        let mut a = CommStats::default();
+        assert_eq!(a.retry_rate(), 0.0);
+        a.sends = 10;
+        a.retries = 5;
+        a.timeouts = 3;
+        a.retrans_bytes = 640;
+        a.backoff_secs = 0.1;
+        assert!((a.retry_rate() - 0.5).abs() < 1e-12);
+        let b = CommStats {
+            sends: 2,
+            retries: 1,
+            timeouts: 1,
+            retrans_bytes: 64,
+            backoff_secs: 0.05,
+        };
+        a.merge(&b);
+        assert_eq!((a.sends, a.retries, a.timeouts, a.retrans_bytes), (12, 6, 4, 704));
+        assert!((a.backoff_secs - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_stats_rates_and_merge() {
+        let mut a = StragglerStats::default();
+        assert_eq!(a.detection_rate(), 0.0);
+        a.checks = 4;
+        a.detections = 2;
+        a.sheds = 3;
+        a.saved_secs = 1.5;
+        assert!((a.detection_rate() - 0.5).abs() < 1e-12);
+        a.merge(&StragglerStats { checks: 1, detections: 1, sheds: 1, saved_secs: 0.5 });
+        assert_eq!((a.checks, a.detections, a.sheds), (5, 3, 4));
+        assert!((a.saved_secs - 2.0).abs() < 1e-12);
     }
 
     #[test]

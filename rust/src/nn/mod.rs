@@ -149,6 +149,39 @@ impl ModelParams {
         f("dec.b", &mut self.decoder.b, &grads.decoder.b);
     }
 
+    /// Read-only traversal of every (name, values) pair, in exactly the
+    /// [`ModelParams::visit_with`] order — checkpoint integrity folds every
+    /// parameter into a CRC without cloning a zero gradient.
+    pub fn visit(&self, mut f: impl FnMut(&str, &[f32])) {
+        for (k, l) in self.layers.iter().enumerate() {
+            f(&format!("layer{k}.W"), &l.proj.w.data);
+            f(&format!("layer{k}.b"), &l.proj.b);
+            if let Some(a) = l.att.as_ref() {
+                f(&format!("layer{k}.a_src"), &a.a_src);
+                f(&format!("layer{k}.a_dst"), &a.a_dst);
+                f(&format!("layer{k}.a_edge"), &a.a_edge);
+            }
+        }
+        f("dec.W", &self.decoder.w.data);
+        f("dec.b", &self.decoder.b);
+    }
+
+    /// Mutable traversal in the same order (seeded checkpoint-corruption
+    /// injection edits stored values in place).
+    pub fn visit_mut(&mut self, mut f: impl FnMut(&str, &mut [f32])) {
+        for (k, l) in self.layers.iter_mut().enumerate() {
+            f(&format!("layer{k}.W"), &mut l.proj.w.data);
+            f(&format!("layer{k}.b"), &mut l.proj.b);
+            if let Some(a) = l.att.as_mut() {
+                f(&format!("layer{k}.a_src"), &mut a.a_src);
+                f(&format!("layer{k}.a_dst"), &mut a.a_dst);
+                f(&format!("layer{k}.a_edge"), &mut a.a_edge);
+            }
+        }
+        f("dec.W", &mut self.decoder.w.data);
+        f("dec.b", &mut self.decoder.b);
+    }
+
     /// `self += other` (gradient aggregation across partitions — the
     /// Reduce stage).
     pub fn accumulate(&mut self, other: &ModelParams) {
@@ -172,9 +205,7 @@ impl ModelParams {
     /// Global L2 norm of all parameters (monitoring / tests).
     pub fn l2_norm(&self) -> f32 {
         let mut sq = 0.0f64;
-        let zero = self.zeros_like();
-        let mut me = self.clone();
-        me.visit_with(&zero, |_, p, _| {
+        self.visit(|_, p| {
             for &x in p.iter() {
                 sq += (x as f64) * (x as f64);
             }
@@ -234,5 +265,20 @@ mod tests {
         let mut seen = 0usize;
         p.visit_with(&zero, |_, pv, _| seen += pv.len());
         assert_eq!(seen, cfg.param_count());
+    }
+
+    #[test]
+    fn readonly_and_mut_visits_match_visit_with_order() {
+        let cfg = ModelConfig::gat_e(8, 4, 3, 2, 5);
+        let mut p = ModelParams::init(&cfg, 9);
+        let zero = p.zeros_like();
+        let mut with_order: Vec<(String, usize)> = Vec::new();
+        p.visit_with(&zero, |n, pv, _| with_order.push((n.to_string(), pv.len())));
+        let mut ro_order: Vec<(String, usize)> = Vec::new();
+        p.visit(|n, pv| ro_order.push((n.to_string(), pv.len())));
+        let mut mut_order: Vec<(String, usize)> = Vec::new();
+        p.visit_mut(|n, pv| mut_order.push((n.to_string(), pv.len())));
+        assert_eq!(with_order, ro_order, "integrity CRC must fold the optimizer's order");
+        assert_eq!(with_order, mut_order);
     }
 }

@@ -51,6 +51,22 @@ impl Optimizer {
         self.slots.values().map(|s| (s.m.len() + s.v.len()) * std::mem::size_of::<f32>()).sum()
     }
 
+    /// Fold the mutable optimizer state (step counter + moment slots) into
+    /// a checkpoint CRC. Slot keys are visited in sorted order so the
+    /// digest is independent of `HashMap` iteration order.
+    pub fn fold_state(&self, crc: &mut crate::util::Crc32) {
+        crc.update(&self.t.to_le_bytes());
+        let mut keys: Vec<&String> = self.slots.keys().collect();
+        keys.sort_unstable();
+        for k in keys {
+            crc.update(k.as_bytes());
+            let slot = &self.slots[k];
+            for &x in slot.m.iter().chain(&slot.v) {
+                crc.update(&x.to_bits().to_le_bytes());
+            }
+        }
+    }
+
     /// Apply one update step: `params ← params - lr·direction(grads)`.
     pub fn step(&mut self, params: &mut ModelParams, grads: &ModelParams) {
         self.t += 1;

@@ -10,6 +10,7 @@
 
 use super::{optim::Optimizer, ModelParams};
 use crate::config::{OptimizerKind, UpdateMode};
+use crate::util::{hash64, Crc32};
 use std::collections::VecDeque;
 
 // Hand-rolled Display/Error impls: `thiserror` is not in the vendored
@@ -216,18 +217,23 @@ impl ParameterManager {
         self.versions.len()
     }
 
+    /// Serialized size of the live state (latest parameters + optimizer
+    /// moments) — what a rejoining worker must fetch before taking work.
+    pub fn state_bytes(&self) -> usize {
+        self.fetch_latest().1.bytes() + self.optimizer.state_bytes()
+    }
+
     /// Snapshot everything a failure restore needs: the latest parameter
     /// version, the optimizer moments, the version counter, and the
-    /// staleness accounting. This is what the master's checkpoint store
+    /// staleness accounting, sealed under a CRC-32 so a restore can detect
+    /// storage corruption. This is what the master's checkpoint store
     /// holds (paper Figure 2: the master "manages checkpoints").
     pub fn snapshot(&self) -> ParamSnapshot {
         let (version, params) = self.fetch_latest();
-        ParamSnapshot {
-            version,
-            params: params.clone(),
-            optimizer: self.optimizer.clone(),
-            stale: (self.stale_max, self.stale_sum, self.stale_n),
-        }
+        let stale = (self.stale_max, self.stale_sum, self.stale_n);
+        let crc = snapshot_crc(version, params, &self.optimizer, stale);
+        let (params, optimizer) = (params.clone(), self.optimizer.clone());
+        ParamSnapshot { version, params, optimizer, stale, crc }
     }
 
     /// Roll the manager back to `snap`: the version ring collapses to the
@@ -246,16 +252,43 @@ impl ParameterManager {
     }
 }
 
+/// Fold everything a snapshot stores into a CRC-32: version counter,
+/// every parameter bit (names included, in the optimizer's traversal
+/// order), optimizer moments (sorted slot keys), staleness accounting.
+fn snapshot_crc(
+    version: u64,
+    params: &ModelParams,
+    optimizer: &Optimizer,
+    stale: (u64, u64, u64),
+) -> u32 {
+    let mut crc = Crc32::new();
+    crc.update(&version.to_le_bytes());
+    params.visit(|name, p| {
+        crc.update(name.as_bytes());
+        for &x in p {
+            crc.update(&x.to_bits().to_le_bytes());
+        }
+    });
+    optimizer.fold_state(&mut crc);
+    crc.update(&stale.0.to_le_bytes());
+    crc.update(&stale.1.to_le_bytes());
+    crc.update(&stale.2.to_le_bytes());
+    crc.finish()
+}
+
 /// A consistent checkpoint of the [`ParameterManager`] — parameters,
-/// optimizer moments and version counter. Opaque outside this module;
-/// produced by [`ParameterManager::snapshot`] and consumed by
-/// [`ParameterManager::restore`].
+/// optimizer moments and version counter, sealed under a CRC-32 digest.
+/// Opaque outside this module; produced by [`ParameterManager::snapshot`]
+/// and consumed by [`ParameterManager::restore`] after
+/// [`ParamSnapshot::verify`] clears it.
 #[derive(Clone, Debug)]
 pub struct ParamSnapshot {
     version: u64,
     params: ModelParams,
     optimizer: Optimizer,
     stale: (u64, u64, u64),
+    /// CRC-32 over the fields above, computed at snapshot time.
+    crc: u32,
 }
 
 impl ParamSnapshot {
@@ -268,6 +301,36 @@ impl ParamSnapshot {
     /// moments) — what the recovery path charges the modeled network for.
     pub fn bytes(&self) -> usize {
         self.params.bytes() + self.optimizer.state_bytes()
+    }
+
+    /// The CRC-32 sealed at snapshot time (checkpoint-identity checks).
+    pub fn digest(&self) -> u32 {
+        self.crc
+    }
+
+    /// Recompute the CRC over the stored state and compare against the
+    /// sealed digest. `false` means the snapshot was damaged after it was
+    /// taken and must not be restored.
+    pub fn verify(&self) -> bool {
+        snapshot_crc(self.version, &self.params, &self.optimizer, self.stale) == self.crc
+    }
+
+    /// Seeded storage-corruption injection: flip one mantissa bit of one
+    /// deterministically-chosen parameter value, leaving the sealed CRC
+    /// untouched — [`ParamSnapshot::verify`] then fails (CRC-32 detects
+    /// every single-bit error). The live training state never sees this;
+    /// only the stored checkpoint copy is damaged.
+    pub fn corrupt(&mut self, seed: u64) {
+        let numel = self.params.numel() as u64;
+        let target = (hash64(seed ^ self.version) % numel.max(1)) as usize;
+        let mut idx = 0usize;
+        self.params.visit_mut(|_, p| {
+            if target >= idx && target < idx + p.len() {
+                let x = &mut p[target - idx];
+                *x = f32::from_bits(x.to_bits() ^ 0x0040_0000);
+            }
+            idx += p.len();
+        });
     }
 }
 
@@ -466,6 +529,45 @@ mod tests {
         b.update(1);
         assert_eq!(a.fetch_latest().1, b.fetch_latest().1);
         assert_eq!(a.latest_version(), b.latest_version());
+    }
+
+    #[test]
+    fn snapshot_crc_verifies_and_detects_corruption() {
+        let cfg = ModelConfig::gcn(4, 4, 2, 1);
+        let mut pm = ParameterManager::new(
+            ModelParams::init(&cfg, 1),
+            OptimizerKind::Adam, // moment slots exercise the sorted-key fold
+            0.1,
+            0.0,
+            UpdateMode::Synchronous,
+        );
+        let g = pm.fetch_latest().1.zeros_like();
+        pm.push_grads(&g);
+        pm.update(1);
+        let snap = pm.snapshot();
+        assert!(snap.verify(), "a fresh snapshot is intact");
+        assert_eq!(snap.digest(), pm.snapshot().digest(), "digest is a pure state function");
+        // Corruption is deterministic per seed and always caught.
+        let mut bad = snap.clone();
+        bad.corrupt(7);
+        assert!(!bad.verify(), "a flipped bit must fail verification");
+        assert_eq!(bad.digest(), snap.digest(), "the sealed digest is untouched");
+        let mut bad2 = snap.clone();
+        bad2.corrupt(7);
+        assert_eq!(bad2.params, bad.params, "same seed corrupts the same bit");
+        let mut bad3 = snap.clone();
+        bad3.corrupt(8);
+        assert!(!bad3.verify());
+    }
+
+    #[test]
+    fn state_bytes_matches_snapshot_bytes() {
+        let mut pm = mk();
+        let g = pm.fetch_latest().1.zeros_like();
+        pm.push_grads(&g);
+        pm.update(1);
+        assert_eq!(pm.state_bytes(), pm.snapshot().bytes());
+        assert!(pm.state_bytes() > 0);
     }
 
     #[test]

@@ -24,6 +24,42 @@ pub fn hash64_pair(a: u64, b: u64) -> u64 {
     hash64(a ^ hash64(b).rotate_left(17))
 }
 
+/// Streaming CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`) used to
+/// checksum [`crate::nn::params::ParamSnapshot`]s. Bitwise (no lookup
+/// table): snapshots are taken rarely, so simplicity beats speed here, and
+/// the result is stable across runs and platforms.
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32(u32);
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32(0xFFFF_FFFF)
+    }
+
+    /// Fold `bytes` into the running checksum.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.0;
+        for &b in bytes {
+            c ^= b as u32;
+            for _ in 0..8 {
+                c = (c >> 1) ^ (0xEDB8_8320 & 0u32.wrapping_sub(c & 1));
+            }
+        }
+        self.0 = c;
+    }
+
+    /// Finalize and return the checksum.
+    pub fn finish(self) -> u32 {
+        !self.0
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Crc32 {
+        Crc32::new()
+    }
+}
+
 /// Human-readable SI formatting for counters (e.g. `1.4G`, `57.0M`).
 pub fn si(x: f64) -> String {
     let ax = x.abs();
@@ -62,6 +98,25 @@ mod tests {
     #[test]
     fn hash_pair_is_order_sensitive() {
         assert_ne!(hash64_pair(1, 2), hash64_pair(2, 1));
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // The canonical IEEE test vector.
+        let mut c = Crc32::new();
+        c.update(b"123456789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+        // Streaming in chunks equals one-shot.
+        let mut a = Crc32::new();
+        a.update(b"1234");
+        a.update(b"56789");
+        assert_eq!(a.finish(), 0xCBF4_3926);
+        // Empty input.
+        assert_eq!(Crc32::new().finish(), 0);
+        // A single flipped bit changes the checksum.
+        let mut d = Crc32::new();
+        d.update(b"123456788");
+        assert_ne!(d.finish(), 0xCBF4_3926);
     }
 
     #[test]

@@ -60,7 +60,7 @@ fn checkpointing_without_failures_is_bitwise_golden() {
     // bitwise-equal to `Trainer::run` and to both pipelined modes.
     let g = gen::citation_like("cora", 7);
     let with_ckpt = |mut cfg: TrainConfig| {
-        cfg.fault = FaultPlan { checkpoint_every: 2, fail_at: Vec::new() };
+        cfg.fault = FaultPlan { checkpoint_every: 2, ..FaultPlan::default() };
         cfg
     };
 
@@ -114,7 +114,8 @@ fn injected_failure_recovers_deterministically() {
     let g = gen::citation_like("citeseer", 6);
     let run = || {
         let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), 12);
-        cfg.fault = FaultPlan { checkpoint_every: 4, fail_at: vec![(6, 1)] };
+        cfg.fault =
+            FaultPlan { checkpoint_every: 4, fail_at: vec![(6, 1)], ..FaultPlan::default() };
         let mut t = Trainer::new(&g, cfg, 4).unwrap();
         t.run().unwrap()
     };
@@ -132,7 +133,7 @@ fn injected_failure_recovers_deterministically() {
     // less modeled time (the failure run paid restore + replay + a
     // degraded two-partitions-per-survivor tail).
     let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), 12);
-    cfg.fault = FaultPlan { checkpoint_every: 4, fail_at: Vec::new() };
+    cfg.fault = FaultPlan { checkpoint_every: 4, ..FaultPlan::default() };
     let mut t = Trainer::new(&g, cfg, 4).unwrap();
     let free = t.run().unwrap();
     assert!(
@@ -155,7 +156,11 @@ fn pipelined_and_async_failure_runs_are_deterministic() {
             cfg.pipeline_width = width;
             cfg.accum_window = window;
             cfg.update_mode = mode;
-            cfg.fault = FaultPlan { checkpoint_every: 2, fail_at: vec![(3, 0), (5, 2)] };
+            cfg.fault = FaultPlan {
+                checkpoint_every: 2,
+                fail_at: vec![(3, 0), (5, 2)],
+                ..FaultPlan::default()
+            };
             let mut t = Trainer::new(&g, cfg, 4).unwrap();
             t.train_pipelined().unwrap()
         };
@@ -189,7 +194,7 @@ fn failure_accuracy_within_one_percent_at_matched_updates() {
             .eval_every(5)
             .lr(0.03)
             .seed(7)
-            .fault(FaultPlan { checkpoint_every: 10, fail_at })
+            .fault(FaultPlan { checkpoint_every: 10, fail_at, ..FaultPlan::default() })
             .build()
     };
     let free = {
@@ -300,7 +305,11 @@ fn stray_ranks_in_the_schedule_are_harmless() {
     // nor kill anyone — the master counts and ignores them.
     let g = gen::citation_like("citeseer", 6);
     let mut cfg = base_cfg(&g, StrategyKind::mini(0.3), 8);
-    cfg.fault = FaultPlan { checkpoint_every: 2, fail_at: vec![(3, 99), (5, usize::MAX)] };
+    cfg.fault = FaultPlan {
+        checkpoint_every: 2,
+        fail_at: vec![(3, 99), (5, usize::MAX)],
+        ..FaultPlan::default()
+    };
     let mut t = Trainer::new(&g, cfg, 4).unwrap();
     let r = t.run().unwrap();
     let fs = r.fault.unwrap();

@@ -1,0 +1,360 @@
+//! Unreliable-network robustness suite (ISSUE 6): retry/timeout/backoff
+//! under a [`NetPlan`], straggler mitigation, multi-failure recovery, and
+//! checkpoint integrity.
+//!
+//! Pins the subsystem's load-bearing invariants:
+//!
+//! * **A `NetPlan` moves only the modeled clock** — for any seeded plan
+//!   with loss < 1.0, training terminates and the loss series, parameter
+//!   fingerprint and test accuracy are bitwise identical to the zero-loss
+//!   run; only `CommStats`, the byte/message totals and the clock differ
+//!   (qcheck).
+//! * **Concurrent failures recover** — a two-worker simultaneous failure
+//!   is one event with one rollback, and the final accuracy stays within
+//!   1% absolute of the failure-free run at matched applied-update count.
+//! * **Corrupt checkpoints are skipped** — a CRC-failing snapshot falls
+//!   back to the previous intact one, deterministically; with no intact
+//!   snapshot at all the run cold-restarts from the initial parameter
+//!   state instead of aborting (qcheck).
+//! * **Quorum breach is a typed error** — losing more workers than the
+//!   quorum allows surfaces as an `Err` naming "quorum", never a panic.
+//! * **Suspicion is benign** — suspected workers are steal-avoided in the
+//!   schedule but the numerics never move.
+
+use graphtheta::config::{
+    config_from_kv, parse_kv, FaultPlan, ModelConfig, NetPlan, StrategyKind, TrainConfig,
+};
+use graphtheta::engine::fault::FaultError;
+use graphtheta::engine::trainer::{TrainReport, Trainer};
+use graphtheta::graph::{gen, Graph};
+use graphtheta::util::qcheck::qcheck_cases;
+
+fn base_cfg(g: &Graph, epochs: usize) -> TrainConfig {
+    TrainConfig::builder()
+        .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+        .strategy(StrategyKind::mini(0.3))
+        .epochs(epochs)
+        .eval_every(5)
+        .lr(0.05)
+        .seed(7)
+        .build()
+}
+
+fn assert_numerics_equal(a: &TrainReport, b: &TrainReport, what: &str) {
+    assert_eq!(a.losses, b.losses, "{what}: loss series diverged");
+    assert_eq!(
+        a.latest_param_l2.to_bits(),
+        b.latest_param_l2.to_bits(),
+        "{what}: parameter fingerprint diverged"
+    );
+    assert_eq!(
+        a.test_accuracy.to_bits(),
+        b.test_accuracy.to_bits(),
+        "{what}: test accuracy diverged"
+    );
+    assert_eq!(a.total_flops, b.total_flops, "{what}: FLOP accounting diverged");
+}
+
+#[test]
+fn any_lossy_network_is_parameter_bitwise_identical_to_zero_loss() {
+    // Acceptance (a): for any seeded NetPlan with loss < 1.0 training
+    // terminates (forced delivery after max_retries bounds every send) and
+    // the numerics are bitwise those of the perfect-network run.
+    let g = gen::citation_like("citeseer", 6);
+    let baseline = {
+        let mut t = Trainer::new(&g, base_cfg(&g, 6), 4).unwrap();
+        t.run().unwrap()
+    };
+    assert!(baseline.comm.is_none(), "no plan, no comm stats");
+    qcheck_cases(
+        "netplan-clock-only",
+        5,
+        |r| {
+            let mut plan = NetPlan::seeded(1 + r.below(10_000) as u64, 4);
+            // Stress beyond the seeded range: anywhere in [0.05, 0.95).
+            plan.loss = 0.05 + 0.90 * r.f64();
+            plan
+        },
+        |plan| {
+            let mut cfg = base_cfg(&g, 6);
+            cfg.net = plan.clone();
+            let mut t = Trainer::new(&g, cfg, 4).map_err(|e| e.to_string())?;
+            let lossy = t.run().map_err(|e| e.to_string())?;
+            if lossy.losses != baseline.losses {
+                return Err("loss series diverged".into());
+            }
+            if lossy.latest_param_l2.to_bits() != baseline.latest_param_l2.to_bits() {
+                return Err("parameters diverged".into());
+            }
+            if lossy.test_accuracy.to_bits() != baseline.test_accuracy.to_bits() {
+                return Err("test accuracy diverged".into());
+            }
+            if lossy.total_flops != baseline.total_flops {
+                return Err("FLOP accounting diverged".into());
+            }
+            let comm = lossy.comm.ok_or("active plan must report comm stats")?;
+            if comm.sends == 0 {
+                return Err("no remote sends on 4 partitions".into());
+            }
+            if lossy.sim_total < baseline.sim_total {
+                return Err(format!(
+                    "lossy clock {} below perfect-network {}",
+                    lossy.sim_total, baseline.sim_total
+                ));
+            }
+            if comm.retries > 0 && lossy.sim_total <= baseline.sim_total {
+                return Err("retries charged nothing to the clock".into());
+            }
+            if comm.retries > 0 && comm.backoff_secs <= 0.0 {
+                return Err("retries without backoff".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lossy_runs_are_deterministic_per_seed() {
+    let g = gen::citation_like("citeseer", 6);
+    let run = || {
+        let mut cfg = base_cfg(&g, 6);
+        cfg.net = NetPlan { seed: 11, loss: 0.3, ..NetPlan::default() };
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_numerics_equal(&a, &b, "lossy determinism");
+    assert_eq!(a.sim_total.to_bits(), b.sim_total.to_bits(), "clock not deterministic");
+    let (ca, cb) = (a.comm.unwrap(), b.comm.unwrap());
+    assert_eq!(ca, cb, "comm stats not deterministic");
+    assert!(ca.retries > 0, "loss 0.3 over a whole run must retry at least once");
+    assert!(ca.timeouts > 0);
+    assert!(ca.retrans_bytes > 0);
+}
+
+#[test]
+fn concurrent_two_worker_failure_recovers_within_one_percent() {
+    // Acceptance (b): both workers die at the same step — one event, one
+    // rollback — and accuracy stays within 1% absolute of the
+    // failure-free run at matched applied-update count.
+    let g = gen::citation_like("cora", 7);
+    let cfg = |fail_at: Vec<(u64, usize)>| {
+        TrainConfig::builder()
+            .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+            .strategy(StrategyKind::mini(0.5))
+            .epochs(60)
+            .eval_every(5)
+            .lr(0.03)
+            .seed(7)
+            .fault(FaultPlan { checkpoint_every: 10, fail_at, ..FaultPlan::default() })
+            .build()
+    };
+    let free = {
+        let mut t = Trainer::new(&g, cfg(Vec::new()), 4).unwrap();
+        t.run().unwrap()
+    };
+    let failed = {
+        let mut t = Trainer::new(&g, cfg(vec![(23, 1), (23, 2)]), 4).unwrap();
+        t.run().unwrap()
+    };
+    let fs = failed.fault.unwrap();
+    assert_eq!(fs.failures, 2, "both victims counted");
+    assert_eq!(fs.restored_steps, 3, "one rollback: 23 → checkpoint 20");
+    assert!(fs.recovery_secs > 0.0);
+    assert_eq!(fs.cold_restarts, 0);
+    assert_eq!(failed.losses.len(), 60, "matched applied-update count");
+    let (a_free, a_fail) = (free.test_accuracy, failed.test_accuracy);
+    assert!(a_free > 0.45, "failure-free run failed to learn: {a_free}");
+    assert!(
+        (a_free - a_fail).abs() <= 0.01 + 1e-9,
+        "accuracy drifted: failure-free {a_free} vs two-worker failure {a_fail}"
+    );
+}
+
+#[test]
+fn corrupted_checkpoint_falls_back_to_previous_intact_snapshot() {
+    // Acceptance (c): the CRC catches the seeded corruption of the
+    // checkpoint at update 4, so the failure at 5 restores from the
+    // intact one at 2 — deterministically.
+    let g = gen::citation_like("citeseer", 6);
+    let run = || {
+        let mut cfg = base_cfg(&g, 8);
+        cfg.fault = FaultPlan {
+            checkpoint_every: 2,
+            fail_at: vec![(5, 1)],
+            corrupt_at: vec![4],
+            ..FaultPlan::default()
+        };
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_numerics_equal(&a, &b, "corrupt-fallback");
+    assert_eq!(a.sim_total.to_bits(), b.sim_total.to_bits());
+    let fs = a.fault.unwrap();
+    assert_eq!(fs, b.fault.unwrap(), "fault stats must be deterministic");
+    assert_eq!(fs.corrupt_skipped, 1, "the corrupt snapshot at 4 is skipped");
+    assert_eq!(fs.restored_steps, 3, "failure at 5 restores to the intact 2");
+    assert_eq!(fs.cold_restarts, 0);
+    assert_eq!(a.losses.len(), 8);
+}
+
+#[test]
+fn quorum_breach_is_a_typed_error_never_a_panic() {
+    // Acceptance (d): with quorum 3 on 4 workers a two-worker failure
+    // leaves too few survivors — the run returns an error naming
+    // "quorum" instead of panicking.
+    let g = gen::citation_like("citeseer", 6);
+    let mut cfg = base_cfg(&g, 8);
+    cfg.fault = FaultPlan {
+        checkpoint_every: 2,
+        fail_at: vec![(2, 1), (2, 2)],
+        quorum: 3,
+        ..FaultPlan::default()
+    };
+    let mut t = Trainer::new(&g, cfg, 4).unwrap();
+    let err = t.run().expect_err("quorum breach must surface as an error");
+    assert!(
+        err.to_string().contains("quorum"),
+        "error must name the quorum rule: {err}"
+    );
+    let typed = err.downcast_ref::<FaultError>().expect("typed FaultError");
+    assert_eq!(
+        *typed,
+        FaultError::QuorumLost { step: 2, survivors: 2, quorum: 3 },
+        "exact breach report"
+    );
+}
+
+#[test]
+fn no_snapshot_before_the_failure_cold_restarts_gracefully() {
+    // Satellite: `checkpoint_every = 0` keeps the fault machinery on with
+    // no periodic snapshots; any failure then restarts from the initial
+    // parameter state — a counted warning, never an abort (qcheck).
+    let g = gen::citation_like("citeseer", 6);
+    qcheck_cases(
+        "cold-restart-graceful",
+        4,
+        |r| (1 + r.below(6) as u64, r.below(4)),
+        |&(step, worker)| {
+            let epochs = 7usize;
+            let run = || {
+                let mut cfg = base_cfg(&g, epochs);
+                cfg.fault = FaultPlan {
+                    checkpoint_every: 0,
+                    fail_at: vec![(step, worker)],
+                    ..FaultPlan::default()
+                };
+                let mut t = Trainer::new(&g, cfg, 4).map_err(|e| e.to_string())?;
+                t.run().map_err(|e| e.to_string())
+            };
+            let a = run()?;
+            let b = run()?;
+            if a.losses != b.losses || a.sim_total.to_bits() != b.sim_total.to_bits() {
+                return Err("cold restart not deterministic".into());
+            }
+            let fs = a.fault.ok_or("active plan reports stats")?;
+            if fs.failures != 1 {
+                return Err(format!("expected 1 failure, got {}", fs.failures));
+            }
+            if fs.cold_restarts != 1 {
+                return Err(format!("expected 1 cold restart, got {}", fs.cold_restarts));
+            }
+            if fs.restored_steps != step {
+                return Err(format!(
+                    "cold restart replays from 0: expected {step} restored, got {}",
+                    fs.restored_steps
+                ));
+            }
+            if a.losses.len() != epochs {
+                return Err(format!("expected {epochs} applied updates, got {}", a.losses.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn suspected_workers_leave_the_numerics_alone() {
+    // Satellite: `Health::Suspect` workers are steal-avoided in the
+    // pipelined schedule until the next heartbeat clears them — placement
+    // may move, the numerics must not.
+    let g = gen::citation_like("citeseer", 6);
+    let run = |suspects: Vec<(u64, usize)>| {
+        let mut cfg = base_cfg(&g, 8);
+        cfg.pipeline_width = 4;
+        cfg.fault = FaultPlan { suspect_at: suspects, ..FaultPlan::default() };
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.train_pipelined().unwrap()
+    };
+    let clean = {
+        let mut cfg = base_cfg(&g, 8);
+        cfg.pipeline_width = 4;
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.train_pipelined().unwrap()
+    };
+    let sus = run(vec![(2, 1), (5, 2)]);
+    assert_numerics_equal(&clean.train, &sus.train, "suspected workers");
+    let fs = sus.train.fault.unwrap();
+    assert_eq!(fs.failures, 0, "suspicion alone never kills");
+    assert_eq!(fs.cold_restarts, 0);
+}
+
+#[test]
+fn net_and_fault_keys_round_trip_through_kv_config() {
+    // Satellite: the new keys parse from `key = value` text into the same
+    // plans the structs describe, and malformed values are typed errors.
+    let text = "net_seed = 9\n\
+                net_loss = 0.25\n\
+                net_slowdown = 1:2.5\n\
+                net_straggler_factor = 1.5\n\
+                quorum = 2\n\
+                rejoin_at = 4:1\n\
+                corrupt_at = 2,4\n\
+                suspect_at = 3:0\n\
+                checkpoint_every = 2\n";
+    let kv = parse_kv(text).unwrap();
+    let cfg = config_from_kv(&kv, 16, 4, 0).unwrap();
+    assert_eq!(cfg.net.seed, 9);
+    assert_eq!(cfg.net.loss, 0.25);
+    assert_eq!(cfg.net.slowdown, vec![(1, 2.5)]);
+    assert_eq!(cfg.net.straggler_factor, 1.5);
+    assert_eq!(cfg.fault.quorum, 2);
+    assert_eq!(cfg.fault.rejoin_at, vec![(4, 1)]);
+    assert_eq!(cfg.fault.corrupt_at, vec![2, 4]);
+    assert_eq!(cfg.fault.suspect_at, vec![(3, 0)]);
+    for bad in ["net_loss = 1.5", "net_slowdown = 1", "rejoin_at = x:1", "corrupt_at = 2,x"] {
+        let kv = parse_kv(bad).unwrap();
+        let err = config_from_kv(&kv, 16, 4, 0).expect_err(bad);
+        let key = bad.split('=').next().unwrap().trim();
+        assert!(err.contains(key), "error for {bad:?} must name {key}: {err}");
+    }
+}
+
+#[test]
+fn straggler_mitigation_reports_and_respects_numerics() {
+    // A chronically slow worker under an active straggler factor: the
+    // mitigation pass runs (checks > 0), any accepted shed saves modeled
+    // time, and the numerics stay those of the clean run.
+    let g = gen::citation_like("citeseer", 6);
+    let run = |net: NetPlan| {
+        let mut cfg = base_cfg(&g, 8);
+        cfg.pipeline_width = 4;
+        cfg.net = net;
+        let mut t = Trainer::new(&g, cfg, 4).unwrap();
+        t.train_pipelined().unwrap()
+    };
+    let clean = run(NetPlan::default());
+    assert!(clean.straggler.is_none(), "no factor, no straggler stats");
+    let slowed = run(NetPlan {
+        slowdown: vec![(1, 4.0)],
+        straggler_factor: 1.5,
+        ..NetPlan::default()
+    });
+    let st = slowed.straggler.expect("active factor reports stats");
+    assert!(st.checks > 0, "every multi-chain round is checked");
+    assert!(st.saved_secs >= 0.0);
+    assert_numerics_equal(&clean.train, &slowed.train, "straggler mitigation");
+}
