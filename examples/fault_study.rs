@@ -1,7 +1,9 @@
 //! Fault study: checkpointed training under deterministic failure
 //! injection on the modeled cluster — the paper's Figure 2 master
 //! ("monitors health, manages checkpoints and directs the learning
-//! procedure") as a runnable tool.
+//! procedure") as a runnable tool. The workload is a neighbor-sampled
+//! mini-batch, so recovery and the network axis compose with the fully
+//! parallel sampled plan builds (splittable counter-based RNG).
 //!
 //! Two sweeps:
 //!
@@ -25,7 +27,9 @@
 //! (numbers are meaningless; the point is that every code path executes)
 //! — CI runs this so the study cannot rot.
 
-use graphtheta::config::{FaultPlan, ModelConfig, NetPlan, StrategyKind, TrainConfig, UpdateMode};
+use graphtheta::config::{
+    FaultPlan, ModelConfig, NetPlan, SamplingConfig, StrategyKind, TrainConfig, UpdateMode,
+};
 use graphtheta::engine::trainer::Trainer;
 use graphtheta::graph::Graph;
 use graphtheta::metrics::{markdown_table, CommStats, FaultStats};
@@ -34,6 +38,11 @@ fn study_cfg(g: &Graph, steps: usize, fault: FaultPlan) -> TrainConfig {
     TrainConfig::builder()
         .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
         .strategy(StrategyKind::mini(0.3))
+        // Neighbor-sampled batches: replayed steps after a failure draw
+        // fresh batches from the generator's splittable streams, and the
+        // sampled builds run at full thread count — recovery now composes
+        // with parallel sampling.
+        .sampling(SamplingConfig::Neighbor { fanout: [8, 5, usize::MAX, usize::MAX] })
         .epochs(steps)
         .eval_every(5)
         .lr(0.03)

@@ -1,7 +1,9 @@
 //! Pipeline study: sweep the hybrid-parallel coordinator's knobs on a
-//! mini-batch workload and report modeled makespan, overlap speedup,
-//! steal counts, staleness, replays and accuracy — the §4.3 flexible
-//! training strategy as a runnable tool.
+//! neighbor-sampled mini-batch workload and report modeled makespan,
+//! overlap speedup, steal counts, staleness, replays and accuracy — the
+//! §4.3 flexible training strategy as a runnable tool. The workload
+//! samples so the sweep exercises the fully parallel sampled plan
+//! builds (splittable counter-based RNG) alongside prefetch overlap.
 //!
 //! Two sweeps:
 //!
@@ -20,7 +22,9 @@
 //! configuration (numbers are meaningless; the point is that every code
 //! path executes) — CI runs this so the study cannot rot.
 
-use graphtheta::config::{ModelConfig, SchedulePolicy, StrategyKind, TrainConfig, UpdateMode};
+use graphtheta::config::{
+    ModelConfig, SamplingConfig, SchedulePolicy, StrategyKind, TrainConfig, UpdateMode,
+};
 use graphtheta::engine::trainer::Trainer;
 use graphtheta::graph::Graph;
 use graphtheta::metrics::markdown_table;
@@ -36,6 +40,11 @@ fn study_cfg(
     TrainConfig::builder()
         .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
         .strategy(StrategyKind::mini(0.3))
+        // Neighbor-sampled batches: sampled plan builds draw from
+        // splittable per-(build, layer, partition) streams, so the
+        // prefetch thread and the in-flight builds here run at full
+        // thread count — the regime this study is about.
+        .sampling(SamplingConfig::Neighbor { fanout: [8, 5, usize::MAX, usize::MAX] })
         .epochs(steps)
         .eval_every(5)
         .lr(0.03)

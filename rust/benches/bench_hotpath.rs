@@ -1,6 +1,7 @@
 //! Hot-path microbenchmarks (the §Perf baseline/after numbers in
 //! EXPERIMENTS.md): GEMM, gather/scatter, the per-edge Gather stage,
-//! active-plan construction, partitioning, and one full NN-TGAR step.
+//! active-plan construction (sparse vs dense, and sampled serial vs
+//! threaded), partitioning, and one full NN-TGAR step.
 //!
 //! `harness = false` (criterion is not vendored): a simple
 //! median-of-runs timer with warmup.
@@ -203,6 +204,43 @@ mod head_only {
         );
     }
 
+    /// Sampled plan construction, serial vs full-thread: the splittable
+    /// per-(build, layer, partition) streams let the scoped-thread layer
+    /// derivation run with neighbor sampling on — the regime the old
+    /// shared sequential RNG forced to a single thread. The two plans are
+    /// asserted bit-identical before timing, so the speedup row carries no
+    /// numeric drift.
+    pub fn sampled_plan_build(
+        results: &mut Results,
+        smoke: bool,
+        g: &Graph,
+        dg: &DistGraph,
+        targets: &[u32],
+    ) {
+        let it = |n: usize| if smoke { 1 } else { n };
+        let sampling = SamplingConfig::Neighbor { fanout: [8, 5, usize::MAX, usize::MAX] };
+        let mut scratch = PlanScratch::new();
+        let build = |threads: usize, scratch: &mut PlanScratch| {
+            scratch.set_threads(threads);
+            let mut r2 = Rng::new(9);
+            ActivePlan::build_with(g, dg, targets.to_vec(), 2, sampling, false, &mut r2, scratch)
+        };
+        let serial_plan = build(1, &mut scratch);
+        let threaded_plan = build(0, &mut scratch);
+        assert_eq!(serial_plan, threaded_plan, "sampled plan must not depend on thread count");
+        bench(results, "plan-build sampled serial (reddit, 500t)", it(20), || {
+            std::hint::black_box(build(1, &mut scratch));
+        });
+        let serial_med = results.last().unwrap().1;
+        bench(results, "plan-build sampled threaded (reddit, 500t)", it(20), || {
+            std::hint::black_box(build(0, &mut scratch));
+        });
+        let par_med = results.last().unwrap().1;
+        let speedup = serial_med / par_med.max(1e-9);
+        results.push(("plan-build sampled thread speedup (x)".into(), speedup, speedup));
+        println!("{:<44} {:>10.2} x", "  ↳ sampled serial vs threaded speedup", speedup);
+    }
+
     /// The serial-supersteps variant of the full NN-TGAR step
     /// (`ClusterSim::set_threads(1)`; the seed simulator has no such
     /// knob). Numerics are identical to the parallel row in `main`.
@@ -371,6 +409,16 @@ mod head_only {
         println!("[seed-compat: serial train_step variant skipped]");
     }
 
+    pub fn sampled_plan_build(
+        _results: &mut Results,
+        _smoke: bool,
+        _g: &Graph,
+        _dg: &DistGraph,
+        _targets: &[u32],
+    ) {
+        println!("[seed-compat: sampled plan-build section skipped]");
+    }
+
     pub fn pipelined_sweep(_results: &mut Results, _smoke: bool, _g: &Graph) {
         println!("[seed-compat: pipelined sweep skipped]");
     }
@@ -467,6 +515,7 @@ fn main() {
     println!();
 
     head_only::plan_build(&mut results, smoke, &g, &dg);
+    head_only::sampled_plan_build(&mut results, smoke, &g, &dg, &targets);
     println!();
 
     // One full NN-TGAR training step (the end-to-end hot path), serial

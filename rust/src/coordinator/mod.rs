@@ -807,15 +807,21 @@ fn place_chains(
     stats: &mut StragglerStats,
 ) -> Schedule {
     let p = ctx.p;
-    let alive_vec = ctx.alive.map(<[bool]>::to_vec);
+    // A mask with no live worker leaves nothing defined — no home to
+    // re-map to, no live finish-time median, and the scheduler itself
+    // requires a live worker. Fall back to the base placement over the
+    // full worker set; aborting (quorum lost) is the fault layer's call,
+    // not the scheduler's.
+    let alive = ctx.alive.filter(|al| al.iter().any(|&a| a));
+    let alive_vec = alive.map(<[bool]>::to_vec);
     // Homes stay implicit (`c % p`) on a healthy round-robin cluster; as
     // soon as anything can move them (dead re-homing, straggler shedding)
     // they must be explicit.
     let (homes, prefs) = match ctx.policy {
         SchedulePolicy::RoundRobin => {
-            let homes = (ctx.alive.is_some() || ctx.straggler_factor > 0.0).then(|| {
+            let homes = (alive.is_some() || ctx.straggler_factor > 0.0).then(|| {
                 let mut homes: Vec<usize> = (0..chains.len()).map(|c| c % p).collect();
-                if let Some(al) = ctx.alive {
+                if let Some(al) = alive {
                     remap_dead_homes(&mut homes, al);
                 }
                 homes
@@ -824,7 +830,7 @@ fn place_chains(
         }
         SchedulePolicy::LocalityAware => {
             let (mut homes, prefs) = locality_placement(weights, p);
-            if let Some(al) = ctx.alive {
+            if let Some(al) = alive {
                 remap_dead_homes(&mut homes, al);
             }
             (Some(homes), Some(prefs))
@@ -848,8 +854,15 @@ fn place_chains(
     // Detection: compare every live worker's finish time against the live
     // median (deterministic — finish times are integer nanoseconds).
     stats.checks += 1;
-    let live = |w: usize| ctx.alive.is_none_or(|al| al[w]);
+    let live = |w: usize| alive.is_none_or(|al| al[w]);
     let mut finishes: Vec<u64> = (0..p).filter(|&w| live(w)).map(|w| base.finish[w]).collect();
+    if finishes.is_empty() {
+        // No live worker at check time: no median exists and nowhere to
+        // shed to — keep the base placement. (Unreachable through the
+        // normalized `alive` above; kept so the detection code never
+        // depends on that normalization for memory safety.)
+        return base;
+    }
     finishes.sort_unstable();
     let median = finishes[finishes.len() / 2];
     let bar = median as f64 * ctx.straggler_factor;
@@ -909,6 +922,41 @@ mod tests {
             .pipeline_width(width)
             .accum_window(window)
             .build()
+    }
+
+    /// Regression: with every worker dead/flagged when the straggler
+    /// check runs, `place_chains` used to panic (the live-median index on
+    /// an empty finish list, and the scheduler's live-worker assert before
+    /// it). It must return the base placement instead.
+    #[test]
+    fn straggler_check_with_no_live_workers_keeps_base() {
+        let chains: Vec<Vec<Task>> = (0..4)
+            .map(|c| {
+                (0..3).map(|j| Task { id: (c * 3 + j) as u64, cost: 1_000 + c as u64 }).collect()
+            })
+            .collect();
+        let alive = vec![false; 3];
+        for policy in [SchedulePolicy::RoundRobin, SchedulePolicy::LocalityAware] {
+            let weights = vec![vec![1u64, 2, 3]; chains.len()];
+            let mut stats = StragglerStats::default();
+            let sched = place_chains(
+                &chains,
+                &weights,
+                &Placement {
+                    p: 3,
+                    policy,
+                    width: 0,
+                    alive: Some(&alive),
+                    avoid: None,
+                    slow: None,
+                    straggler_factor: 1.5,
+                },
+                &mut stats,
+            );
+            // Fallback schedules on the full worker set and sheds nothing.
+            assert_eq!(stats.sheds, 0, "{policy:?}");
+            assert!(sched.makespan() > 0, "{policy:?}");
+        }
     }
 
     #[test]

@@ -31,6 +31,13 @@
 //! rebuilt — but through the generator's persistent
 //! [`PlanScratch`], so construction cost stays proportional to the active
 //! subgraph.
+//!
+//! Sampled builds are no longer a serial special case: fan-out draws come
+//! from splittable per-(build, layer, partition) streams (see
+//! [`crate::util::rng`] and the `tgar::active` module docs), so sampled
+//! mini-batch plans, the cluster-batch cover, and the prefetch thread all
+//! run the scoped-thread layer derivation at full `threads` count — and
+//! stay bit-identical at any setting.
 
 use crate::config::{SamplingConfig, StrategyKind};
 use crate::graph::Graph;
@@ -505,6 +512,35 @@ mod tests {
         let s = bg.plan_cache_stats();
         assert_eq!(s.misses as usize, 2 * nb, "sampling plans are step-random");
         assert_eq!(s.hits, 0);
+    }
+
+    /// Sampled plans through the whole generator path (fresh targets, the
+    /// persistent scratch, Bernoulli fan-out thinning) must not depend on
+    /// the layer-derivation thread count — the splittable-stream contract
+    /// end-to-end, not just inside `run_layer`.
+    #[test]
+    fn sampled_plans_identical_at_any_thread_count() {
+        let (g, dg) = setup();
+        let mk = |threads: usize| {
+            let mut bg = BatchGenerator::new(
+                &g,
+                &dg,
+                StrategyKind::mini(0.3),
+                SamplingConfig::Neighbor { fanout: [4, 3, usize::MAX, usize::MAX] },
+                2,
+                false,
+                13,
+            );
+            bg.set_threads(threads);
+            (0..3).map(|_| bg.next_plan(&g, &dg)).collect::<Vec<_>>()
+        };
+        let serial = mk(1);
+        for threads in [2, 8] {
+            let par = mk(threads);
+            for (step, (a, b)) in serial.iter().zip(&par).enumerate() {
+                assert_eq!(a.as_ref(), b.as_ref(), "threads={threads} step={step}");
+            }
+        }
     }
 
     #[test]

@@ -395,6 +395,32 @@ mod tests {
         assert_eq!(a.sim_total, b.sim_total);
     }
 
+    /// Sampled training is part of the determinism contract too: fan-out
+    /// draws come from per-(build, layer, partition) streams keyed off the
+    /// config seed, so the whole run — loss series, parameter fingerprint,
+    /// modeled clock — is bitwise-identical at any `threads` setting.
+    #[test]
+    fn sampled_runs_deterministic_across_thread_counts() {
+        let g = gen::citation_like("cora", 7);
+        let mk = |threads: usize| {
+            let mut cfg = quick_cfg(&g, StrategyKind::mini(0.4), 6);
+            cfg.sampling = crate::config::SamplingConfig::Neighbor {
+                fanout: [4, 3, usize::MAX, usize::MAX],
+            };
+            cfg.threads = threads;
+            let mut t = Trainer::new(&g, cfg, 3).unwrap();
+            t.run().unwrap()
+        };
+        let a = mk(1);
+        for threads in [2, 8] {
+            let b = mk(threads);
+            assert_eq!(a.losses, b.losses, "loss series diverged at threads={threads}");
+            assert_eq!(a.latest_param_l2, b.latest_param_l2);
+            assert_eq!(a.test_accuracy, b.test_accuracy);
+            assert_eq!(a.sim_total, b.sim_total);
+        }
+    }
+
     #[test]
     fn timing_report_phases_sum_sensibly() {
         let g = gen::citation_like("citeseer", 6);

@@ -64,15 +64,21 @@ pub fn sbm(spec: &SbmSpec) -> Graph {
             None => poisson_round(spec.deg_in_comm, &mut rng),
             Some((max_deg, alpha)) => rng.power_law(max_deg, alpha),
         };
-        for _ in 0..din {
-            if members[c].len() > 1 {
-                let mut u = *rng.choose(&members[c]);
-                if u == v {
-                    u = members[c][(u as usize + 1) % members[c].len()];
+        // Intra-community endpoints: exactly uniform over the *other*
+        // members — draw an index among len-1 slots and step over v's own.
+        // (The retired version chose any member and patched a self-draw by
+        // re-indexing with the node id, which could land back on v and
+        // silently drop the edge; communities of fewer than two members —
+        // possible whenever n is small relative to k — draw nothing.)
+        let mem = &members[c];
+        if mem.len() > 1 {
+            let vpos = mem.binary_search(&v).expect("node missing from its own community");
+            for _ in 0..din {
+                let mut j = rng.below(mem.len() - 1);
+                if j >= vpos {
+                    j += 1;
                 }
-                if u != v {
-                    b.add_edge(v, u);
-                }
+                b.add_edge(v, mem[j]);
             }
         }
         let dout = poisson_round(spec.deg_out_comm, &mut rng);
@@ -333,6 +339,53 @@ pub fn alipay_like(n: usize) -> Graph {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Small-n regression: with `n` small relative to `communities`, many
+    /// communities stay empty and others are singletons — the generator
+    /// must draw nothing for them (never index into an empty or
+    /// one-member list) and still emit a well-formed graph.
+    #[test]
+    fn sbm_small_n_never_panics() {
+        crate::util::qcheck::qcheck(
+            "sbm-small-n",
+            |r| (1 + r.below(12), 1 + r.below(16), r.next_u64(), r.chance(0.5)),
+            |&(n, k, seed, skew)| {
+                let spec = SbmSpec {
+                    name: "tiny".into(),
+                    n,
+                    communities: k,
+                    deg_in_comm: 3.0,
+                    deg_out_comm: 1.0,
+                    feat_dim: 4,
+                    noise: 1.0,
+                    label_noise: 0.1,
+                    skew: skew.then_some((8, 1.75)),
+                    train_frac: 0.5,
+                    val_frac: 0.2,
+                    seed,
+                };
+                let g = sbm(&spec);
+                if g.n != n {
+                    return Err(format!("n {} != {n}", g.n));
+                }
+                for v in 0..g.n {
+                    for (t, _) in g.out_edges(v) {
+                        if t as usize >= n {
+                            return Err(format!("edge target {t} out of range"));
+                        }
+                    }
+                    if g.labels[v] as usize >= k {
+                        return Err(format!("label {} out of range", g.labels[v]));
+                    }
+                }
+                let h = sbm(&spec);
+                if g.m != h.m || g.labels != h.labels {
+                    return Err("sbm not deterministic per seed".into());
+                }
+                Ok(())
+            },
+        );
+    }
 
     #[test]
     fn sbm_is_deterministic() {

@@ -26,12 +26,25 @@
 //! the edge emission — and the sampling-RNG draw order — is identical to a
 //! dense scan), new sources are discovered through stamped visited-markers
 //! in an epoch-persistent [`PlanScratch`], and the per-partition
-//! edge/mirror derivation runs on scoped threads when no sampling RNG is
-//! in play (the [`crate::cluster::ClusterSim::exec_batch`] pattern:
-//! partition-order merge, bit-identical output at any thread count). The
-//! retired dense implementation survives as
-//! [`ActivePlan::build_dense_reference`], the oracle for
-//! `rust/tests/plan_equivalence.rs` and the `bench_hotpath` baseline.
+//! edge/mirror derivation runs on scoped threads (the
+//! [`crate::cluster::ClusterSim::exec_batch`] pattern: partition-order
+//! merge, bit-identical output at any thread count). The retired dense
+//! implementation survives as [`ActivePlan::build_dense_reference`], the
+//! oracle for `rust/tests/plan_equivalence.rs` and the `bench_hotpath`
+//! baseline.
+//!
+//! # Sampling streams (§Perf)
+//!
+//! Fan-out sampling used to force the layer walk serial "to preserve the
+//! shared RNG stream order". With the splittable counter-based RNG
+//! ([`crate::util::rng`]) the builder instead derives
+//! `build key → child(layer) → child(partition)`: every partition of every
+//! sampled layer owns an independent deterministic stream, so sampled
+//! builds take the same scoped-thread path as the sampling-free case and
+//! stay bit-identical at any thread count. Both builders consume exactly
+//! one draw from the caller's `Rng` per build
+//! ([`Rng::split_next`](crate::util::rng::Rng::split_next)) — which keeps
+//! sparse ≡ dense pinned stream-for-stream.
 //!
 //! Active node sets are **nested** — a destination at level `l` also needs
 //! its `h^{l-1}`, so `active[l] ⊆ active[l-1]` — which lets the plan store
@@ -42,7 +55,7 @@ use crate::config::SamplingConfig;
 use crate::graph::Graph;
 use crate::storage::{DistGraph, PartitionView};
 use crate::tgar::commplan::CommPlan;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, StreamKey};
 
 /// The participation plan for one batch.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -281,7 +294,10 @@ struct LayerPartOut {
 /// source gids for the next level. Visiting destinations in ascending
 /// local id keeps the edge emission — and every sampling-RNG draw — in
 /// exactly the order of a dense full-scan, which is what makes the sparse
-/// builder bitwise-equal to [`ActivePlan::build_dense_reference`].
+/// builder bitwise-equal to [`ActivePlan::build_dense_reference`]. `rng`
+/// is this partition's own derived stream (`layer key → child(q)`), so
+/// the walk is thread-placement-independent; it is drawn from only when a
+/// destination's in-degree exceeds `fanout`.
 fn derive_layer_partition(
     pv: &PartitionView,
     ps: &mut PartScratch,
@@ -289,7 +305,7 @@ fn derive_layer_partition(
     fanout: usize,
     needs_dst: bool,
     tick: u32,
-    mut rng: Option<&mut Rng>,
+    mut rng: Rng,
 ) -> LayerPartOut {
     ps.dsts.clear();
     ps.dsts.extend_from_slice(&ps.present[..plen]);
@@ -326,8 +342,7 @@ fn derive_layer_partition(
                 }
                 // Bernoulli thinning approximating uniform fan-out
                 // sampling without a second pass.
-                let r = rng.as_mut().expect("sampling layers run serially with the shared RNG");
-                if !r.chance((fanout as f64 / deg as f64).min(1.0)) {
+                if !rng.chance((fanout as f64 / deg as f64).min(1.0)) {
                     continue;
                 }
                 taken += 1;
@@ -357,9 +372,11 @@ fn derive_layer_partition(
 const PARALLEL_FRONTIER_MIN: usize = 2048;
 
 /// Run one layer's per-partition derivation, in parallel on scoped
-/// threads when no sampling RNG is in play (the `exec_batch` pattern:
-/// contiguous partition chunks, outputs merged in partition order, so the
-/// result is bit-identical to the serial path at any thread count).
+/// threads (the `exec_batch` pattern: contiguous partition chunks,
+/// outputs merged in partition order). Partition `q` samples from the
+/// derived stream `layer_key.child(q)` regardless of which thread runs
+/// it, so the result — including every sampling draw — is bit-identical
+/// to the serial path at any thread count.
 fn run_layer(
     dg: &DistGraph,
     scratch: &mut PlanScratch,
@@ -367,15 +384,12 @@ fn run_layer(
     fanout: usize,
     needs_dst: bool,
     tick: u32,
-    rng: &mut Rng,
+    layer_key: StreamKey,
 ) -> Vec<LayerPartOut> {
     let p = dg.p();
     let threads = scratch.effective_threads().min(p);
     let frontier: usize = plens.iter().sum();
-    // Sampling draws come from one shared RNG stream and must happen in
-    // partition order — parallelize only the sampling-free case
-    // (GraphTheta's default training mode).
-    if fanout != usize::MAX || threads <= 1 || p <= 1 || frontier < PARALLEL_FRONTIER_MIN {
+    if threads <= 1 || p <= 1 || frontier < PARALLEL_FRONTIER_MIN {
         return (0..p)
             .map(|q| {
                 derive_layer_partition(
@@ -385,7 +399,7 @@ fn run_layer(
                     fanout,
                     needs_dst,
                     tick,
-                    Some(&mut *rng),
+                    layer_key.child(q as u64).rng(),
                 )
             })
             .collect();
@@ -398,6 +412,9 @@ fn run_layer(
         let mut ps_rest: &mut [PartScratch] = &mut scratch.parts;
         let mut pv_rest: &[PartitionView] = &dg.parts;
         let mut plen_rest: &[usize] = plens;
+        // First partition id of the current chunk: the key derivation
+        // needs absolute ids, not chunk-relative offsets.
+        let mut q0 = 0usize;
         while !slot_rest.is_empty() {
             let take = chunk.min(slot_rest.len());
             let (slot_head, st) = std::mem::take(&mut slot_rest).split_at_mut(take);
@@ -408,12 +425,20 @@ fn run_layer(
             pv_rest = pvt;
             let (plen_head, plt) = plen_rest.split_at(take);
             plen_rest = plt;
+            let base = q0;
+            q0 += take;
             s.spawn(move || {
-                for (((slot, ps), pv), &plen) in
-                    slot_head.iter_mut().zip(ps_head).zip(pv_head).zip(plen_head)
+                for (i, (((slot, ps), pv), &plen)) in
+                    slot_head.iter_mut().zip(ps_head).zip(pv_head).zip(plen_head).enumerate()
                 {
                     *slot = Some(derive_layer_partition(
-                        pv, ps, plen, fanout, needs_dst, tick, None,
+                        pv,
+                        ps,
+                        plen,
+                        fanout,
+                        needs_dst,
+                        tick,
+                        layer_key.child((base + i) as u64).rng(),
                     ));
                 }
             });
@@ -550,6 +575,10 @@ impl ActivePlan {
         assert!(k < u8::MAX as usize, "layer count {k} exceeds the scratch level range");
         scratch.ensure(g, dg);
         scratch.begin();
+        // One fresh key per build (consumes exactly one draw — the dense
+        // reference does the same, keeping the two builders stream-equal);
+        // per-(layer, partition) sampling streams derive from it below.
+        let build_key = rng.split_next();
         for &t in &targets {
             scratch.stamp(dg, t, k as u8);
         }
@@ -574,7 +603,8 @@ impl ActivePlan {
             // past this point for the next layer).
             let plens: Vec<usize> = scratch.parts.iter().map(|ps| ps.present.len()).collect();
             let tick = scratch.next_tick();
-            let outs = run_layer(dg, scratch, &plens, fanout, needs_dst, tick, rng);
+            let outs =
+                run_layer(dg, scratch, &plens, fanout, needs_dst, tick, build_key.child(l as u64));
             for (q, out) in outs.into_iter().enumerate() {
                 for &sgid in &out.cand_srcs {
                     scratch.stamp(dg, sgid, (l - 1) as u8);
@@ -868,7 +898,10 @@ impl ActivePlan {
     /// the hoisted level-promotion pass) as the equivalence oracle for
     /// `rust/tests/plan_equivalence.rs` and the `bench_hotpath` plan-build
     /// baseline. Bitwise-identical output to [`ActivePlan::build`],
-    /// including the sampling-RNG stream. Not for production use.
+    /// including the sampling streams: it derives the same
+    /// `build key → child(layer) → child(partition)` chain (and consumes
+    /// the same single draw from `rng`) as the sparse builder. Not for
+    /// production use.
     #[doc(hidden)]
     pub fn build_dense_reference(
         g: &Graph,
@@ -881,6 +914,7 @@ impl ActivePlan {
     ) -> ActivePlan {
         let p = dg.p();
         let n = g.n;
+        let build_key = rng.split_next();
         let mut node_active = vec![vec![false; n]; k + 1];
         for &t in &targets {
             node_active[k][t as usize] = true;
@@ -901,7 +935,9 @@ impl ActivePlan {
                     fanout.get(hop).copied().unwrap_or(usize::MAX)
                 }
             };
+            let layer_key = build_key.child(l as u64);
             for (q, pv) in dg.parts.iter().enumerate() {
+                let mut part_rng = layer_key.child(q as u64).rng();
                 let mut need_src: Vec<bool> = vec![false; pv.n_local()];
                 let mut need_dst: Vec<bool> = vec![false; pv.n_local()];
                 for dst in 0..pv.n_local() {
@@ -923,7 +959,7 @@ impl ActivePlan {
                             if taken >= fanout {
                                 continue;
                             }
-                            if !rng.chance((fanout as f64 / deg as f64).min(1.0)) {
+                            if !part_rng.chance((fanout as f64 / deg as f64).min(1.0)) {
                                 continue;
                             }
                             taken += 1;

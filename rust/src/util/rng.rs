@@ -1,51 +1,152 @@
-//! Deterministic pseudo-random number generation.
+//! Deterministic, splittable pseudo-random number generation.
 //!
 //! The whole system — dataset generation, parameter init, batch selection,
-//! the cluster simulator — is seeded so that every experiment is exactly
-//! reproducible. `rand` is not in the vendored crate set; this is a
-//! xoshiro256++ implementation seeded by splitmix64, which is more than
-//! adequate for simulation workloads.
+//! sampled plan construction, the cluster simulator — is seeded so that
+//! every experiment is exactly reproducible. `rand` is not in the vendored
+//! crate set; this is a counter-based Philox2x64-10 implementation
+//! (Salmon et al., "Parallel Random Numbers: As Easy as 1, 2, 3") with the
+//! reference round constants, so the raw block function matches Random123's
+//! published known-answer vectors.
+//!
+//! # Key derivation and the determinism contract
+//!
+//! A counter-based generator has no hidden state to share: a 128-bit
+//! [`StreamKey`] names a stream, and the `i`-th block of that stream is
+//! `philox(counter = i, key)` — a pure function. Independent streams are
+//! *derived*, never forked from mutable state:
+//!
+//! - [`StreamKey::root`] turns a user seed into a root key;
+//! - [`StreamKey::child`] applies the keyed Philox permutation to a field
+//!   (an epoch, a layer index, a partition id…), so distinct fields give
+//!   unrelated child keys **without consuming any draws** — the derivation
+//!   depends only on the key, not on call order or draw position;
+//! - [`StreamKey::rng`] starts the stream at counter 0.
+//!
+//! Sampled plan construction derives
+//! `root(seed) → child(build) → child(layer) → child(partition)` so every
+//! partition of every sampled layer owns an independent deterministic
+//! stream. That is what lets the sparse plan builder run its per-partition
+//! derivation on scoped threads and stay **bit-identical at any thread
+//! count** — the property the old xoshiro stream (one shared sequence,
+//! draws ordered by partition visit order) made impossible, and the reason
+//! `fork(&mut self)` (which consumed a draw from the parent, making every
+//! forked stream call-order-dependent) no longer exists. Splitting is
+//! [`Rng::split`] (pure, call-order-invariant) or [`Rng::split_next`]
+//! (consumes exactly one draw, for "a fresh key per call" sites).
+//!
+//! The [`Rng`] draw API (`next_u64`, `below`, `f64`, `normal`, `shuffle`,
+//! …) is unchanged from the xoshiro days, so call sites that never split
+//! did not have to move. The *streams* all changed; the one-time golden
+//! re-bless is recorded in ROADMAP's Notes for builders.
 
-/// Seedable xoshiro256++ generator.
+/// Philox2x64 multiplier (Random123 reference constant).
+const PHILOX_M: u64 = 0xD2B74407B1CE6E93;
+/// Philox2x64 Weyl key increment (the 64-bit golden ratio).
+const PHILOX_W: u64 = 0x9E3779B97F4A7C15;
+/// Domain-separation tweak for [`StreamKey::root`] (ASCII "GraphThe").
+const ROOT_TWEAK: u64 = 0x4772617068546865;
+
+/// One Philox2x64-10 block: a keyed pseudo-random permutation of the
+/// 128-bit input `(x0, x1)`. With `x0` a block counter this is the stream
+/// generator; with `x0` a derivation field it is the key-split mixer.
+#[inline]
+fn philox2x64(mut x0: u64, mut x1: u64, mut key: u64) -> (u64, u64) {
+    for _ in 0..10 {
+        let prod = (x0 as u128) * (PHILOX_M as u128);
+        x0 = (prod >> 64) as u64 ^ key ^ x1;
+        x1 = prod as u64;
+        key = key.wrapping_add(PHILOX_W);
+    }
+    (x0, x1)
+}
+
+/// The 128-bit name of one deterministic stream. `Copy` and immutable:
+/// derive children freely from any thread, no draws consumed, no ordering
+/// constraints.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StreamKey {
+    k0: u64,
+    k1: u64,
+}
+
+impl StreamKey {
+    /// Root key for a user seed (domain-separated so `root(s)` is never a
+    /// `child` of another key).
+    pub fn root(seed: u64) -> StreamKey {
+        let (k0, k1) = philox2x64(seed, ROOT_TWEAK, seed ^ PHILOX_W);
+        StreamKey { k0, k1 }
+    }
+
+    /// Derive the child key for `field`. A keyed permutation of the field,
+    /// so distinct fields always yield distinct children and nearby fields
+    /// (0, 1, 2…) yield unrelated streams.
+    #[inline]
+    pub fn child(&self, field: u64) -> StreamKey {
+        let (k0, k1) = philox2x64(field, self.k1, self.k0);
+        StreamKey { k0, k1 }
+    }
+
+    /// The stream named by this key, positioned at counter 0.
+    #[inline]
+    pub fn rng(&self) -> Rng {
+        Rng { key: *self, ctr: 0, buf: 0, have: false }
+    }
+}
+
+/// Seedable counter-based generator: draws walk the Philox stream of one
+/// [`StreamKey`]. Each 128-bit block yields two `u64` draws.
 #[derive(Clone, Debug)]
 pub struct Rng {
-    s: [u64; 4],
+    key: StreamKey,
+    /// Next block counter.
+    ctr: u64,
+    /// Second word of the last block, pending when `have`.
+    buf: u64,
+    have: bool,
 }
 
 impl Rng {
-    /// Create from a 64-bit seed (expanded through splitmix64).
+    /// Create from a 64-bit seed: the root stream of [`StreamKey::root`].
     pub fn new(seed: u64) -> Self {
-        let mut sm = seed;
-        let mut next = || {
-            sm = sm.wrapping_add(0x9e3779b97f4a7c15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
-            z ^ (z >> 31)
-        };
-        Rng { s: [next(), next(), next(), next()] }
+        StreamKey::root(seed).rng()
     }
 
-    /// Derive an independent stream (for per-worker / per-partition RNGs).
-    pub fn fork(&mut self, stream: u64) -> Rng {
-        Rng::new(self.next_u64() ^ crate::util::hash64(stream))
+    /// The key naming this stream (draw position not included).
+    #[inline]
+    pub fn key(&self) -> StreamKey {
+        self.key
+    }
+
+    /// Derive an independent stream for `field` without consuming a draw.
+    /// Pure in the key: the result is identical no matter how many draws
+    /// this stream has produced — the call-order invariance `fork()`
+    /// lacked.
+    #[inline]
+    pub fn split(&self, field: u64) -> Rng {
+        self.key.child(field).rng()
+    }
+
+    /// Derive a fresh child key, consuming exactly one draw — successive
+    /// calls yield distinct keys. This is the "unique key per plan build"
+    /// primitive: both the sparse builder and the dense reference oracle
+    /// call it once per build, so their stream consumption stays equal.
+    #[inline]
+    pub fn split_next(&mut self) -> StreamKey {
+        let field = self.next_u64();
+        self.key.child(field)
     }
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
-        let s = &mut self.s;
-        let result = s[0]
-            .wrapping_add(s[3])
-            .rotate_left(23)
-            .wrapping_add(s[0]);
-        let t = s[1] << 17;
-        s[2] ^= s[0];
-        s[3] ^= s[1];
-        s[1] ^= s[2];
-        s[0] ^= s[3];
-        s[2] ^= t;
-        s[3] = s[3].rotate_left(45);
-        result
+        if self.have {
+            self.have = false;
+            return self.buf;
+        }
+        let (a, b) = philox2x64(self.ctr, self.key.k1, self.key.k0);
+        self.ctr = self.ctr.wrapping_add(1);
+        self.buf = b;
+        self.have = true;
+        a
     }
 
     /// Uniform in `[0, n)`. Uses Lemire's multiply-shift reduction.
@@ -61,10 +162,13 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
-    /// Uniform f32 in `[0, 1)`.
+    /// Uniform f32 in `[0, 1)`, from the 24 high bits directly. (The
+    /// retired `self.f64() as f32` rounded f64 values within `2^-25` of 1
+    /// up to exactly `1.0f32` — an out-of-contract draw roughly once per
+    /// 2^25 calls, which also let `range_f32(lo, hi)` return `hi`.)
     #[inline]
     pub fn f32(&mut self) -> f32 {
-        self.f64() as f32
+        u64_to_f32(self.next_u64())
     }
 
     /// Uniform f32 in `[lo, hi)`.
@@ -122,18 +226,81 @@ impl Rng {
     }
 
     /// Power-law distributed integer in `[1, max]` with exponent `alpha`
-    /// (inverse-CDF sampling). Used by the skewed-graph generators.
+    /// (inverse-CDF sampling). Used by the skewed-graph generators. At
+    /// `alpha = 1` the inverse CDF degenerates (`1.0.powf(1/0)` → the
+    /// constant 1); the analytic limit is the log-uniform distribution
+    /// `x = max^u`, taken for any alpha within f64 noise of 1.
     pub fn power_law(&mut self, max: usize, alpha: f64) -> usize {
         let u = self.f64();
         let a = 1.0 - alpha;
-        let x = ((max as f64).powf(a) * u + (1.0 - u)).powf(1.0 / a);
+        let x = if a.abs() < 1e-9 {
+            (max as f64).powf(u)
+        } else {
+            ((max as f64).powf(a) * u + (1.0 - u)).powf(1.0 / a)
+        };
         (x as usize).clamp(1, max)
     }
+}
+
+/// f32 in `[0, 1)` from the 24 high bits of a draw: every one of the 2^24
+/// mantissa patterns is exactly representable, so the result can never
+/// round up to 1.0.
+#[inline]
+fn u64_to_f32(x: u64) -> f32 {
+    (x >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::qcheck::qcheck;
+
+    /// The raw block function matches the Philox2x64-10 reference: the
+    /// all-zeros vector is Random123's published known answer, the rest pin
+    /// this implementation against accidental drift.
+    #[test]
+    fn philox_known_answers() {
+        assert_eq!(philox2x64(0, 0, 0), (0xca00a0459843d731, 0x66c24222c9a845b5));
+        assert_eq!(philox2x64(1, 0, 0), (0x268b107f7aef5856, 0xabb3037735c08bcd));
+        assert_eq!(
+            philox2x64(u64::MAX, u64::MAX, u64::MAX),
+            (0x65b021d60cd8310f, 0x4d02f3222f86df20)
+        );
+        assert_eq!(philox2x64(7, 11, 13), (0xcbe5e7a4f84c5c1c, 0x890015aa1a14a561));
+    }
+
+    /// Known-answer vectors for the derived streams: the root keys, the
+    /// first draws of the root streams, and a three-level child chain. Any
+    /// change to these is a determinism-contract change and needs a golden
+    /// re-bless (see the module docs).
+    #[test]
+    fn stream_known_answers() {
+        assert_eq!(
+            StreamKey::root(0),
+            StreamKey { k0: 0x11e759171fe862ac, k1: 0xd226157032ae2e40 }
+        );
+        assert_eq!(
+            StreamKey::root(7),
+            StreamKey { k0: 0x25d2e80c6866e195, k1: 0x6ce0964655826d7b }
+        );
+
+        let mut r = Rng::new(7);
+        assert_eq!(
+            [r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()],
+            [0xfb4a59807977ee9f, 0x0e9e32023814ff81, 0xf1f6bf85d53ed53d, 0xc2dc6922b4e20770]
+        );
+        let mut r = Rng::new(0);
+        assert_eq!(
+            [r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()],
+            [0x27f76a8dde74b402, 0xaae04e593998f7ea, 0x3bc97ced97ea5d9e, 0xdc06f5d6f8ca49ea]
+        );
+
+        // key = (seed, epoch, layer, partition)-style chain.
+        let key = StreamKey::root(7).child(1).child(2).child(3);
+        assert_eq!(key, StreamKey { k0: 0x19452fbdf324fc3e, k1: 0xff3ab58d26fc1a7a });
+        let mut r = key.rng();
+        assert_eq!([r.next_u64(), r.next_u64()], [0x37cfaa9711ba1d01, 0x658755f1e9e91099]);
+    }
 
     #[test]
     fn deterministic_streams() {
@@ -144,6 +311,69 @@ mod tests {
         }
         let mut c = Rng::new(8);
         assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    /// `split(field)` is pure in the key: the parent's draw position must
+    /// not leak into the child — the property `fork()` lacked.
+    #[test]
+    fn split_is_call_order_invariant() {
+        let mut parent = Rng::new(9);
+        let mut before: Rng = parent.split(5);
+        for _ in 0..17 {
+            parent.next_u64();
+        }
+        let mut after = parent.split(5);
+        for _ in 0..64 {
+            assert_eq!(before.next_u64(), after.next_u64());
+        }
+        // And the key itself never moves with the draws.
+        assert_eq!(parent.key(), Rng::new(9).key());
+    }
+
+    /// Sibling keys (same parent, distinct fields) name pairwise
+    /// independent streams — never agreeing at any of their first 64
+    /// positions — and splitting is call-order-invariant: the same field
+    /// split off before and after draining draws yields the same stream.
+    #[test]
+    fn sibling_streams_decorrelate() {
+        qcheck(
+            "sibling-stream-independence",
+            |r| (r.next_u64(), r.below(64) as u64, 64 + r.below(64) as u64),
+            |&(seed, i, j)| {
+                let parent = StreamKey::root(seed);
+                if parent.child(i) == parent.child(j) {
+                    return Err(format!("sibling key collision at fields {i},{j}"));
+                }
+                let mut a = parent.child(i).rng();
+                let mut b = parent.child(j).rng();
+                let agree = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+                if agree != 0 {
+                    return Err(format!("siblings {i},{j} agreed {agree}×"));
+                }
+                let mut drained = parent.rng();
+                for _ in 0..(j % 13) {
+                    drained.next_u64();
+                }
+                if drained.split(i).next_u64() != parent.child(i).rng().next_u64() {
+                    return Err("split not call-order-invariant".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// `split_next` consumes exactly one draw and yields a fresh key per
+    /// call.
+    #[test]
+    fn split_next_advances_one_draw() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        let k1 = a.split_next();
+        let k2 = a.split_next();
+        assert_ne!(k1, k2, "successive split_next keys must differ");
+        b.next_u64();
+        b.next_u64();
+        assert_eq!(a.next_u64(), b.next_u64(), "split_next consumed ≠ 1 draw");
     }
 
     #[test]
@@ -157,6 +387,27 @@ mod tests {
         }
         for &c in &counts {
             assert!((800..1200).contains(&c), "bucket {c}");
+        }
+    }
+
+    /// Regression for the `f64() as f32` contract violation: the worst-case
+    /// mantissa patterns (all 24 kept bits set, any tail) must stay below
+    /// 1.0, where the old conversion rounded to exactly 1.0 for every
+    /// `x ≥ 0xffffff80_00000000`.
+    #[test]
+    fn f32_stays_below_one_on_worst_case_mantissas() {
+        let old = |x: u64| ((x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)) as f32;
+        for x in [u64::MAX, 0xffffff80_00000000, u64::MAX - 1, 0xffffffff_00000000] {
+            assert_eq!(old(x), 1.0, "demo precondition: the old code did return 1.0");
+            let v = u64_to_f32(x);
+            assert!(v < 1.0, "u64_to_f32({x:#x}) = {v}");
+        }
+        assert_eq!(u64_to_f32(u64::MAX), (((1u64 << 24) - 1) as f32) / (1u64 << 24) as f32);
+        assert_eq!(u64_to_f32(0), 0.0);
+        let mut r = Rng::new(3);
+        for _ in 0..100_000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v), "f32 out of [0,1): {v}");
         }
     }
 
@@ -206,11 +457,44 @@ mod tests {
         assert!(max_seen > 100, "max={max_seen}");
     }
 
+    /// Regression for the `alpha = 1` degeneracy: the old inverse CDF
+    /// collapsed to the constant 1 (`1.0.powf(1/0)`); the log-uniform limit
+    /// has median `sqrt(max)` and `E[ln x] = ln(max) / 2`, and the generic
+    /// branch must approach the same moments as `alpha → 1`.
     #[test]
-    fn fork_decorrelates() {
-        let mut base = Rng::new(9);
-        let mut f1 = base.fork(0);
-        let mut f2 = base.fork(1);
+    fn power_law_alpha_one_is_log_uniform() {
+        let (max, n) = (10_000usize, 20_000);
+        let ln_max = (max as f64).ln();
+        let moments = |alpha: f64| {
+            let mut r = Rng::new(5);
+            let mut above_sqrt = 0usize;
+            let mut sum_ln = 0.0f64;
+            for _ in 0..n {
+                let d = r.power_law(max, alpha);
+                if d > 100 {
+                    above_sqrt += 1;
+                }
+                sum_ln += (d as f64).ln();
+            }
+            (above_sqrt as f64 / n as f64, sum_ln / n as f64)
+        };
+        let (frac, mean_ln) = moments(1.0);
+        assert!((0.4..0.6).contains(&frac), "median drifted: P(x > sqrt(max)) = {frac}");
+        assert!((mean_ln - ln_max / 2.0).abs() < 0.1 * ln_max, "E[ln x] = {mean_ln}");
+        // Continuity: alpha within f64 noise of 1 takes the limit branch,
+        // alpha just outside agrees to a few percent.
+        for alpha in [1.0 - 1e-6, 1.0 + 1e-6] {
+            let (f, m) = moments(alpha);
+            assert!((f - frac).abs() < 0.05, "alpha={alpha}: frac {f} vs {frac}");
+            assert!((m - mean_ln).abs() < 0.15 * ln_max, "alpha={alpha}: mean ln {m}");
+        }
+    }
+
+    #[test]
+    fn split_decorrelates() {
+        let base = Rng::new(9);
+        let mut f1 = base.split(0);
+        let mut f2 = base.split(1);
         let same = (0..64).filter(|_| f1.next_u64() == f2.next_u64()).count();
         assert_eq!(same, 0);
     }

@@ -12,6 +12,10 @@
 //!   window strictly beats the synchronous round trainer's modeled
 //!   makespan at matched step count;
 //! * a too-tight bound rejects, replays, and charges the replay cost.
+//!
+//! Golden provenance: all pins are relational (sync vs. async, run vs.
+//! run), so the splittable-RNG switch re-blessed the underlying streams
+//! without editing this file — see ROADMAP.md, Notes for builders.
 
 use graphtheta::config::{ModelConfig, SchedulePolicy, StrategyKind, TrainConfig, UpdateMode};
 use graphtheta::engine::trainer::Trainer;

@@ -19,6 +19,11 @@
 //!   within 1% absolute of the failure-free run at matched applied-update
 //!   count.
 //! * The master shrugs at stray ranks instead of panicking.
+//!
+//! Golden provenance: all pins are relational (fault vs. fault-free, run
+//! vs. run), so the splittable-RNG switch re-blessed the underlying
+//! streams without editing this file — see ROADMAP.md, Notes for
+//! builders.
 
 use graphtheta::cluster::master::Master;
 use graphtheta::config::{FaultPlan, ModelConfig, StrategyKind, TrainConfig, UpdateMode};

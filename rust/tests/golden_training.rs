@@ -10,6 +10,12 @@
 //! * `pipeline_width ≥ 2` must strictly lower the modeled makespan on the
 //!   mini-batch workload while keeping final test accuracy within 1%
 //!   absolute of width 1 (the paper's hybrid-parallel claim, §4.3).
+//!
+//! Golden provenance: every pin here is **relational** (run vs. run,
+//! engine vs. engine), so the one-time stream change when the sequential
+//! xoshiro RNG was replaced by the splittable counter-based generator
+//! re-blessed the concrete values without editing this file — see
+//! ROADMAP.md, Notes for builders.
 
 use graphtheta::config::{ModelConfig, SchedulePolicy, StrategyKind, TrainConfig};
 use graphtheta::engine::trainer::{TrainReport, Trainer};

@@ -20,6 +20,11 @@
 //!   quorum allows surfaces as an `Err` naming "quorum", never a panic.
 //! * **Suspicion is benign** — suspected workers are steal-avoided in the
 //!   schedule but the numerics never move.
+//!
+//! Golden provenance: all pins are relational (net-plan vs. zero-loss,
+//! run vs. run), so the splittable-RNG switch re-blessed the underlying
+//! streams without editing this file — see ROADMAP.md, Notes for
+//! builders.
 
 use graphtheta::config::{
     config_from_kv, parse_kv, FaultPlan, ModelConfig, NetPlan, StrategyKind, TrainConfig,

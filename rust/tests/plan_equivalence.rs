@@ -5,16 +5,22 @@
 //! retired dense mask-scanning builder
 //! (`ActivePlan::build_dense_reference`): node sets per level, edge lists
 //! (order included), mirror sync/partial routes, route tables, counts —
-//! and, when neighbor sampling is on, it must consume the shared RNG
-//! stream in exactly the same order (checked by comparing the next draw
-//! after each build). `ActivePlan` derives `Eq`, so the whole plan —
+//! and each builder must consume **exactly one** draw of the caller's RNG
+//! (the splittable-stream contract: `split_next` derives the build key,
+//! all fan-out draws come from per-(build, layer, partition) child
+//! streams). The one-draw rule is checked by comparing the caller's next
+//! draw after each build. `ActivePlan` derives `Eq`, so the whole plan —
 //! `CommPlan` route tables included — is compared in one shot.
 //!
 //! The suite sweeps random target batches over three generators ×
 //! p ∈ {1, 3, 4} × k ∈ {1, 2, 3}, with and without neighbor sampling,
 //! reusing **one** `PlanScratch` across every case — which also exercises
 //! the scratch's stamp-invalidation invariant across graphs and
-//! partitionings.
+//! partitionings. Since sampling draws no longer touch a shared sequential
+//! stream, sampled builds are additionally pinned bit-identical across
+//! OS-thread counts (the serial gate in `run_layer` is purely a size
+//! heuristic now). Goldens downstream of sampling were re-blessed once
+//! when the splittable RNG landed — see ROADMAP.md, Notes for builders.
 
 use graphtheta::config::SamplingConfig;
 use graphtheta::engine::strategy::restrict_to_clusters;
@@ -186,6 +192,42 @@ fn qcheck_sparse_equals_dense_on_random_batches() {
             )
         },
     );
+}
+
+#[test]
+fn sampled_plans_bit_identical_at_any_thread_count() {
+    // Splittable per-(build, layer, partition) streams make the
+    // scoped-thread layer derivation safe for sampled builds: the plan
+    // must not depend on how partitions are chunked over OS threads. The
+    // batch is sized so the 2-hop frontier clears the parallel cutoff and
+    // the threaded path genuinely runs.
+    let g = gen::amazon_like();
+    let dg = DistGraph::build(&g, Edge1D::default().partition(&g, 4));
+    let train = g.labeled_nodes(&g.train_mask);
+    let targets: Vec<u32> = train[..600.min(train.len())].to_vec();
+    let sampling = SamplingConfig::Neighbor { fanout: [4, 3, 2, usize::MAX] };
+    let build = |threads: usize| {
+        let mut scratch = PlanScratch::new();
+        scratch.set_threads(threads);
+        let mut rng = Rng::new(0x7EAD);
+        let plan = ActivePlan::build_with(
+            &g,
+            &dg,
+            targets.clone(),
+            3,
+            sampling,
+            false,
+            &mut rng,
+            &mut scratch,
+        );
+        (plan, rng.next_u64())
+    };
+    let (serial, serial_draw) = build(1);
+    for threads in [2, 8] {
+        let (plan, draw) = build(threads);
+        assert_eq!(serial, plan, "sampled plan diverged at threads={threads}");
+        assert_eq!(serial_draw, draw, "caller stream consumption diverged at threads={threads}");
+    }
 }
 
 #[test]
