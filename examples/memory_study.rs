@@ -1,0 +1,262 @@
+//! Memory study: per-worker byte budgets enforced by the cluster ledger —
+//! the paper's docker-container memory limits (§V: 5–12 GB per worker on
+//! the production cluster) as a runnable axis. The workload is the same
+//! neighbor-sampled mini-batch as the fault study, so memory pressure
+//! composes with sampling, checkpointing and recovery.
+//!
+//! Two sweeps:
+//!
+//! 1. **Budget × eviction policy** — budgets derived from the measured
+//!    unbudgeted peak, walked down the degradation ladder: roomy (no
+//!    remediation, bitwise-identical numerics), tight (mirror eviction
+//!    with charged refetch), tight without eviction and undersized (spill,
+//!    deferral, then an injected OOM-kill through the checkpointed fault
+//!    path). Completing rows must show Δ acc exactly +0.0000 — the ledger
+//!    moves only the modeled clock.
+//! 2. **The Alipay envelope** — the paper's 1.4×10⁸-node production shape
+//!    at p=1024, modeled analytically with the repo's exact per-array byte
+//!    formulas and pushed through a real 1024-worker ledger against the
+//!    12 GB docker budget.
+//!
+//! ```bash
+//! cargo run --release --example memory_study [-- dataset workers steps]
+//! ```
+//!
+//! `GT_STUDY_SMOKE=1` shrinks the run to a few steps per configuration
+//! (numbers are meaningless; the point is that every code path executes)
+//! — CI runs this so the study cannot rot.
+
+use graphtheta::cluster::{ClusterSim, MemLedger};
+use graphtheta::config::{
+    CostModelConfig, EvictPolicy, FaultPlan, MemPlan, ModelConfig, SamplingConfig, StrategyKind,
+    TrainConfig,
+};
+use graphtheta::graph::Graph;
+use graphtheta::metrics::{markdown_table, MemStats};
+
+const MB: f64 = (1u64 << 20) as f64;
+
+fn study_cfg(g: &Graph, steps: usize, every: usize, mem: MemPlan) -> TrainConfig {
+    TrainConfig::builder()
+        .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+        .strategy(StrategyKind::mini(0.3))
+        .sampling(SamplingConfig::Neighbor { fanout: [8, 5, usize::MAX, usize::MAX] })
+        .epochs(steps)
+        .eval_every(5)
+        .lr(0.03)
+        .seed(7)
+        // Checkpoints make OOM-kills recoverable: the ladder's last rung
+        // flows into restore → re-home → replay instead of an error.
+        .fault(if mem.is_active() {
+            FaultPlan { checkpoint_every: every, ..FaultPlan::default() }
+        } else {
+            FaultPlan::default()
+        })
+        .mem(mem)
+        .build()
+}
+
+fn mem_cols(ms: Option<MemStats>) -> (String, String, String) {
+    match ms {
+        Some(m) => (
+            format!("{:.1}", m.peak_bytes as f64 / MB),
+            format!("{}/{:.2}", m.evictions, m.refetch_bytes as f64 / MB),
+            format!("{}/{}/{}", m.spills, m.deferred_admissions, m.oom_kills),
+        ),
+        None => ("-".into(), "-".into(), "-".into()),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("GT_STUDY_SMOKE").is_ok();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("cora");
+    let p: usize = args.get(1).and_then(|x| x.parse().ok()).unwrap_or(8);
+    let steps: usize =
+        if smoke { 6 } else { args.get(2).and_then(|x| x.parse().ok()).unwrap_or(40) };
+
+    let g = match dataset {
+        "cora" | "citeseer" | "pubmed" => graphtheta::graph::gen::citation_like(dataset, 7),
+        "reddit" => graphtheta::graph::gen::reddit_like(),
+        "amazon" => graphtheta::graph::gen::amazon_like(),
+        other => anyhow::bail!("unknown dataset {other}"),
+    };
+    println!(
+        "dataset {dataset}: n={} m={} p={p} steps={steps}{}\n",
+        g.n,
+        g.m,
+        if smoke { "  [SMOKE]" } else { "" }
+    );
+
+    // Sweep 1: budget × eviction policy. The unbudgeted run measures the
+    // peak worker footprint; the budgeted rows are fractions of it, so the
+    // sweep tracks the real arrays on any dataset. Every budgeted row
+    // carries checkpoints, so even the undersized budget ends in a
+    // recovered run, not an error — unless no survivor can host the
+    // orphaned partition, which prints as a typed failure row.
+    let every = if smoke { 2 } else { (steps / 8).max(1) };
+    let baseline = {
+        let mut t = graphtheta::engine::trainer::Trainer::new(
+            &g,
+            study_cfg(&g, steps, every, MemPlan::default()),
+            p,
+        )?;
+        t.run()?
+    };
+    let peak_mb = baseline.peak_part_bytes as f64 / MB;
+    println!("unbudgeted peak worker footprint: {peak_mb:.1} MB\n");
+
+    let plans: Vec<(String, MemPlan)> = vec![
+        ("unbudgeted".into(), MemPlan::default()),
+        (
+            "roomy (2.0x peak)".into(),
+            MemPlan { budget_mb: 2.0 * peak_mb, ..MemPlan::default() },
+        ),
+        (
+            "tight (0.98x, lru)".into(),
+            MemPlan { budget_mb: 0.98 * peak_mb, ..MemPlan::default() },
+        ),
+        (
+            "tight (0.98x, no evict)".into(),
+            MemPlan { budget_mb: 0.98 * peak_mb, evict: EvictPolicy::None, ..MemPlan::default() },
+        ),
+        (
+            "roomy + 1.3x spike".into(),
+            MemPlan {
+                budget_mb: 1.2 * peak_mb,
+                spikes: vec![(0, 40, 1.3)],
+                ..MemPlan::default()
+            },
+        ),
+        (
+            "undersized (0.6x)".into(),
+            MemPlan { budget_mb: 0.6 * peak_mb, ..MemPlan::default() },
+        ),
+    ];
+    let mut rows = Vec::new();
+    let mut baseline_acc = None;
+    for (name, plan) in plans {
+        let mut t =
+            graphtheta::engine::trainer::Trainer::new(&g, study_cfg(&g, steps, every, plan), p)?;
+        match t.run() {
+            Ok(r) => {
+                let acc0 = *baseline_acc.get_or_insert(r.test_accuracy);
+                let (peak, evict_refetch, sdo) = mem_cols(r.mem);
+                let kills = r.mem.map_or(0, |m| m.oom_kills);
+                rows.push(vec![
+                    name,
+                    format!("{:.4}", r.sim_total),
+                    peak,
+                    evict_refetch,
+                    sdo,
+                    format!("{:.4}", r.test_accuracy),
+                    // Completing runs with zero kills are bitwise the
+                    // unbudgeted run; recovered runs may drift slightly.
+                    if kills == 0 {
+                        format!("{:+.4}", r.test_accuracy - acc0)
+                    } else {
+                        format!("{:+.4} (recovered)", r.test_accuracy - acc0)
+                    },
+                ]);
+            }
+            Err(e) => {
+                rows.push(vec![
+                    name,
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("failed: {e}"),
+                ]);
+            }
+        }
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &[
+                "budget",
+                "makespan (model s)",
+                "peak MB",
+                "evict/refetch MB",
+                "spill/defer/oom",
+                "test acc",
+                "Δ acc",
+            ],
+            &rows,
+        )
+    );
+    println!(
+        "the ledger moves only the modeled clock: every completing row's\n\
+         Δ acc is exactly +0.0000, and OOM-kills recover through the same\n\
+         restore/re-home/replay path as injected machine failures.\n"
+    );
+
+    // Sweep 2: the Alipay production envelope, analytically. The paper
+    // trains 1.4×10⁸ nodes / 6.3×10⁹ edges on 1024 workers inside 5–12 GB
+    // docker containers; this models a per-worker partition with the
+    // repo's exact byte formulas and enforces it on a real 1024-worker
+    // ledger. Building the graph in RAM is out of reach here — the ledger
+    // enforces registered bytes, so the envelope check is exact.
+    let p_big = 1024usize;
+    let (feat, efeat, hidden, out) = (72u64, 57u64, 16u64, 2u64);
+    let mut rows = Vec::new();
+    for (label, n, budget_gb) in [
+        ("alipay 1e8", 100_000_000u64, 12.0f64),
+        ("alipay 1e8, 5 GB", 100_000_000, 5.0),
+        ("alipay 1.4e8", 140_000_000, 12.0),
+    ] {
+        let masters = n / p_big as u64;
+        let mirrors = masters / 2; // 1.5x replication
+        let n_local = masters + mirrors;
+        let m_local = 3 * n / p_big as u64;
+        let topology = (n_local + 6 * m_local) * 4 + 2 * (n_local + 1) * 8;
+        let static_bytes = topology + masters * feat * 4 + m_local * efeat * 4;
+        let mirror_bytes = mirrors * feat * 4;
+        let dynamic =
+            (n_local * (feat + hidden + out) * 4 + (feat * hidden + hidden * out) * 4) as usize;
+        let plan = MemPlan { budget_mb: budget_gb * 1024.0, ..MemPlan::default() };
+        let mut sim = ClusterSim::new(p_big, CostModelConfig::default());
+        sim.set_mem(MemLedger::with_partitions(
+            plan,
+            vec![static_bytes; p_big],
+            vec![mirror_bytes; p_big],
+        ));
+        let breach = sim.mem_enforce(&vec![dynamic; p_big]);
+        let stats = sim.mem_stats();
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.1}", static_bytes as f64 / MB),
+            format!("{:.1}", mirror_bytes as f64 / MB),
+            format!("{:.1}", dynamic as f64 / MB),
+            format!("{:.1}", stats.peak_bytes as f64 / MB),
+            format!("{budget_gb:.0} GB"),
+            match breach {
+                None => format!("fits ({} evictions)", stats.evictions),
+                Some(b) => format!("OOM: worker {} over by {:.1} MB",
+                    b.worker, (b.resident - b.budget) as f64 / MB),
+            },
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &[
+                "shape (p=1024)",
+                "static MB/worker",
+                "mirror MB",
+                "dynamic MB",
+                "resident MB",
+                "budget",
+                "verdict",
+            ],
+            &rows,
+        )
+    );
+    println!(
+        "the paper's production shape fits the 12 GB docker budget with\n\
+         an order of magnitude of headroom at these feature widths."
+    );
+    Ok(())
+}

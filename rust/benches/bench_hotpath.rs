@@ -204,6 +204,44 @@ mod head_only {
         );
     }
 
+    /// Per-step cost of the memory ledger (ISSUE 8): one admission
+    /// projection, a full mirror-touch sweep and one budget enforcement
+    /// over a 128-worker ledger, with a budget roomy enough that nothing
+    /// evicts — the steady-state bookkeeping a budgeted run pays on every
+    /// step. Priced against the seed plan-build row: the ledger must stay
+    /// under 5% of it (asserted in smoke mode, so CI pins the bound).
+    pub fn mem_ledger_overhead(results: &mut Results, smoke: bool, plan_build_med_ms: f64) {
+        use graphtheta::cluster::MemLedger;
+        use graphtheta::config::MemPlan;
+        let p = 128usize;
+        let stat: Vec<u64> = (0..p).map(|q| 4_000_000 + (q as u64 * 37) % 100_000).collect();
+        let mirror: Vec<u64> = (0..p).map(|q| 1_000_000 + (q as u64 * 53) % 50_000).collect();
+        let peaks: Vec<usize> = (0..p).map(|q| 2_000_000 + (q * 11) % 10_000).collect();
+        let plan = MemPlan { budget_mb: 64.0, ..MemPlan::default() };
+        let mut sim = ClusterSim::new(p, Default::default());
+        sim.set_mem(MemLedger::with_partitions(plan, stat, mirror));
+        // Fixed iteration count even in smoke: the bench is microseconds
+        // per pass, and the overhead ratio below needs a stable median.
+        bench(results, "mem-ledger bookkeeping/step (p=128)", 64, || {
+            std::hint::black_box(sim.mem_admit());
+            for q in 0..p {
+                std::hint::black_box(sim.mem_touch_mirrors(q));
+            }
+            std::hint::black_box(sim.mem_enforce(&peaks));
+        });
+        let med = results.last().unwrap().1;
+        let ratio = med / plan_build_med_ms.max(1e-9);
+        results.push(("mem-ledger overhead vs plan-build (x)".into(), ratio, ratio));
+        println!("{:<44} {:>10.4} x", "  ↳ ledger bookkeeping / plan-build", ratio);
+        if smoke {
+            assert!(
+                ratio < 0.05,
+                "ledger bookkeeping {med:.4} ms is >= 5% of the plan-build row \
+                 {plan_build_med_ms:.4} ms"
+            );
+        }
+    }
+
     /// Sampled plan construction, serial vs full-thread: the splittable
     /// per-(build, layer, partition) streams let the scoped-thread layer
     /// derivation run with neighbor sampling on — the regime the old
@@ -419,6 +457,10 @@ mod head_only {
         println!("[seed-compat: sampled plan-build section skipped]");
     }
 
+    pub fn mem_ledger_overhead(_results: &mut Results, _smoke: bool, _plan_build_med_ms: f64) {
+        println!("[seed-compat: mem-ledger bookkeeping section skipped]");
+    }
+
     pub fn pipelined_sweep(_results: &mut Results, _smoke: bool, _g: &Graph) {
         println!("[seed-compat: pipelined sweep skipped]");
     }
@@ -512,10 +554,12 @@ fn main() {
             &mut r2,
         ));
     });
+    let plan_build_med = results.last().unwrap().1;
     println!();
 
     head_only::plan_build(&mut results, smoke, &g, &dg);
     head_only::sampled_plan_build(&mut results, smoke, &g, &dg, &targets);
+    head_only::mem_ledger_overhead(&mut results, smoke, plan_build_med);
     println!();
 
     // One full NN-TGAR training step (the end-to-end hot path), serial

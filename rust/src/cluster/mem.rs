@@ -1,0 +1,507 @@
+//! Deterministic per-worker memory ledger for the cluster simulator.
+//!
+//! The paper's headline claim is that 1,024 small dockers — **5–12 GB of
+//! memory each** (§1, §V) — train a graph of 1.4B nodes and 4.1B
+//! attributed edges. Compute and network time were already modeled;
+//! this module makes the memory envelope enforceable and falsifiable. A
+//! [`MemLedger`] tracks every worker's resident bytes (partition
+//! topology, master/edge features, synchronized mirror features, live
+//! executor frames, in-flight gradient buffers, and the held checkpoint
+//! snapshot), and a [`MemPlan`] gives each worker a byte budget with
+//! optional per-worker overrides and transient pressure-spike windows.
+//!
+//! On breach the system degrades instead of dying, walking a ladder:
+//!
+//! 1. **Mirror eviction** — LRU over synchronized mirror blocks; the next
+//!    use pays a modeled re-fetch from the masters.
+//! 2. **Checkpoint spill** — the held [`ParamSnapshot`] bytes move to
+//!    modeled remote storage; a later restore pays the transfer back.
+//! 3. **Deferred admission** — the next step waits a barrier when its
+//!    projected peak would breach the budget.
+//! 4. **OOM-kill** — a breach past all remediation kills the worker
+//!    through the existing fault controller (restore → re-home →
+//!    replay), never a panic.
+//!
+//! The determinism contract mirrors [`NetPlan`](crate::cluster::NetPlan):
+//! every rung moves only the modeled clock, traffic, and
+//! [`MemStats`](crate::metrics::MemStats) — a budgeted run that completes
+//! (no OOM-kill) is parameter-bitwise-identical to the unbudgeted run.
+//!
+//! [`ParamSnapshot`]: crate::nn::params::ParamSnapshot
+
+use crate::config::ConfigError;
+use crate::metrics::MemStats;
+use crate::util::rng::Rng;
+
+/// What to do with synchronized mirror-feature blocks under pressure.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Evict the least-recently-used mirror block first (the default).
+    #[default]
+    Lru,
+    /// Never evict mirrors; pressure falls through to spill/defer/kill.
+    None,
+}
+
+/// A seeded description of the memory envelope: a uniform per-worker
+/// budget in MB, per-worker overrides, transient pressure-spike windows
+/// that shrink the effective budget, and the mirror eviction policy.
+///
+/// The default plan is *inactive* ([`MemPlan::is_active`] is `false`) and
+/// is never installed into the simulator, keeping the unbudgeted clock
+/// path bit-identical to the pre-ledger golden baselines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemPlan {
+    /// Seed for [`MemPlan::seeded`] draws (kept for kv round-trips).
+    pub seed: u64,
+    /// Per-worker budget in MB; fractional budgets are allowed so tests
+    /// can squeeze the small synthetic graphs. `0` disables the ledger
+    /// unless `overrides` names workers explicitly.
+    pub budget_mb: f64,
+    /// `(worker, mb)` budget overrides; workers not listed use
+    /// `budget_mb` (or are unbudgeted when `budget_mb` is `0`).
+    pub overrides: Vec<(usize, f64)>,
+    /// `(start, end, factor)` pressure windows over superstep indices
+    /// (`start ≤ superstep < end`): every worker's effective budget is
+    /// *divided* by `factor` while a window is open — factor 2 halves
+    /// the budget, modeling co-tenant pressure on the shared cluster.
+    pub spikes: Vec<(u64, u64, f64)>,
+    /// Mirror eviction policy under pressure.
+    pub evict: EvictPolicy,
+}
+
+impl Default for MemPlan {
+    fn default() -> MemPlan {
+        MemPlan {
+            seed: 0,
+            budget_mb: 0.0,
+            overrides: Vec::new(),
+            spikes: Vec::new(),
+            evict: EvictPolicy::Lru,
+        }
+    }
+}
+
+const MB: f64 = (1u64 << 20) as f64;
+
+impl MemPlan {
+    /// Whether the plan budgets anything. Inactive plans are not
+    /// installed into the simulator at all (the bit-identical unbudgeted
+    /// path).
+    pub fn is_active(&self) -> bool {
+        self.budget_mb > 0.0 || !self.overrides.is_empty()
+    }
+
+    /// A deterministic randomized plan for a `p`-worker cluster: a tight
+    /// budget calibrated to the small synthetic test graphs, one
+    /// overridden worker, and one pressure-spike window.
+    pub fn seeded(seed: u64, p: usize) -> MemPlan {
+        let mut rng = Rng::new(seed ^ 0x4D45);
+        let budget_mb = 1.0 + 3.0 * rng.f64();
+        let mut workers: Vec<usize> = (0..p).collect();
+        rng.shuffle(&mut workers);
+        let overrides = vec![(workers[0], budget_mb * (0.6 + 0.8 * rng.f64()))];
+        let start = rng.below(16) as u64;
+        let len = 4 + rng.below(12) as u64;
+        let spikes = vec![(start, start + len, 1.1 + 0.6 * rng.f64())];
+        MemPlan { seed, budget_mb, overrides, spikes, ..MemPlan::default() }
+    }
+
+    /// Base budget of worker `w` in bytes (`u64::MAX` when unbudgeted).
+    pub fn budget_of(&self, w: usize) -> u64 {
+        let mb = self
+            .overrides
+            .iter()
+            .find(|&&(ow, _)| ow == w)
+            .map_or(self.budget_mb, |&(_, m)| m);
+        if mb <= 0.0 {
+            u64::MAX
+        } else {
+            (mb * MB) as u64
+        }
+    }
+
+    /// Combined pressure multiplier for `superstep` (1.0 outside all
+    /// windows; overlapping windows multiply).
+    pub fn spike_factor(&self, superstep: u64) -> f64 {
+        let mut f = 1.0;
+        for &(start, end, m) in &self.spikes {
+            if (start..end).contains(&superstep) {
+                f *= m.max(1e-9);
+            }
+        }
+        f
+    }
+
+    /// Effective budget of worker `w` at `superstep`: the base budget
+    /// divided by the open pressure windows' combined factor.
+    pub fn effective_budget(&self, w: usize, superstep: u64) -> u64 {
+        let base = self.budget_of(w);
+        if base == u64::MAX {
+            return base;
+        }
+        let f = self.spike_factor(superstep);
+        if f <= 1.0 {
+            base
+        } else {
+            (base as f64 / f) as u64
+        }
+    }
+
+    /// Parse a `worker:mb, worker:mb` budget-override list.
+    pub fn parse_overrides(s: &str) -> Result<Vec<(usize, f64)>, ConfigError> {
+        let bad = |v: &str| ConfigError::bad("mem_budget_overrides", v, "worker:mb,…");
+        let mut out = Vec::new();
+        for item in s.split(',').map(str::trim).filter(|x| !x.is_empty()) {
+            let (w, m) = item.split_once(':').ok_or_else(|| bad(item))?;
+            let w: usize = w.trim().parse().map_err(|_| bad(item))?;
+            let m: f64 = m.trim().parse().map_err(|_| bad(item))?;
+            if !m.is_finite() || m <= 0.0 {
+                return Err(bad(item));
+            }
+            out.push((w, m));
+        }
+        Ok(out)
+    }
+
+    /// Parse a `start:end:factor, …` pressure-spike list.
+    pub fn parse_spikes(s: &str) -> Result<Vec<(u64, u64, f64)>, ConfigError> {
+        let bad = |v: &str| ConfigError::bad("mem_spike_windows", v, "start:end:factor,…");
+        let mut out = Vec::new();
+        for item in s.split(',').map(str::trim).filter(|x| !x.is_empty()) {
+            let mut parts = item.split(':');
+            let (a, b, c) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(a), Some(b), Some(c), None) => (a, b, c),
+                _ => return Err(bad(item)),
+            };
+            let start: u64 = a.trim().parse().map_err(|_| bad(item))?;
+            let end: u64 = b.trim().parse().map_err(|_| bad(item))?;
+            let factor: f64 = c.trim().parse().map_err(|_| bad(item))?;
+            if end <= start || !factor.is_finite() || factor <= 0.0 {
+                return Err(bad(item));
+            }
+            out.push((start, end, factor));
+        }
+        Ok(out)
+    }
+
+    /// Parse the eviction policy name.
+    pub fn parse_evict(s: &str) -> Result<EvictPolicy, ConfigError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "lru" => Ok(EvictPolicy::Lru),
+            "none" => Ok(EvictPolicy::None),
+            other => Err(ConfigError::bad("mem_evict_policy", other, "lru|none")),
+        }
+    }
+
+    /// Serialize to kv-config pairs, emitting only keys that differ from
+    /// the default so `parse → to_kv → parse` is the identity.
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let d = MemPlan::default();
+        let mut out = Vec::new();
+        let mut put = |k: &str, v: String| out.push((k.to_string(), v));
+        if self.seed != d.seed {
+            put("mem_seed", self.seed.to_string());
+        }
+        if self.budget_mb != d.budget_mb {
+            put("mem_budget_mb", self.budget_mb.to_string());
+        }
+        if !self.overrides.is_empty() {
+            let items: Vec<String> =
+                self.overrides.iter().map(|(w, m)| format!("{w}:{m}")).collect();
+            put("mem_budget_overrides", items.join(","));
+        }
+        if !self.spikes.is_empty() {
+            let items: Vec<String> =
+                self.spikes.iter().map(|(s, e, f)| format!("{s}:{e}:{f}")).collect();
+            put("mem_spike_windows", items.join(","));
+        }
+        if self.evict != d.evict {
+            put(
+                "mem_evict_policy",
+                match self.evict {
+                    EvictPolicy::Lru => "lru".to_string(),
+                    EvictPolicy::None => "none".to_string(),
+                },
+            );
+        }
+        out
+    }
+}
+
+/// A worker whose resident bytes still exceed its budget after every
+/// remediation rung (eviction, spill) — the trigger for an OOM-kill.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemBreach {
+    /// The breaching worker's rank.
+    pub worker: usize,
+    /// Resident bytes after all remediation.
+    pub resident: u64,
+    /// The worker's effective budget at the breach.
+    pub budget: u64,
+}
+
+/// Byte-accurate residency bookkeeping for every partition, enforced by
+/// [`ClusterSim`](crate::cluster::ClusterSim) against a [`MemPlan`].
+///
+/// Per partition the ledger holds two registered components: **static**
+/// bytes (CSR/CSC topology, master node features, edge features — these
+/// move with the partition when it is re-homed after a failure) and
+/// **mirror** bytes (synchronized mirror-feature rows, evictable as one
+/// block — eviction granularity is deliberately coarse: a partition's
+/// whole mirror block, re-fetched on next use). Dynamic bytes (executor
+/// frames + gradient buffers) come in per step via the enforced peak, and
+/// each worker additionally holds its checkpoint snapshot unless spilled.
+/// Worker residency is always derived from the simulator's live owner
+/// map, so re-homing needs no separate ledger transfer.
+#[derive(Clone, Debug)]
+pub struct MemLedger {
+    pub(crate) plan: MemPlan,
+    pub(crate) p: usize,
+    /// Per-partition topology + master-feature + edge-feature bytes.
+    pub(crate) part_static: Vec<u64>,
+    /// Per-partition synchronized mirror-feature bytes (full block).
+    pub(crate) part_mirror: Vec<u64>,
+    /// Whether partition `q`'s mirror block is currently resident.
+    pub(crate) mirror_resident: Vec<bool>,
+    /// Superstep of partition `q`'s last mirror use (the LRU key).
+    pub(crate) mirror_last_use: Vec<u64>,
+    /// Bytes of the checkpoint snapshot each worker holds (uniform).
+    pub(crate) snap_bytes: u64,
+    /// Whether worker `w`'s snapshot is spilled to remote storage.
+    pub(crate) snap_spilled: Vec<bool>,
+    /// Per-partition dynamic peak (frames + grads) of the last enforced
+    /// step — the admission controller's projection basis.
+    pub(crate) last_peak: Vec<u64>,
+    /// Pressure counters, surfaced on training reports.
+    pub stats: MemStats,
+}
+
+impl MemLedger {
+    /// An empty ledger for a `p`-partition cluster; register partitions
+    /// with [`MemLedger::register_partition`].
+    pub fn new(plan: MemPlan, p: usize) -> MemLedger {
+        MemLedger {
+            plan,
+            p,
+            part_static: vec![0; p],
+            part_mirror: vec![0; p],
+            mirror_resident: vec![true; p],
+            mirror_last_use: vec![0; p],
+            snap_bytes: 0,
+            snap_spilled: vec![false; p],
+            last_peak: vec![0; p],
+            stats: MemStats::default(),
+        }
+    }
+
+    /// A ledger with every partition's static and mirror bytes
+    /// registered up front (the shape [`DistGraph::mem_footprint`]
+    /// returns).
+    ///
+    /// [`DistGraph::mem_footprint`]: crate::storage::DistGraph::mem_footprint
+    pub fn with_partitions(plan: MemPlan, static_bytes: Vec<u64>, mirror_bytes: Vec<u64>) -> MemLedger {
+        assert_eq!(static_bytes.len(), mirror_bytes.len());
+        let p = static_bytes.len();
+        let mut led = MemLedger::new(plan, p);
+        led.part_static = static_bytes;
+        led.part_mirror = mirror_bytes;
+        led
+    }
+
+    /// Register (or overwrite) one partition's resident components.
+    pub fn register_partition(&mut self, part: usize, static_bytes: u64, mirror_bytes: u64) {
+        self.part_static[part] = static_bytes;
+        self.part_mirror[part] = mirror_bytes;
+    }
+
+    /// The installed plan.
+    pub fn plan(&self) -> &MemPlan {
+        &self.plan
+    }
+
+    /// Whether the ledger enforces anything.
+    pub fn is_active(&self) -> bool {
+        self.plan.is_active()
+    }
+
+    /// Set the per-worker checkpoint snapshot size.
+    pub fn set_snapshot_bytes(&mut self, bytes: u64) {
+        self.snap_bytes = bytes;
+    }
+
+    /// Registered static bytes of partition `part`.
+    pub fn static_of(&self, part: usize) -> u64 {
+        self.part_static[part]
+    }
+
+    /// Registered mirror bytes of partition `part`.
+    pub fn mirror_of(&self, part: usize) -> u64 {
+        self.part_mirror[part]
+    }
+
+    /// Touch partition `part`'s mirror block at `superstep`: stamps the
+    /// LRU clock and, when the block was evicted, marks it resident again
+    /// and returns the bytes the caller must charge as a re-fetch.
+    pub fn touch_mirrors(&mut self, part: usize, superstep: u64) -> Option<u64> {
+        self.mirror_last_use[part] = superstep;
+        if self.part_mirror[part] > 0 && !self.mirror_resident[part] {
+            self.mirror_resident[part] = true;
+            Some(self.part_mirror[part])
+        } else {
+            None
+        }
+    }
+
+    /// Resident bytes of worker `w` under `owner`, excluding dynamic
+    /// step peaks: statics + resident mirrors of owned partitions, plus
+    /// the unspilled snapshot.
+    pub fn resident_of(&self, w: usize, owner: &[usize]) -> u64 {
+        let mut total = if self.snap_spilled[w] { 0 } else { self.snap_bytes };
+        for q in 0..self.p {
+            if owner[q] == w {
+                total += self.part_static[q];
+                if self.mirror_resident[q] {
+                    total += self.part_mirror[q];
+                }
+            }
+        }
+        total
+    }
+
+    /// Irreducible bytes of worker `w` under `owner`: the statics of its
+    /// owned partitions — what no remediation rung can shed.
+    pub fn irreducible_of(&self, w: usize, owner: &[usize]) -> u64 {
+        (0..self.p).filter(|&q| owner[q] == w).map(|q| self.part_static[q]).sum()
+    }
+
+    /// Reset dynamic state (residency, spills, LRU clocks, stats) while
+    /// keeping the plan and registered partition bytes — the ledger
+    /// analogue of [`ClusterSim::reset`](crate::cluster::ClusterSim::reset).
+    pub fn reset(&mut self) {
+        self.mirror_resident = vec![true; self.p];
+        self.mirror_last_use = vec![0; self.p];
+        self.snap_spilled = vec![false; self.p];
+        self.last_peak = vec![0; self.p];
+        self.stats = MemStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inactive_and_unbudgeted() {
+        let p = MemPlan::default();
+        assert!(!p.is_active());
+        assert_eq!(p.budget_of(0), u64::MAX);
+        assert_eq!(p.effective_budget(0, 7), u64::MAX);
+        assert_eq!(p.spike_factor(3), 1.0);
+        assert!(p.to_kv().is_empty());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_bounded() {
+        let a = MemPlan::seeded(9, 4);
+        let b = MemPlan::seeded(9, 4);
+        assert_eq!(a, b);
+        assert!(a.is_active());
+        assert!(a.budget_mb >= 1.0 && a.budget_mb <= 4.0);
+        assert_eq!(a.overrides.len(), 1);
+        assert!(a.overrides[0].0 < 4 && a.overrides[0].1 > 0.0);
+        assert_eq!(a.spikes.len(), 1);
+        assert!(a.spikes[0].2 > 1.0);
+        assert_ne!(a, MemPlan::seeded(10, 4));
+    }
+
+    #[test]
+    fn budgets_respect_overrides_and_spikes() {
+        let p = MemPlan {
+            budget_mb: 2.0,
+            overrides: vec![(1, 0.5)],
+            spikes: vec![(4, 8, 2.0)],
+            ..MemPlan::default()
+        };
+        assert_eq!(p.budget_of(0), 2 << 20);
+        assert_eq!(p.budget_of(1), 1 << 19);
+        // Inside the window the effective budget halves.
+        assert_eq!(p.effective_budget(0, 0), 2 << 20);
+        assert_eq!(p.effective_budget(0, 5), 1 << 20);
+        assert_eq!(p.effective_budget(0, 8), 2 << 20);
+        // Overrides alone activate the plan even with budget_mb = 0.
+        let o = MemPlan { overrides: vec![(2, 1.0)], ..MemPlan::default() };
+        assert!(o.is_active());
+        assert_eq!(o.budget_of(0), u64::MAX);
+        assert_eq!(o.budget_of(2), 1 << 20);
+    }
+
+    #[test]
+    fn parsers_reject_malformed_values_with_typed_errors() {
+        assert!(MemPlan::parse_overrides("0:2.0, 3:0.5").is_ok());
+        assert!(MemPlan::parse_overrides("").unwrap().is_empty());
+        for bad in ["x:2.0", "0", "0:abc", "0:-1.0", "0:0"] {
+            let err = MemPlan::parse_overrides(bad).unwrap_err();
+            assert!(err.to_string().contains("mem_budget_overrides"), "{err}");
+        }
+        assert!(MemPlan::parse_spikes("0:4:2.0,8:12:1.5").is_ok());
+        for bad in ["1:0:2.0", "1:2", "1:2:3:4", "a:b:c", "1:2:-1", "1:2:0"] {
+            let err = MemPlan::parse_spikes(bad).unwrap_err();
+            assert!(err.to_string().contains("mem_spike_windows"), "{err}");
+        }
+        assert!(matches!(MemPlan::parse_evict("lru"), Ok(EvictPolicy::Lru)));
+        assert!(matches!(MemPlan::parse_evict(" NONE "), Ok(EvictPolicy::None)));
+        let err = MemPlan::parse_evict("fifo").unwrap_err();
+        assert!(err.to_string().contains("mem_evict_policy"), "{err}");
+    }
+
+    #[test]
+    fn kv_round_trips_through_parsers() {
+        let p = MemPlan {
+            seed: 5,
+            budget_mb: 1.5,
+            overrides: vec![(2, 0.75)],
+            spikes: vec![(3, 9, 1.5)],
+            evict: EvictPolicy::None,
+        };
+        let kv = p.to_kv();
+        let get = |k: &str| {
+            kv.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone()).unwrap()
+        };
+        assert_eq!(get("mem_seed"), "5");
+        assert_eq!(get("mem_budget_mb"), "1.5");
+        assert_eq!(MemPlan::parse_overrides(&get("mem_budget_overrides")).unwrap(), p.overrides);
+        assert_eq!(MemPlan::parse_spikes(&get("mem_spike_windows")).unwrap(), p.spikes);
+        assert_eq!(MemPlan::parse_evict(&get("mem_evict_policy")).unwrap(), p.evict);
+    }
+
+    #[test]
+    fn ledger_tracks_residency_touch_and_reset() {
+        let plan = MemPlan { budget_mb: 1.0, ..MemPlan::default() };
+        let mut led = MemLedger::with_partitions(plan, vec![100, 200], vec![40, 0]);
+        let owner = vec![0, 1];
+        led.set_snapshot_bytes(10);
+        assert_eq!(led.resident_of(0, &owner), 100 + 40 + 10);
+        assert_eq!(led.resident_of(1, &owner), 200 + 10);
+        assert_eq!(led.irreducible_of(0, &owner), 100);
+        // A resident block touch is free; an evicted one pays a re-fetch.
+        assert_eq!(led.touch_mirrors(0, 3), None);
+        assert_eq!(led.mirror_last_use[0], 3);
+        led.mirror_resident[0] = false;
+        assert_eq!(led.resident_of(0, &owner), 100 + 10);
+        assert_eq!(led.touch_mirrors(0, 5), Some(40));
+        assert!(led.mirror_resident[0]);
+        // Mirror-free partitions never report a re-fetch.
+        led.mirror_resident[1] = false;
+        assert_eq!(led.touch_mirrors(1, 6), None);
+        // Reset clears dynamic state, keeps registrations.
+        led.snap_spilled[0] = true;
+        led.stats.evictions = 3;
+        led.reset();
+        assert!(led.mirror_resident.iter().all(|&r| r));
+        assert!(!led.snap_spilled[0]);
+        assert_eq!(led.stats, MemStats::default());
+        assert_eq!(led.static_of(1), 200);
+        assert_eq!(led.mirror_of(0), 40);
+    }
+}

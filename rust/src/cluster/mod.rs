@@ -60,14 +60,47 @@
 //! no worker; only the totals see the copies. With no plan installed every
 //! path above compiles down to the original perfect-network arithmetic,
 //! bit-for-bit.
+//!
+//! # Memory model under an enforced per-worker budget
+//!
+//! An installed [`MemLedger`] (see [`ClusterSim::set_mem`]) makes the
+//! paper's 5–12 GB-per-docker envelope enforceable. What is ledgered, per
+//! worker: the **static** bytes of every partition it owns (CSR/CSC
+//! topology, master node features, edge features — registered at
+//! construction, moving with the partition on failure re-homing), the
+//! **mirror** bytes of synchronized mirror-feature blocks (evictable),
+//! the **dynamic** step peak (live executor frames plus in-flight
+//! gradient buffers, reported by the executor after each step), and the
+//! held checkpoint snapshot (spillable). Bytes enter when a partition is
+//! registered, a mirror block is (re-)synchronized, a step runs, or a
+//! snapshot is taken; they leave via the degradation ladder
+//! [`ClusterSim::mem_enforce`] walks on breach:
+//!
+//! 1. **evict** — LRU mirror blocks drop; the next use pays a modeled
+//!    re-fetch ([`ClusterSim::mem_touch_mirrors`]);
+//! 2. **spill** — the snapshot moves to modeled remote storage; restore
+//!    pays the transfer back ([`ClusterSim::mem_unspill`]);
+//! 3. **defer** — the next step's admission waits a barrier when its
+//!    projected peak would breach ([`ClusterSim::mem_admit`]);
+//! 4. **OOM-kill** — a breach past all remediation is returned as a
+//!    [`MemBreach`] for the fault controller to turn into a worker
+//!    failure (restore → re-home → replay), never a panic.
+//!
+//! Every rung charges only the modeled clock, traffic, and
+//! [`MemStats`](crate::metrics::MemStats): a budgeted run that completes
+//! without an OOM-kill is parameter-bitwise-identical to the unbudgeted
+//! run. With no ledger installed every `mem_*` method is a no-op and the
+//! clock path is bit-identical to the pre-ledger baselines.
 
 pub mod master;
+pub mod mem;
 pub mod net;
 
+pub use mem::{EvictPolicy, MemBreach, MemLedger, MemPlan};
 pub use net::NetPlan;
 
 use crate::config::CostModelConfig;
-use crate::metrics::{measured, CommStats, Ledger};
+use crate::metrics::{measured, CommStats, Ledger, MemStats};
 
 /// Per-worker accumulators for the current superstep.
 #[derive(Clone, Copy, Debug, Default)]
@@ -107,6 +140,9 @@ pub struct ClusterSim {
     net_seq: u64,
     /// Retry/timeout/backoff counters (all zero without a [`NetPlan`]).
     pub comm: CommStats,
+    /// Per-worker memory ledger, if one is installed (see the module
+    /// docs' memory section). `None` is the bit-identical unbudgeted path.
+    mem: Option<MemLedger>,
 }
 
 impl ClusterSim {
@@ -126,6 +162,7 @@ impl ClusterSim {
             wait: vec![0.0; p],
             net_seq: 0,
             comm: CommStats::default(),
+            mem: None,
         }
     }
 
@@ -145,6 +182,196 @@ impl ClusterSim {
     /// The installed network plan, if any.
     pub fn net(&self) -> Option<&NetPlan> {
         self.net.as_ref()
+    }
+
+    /// Install a memory ledger (module docs, memory section). Ledgers
+    /// whose plan is inactive are discarded, keeping the simulator on the
+    /// unbudgeted path that is bit-identical to the golden baselines.
+    pub fn set_mem(&mut self, ledger: MemLedger) {
+        self.mem = if ledger.is_active() { Some(ledger) } else { None };
+    }
+
+    /// The installed memory ledger, if any.
+    pub fn mem(&self) -> Option<&MemLedger> {
+        self.mem.as_ref()
+    }
+
+    /// Pressure counters of the installed ledger (default when none).
+    pub fn mem_stats(&self) -> MemStats {
+        self.mem.as_ref().map_or_else(MemStats::default, |m| m.stats)
+    }
+
+    /// Set the per-worker checkpoint snapshot size on the ledger.
+    pub fn mem_set_snapshot_bytes(&mut self, bytes: u64) {
+        if let Some(m) = self.mem.as_mut() {
+            m.set_snapshot_bytes(bytes);
+        }
+    }
+
+    /// Touch partition `part`'s mirror block before it is used this step:
+    /// stamps the LRU clock, and if the block was evicted, re-fetches it
+    /// from the master side — the partition pays the transfer on the
+    /// modeled clock (a real re-pull of mirror rows), and
+    /// `MemStats::refetch_bytes` records it.
+    pub fn mem_touch_mirrors(&mut self, part: usize) {
+        let Some(mut led) = self.mem.take() else { return };
+        if let Some(bytes) = led.touch_mirrors(part, self.supersteps) {
+            led.stats.refetch_bytes += bytes;
+            let master = self.p;
+            self.send(master, part, bytes);
+            if part < self.p {
+                // The receiver stalls on the pull: charge its comm term.
+                self.acc[self.owner[part]].bytes_out += bytes;
+                self.acc[self.owner[part]].msgs_out += 1;
+            }
+        }
+        self.mem = Some(led);
+    }
+
+    /// Admission control: using each partition's last observed dynamic
+    /// peak, project every worker's demand for the next step. If any
+    /// worker would breach its effective budget, defer admission by one
+    /// wait barrier (an empty superstep on the clock) and count it.
+    /// Returns whether the step was deferred. At most one deferral per
+    /// step — admission never blocks progress, it only charges time.
+    pub fn mem_admit(&mut self) -> bool {
+        let over = match self.mem.as_ref() {
+            None => false,
+            Some(led) => (0..self.p).any(|w| {
+                let mut demand = if led.snap_spilled[w] { 0 } else { led.snap_bytes };
+                for q in 0..self.p {
+                    if self.owner[q] == w {
+                        demand += led.part_static[q] + led.last_peak[q];
+                        if led.mirror_resident[q] {
+                            demand += led.part_mirror[q];
+                        }
+                    }
+                }
+                demand > led.plan.effective_budget(w, self.supersteps)
+            }),
+        };
+        if over {
+            self.mem.as_mut().expect("checked above").stats.deferred_admissions += 1;
+            self.superstep();
+        }
+        over
+    }
+
+    /// Enforce the budget after a step whose per-partition dynamic peak
+    /// (frames + gradient buffers) was `peak_by_part`. Walks the
+    /// remediation ladder per worker — LRU mirror eviction, then
+    /// checkpoint spill (charged as a transfer to modeled remote
+    /// storage) — and returns the first worker still over budget after
+    /// both, for the caller to OOM-kill. `None` means every worker fits.
+    pub fn mem_enforce(&mut self, peak_by_part: &[usize]) -> Option<MemBreach> {
+        let Some(mut led) = self.mem.take() else { return None };
+        for (q, &b) in peak_by_part.iter().enumerate().take(self.p) {
+            led.last_peak[q] = b as u64;
+        }
+        let mut breach = None;
+        let mut spill_charges: Vec<(usize, u64)> = Vec::new();
+        for w in 0..self.p {
+            let budget = led.plan.effective_budget(w, self.supersteps);
+            let snap = if led.snap_spilled[w] { 0 } else { led.snap_bytes };
+            let mut demand = snap;
+            for q in 0..self.p {
+                if self.owner[q] == w {
+                    demand += led.part_static[q] + led.last_peak[q];
+                    if led.mirror_resident[q] {
+                        demand += led.part_mirror[q];
+                    }
+                }
+            }
+            if demand > budget && led.plan.evict == EvictPolicy::Lru {
+                // LRU first: oldest mirror block goes, whole-block grain.
+                let mut cands: Vec<(u64, usize)> = (0..self.p)
+                    .filter(|&q| {
+                        self.owner[q] == w && led.mirror_resident[q] && led.part_mirror[q] > 0
+                    })
+                    .map(|q| (led.mirror_last_use[q], q))
+                    .collect();
+                cands.sort_unstable();
+                for (_, q) in cands {
+                    if demand <= budget {
+                        break;
+                    }
+                    led.mirror_resident[q] = false;
+                    demand -= led.part_mirror[q];
+                    led.stats.evictions += 1;
+                }
+            }
+            if demand > budget && snap > 0 {
+                led.snap_spilled[w] = true;
+                led.stats.spills += 1;
+                led.stats.spill_bytes += snap;
+                spill_charges.push((w, snap));
+                demand -= snap;
+            }
+            if demand > led.stats.peak_bytes {
+                led.stats.peak_bytes = demand;
+            }
+            if demand > budget && breach.is_none() {
+                breach = Some(MemBreach { worker: w, resident: demand, budget });
+            }
+        }
+        self.mem = Some(led);
+        let master = self.p;
+        for (w, bytes) in spill_charges {
+            self.send(w, master, bytes);
+        }
+        breach
+    }
+
+    /// Pull every spilled checkpoint snapshot back from modeled remote
+    /// storage (called after a restore, which needs the snapshot bytes
+    /// resident again); each pull is charged as a transfer.
+    pub fn mem_unspill(&mut self) {
+        let Some(mut led) = self.mem.take() else { return };
+        let master = self.p;
+        for w in 0..self.p {
+            if led.snap_spilled[w] {
+                led.snap_spilled[w] = false;
+                self.send(master, w, led.snap_bytes);
+                if w < self.p {
+                    self.acc[w].bytes_out += led.snap_bytes;
+                    self.acc[w].msgs_out += 1;
+                }
+            }
+        }
+        self.mem = Some(led);
+    }
+
+    /// Count an OOM-kill (a breach the fault controller turned into a
+    /// worker failure).
+    pub fn mem_note_oom_kill(&mut self) {
+        if let Some(m) = self.mem.as_mut() {
+            m.stats.oom_kills += 1;
+        }
+    }
+
+    /// Count a hard breach no kill could remediate (last survivor or
+    /// no fault controller willing): training degrades over budget.
+    pub fn mem_note_hard_breach(&mut self) {
+        if let Some(m) = self.mem.as_mut() {
+            m.stats.hard_breaches += 1;
+        }
+    }
+
+    /// Resident bytes of worker `w` excluding dynamic step peaks (fault
+    /// re-homing's placement key). Zero without a ledger.
+    pub fn mem_resident_of(&self, w: usize) -> u64 {
+        self.mem.as_ref().map_or(0, |m| m.resident_of(w, &self.owner))
+    }
+
+    /// Irreducible (static-only) bytes of worker `w`. Zero without a
+    /// ledger.
+    pub fn mem_irreducible_of(&self, w: usize) -> u64 {
+        self.mem.as_ref().map_or(0, |m| m.irreducible_of(w, &self.owner))
+    }
+
+    /// Base (spike-free) budget of worker `w` (`u64::MAX` unbudgeted).
+    pub fn mem_budget_of(&self, w: usize) -> u64 {
+        self.mem.as_ref().map_or(u64::MAX, |m| m.plan.budget_of(w))
     }
 
     /// Physical worker currently executing partition `rank` (identity
@@ -365,6 +592,9 @@ impl ClusterSim {
         self.wait.iter_mut().for_each(|x| *x = 0.0);
         self.net_seq = 0;
         self.comm = CommStats::default();
+        if let Some(m) = self.mem.as_mut() {
+            m.reset();
+        }
     }
 }
 
@@ -640,5 +870,128 @@ mod tests {
         assert_eq!(sim.net_seq, 0);
         assert!(sim.wait.iter().all(|&x| x == 0.0));
         assert!(sim.net().is_some(), "the plan itself survives a reset");
+    }
+
+    #[test]
+    fn inactive_mem_ledger_is_never_installed() {
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.set_mem(MemLedger::new(MemPlan::default(), 2));
+        assert!(sim.mem().is_none());
+        // Every mem_* call is a no-op on the unbudgeted path.
+        sim.mem_touch_mirrors(0);
+        assert!(!sim.mem_admit());
+        assert_eq!(sim.mem_enforce(&[1 << 40, 1 << 40]), None);
+        assert_eq!(sim.mem_stats(), MemStats::default());
+        assert_eq!(sim.mem_budget_of(0), u64::MAX);
+        assert_eq!(sim.total_bytes, 0);
+        assert_eq!(sim.clock, 0.0);
+    }
+
+    #[test]
+    fn mem_enforce_walks_the_degradation_ladder() {
+        // Budget 1 MB/worker. Worker 0: 600 KB static + 300 KB mirror.
+        let mb = 1u64 << 20;
+        let plan = MemPlan { budget_mb: 1.0, ..MemPlan::default() };
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.set_mem(MemLedger::with_partitions(
+            plan,
+            vec![600_000, 100_000],
+            vec![300_000, 0],
+        ));
+        sim.mem_set_snapshot_bytes(50_000);
+        // Fits: static 600k + mirror 300k + snap 50k + peak 90k < 1 MB.
+        assert_eq!(sim.mem_enforce(&[90_000, 0]), None);
+        assert_eq!(sim.mem_stats().evictions, 0);
+        assert!(sim.mem_stats().peak_bytes >= 1_040_000);
+        // Peak grows: eviction of the mirror block gets back under.
+        assert_eq!(sim.mem_enforce(&[200_000, 0]), None);
+        let st = sim.mem_stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.spills, 0);
+        // Still over after eviction: the snapshot spills (a charged send).
+        let bytes_before = sim.total_bytes;
+        assert_eq!(sim.mem_enforce(&[400_000, 0]), None);
+        let st = sim.mem_stats();
+        assert_eq!(st.spills, 1);
+        assert_eq!(st.spill_bytes, 50_000);
+        assert_eq!(sim.total_bytes, bytes_before + 50_000);
+        // Beyond all remediation: a typed breach, never a panic.
+        let b = sim.mem_enforce(&[2_000_000, 0]).expect("breach");
+        assert_eq!(b.worker, 0);
+        assert_eq!(b.budget, mb);
+        assert!(b.resident > mb);
+        // The untouched worker never breached.
+        assert!(sim.mem_enforce(&[0, 100_000]).is_none());
+    }
+
+    #[test]
+    fn evicted_mirrors_refetch_on_touch() {
+        let plan = MemPlan { budget_mb: 1.0, ..MemPlan::default() };
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.set_mem(MemLedger::with_partitions(
+            plan,
+            vec![500_000, 100_000],
+            vec![300_000, 0],
+        ));
+        // Resident touch is free.
+        sim.mem_touch_mirrors(0);
+        assert_eq!(sim.total_bytes, 0);
+        // Force an eviction, then the next touch pays the re-fetch.
+        assert_eq!(sim.mem_enforce(&[500_000, 0]), None);
+        assert_eq!(sim.mem_stats().evictions, 1);
+        sim.mem_touch_mirrors(0);
+        let st = sim.mem_stats();
+        assert_eq!(st.refetch_bytes, 300_000);
+        assert_eq!(sim.total_bytes, 300_000);
+        let dt = sim.superstep();
+        assert!(dt > cfg().superstep_overhead, "the re-fetch lands on the clock");
+        // EvictPolicy::None falls through to spill instead of evicting.
+        let plan = MemPlan { budget_mb: 1.0, evict: EvictPolicy::None, ..MemPlan::default() };
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.set_mem(MemLedger::with_partitions(plan, vec![500_000, 0], vec![100_000, 0]));
+        sim.mem_set_snapshot_bytes(500_000);
+        assert_eq!(sim.mem_enforce(&[0, 0]), None);
+        let st = sim.mem_stats();
+        assert_eq!(st.evictions, 0);
+        assert_eq!(st.spills, 1);
+    }
+
+    #[test]
+    fn admission_defers_on_projected_breach() {
+        let plan = MemPlan { budget_mb: 1.0, ..MemPlan::default() };
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.set_mem(MemLedger::with_partitions(plan, vec![400_000, 0], vec![0, 0]));
+        // No peak observed yet: nothing to project, no deferral.
+        assert!(!sim.mem_admit());
+        // A huge observed peak projects a breach: one wait barrier.
+        let b = sim.mem_enforce(&[900_000, 0]).expect("over budget");
+        assert_eq!(b.worker, 0);
+        let steps_before = sim.supersteps;
+        assert!(sim.mem_admit());
+        assert_eq!(sim.supersteps, steps_before + 1);
+        assert_eq!(sim.mem_stats().deferred_admissions, 1);
+    }
+
+    #[test]
+    fn unspill_restores_snapshots_and_reset_clears_pressure() {
+        let plan = MemPlan { budget_mb: 1.0, ..MemPlan::default() };
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.set_mem(MemLedger::with_partitions(plan, vec![900_000, 0], vec![0, 0]));
+        sim.mem_set_snapshot_bytes(200_000);
+        assert_eq!(sim.mem_enforce(&[0, 0]), None);
+        assert_eq!(sim.mem_stats().spills, 1);
+        let bytes_before = sim.total_bytes;
+        sim.mem_unspill();
+        assert_eq!(sim.total_bytes, bytes_before + 200_000);
+        // Re-homing piles residency on the survivor (owner-map derived).
+        assert_eq!(sim.mem_resident_of(0), 900_000 + 200_000);
+        sim.reassign(1, 0);
+        assert_eq!(sim.mem_irreducible_of(0), 900_000);
+        assert_eq!(sim.mem_budget_of(0), 1 << 20);
+        // Reset keeps the ledger and registrations, clears pressure state.
+        sim.reset();
+        assert_eq!(sim.mem_stats(), MemStats::default());
+        assert!(sim.mem().is_some(), "the ledger itself survives a reset");
+        assert_eq!(sim.mem().unwrap().static_of(0), 900_000);
     }
 }

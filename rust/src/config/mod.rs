@@ -5,6 +5,7 @@
 //! launcher (`graphtheta train --config run.conf`) works like other
 //! training frameworks' YAML/TOML launchers.
 
+pub use crate::cluster::mem::{EvictPolicy, MemPlan};
 pub use crate::cluster::net::NetPlan;
 use std::collections::BTreeMap;
 
@@ -409,6 +410,11 @@ pub struct TrainConfig {
     /// spikes, straggler mitigation (inactive by default — see
     /// [`NetPlan`]). Moves only the modeled clock, never the numerics.
     pub net: NetPlan,
+    /// Per-worker memory budget: eviction, spill, deferred admission and
+    /// OOM-kill under pressure (inactive by default — see [`MemPlan`]).
+    /// A budgeted run that completes moves only the modeled clock,
+    /// traffic and [`crate::metrics::MemStats`], never the numerics.
+    pub mem: MemPlan,
 }
 
 impl TrainConfig {
@@ -437,6 +443,7 @@ pub struct TrainConfigBuilder {
     schedule_policy: Option<SchedulePolicy>,
     fault: Option<FaultPlan>,
     net: Option<NetPlan>,
+    mem: Option<MemPlan>,
 }
 
 impl TrainConfigBuilder {
@@ -512,6 +519,10 @@ impl TrainConfigBuilder {
         self.net = Some(n);
         self
     }
+    pub fn mem(mut self, m: MemPlan) -> Self {
+        self.mem = Some(m);
+        self
+    }
 
     pub fn build(self) -> TrainConfig {
         TrainConfig {
@@ -533,6 +544,7 @@ impl TrainConfigBuilder {
             schedule_policy: self.schedule_policy.unwrap_or_default(),
             fault: self.fault.unwrap_or_default(),
             net: self.net.unwrap_or_default(),
+            mem: self.mem.unwrap_or_default(),
         }
     }
 }
@@ -611,7 +623,8 @@ pub fn config_from_kv(
         "update_mode", "max_staleness", "schedule_policy", "checkpoint_every", "fail_at",
         "quorum", "rejoin_at", "corrupt_at", "suspect_at", "net_seed", "net_loss",
         "net_timeout", "net_backoff_base", "net_backoff_cap", "net_retries", "net_slowdown",
-        "net_spikes", "net_straggler_factor",
+        "net_spikes", "net_straggler_factor", "mem_seed", "mem_budget_mb",
+        "mem_budget_overrides", "mem_spike_windows", "mem_evict_policy",
     ];
     for k in kv.keys() {
         if !known.contains(&k.as_str()) {
@@ -714,12 +727,38 @@ pub fn config_from_kv(
         return Err(ConfigError::bad("net_loss", &net.loss.to_string(), "probability in [0, 1)")
             .into());
     }
+    let md = MemPlan::default();
+    let mem = MemPlan {
+        seed: get_u("mem_seed", md.seed as usize)? as u64,
+        budget_mb: get_f("mem_budget_mb", md.budget_mb)?,
+        overrides: match kv.get("mem_budget_overrides") {
+            Some(s) => MemPlan::parse_overrides(s)?,
+            None => Vec::new(),
+        },
+        spikes: match kv.get("mem_spike_windows") {
+            Some(s) => MemPlan::parse_spikes(s)?,
+            None => Vec::new(),
+        },
+        evict: match kv.get("mem_evict_policy") {
+            Some(s) => MemPlan::parse_evict(s)?,
+            None => md.evict,
+        },
+    };
+    if !mem.budget_mb.is_finite() || mem.budget_mb < 0.0 {
+        return Err(ConfigError::bad(
+            "mem_budget_mb",
+            &mem.budget_mb.to_string(),
+            "MB ≥ 0 (0 disables the ledger)",
+        )
+        .into());
+    }
     Ok(b
         .optimizer(opt)
         .update_mode(update_mode)
         .schedule_policy(schedule_policy)
         .fault(fault)
         .net(net)
+        .mem(mem)
         .lr(get_f("lr", 0.01)? as f32)
         .weight_decay(get_f("weight_decay", 5e-4)? as f32)
         .epochs(get_u("epochs", 100)?)
@@ -835,18 +874,25 @@ mod tests {
                     corrupt_at = 3,6\nsuspect_at = 2:0\nnet_seed = 11\nnet_loss = 0.25\n\
                     net_timeout = 0.002\nnet_backoff_base = 0.001\nnet_backoff_cap = 0.016\n\
                     net_retries = 7\nnet_slowdown = 1:2.5,3:1.5\nnet_spikes = 2:6:3.5\n\
-                    net_straggler_factor = 1.75\n";
+                    net_straggler_factor = 1.75\nmem_seed = 13\nmem_budget_mb = 1.5\n\
+                    mem_budget_overrides = 1:0.75,3:2.5\nmem_spike_windows = 2:6:1.5\n\
+                    mem_evict_policy = none\n";
         let c = config_from_kv(&parse_kv(text).unwrap(), 8, 2, 0).unwrap();
         let mut emitted = String::new();
-        for (k, v) in c.fault.to_kv().into_iter().chain(c.net.to_kv()) {
+        for (k, v) in c.fault.to_kv().into_iter().chain(c.net.to_kv()).chain(c.mem.to_kv()) {
             emitted.push_str(&format!("{k} = {v}\n"));
         }
         let c2 = config_from_kv(&parse_kv(&emitted).unwrap(), 8, 2, 0).unwrap();
         assert_eq!(c.fault, c2.fault);
         assert_eq!(c.net, c2.net);
+        assert_eq!(c.mem, c2.mem);
+        assert_eq!(c.mem.budget_mb, 1.5);
+        assert_eq!(c.mem.overrides, vec![(1, 0.75), (3, 2.5)]);
+        assert_eq!(c.mem.evict, EvictPolicy::None);
         // Default plans emit nothing at all.
         assert!(FaultPlan::default().to_kv().is_empty());
         assert!(NetPlan::default().to_kv().is_empty());
+        assert!(MemPlan::default().to_kv().is_empty());
     }
 
     #[test]
@@ -863,6 +909,34 @@ mod tests {
             ("net_loss = -0.1\n", "net_loss"),
             ("net_slowdown = 0\n", "net_slowdown"),
             ("net_spikes = 5:2:1.0\n", "net_spikes"),
+        ] {
+            let err = config_from_kv(&parse_kv(bad).unwrap(), 8, 2, 0).unwrap_err();
+            assert!(err.contains(key), "error {err:?} must name {key}");
+        }
+    }
+
+    #[test]
+    fn mem_plan_via_kv_with_typed_errors() {
+        let c = config_from_kv(&BTreeMap::new(), 8, 2, 0).unwrap();
+        assert!(!c.mem.is_active(), "memory budgets are off by default");
+        let kv = parse_kv("mem_budget_mb = 2.0\nmem_spike_windows = 4:8:2.0\n").unwrap();
+        let c = config_from_kv(&kv, 8, 2, 0).unwrap();
+        assert!(c.mem.is_active());
+        assert_eq!(c.mem.budget_mb, 2.0);
+        assert_eq!(c.mem.spikes, vec![(4, 8, 2.0)]);
+        assert_eq!(c.mem.evict, EvictPolicy::Lru);
+        // Overrides alone activate the ledger.
+        let kv = parse_kv("mem_budget_overrides = 0:1.5\n").unwrap();
+        assert!(config_from_kv(&kv, 8, 2, 0).unwrap().mem.is_active());
+        // Every malformed value fails loudly, with the key named.
+        for (bad, key) in [
+            ("mem_budget_mb = -1\n", "mem_budget_mb"),
+            ("mem_budget_mb = plenty\n", "mem_budget_mb"),
+            ("mem_budget_overrides = 0\n", "mem_budget_overrides"),
+            ("mem_budget_overrides = 0:-2\n", "mem_budget_overrides"),
+            ("mem_spike_windows = 5:2:1.0\n", "mem_spike_windows"),
+            ("mem_spike_windows = 2:5:0\n", "mem_spike_windows"),
+            ("mem_evict_policy = fifo\n", "mem_evict_policy"),
         ] {
             let err = config_from_kv(&parse_kv(bad).unwrap(), 8, 2, 0).unwrap_err();
             assert!(err.contains(key), "error {err:?} must name {key}");

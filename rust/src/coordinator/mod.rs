@@ -151,9 +151,9 @@
 //! [`ClusterSim::reassign`]: crate::cluster::ClusterSim::reassign
 //! [`ScheduleOpts::alive`]: crate::engine::scheduler::ScheduleOpts::alive
 
-use crate::cluster::ClusterSim;
+use crate::cluster::{ClusterSim, MemLedger};
 use crate::config::{ModelKind, SchedulePolicy, TrainConfig, UpdateMode};
-use crate::engine::fault::FaultController;
+use crate::engine::fault::{FaultController, FaultError};
 use crate::engine::scheduler::{
     locality_placement, remap_dead_homes, schedule_chains_opts, Schedule, ScheduleOpts, Task,
 };
@@ -245,6 +245,13 @@ impl<'a> Coordinator<'a> {
         if self.cfg.net.is_active() {
             sim.set_net(self.cfg.net.clone());
         }
+        // Likewise an active memory plan installs the per-worker byte
+        // ledger (fresh counters for this run); an inactive plan is never
+        // installed, keeping the legacy path bit-identical.
+        if self.cfg.mem.is_active() {
+            let (stat, mirror) = self.dg.mem_footprint(self.g.feat_dim, self.g.edge_feat_dim);
+            sim.set_mem(MemLedger::with_partitions(self.cfg.mem.clone(), stat, mirror));
+        }
         match self.cfg.update_mode {
             UpdateMode::Synchronous => self.run_sync(sim, backend),
             UpdateMode::Asynchronous { .. } => self.run_async(sim, backend),
@@ -292,6 +299,11 @@ impl<'a> Coordinator<'a> {
         } else {
             None
         };
+        // With checkpointing on, every worker also holds its latest
+        // parameter snapshot — the memory ledger charges (and may spill) it.
+        if fault.is_some() {
+            sim.mem_set_snapshot_bytes(pm.state_bytes() as u64);
+        }
         // Chronic per-worker slowdowns from the network plan stretch task
         // costs in the schedule; `None` keeps the bit-identical baseline.
         let slow: Option<Vec<f64>> = (cfg.net.is_active() && !cfg.net.slowdown.is_empty())
@@ -336,6 +348,17 @@ impl<'a> Coordinator<'a> {
                     if cfg.schedule_policy == SchedulePolicy::LocalityAware && round_n >= 2 {
                         chain_weights.push(plan.partition_weights());
                     }
+                    // Memory ladder, front rungs: defer admission on a
+                    // projected breach, then re-fetch any evicted mirror
+                    // blocks this batch touches (clock/traffic only).
+                    if sim.mem().is_some() {
+                        sim.mem_admit();
+                        for q in 0..self.dg.p() {
+                            if plan.active_count[q] > 0 {
+                                sim.mem_touch_mirrors(q);
+                            }
+                        }
+                    }
                     let res = if step + 1 < epochs {
                         // Hide the next plan's subgraph construction behind
                         // this step's NN-TGAR execution.
@@ -360,6 +383,43 @@ impl<'a> Coordinator<'a> {
                         in_window = 0;
                         if let Some(fc) = fault.as_mut() {
                             restored = fc.after_update(sim, &mut pm)?;
+                        }
+                        // Memory ladder, terminal rungs (enforced at the
+                        // update barrier, where the gradient accumulator
+                        // is empty and a rollback is clean): evict, spill,
+                        // then OOM-kill through the fault path; an
+                        // unabsorbable kill degrades over budget instead.
+                        let mut guard = 0;
+                        while let Some(b) = sim.mem_enforce(&res.peak_by_part) {
+                            match fault.as_mut() {
+                                Some(fc) => {
+                                    match fc.oom_kill(pm.latest_version(), b.worker, sim, &mut pm)?
+                                    {
+                                        Some(r) => {
+                                            sim.mem_note_oom_kill();
+                                            restored =
+                                                Some(restored.map_or(r, |prev| prev.min(r)));
+                                        }
+                                        None => {
+                                            sim.mem_note_hard_breach();
+                                            break;
+                                        }
+                                    }
+                                }
+                                None => {
+                                    return Err(FaultError::OutOfMemory {
+                                        step: pm.latest_version(),
+                                        worker: b.worker,
+                                        resident: b.resident,
+                                        budget: b.budget,
+                                    }
+                                    .into())
+                                }
+                            }
+                            guard += 1;
+                            if guard >= self.dg.p() {
+                                break;
+                            }
                         }
                     }
                     step += 1;
@@ -480,6 +540,7 @@ impl<'a> Coordinator<'a> {
             latest_param_l2,
             fault: fault_stats,
             comm: cfg.net.is_active().then_some(sim.comm),
+            mem: cfg.mem.is_active().then(|| sim.mem_stats()),
             profile: ex.profile.clone(),
         };
         Ok(PipelineReport {
@@ -555,6 +616,11 @@ impl<'a> Coordinator<'a> {
         } else {
             None
         };
+        // With checkpointing on, every worker also holds its latest
+        // parameter snapshot — the memory ledger charges (and may spill) it.
+        if fault.is_some() {
+            sim.mem_set_snapshot_bytes(pm.state_bytes() as u64);
+        }
         let slow: Option<Vec<f64>> = (cfg.net.is_active() && !cfg.net.slowdown.is_empty())
             .then(|| (0..self.dg.p()).map(|w| cfg.net.slow_factor(w)).collect());
         let mut straggler = StragglerStats::default();
@@ -593,6 +659,16 @@ impl<'a> Coordinator<'a> {
                 if locality {
                     chain_weights.push(plan.partition_weights());
                 }
+                // Memory ladder, front rungs (admission-time: the modeled
+                // worker loads this batch's data now, not at completion).
+                if sim.mem().is_some() {
+                    sim.mem_admit();
+                    for q in 0..self.dg.p() {
+                        if plan.active_count[q] > 0 {
+                            sim.mem_touch_mirrors(q);
+                        }
+                    }
+                }
                 let res = if step + 1 < epochs {
                     let (np, res) = gen.next_plan_overlapped(self.g, self.dg, || {
                         ex.train_step(&params, &plan, sim, backend)
@@ -613,13 +689,20 @@ impl<'a> Coordinator<'a> {
                     task_id += 1;
                 }
                 chains.push(chain);
-                inflight.push_back(InFlightStep { chain: step, version, plan, grads: res.grads });
+                inflight.push_back(InFlightStep {
+                    chain: step,
+                    version,
+                    plan,
+                    grads: res.grads,
+                    peak_by_part: res.peak_by_part,
+                });
                 step += 1;
             }
             // Complete the oldest in-flight step: push its gradient —
             // replaying first if the pinned version fell behind the bound
             // — and publish an update.
-            let f = inflight.pop_front().expect("window non-empty");
+            let mut f = inflight.pop_front().expect("window non-empty");
+            let mut step_peaks = std::mem::take(&mut f.peak_by_part);
             stats.pushes += 1;
             if pm.try_push_grads_from(&f.grads, f.version).is_err() {
                 stats.rejected += 1;
@@ -643,29 +726,66 @@ impl<'a> Coordinator<'a> {
                 // curve the run optimized).
                 losses[f.chain] = res.loss;
                 stats.pushes += 1;
+                step_peaks = res.peak_by_part.clone();
                 pm.try_push_grads_from(&res.grads, fresh_version)
                     .expect("a replayed push is fresh by construction");
             }
             pm.update_averaged(1);
             completed += 1;
+            let mut rolled = None;
             if let Some(fc) = fault.as_mut() {
-                if let Some(r) = fc.after_update(sim, &mut pm)? {
-                    // Failure: the manager rolled back to update `r`. The
-                    // in-flight window is lost with the dead worker, and
-                    // admission/completion rewind to the restore point;
-                    // re-admitted steps draw fresh batches. Chains of the
-                    // lost steps leave the schedule (their executed cost
-                    // stays on the serial clock — unrecovered, hence
-                    // unoverlapped, work).
-                    let r = r as usize;
-                    inflight.clear();
-                    step = r;
-                    completed = r;
-                    losses.truncate(r);
-                    chains.truncate(r);
-                    chain_weights.truncate(if locality { r } else { 0 });
-                    continue;
+                rolled = fc.after_update(sim, &mut pm)?;
+            }
+            // Memory ladder, terminal rungs — async updates publish per
+            // completed step, so every enforcement lands at a clean
+            // update boundary. An OOM-kill rewinds exactly like a
+            // scheduled failure.
+            let mut guard = 0;
+            while let Some(b) = sim.mem_enforce(&step_peaks) {
+                match fault.as_mut() {
+                    Some(fc) => {
+                        match fc.oom_kill(pm.latest_version(), b.worker, sim, &mut pm)? {
+                            Some(r) => {
+                                sim.mem_note_oom_kill();
+                                rolled = Some(rolled.map_or(r, |prev| prev.min(r)));
+                            }
+                            None => {
+                                sim.mem_note_hard_breach();
+                                break;
+                            }
+                        }
+                    }
+                    None => {
+                        return Err(FaultError::OutOfMemory {
+                            step: pm.latest_version(),
+                            worker: b.worker,
+                            resident: b.resident,
+                            budget: b.budget,
+                        }
+                        .into())
+                    }
                 }
+                guard += 1;
+                if guard >= self.dg.p() {
+                    break;
+                }
+            }
+            if let Some(r) = rolled {
+                // Failure: the manager rolled back to update `r`. The
+                // in-flight window is lost with the dead worker, and
+                // admission/completion rewind to the restore point;
+                // re-admitted steps draw fresh batches. Chains of the
+                // lost steps leave the schedule (their executed cost
+                // stays on the serial clock — unrecovered, hence
+                // unoverlapped, work).
+                let r = r as usize;
+                inflight.clear();
+                step = r;
+                completed = r;
+                losses.truncate(r);
+                chains.truncate(r);
+                chain_weights.truncate(if locality { r } else { 0 });
+                continue;
             }
             if has_val && completed % cfg.eval_every == 0 {
                 let mark = sim.mark();
@@ -739,6 +859,7 @@ impl<'a> Coordinator<'a> {
             latest_param_l2,
             fault: fault_stats,
             comm: cfg.net.is_active().then_some(sim.comm),
+            mem: cfg.mem.is_active().then(|| sim.mem_stats()),
             profile: ex.profile.clone(),
         };
         Ok(PipelineReport {
@@ -770,6 +891,9 @@ struct InFlightStep {
     /// Retained for the replay path (an `Arc` clone — no table copies).
     plan: Arc<ActivePlan>,
     grads: ModelParams,
+    /// Per-partition peak bytes of the executed step — what the memory
+    /// ledger enforces when this step completes.
+    peak_by_part: Vec<usize>,
 }
 
 /// Placement inputs beyond the chains themselves: cluster shape, policy,

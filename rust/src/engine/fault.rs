@@ -99,6 +99,14 @@ pub enum FaultError {
     /// A failure event would leave fewer survivors than the configured
     /// quorum — too few workers remain to credibly host all partitions.
     QuorumLost { step: u64, survivors: usize, quorum: usize },
+    /// A worker's resident bytes breached its memory budget past every
+    /// remediation rung (eviction, spill) and no fault controller was
+    /// active to turn the breach into a recoverable worker failure.
+    OutOfMemory { step: u64, worker: usize, resident: u64, budget: u64 },
+    /// Failure re-homing found no survivor whose memory budget can hold a
+    /// dead worker's partition on top of its own (the memory-aware
+    /// counterpart of [`FaultError::QuorumLost`]).
+    NoMemoryFit { step: u64, part: usize, needed: u64, headroom: u64 },
 }
 
 impl std::fmt::Display for FaultError {
@@ -108,6 +116,16 @@ impl std::fmt::Display for FaultError {
                 f,
                 "quorum lost at step {step}: {survivors} survivor(s) remain but the \
                  quorum requires {quorum} to host all partitions"
+            ),
+            FaultError::OutOfMemory { step, worker, resident, budget } => write!(
+                f,
+                "worker {worker} out of memory at step {step}: {resident} B resident \
+                 exceeds the {budget} B budget after eviction and spill"
+            ),
+            FaultError::NoMemoryFit { step, part, needed, headroom } => write!(
+                f,
+                "no memory fit at step {step}: partition {part} needs {needed} B but \
+                 the best survivor has {headroom} B of budget headroom"
             ),
         }
     }
@@ -339,6 +357,22 @@ impl FaultController {
         sim.superstep();
     }
 
+    /// Kill `worker` because its memory ledger breached past every
+    /// remediation rung. The OOM flows through the same failure path as a
+    /// scheduled fault — death, restore from the newest intact checkpoint,
+    /// re-home, replay — and returns the restore step. `Ok(None)` means no
+    /// kill was possible (already dead, or the last survivor); the caller
+    /// should count a hard breach and keep the run degraded-but-alive.
+    pub fn oom_kill(
+        &mut self,
+        step: u64,
+        worker: usize,
+        sim: &mut ClusterSim,
+        pm: &mut ParameterManager,
+    ) -> Result<Option<u64>, FaultError> {
+        self.fail_many(step, &[worker], sim, pm)
+    }
+
     /// One failure event: every victim in `workers` dies at `step`, then a
     /// single rollback recovers the cluster. Stray ranks are counted and
     /// dropped; duplicate and already-dead victims are dropped. With no
@@ -401,19 +435,57 @@ impl FaultController {
         // Re-home every partition a dead worker carried onto the
         // least-loaded survivor (ties to the lowest rank) — survivors then
         // carry the extra partitions' compute and traffic. The sim's
-        // partition→owner mapping is the single source of truth.
-        let mut load = vec![0usize; p];
-        for part in 0..p {
-            load[sim.owner_of(part)] += 1;
-        }
-        for part in 0..p {
-            if !self.alive[sim.owner_of(part)] {
-                let to = (0..p)
-                    .filter(|&w| self.alive[w])
-                    .min_by_key(|&w| (load[w], w))
-                    .expect("quorum/survivor guards keep at least one worker");
-                load[to] += 1;
-                sim.reassign(part, to);
+        // partition→owner mapping is the single source of truth. With a
+        // memory ledger installed, "least loaded" means least projected
+        // resident bytes, and a survivor only qualifies when the orphan's
+        // irreducible bytes still fit its budget; running out of fitting
+        // survivors is a typed error, never a panic.
+        if sim.mem().is_some() {
+            for part in 0..p {
+                if !self.alive[sim.owner_of(part)] {
+                    let needed = sim.mem().map_or(0, |m| m.static_of(part));
+                    let to = (0..p)
+                        .filter(|&w| self.alive[w])
+                        .filter(|&w| {
+                            sim.mem_irreducible_of(w).saturating_add(needed)
+                                <= sim.mem_budget_of(w)
+                        })
+                        .min_by_key(|&w| (sim.mem_resident_of(w), w));
+                    match to {
+                        Some(to) => sim.reassign(part, to),
+                        None => {
+                            let headroom = (0..p)
+                                .filter(|&w| self.alive[w])
+                                .map(|w| {
+                                    sim.mem_budget_of(w)
+                                        .saturating_sub(sim.mem_irreducible_of(w))
+                                })
+                                .max()
+                                .unwrap_or(0);
+                            return Err(FaultError::NoMemoryFit {
+                                step,
+                                part,
+                                needed,
+                                headroom,
+                            });
+                        }
+                    }
+                }
+            }
+        } else {
+            let mut load = vec![0usize; p];
+            for part in 0..p {
+                load[sim.owner_of(part)] += 1;
+            }
+            for part in 0..p {
+                if !self.alive[sim.owner_of(part)] {
+                    let to = (0..p)
+                        .filter(|&w| self.alive[w])
+                        .min_by_key(|&w| (load[w], w))
+                        .expect("quorum/survivor guards keep at least one worker");
+                    load[to] += 1;
+                    sim.reassign(part, to);
+                }
             }
         }
 
@@ -453,6 +525,9 @@ impl FaultController {
                 sim.send(holder, w, bytes);
             }
         }
+        // Snapshots spilled to remote storage under memory pressure are
+        // pulled back as part of the same recovery barrier.
+        sim.mem_unspill();
         sim.superstep();
 
         self.stats.restored_steps += step - restore;
@@ -686,6 +761,58 @@ mod tests {
             .log
             .iter()
             .any(|(_, c)| matches!(c, Command::LoadPartition { part: 1 })));
+    }
+
+    #[test]
+    fn oom_kill_rehomes_to_least_memory_loaded_survivor() {
+        use crate::cluster::{MemLedger, MemPlan};
+        let plan = FaultPlan { checkpoint_every: 0, ..FaultPlan::default() };
+        let mut pm = pm();
+        let mut fc = FaultController::new(&plan, 4, &pm);
+        let mut sim = ClusterSim::new(4, CostModelConfig::default());
+        let mp = MemPlan { budget_mb: 2.0, ..MemPlan::default() };
+        sim.set_mem(MemLedger::with_partitions(
+            mp,
+            vec![800_000, 100_000, 300_000, 200_000],
+            vec![0, 0, 0, 0],
+        ));
+        advance(&mut pm);
+        // Worker 1 breaches its budget past remediation: the controller
+        // kills it through the scheduled-fault path.
+        assert_eq!(fc.oom_kill(1, 1, &mut sim, &mut pm).unwrap(), Some(0));
+        assert_eq!(fc.stats.failures, 1);
+        assert_eq!(fc.master().health_of(1), Health::Dead);
+        // The legacy compute-load rule would pick worker 0 (lowest rank,
+        // equal partition counts); the ledger-aware rule picks worker 3,
+        // the survivor with the fewest resident bytes.
+        assert_eq!(sim.owner_of(1), 3, "orphan goes to the least memory-loaded survivor");
+    }
+
+    #[test]
+    fn rehoming_without_a_fitting_survivor_is_a_typed_error() {
+        use crate::cluster::{MemLedger, MemPlan};
+        let plan = FaultPlan { checkpoint_every: 0, ..FaultPlan::default() };
+        let mut pm = pm();
+        let mut fc = FaultController::new(&plan, 3, &pm);
+        let mut sim = ClusterSim::new(3, CostModelConfig::default());
+        let mp = MemPlan { budget_mb: 1.0, ..MemPlan::default() };
+        sim.set_mem(MemLedger::with_partitions(
+            mp,
+            vec![900_000, 400_000, 900_000],
+            vec![0, 0, 0],
+        ));
+        advance(&mut pm);
+        let err = fc.oom_kill(1, 1, &mut sim, &mut pm).unwrap_err();
+        assert_eq!(
+            err,
+            FaultError::NoMemoryFit {
+                step: 1,
+                part: 1,
+                needed: 400_000,
+                headroom: (1u64 << 20) - 900_000,
+            }
+        );
+        assert!(err.to_string().contains("memory fit"), "error names the rule: {err}");
     }
 
     #[test]

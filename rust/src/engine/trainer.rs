@@ -2,11 +2,11 @@
 //! manager, tracks loss/accuracy, and reports the paper's metrics
 //! (modeled distributed time, per-phase breakdown, traffic, peak memory).
 
-use crate::cluster::ClusterSim;
+use crate::cluster::{ClusterSim, MemLedger};
 use crate::config::{ModelConfig, ModelKind, TrainConfig};
-use crate::engine::fault::FaultController;
+use crate::engine::fault::{FaultController, FaultError};
 use crate::graph::Graph;
-use crate::metrics::{CommStats, FaultStats, StageProfile};
+use crate::metrics::{CommStats, FaultStats, MemStats, StageProfile};
 use crate::nn::params::ParameterManager;
 use crate::nn::ModelParams;
 use crate::partition::{Edge1D, Partitioner};
@@ -95,6 +95,10 @@ pub struct TrainReport {
     /// Retry/timeout/backoff accounting — `Some` exactly when the run's
     /// [`crate::config::NetPlan`] was active.
     pub comm: Option<CommStats>,
+    /// Memory-pressure accounting (evictions, spills, deferrals, OOM
+    /// kills) — `Some` exactly when the run's
+    /// [`crate::config::MemPlan`] was active.
+    pub mem: Option<MemStats>,
     pub profile: StageProfile,
 }
 
@@ -124,6 +128,13 @@ impl<'a> Trainer<'a> {
         // inactive one is never installed (bit-identical legacy path).
         if cfg.net.is_active() {
             sim.set_net(cfg.net.clone());
+        }
+        // Likewise the memory ledger: an active plan registers every
+        // partition's static (topology + master features) and evictable
+        // (mirror features) bytes; an inactive plan is never installed.
+        if cfg.mem.is_active() {
+            let (stat, mirror) = dg.mem_footprint(g.feat_dim, g.edge_feat_dim);
+            sim.set_mem(MemLedger::with_partitions(cfg.mem.clone(), stat, mirror));
         }
         let backend: Box<dyn StageBackend> = if cfg.use_pjrt {
             let dir = std::path::Path::new("artifacts");
@@ -180,6 +191,12 @@ impl<'a> Trainer<'a> {
         } else {
             None
         };
+        // With checkpointing on, every worker also holds its latest
+        // parameter snapshot in memory — the ledger charges it, and may
+        // spill it to modeled remote storage under pressure.
+        if fault.is_some() {
+            self.sim.mem_set_snapshot_bytes(pm.state_bytes() as u64);
+        }
 
         let mut losses = Vec::with_capacity(cfg.epochs);
         let mut sim_fwd = 0.0f64;
@@ -199,6 +216,18 @@ impl<'a> Trainer<'a> {
             let plan = gen.next_plan(self.g, &self.dg);
             let version = pm.latest_version();
             let params = pm.fetch(version)?.clone();
+            // Memory ladder, front rungs: defer admission for one wait
+            // barrier when the projected peak would breach a budget, then
+            // re-fetch any evicted mirror blocks the batch touches. Both
+            // move only the modeled clock and traffic, never numerics.
+            if self.sim.mem().is_some() {
+                self.sim.mem_admit();
+                for q in 0..self.dg.p() {
+                    if plan.active_count[q] > 0 {
+                        self.sim.mem_touch_mirrors(q);
+                    }
+                }
+            }
             let res = ex.train_step(&params, &plan, &mut self.sim, self.backend.as_mut());
             peak_bytes = peak_bytes.max(res.peak_part_bytes);
             sim_fwd += res.t_forward;
@@ -231,6 +260,39 @@ impl<'a> Trainer<'a> {
                 // breach surfaces as a typed error, never a panic.
                 fc.after_update(&mut self.sim, &mut pm)?;
             }
+            // Memory ladder, terminal rungs: evict LRU mirrors, spill
+            // snapshots, and if a worker is *still* over budget, OOM-kill
+            // it through the fault path (restore → re-home → replay).
+            // With no controller to absorb the kill the breach is a typed
+            // error; for the last survivor training degrades over budget
+            // and counts a hard breach. Guarded so a shrinking survivor
+            // set cannot loop forever.
+            let mut guard = 0;
+            while let Some(b) = self.sim.mem_enforce(&res.peak_by_part) {
+                let step = pm.latest_version();
+                match fault.as_mut() {
+                    Some(fc) => match fc.oom_kill(step, b.worker, &mut self.sim, &mut pm)? {
+                        Some(_) => self.sim.mem_note_oom_kill(),
+                        None => {
+                            self.sim.mem_note_hard_breach();
+                            break;
+                        }
+                    },
+                    None => {
+                        return Err(FaultError::OutOfMemory {
+                            step,
+                            worker: b.worker,
+                            resident: b.resident,
+                            budget: b.budget,
+                        }
+                        .into())
+                    }
+                }
+                guard += 1;
+                if guard >= self.dg.p() {
+                    break;
+                }
+            }
         }
 
         let fault_stats = fault.map(|mut fc| {
@@ -262,6 +324,7 @@ impl<'a> Trainer<'a> {
             latest_param_l2: pm.fetch_latest().1.l2_norm(),
             fault: fault_stats,
             comm: cfg.net.is_active().then_some(self.sim.comm),
+            mem: cfg.mem.is_active().then(|| self.sim.mem_stats()),
             profile: ex.profile.clone(),
         })
     }

@@ -63,7 +63,7 @@ pub mod experiments;
 
 /// Commonly used types, re-exported for examples and downstream users.
 pub mod prelude {
-    pub use crate::cluster::NetPlan;
+    pub use crate::cluster::{MemPlan, NetPlan};
     pub use crate::config::{
         CostModelConfig, FaultPlan, ModelConfig, SchedulePolicy, StrategyKind, TrainConfig,
         UpdateMode,
@@ -71,7 +71,7 @@ pub mod prelude {
     pub use crate::coordinator::{Coordinator, PipelineReport};
     pub use crate::engine::fault::FaultError;
     pub use crate::engine::trainer::{TrainReport, Trainer};
-    pub use crate::metrics::{CommStats, FaultStats, StragglerStats};
+    pub use crate::metrics::{CommStats, FaultStats, MemStats, StragglerStats};
     pub use crate::graph::{Graph, GraphBuilder};
     pub use crate::nn::params::ParameterManager;
     pub use crate::partition::{PartitionPlan, Partitioner};

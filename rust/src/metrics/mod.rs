@@ -328,6 +328,62 @@ impl StragglerStats {
     }
 }
 
+/// Memory-pressure accounting for the per-worker memory ledger (see the
+/// memory-model section of the [`crate::cluster`] module docs): a
+/// [`crate::cluster::MemPlan`] gives every worker a byte budget, and a
+/// breach walks the degradation ladder — mirror eviction (re-fetched on
+/// next use), checkpoint spill to modeled remote storage, deferred batch
+/// admission, and finally an injected OOM-kill through the fault
+/// controller. Every rung moves only the modeled clock, traffic, and
+/// these counters; a budgeted run that completes without an OOM-kill is
+/// parameter-bitwise-identical to the unbudgeted run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemStats {
+    /// Largest per-worker resident footprint observed (bytes, after
+    /// remediation — what a real worker would actually have held).
+    pub peak_bytes: u64,
+    /// Mirror-feature blocks evicted to get back under budget.
+    pub evictions: u64,
+    /// Bytes re-fetched when an evicted mirror block was next used.
+    pub refetch_bytes: u64,
+    /// Checkpoint snapshots spilled to modeled remote storage.
+    pub spills: u64,
+    /// Snapshot bytes that left worker residency via spills.
+    pub spill_bytes: u64,
+    /// Steps whose admission was deferred because the projected peak would
+    /// have breached a worker's budget (one wait barrier each).
+    pub deferred_admissions: u64,
+    /// Workers OOM-killed after every remediation rung failed (each flows
+    /// into the fault controller's restore/re-home/replay path).
+    pub oom_kills: u64,
+    /// Breaches past all remediation where no kill was possible (last
+    /// survivor, already-dead worker): training degrades over budget
+    /// instead of dying, and each occurrence is this warning.
+    pub hard_breaches: u64,
+}
+
+impl MemStats {
+    /// Mean bytes re-fetched per eviction (0 when nothing was evicted).
+    pub fn refetch_per_eviction(&self) -> f64 {
+        if self.evictions == 0 {
+            0.0
+        } else {
+            self.refetch_bytes as f64 / self.evictions as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &MemStats) {
+        self.peak_bytes = self.peak_bytes.max(other.peak_bytes);
+        self.evictions += other.evictions;
+        self.refetch_bytes += other.refetch_bytes;
+        self.spills += other.spills;
+        self.spill_bytes += other.spill_bytes;
+        self.deferred_admissions += other.deferred_admissions;
+        self.oom_kills += other.oom_kills;
+        self.hard_breaches += other.hard_breaches;
+    }
+}
+
 /// Fault-tolerance accounting for checkpointed training (see
 /// [`crate::engine::fault::FaultController`]): checkpoints taken through
 /// the master's command log, failures injected, updates rolled back and
@@ -515,6 +571,33 @@ mod tests {
         assert_eq!((a.checkpoints, a.failures, a.restored_steps), (4, 3, 6));
         assert!((a.recovery_secs - 0.75).abs() < 1e-12);
         assert_eq!((a.rejoins, a.corrupt_skipped, a.cold_restarts), (2, 1, 1));
+    }
+
+    #[test]
+    fn mem_stats_rates_and_merge() {
+        let mut a = MemStats::default();
+        assert_eq!(a.refetch_per_eviction(), 0.0, "no evictions: rate is defined as 0");
+        a.peak_bytes = 1000;
+        a.evictions = 4;
+        a.refetch_bytes = 600;
+        a.spills = 1;
+        a.spill_bytes = 50;
+        assert!((a.refetch_per_eviction() - 150.0).abs() < 1e-12);
+        let b = MemStats {
+            peak_bytes: 800,
+            evictions: 2,
+            refetch_bytes: 100,
+            spills: 1,
+            spill_bytes: 50,
+            deferred_admissions: 3,
+            oom_kills: 1,
+            hard_breaches: 1,
+        };
+        a.merge(&b);
+        assert_eq!(a.peak_bytes, 1000, "peak merges by max, not sum");
+        assert_eq!((a.evictions, a.refetch_bytes), (6, 700));
+        assert_eq!((a.spills, a.spill_bytes), (2, 100));
+        assert_eq!((a.deferred_admissions, a.oom_kills, a.hard_breaches), (3, 1, 1));
     }
 
     #[test]

@@ -15,6 +15,25 @@
 //! ([`DistGraph::mirror_targets`] / [`DistGraph::master_of_mirror`] give
 //! the routes); the NN-TGAR engine in [`crate::tgar`] does the actual
 //! value/partial-sum movement through [`crate::cluster::Network`].
+//!
+//! # Memory model
+//!
+//! The per-worker memory ledger (see the memory section of the
+//! [`crate::cluster`] module docs) splits a partition's resident bytes in
+//! two. [`DistGraph::resident_bytes`] is the **static** component: the
+//! local CSR/CSC topology ([`PartitionView::topology_bytes`]) plus the
+//! master-node feature rows and edge-attribute rows — bytes that exist as
+//! long as the partition does and move with it when a failure re-homes it.
+//! [`DistGraph::mirror_feature_bytes`] is the **evictable** component: the
+//! synchronized mirror-feature rows, which the module docs above call out
+//! as held "only when synchronized" (the paper's memory optimization) —
+//! exactly why the ledger may drop a partition's whole mirror block under
+//! pressure and re-fetch it from the masters on next use. Simulation-side
+//! acceleration structures (`lid_dense`, `lid_of` — O(`g.n`) per partition
+//! on this single box, but sharded or hashed on a real cluster) are
+//! deliberately *not* counted: they model lookup speed, not worker
+//! residency. [`DistGraph::mem_footprint`] bundles both components per
+//! partition for ledger construction.
 
 pub mod frames;
 
@@ -91,6 +110,23 @@ impl PartitionView {
     pub fn in_edges(&self, lid: usize) -> impl Iterator<Item = (u32, u32)> + '_ {
         (self.csc_offsets[lid]..self.csc_offsets[lid + 1])
             .map(move |i| (self.csc_sources[i], self.csc_leids[i]))
+    }
+
+    /// Bytes of the partition-local CSR/CSC topology a worker holds for
+    /// this partition: node list, both offset arrays, edge endpoint /
+    /// id / weight arrays. Excludes `lid_of` and `lid_dense` (see the
+    /// module docs' memory section — simulation-side lookup structures,
+    /// not modeled worker residency).
+    pub fn topology_bytes(&self) -> u64 {
+        let u32s = self.nodes.len()
+            + self.csr_targets.len()
+            + self.csr_sources_by_edge.len()
+            + self.csc_sources.len()
+            + self.csc_leids.len()
+            + self.edge_gids.len();
+        let usizes = self.csr_offsets.len() + self.csc_offsets.len();
+        let f32s = self.edge_weights.len();
+        (u32s * 4 + usizes * 8 + f32s * 4) as u64
     }
 }
 
@@ -267,6 +303,32 @@ impl DistGraph {
     pub fn total_presences(&self) -> usize {
         self.parts.iter().map(|pv| pv.n_local()).sum()
     }
+
+    /// Static resident bytes of partition `part`: topology plus master
+    /// node-feature rows plus per-edge attribute rows (f32 each). The
+    /// non-evictable component of the memory ledger's registration.
+    pub fn resident_bytes(&self, part: usize, feat_dim: usize, edge_feat_dim: usize) -> u64 {
+        let pv = &self.parts[part];
+        pv.topology_bytes()
+            + (pv.n_masters * feat_dim * 4) as u64
+            + (pv.m_local() * edge_feat_dim * 4) as u64
+    }
+
+    /// Synchronized mirror-feature bytes of partition `part` — the
+    /// evictable component (mirrors hold state only when synchronized;
+    /// see the module docs' memory section).
+    pub fn mirror_feature_bytes(&self, part: usize, feat_dim: usize) -> u64 {
+        (self.parts[part].n_mirrors() * feat_dim * 4) as u64
+    }
+
+    /// `(static, mirror)` bytes per partition — the registration shape
+    /// [`crate::cluster::MemLedger::with_partitions`] takes.
+    pub fn mem_footprint(&self, feat_dim: usize, edge_feat_dim: usize) -> (Vec<u64>, Vec<u64>) {
+        let statics =
+            (0..self.p()).map(|q| self.resident_bytes(q, feat_dim, edge_feat_dim)).collect();
+        let mirrors = (0..self.p()).map(|q| self.mirror_feature_bytes(q, feat_dim)).collect();
+        (statics, mirrors)
+    }
 }
 
 #[cfg(test)]
@@ -403,6 +465,38 @@ mod tests {
             let mq = dg.master_part(v) as usize;
             assert_eq!(dg.master_lid(v), dg.parts[mq].lid_of[&v], "node {v}");
             assert!(dg.parts[mq].is_master(dg.master_lid(v)));
+        }
+    }
+
+    #[test]
+    fn byte_accounting_matches_array_lengths() {
+        let g = gen::citation_like("cora", 7);
+        let plan = VertexCut.partition(&g, 4);
+        let dg = DistGraph::build(&g, plan);
+        let (statics, mirrors) = dg.mem_footprint(g.feat_dim, g.edge_feat_dim);
+        assert_eq!(statics.len(), 4);
+        for q in 0..4 {
+            let pv = &dg.parts[q];
+            // Per edge: csr_targets, csr_sources_by_edge, csc_sources,
+            // csc_leids, edge_gids (u32) + edge_weights (f32) = 6 × 4 B;
+            // per node: the gid list (u32); two usize offset arrays.
+            let want_topo = (pv.n_local() + 6 * pv.m_local()) as u64 * 4
+                + 2 * (pv.n_local() as u64 + 1) * 8;
+            assert_eq!(pv.topology_bytes(), want_topo, "part {q}");
+            let want_static = want_topo + (pv.n_masters * g.feat_dim * 4) as u64;
+            assert_eq!(dg.resident_bytes(q, g.feat_dim, 0), want_static);
+            // Edge attributes ride the static component.
+            assert_eq!(
+                dg.resident_bytes(q, g.feat_dim, 5),
+                want_static + (pv.m_local() * 5 * 4) as u64
+            );
+            assert_eq!(
+                dg.mirror_feature_bytes(q, g.feat_dim),
+                (pv.n_mirrors() * g.feat_dim * 4) as u64
+            );
+            assert_eq!(statics[q], dg.resident_bytes(q, g.feat_dim, g.edge_feat_dim));
+            assert_eq!(mirrors[q], dg.mirror_feature_bytes(q, g.feat_dim));
+            assert!(statics[q] > 0);
         }
     }
 

@@ -53,9 +53,15 @@ pub struct StepResult {
     pub t_forward: f64,
     pub t_backward: f64,
     pub t_reduce: f64,
-    /// Peak live frame bytes on any partition during the step (the
-    /// paper's per-worker memory figure: 5–12 GB on Alipay).
+    /// Peak resident bytes on any partition during the step (the paper's
+    /// per-worker memory figure: 5–12 GB on Alipay): live frames at their
+    /// high-water mark *plus* the in-flight per-partition gradient buffer
+    /// *plus* the partition's storage (topology, features, mirrors).
     pub peak_part_bytes: usize,
+    /// Per-partition *dynamic* peak (live frames at high-water plus the
+    /// gradient buffer, storage excluded) — what the memory ledger
+    /// enforces on top of its own static/mirror registrations.
+    pub peak_by_part: Vec<usize>,
     /// Sum of per-partition gradients (the Reduce output).
     pub grads: ModelParams,
 }
@@ -725,9 +731,26 @@ impl<'a> Executor<'a> {
         let t0 = sim.clock;
         self.forward(params, plan, sim, backend);
         let t1 = sim.clock;
-        // Peak memory is right after the forward: every layer's frames live.
-        let peak = self.live_bytes_per_part().into_iter().max().unwrap_or(0);
         let mut grads: Vec<ModelParams> = (0..self.dg.p()).map(|_| params.zeros_like()).collect();
+        // Peak memory is right after the gradient buffers join the forward
+        // frames: every layer's frames live plus one ModelParams-sized
+        // buffer per partition. The ledger enforces this *dynamic* figure
+        // on top of its own static/mirror registrations; the reported
+        // `peak_part_bytes` additionally folds in the partition's storage
+        // (topology, master/edge features, synchronized mirrors) for the
+        // full resident per-worker number.
+        let grad_bytes = grads.first().map_or(0, ModelParams::bytes);
+        let peak_by_part: Vec<usize> = self
+            .live_bytes_per_part()
+            .into_iter()
+            .map(|live| live + grad_bytes)
+            .collect();
+        let peak = peak_by_part
+            .iter()
+            .enumerate()
+            .map(|(q, &dynamic)| dynamic + self.storage_bytes(q))
+            .max()
+            .unwrap_or(0);
         let loss = self.loss_stage(params, plan, sim, backend, &mut grads);
         self.backward(params, plan, sim, backend, &mut grads);
         let t2 = sim.clock;
@@ -740,6 +763,7 @@ impl<'a> Executor<'a> {
             t_backward: t2 - t1,
             t_reduce: t3 - t2,
             peak_part_bytes: peak,
+            peak_by_part,
             grads: total,
         }
     }
@@ -781,6 +805,14 @@ impl<'a> Executor<'a> {
     /// figure the paper reports: 5–12 GB per worker on Alipay).
     pub fn live_bytes_per_part(&self) -> Vec<usize> {
         self.frames.iter().map(Frame::live_bytes).collect()
+    }
+
+    /// Storage bytes resident for partition `q` throughout a step:
+    /// topology + master/edge features + synchronized mirror features
+    /// (see the [`crate::storage`] module docs' memory section).
+    pub fn storage_bytes(&self, q: usize) -> usize {
+        (self.dg.resident_bytes(q, self.g.feat_dim, self.g.edge_feat_dim)
+            + self.dg.mirror_feature_bytes(q, self.g.feat_dim)) as usize
     }
 
     /// Tensor-cache hit/miss counters (ablation reporting).
