@@ -25,6 +25,7 @@ use crate::util::rng::Rng;
 /// Configuration of the simulated DistDGL deployment.
 #[derive(Clone, Debug)]
 pub struct DistDglConfig {
+    /// Machines in the deployment.
     pub machines: usize,
     /// Cores per machine (the paper's testbed: 64).
     pub cores_per_machine: usize,
@@ -32,7 +33,9 @@ pub struct DistDglConfig {
     pub cores_per_trainer: usize,
     /// Overall batch size (kept constant across trainer counts).
     pub overall_batch: usize,
+    /// Hidden dimension of the simulated model.
     pub hidden: usize,
+    /// Cost-model constants.
     pub cost: CostModelConfig,
     /// Server-side buffer: total node-pulls a machine's server can have in
     /// flight before connections start failing ("socket errors").
@@ -56,7 +59,9 @@ impl Default for DistDglConfig {
 /// Result of one simulated DistDGL mini-batch.
 #[derive(Clone, Debug)]
 pub struct DistDglStep {
+    /// Trainer processes that ran.
     pub trainers: usize,
+    /// GCN layers.
     pub layers: usize,
     /// Seconds per mini-batch, or None on socket error.
     pub secs: Option<f64>,

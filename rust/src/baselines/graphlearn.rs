@@ -24,8 +24,11 @@ use crate::tgar::ActivePlan;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
+/// Configuration of the simulated GraphLearn deployment.
 pub struct GraphLearnConfig {
+    /// Overall batch size (constant across worker counts).
     pub overall_batch: usize,
+    /// Hidden dimension of the simulated model.
     pub hidden: usize,
     /// Thread-pool width per graph server (GraphLearn default: 32).
     pub pool_threads: usize,
@@ -33,6 +36,7 @@ pub struct GraphLearnConfig {
     pub max_workers: usize,
     /// Per-query node budget before the sampling channel overflows.
     pub socket_node_budget: f64,
+    /// Cost-model constants.
     pub cost: CostModelConfig,
 }
 
@@ -50,9 +54,13 @@ impl Default for GraphLearnConfig {
 }
 
 #[derive(Clone, Debug)]
+/// Result of one simulated GraphLearn mini-batch.
 pub struct GraphLearnStep {
+    /// Sampling workers that ran.
     pub workers: usize,
+    /// GCN layers.
     pub layers: usize,
+    /// Per-layer neighbor fanout.
     pub fanout: [usize; 4],
     /// Seconds per mini-batch; None = socket error.
     pub secs: Option<f64>,
@@ -158,6 +166,7 @@ pub fn step_time(
 
 /// The paper's two sampling settings (§5.3.3).
 pub const SETTING_SMALL: [usize; 4] = [10, 5, 3, 3];
+/// The paper's large sampling setting.
 pub const SETTING_LARGE: [usize; 4] = [25, 10, 10, 2];
 
 #[cfg(test)]

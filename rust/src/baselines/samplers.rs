@@ -22,8 +22,11 @@ use anyhow::Result;
 
 /// A named baseline configuration.
 pub struct Baseline {
+    /// Display name.
     pub name: &'static str,
+    /// Training strategy it runs.
     pub strategy: StrategyKind,
+    /// Sampling configuration it runs.
     pub sampling: SamplingConfig,
     /// Workers to run it on (1 = single-machine tensor framework).
     pub workers: usize,

@@ -21,24 +21,30 @@ pub enum Command {
     Checkpoint { step: u64 },
     /// Roll back to the checkpoint at `step` (failure recovery).
     Restore { step: u64 },
+    /// Stop the worker.
     Shutdown,
 }
 
 /// Worker health as seen by the master.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Health {
+    /// Responding to heartbeats.
     Alive,
     /// Missed `n` heartbeats.
     Suspect(u32),
+    /// Declared failed.
     Dead,
 }
 
 /// The master process: command fan-out + health tracking + checkpoints.
 pub struct Master {
+    /// Worker count.
     pub p: usize,
+    /// Ordered command log: `(rank, command)` per directive.
     pub log: Vec<(usize, Command)>,
     health: Vec<Health>,
     heartbeat_misses: Vec<u32>,
+    /// Steps at which checkpoints were persisted, ascending.
     pub checkpoints: Vec<u64>,
     /// Threshold of missed heartbeats before a worker is declared dead.
     pub max_misses: u32,
@@ -49,6 +55,7 @@ pub struct Master {
 }
 
 impl Master {
+    /// A master over `p` healthy workers.
     pub fn new(p: usize) -> Master {
         Master {
             p,
@@ -162,10 +169,12 @@ impl Master {
         }
     }
 
+    /// Workers not declared dead.
     pub fn live_workers(&self) -> usize {
         self.health.iter().filter(|&&h| h != Health::Dead).count()
     }
 
+    /// Record that a checkpoint was persisted at `step`.
     pub fn record_checkpoint(&mut self, step: u64) {
         self.checkpoints.push(step);
     }

@@ -91,29 +91,57 @@
 //! without an OOM-kill is parameter-bitwise-identical to the unbudgeted
 //! run. With no ledger installed every `mem_*` method is a no-op and the
 //! clock path is bit-identical to the pre-ledger baselines.
+//!
+//! # Wire model: payload codecs and host topology
+//!
+//! An installed [`WirePlan`] (see [`ClusterSim::set_wire`] and the
+//! [`wire`] module docs) adds the communication-volume layer. Payloads
+//! routed through [`ClusterSim::send_coded`] ship at their codec's
+//! compressed width (f16/int8, top-k for gradients), with
+//! [`CommStats::payload_bytes`](crate::metrics::CommStats::payload_bytes)
+//! and [`CommStats::saved_bytes`](crate::metrics::CommStats::saved_bytes)
+//! recording the compression. Workers group into hosts by contiguous
+//! blocks; every send is classified intra- vs inter-host and the
+//! superstep's communication term charges the two classes against the
+//! plan's distinct bandwidth/latency terms (falling back to the flat
+//! cost model where unset). The `exact` codec with hierarchy moves only
+//! the clock, the traffic classification and the stats — parameters
+//! stay bitwise identical; lossy codecs are the one deliberate
+//! exception to the "numerics never move" rule and are deterministic
+//! per seed. With no plan installed, every path compiles down to the
+//! original flat arithmetic, bit-for-bit.
 
 pub mod master;
 pub mod mem;
 pub mod net;
+pub mod wire;
 
 pub use mem::{EvictPolicy, MemBreach, MemLedger, MemPlan};
 pub use net::NetPlan;
+pub use wire::{Codec, WirePlan};
 
 use crate::config::CostModelConfig;
 use crate::metrics::{measured, CommStats, Ledger, MemStats};
 
-/// Per-worker accumulators for the current superstep.
+/// Per-worker accumulators for the current superstep. Without a
+/// [`WirePlan`] all traffic lands in the `_out` (inter/flat) fields;
+/// with one, sends between same-host workers accumulate in the
+/// `_intra` fields and are charged against the intra-host link terms.
 #[derive(Clone, Copy, Debug, Default)]
 struct WorkerAcc {
     flops: u64,
     bytes_out: u64,
     msgs_out: u64,
+    bytes_intra: u64,
+    msgs_intra: u64,
 }
 
 /// The discrete-event cluster simulator.
 #[derive(Debug)]
 pub struct ClusterSim {
+    /// Cost-model constants.
     pub cfg: CostModelConfig,
+    /// Logical worker count.
     pub p: usize,
     acc: Vec<WorkerAcc>,
     /// Partition → physical worker. Identity until a failure re-homes a
@@ -124,9 +152,13 @@ pub struct ClusterSim {
     owner: Vec<usize>,
     /// Modeled wall-clock, seconds.
     pub clock: f64,
+    /// Supersteps executed.
     pub supersteps: u64,
+    /// Total FLOPs charged.
     pub total_flops: u64,
+    /// Total bytes shipped (encoded bytes when a wire codec is on).
     pub total_bytes: u64,
+    /// Total messages sent.
     pub total_msgs: u64,
     /// OS threads [`ClusterSim::exec_batch`] spreads logical workers over
     /// (1 = serial). Defaults to the machine's available parallelism.
@@ -143,9 +175,14 @@ pub struct ClusterSim {
     /// Per-worker memory ledger, if one is installed (see the module
     /// docs' memory section). `None` is the bit-identical unbudgeted path.
     mem: Option<MemLedger>,
+    /// Wire model (payload codecs + host topology), if one is installed
+    /// (see the module docs' wire section). `None` is the bit-identical
+    /// flat/exact path.
+    wire: Option<WirePlan>,
 }
 
 impl ClusterSim {
+    /// A fresh simulator of `p` workers under cost model `cfg`.
     pub fn new(p: usize, cfg: CostModelConfig) -> ClusterSim {
         ClusterSim {
             cfg,
@@ -163,6 +200,7 @@ impl ClusterSim {
             net_seq: 0,
             comm: CommStats::default(),
             mem: None,
+            wire: None,
         }
     }
 
@@ -194,6 +232,18 @@ impl ClusterSim {
     /// The installed memory ledger, if any.
     pub fn mem(&self) -> Option<&MemLedger> {
         self.mem.as_ref()
+    }
+
+    /// Install a wire plan (module docs, wire section). Inactive plans
+    /// are discarded, keeping the simulator on the flat/exact path that
+    /// is bit-identical to the golden baselines.
+    pub fn set_wire(&mut self, plan: WirePlan) {
+        self.wire = if plan.is_active() { Some(plan) } else { None };
+    }
+
+    /// The installed wire plan, if any.
+    pub fn wire(&self) -> Option<&WirePlan> {
+        self.wire.as_ref()
     }
 
     /// Pressure counters of the installed ledger (default when none).
@@ -504,12 +554,39 @@ impl ClusterSim {
         }
         let copies = 1 + retries;
         if from < self.p {
-            self.acc[from].bytes_out += bytes * copies;
-            self.acc[from].msgs_out += copies;
+            // With a wire plan, same-host traffic charges the intra-host
+            // link terms; without one (or across hosts) the flat/inter
+            // fields keep the original arithmetic bit-for-bit.
+            if self.wire.as_ref().is_some_and(|w| w.same_host(from, to, self.p)) {
+                self.acc[from].bytes_intra += bytes * copies;
+                self.acc[from].msgs_intra += copies;
+            } else {
+                self.acc[from].bytes_out += bytes * copies;
+                self.acc[from].msgs_out += copies;
+            }
         }
         let _ = to;
         self.total_bytes += bytes * copies;
         self.total_msgs += copies;
+    }
+
+    /// Send a payload whose raw f32 width is `raw` modeled bytes but
+    /// whose on-wire width under the installed [`WirePlan`]'s codec is
+    /// `enc`. Without a wire plan the raw bytes ship untouched and no
+    /// codec accounting is recorded; with one, `enc` bytes ship and
+    /// [`CommStats::payload_bytes`](crate::metrics::CommStats::payload_bytes)
+    /// / [`CommStats::saved_bytes`](crate::metrics::CommStats::saved_bytes)
+    /// record the compression (local sends stay free and uncounted).
+    pub fn send_coded(&mut self, from: usize, to: usize, raw: u64, enc: u64) {
+        if self.wire.is_none() {
+            self.send(from, to, raw);
+            return;
+        }
+        if self.owner_of(from) != self.owner_of(to) {
+            self.comm.payload_bytes += enc;
+            self.comm.saved_bytes += raw.saturating_sub(enc);
+        }
+        self.send(from, to, enc);
     }
 
     /// Close the current superstep: advance the modeled clock by the
@@ -527,8 +604,7 @@ impl ClusterSim {
             None => {
                 for a in &self.acc {
                     let compute = a.flops as f64 / c.worker_flops;
-                    let comm =
-                        a.bytes_out as f64 / c.bandwidth + c.latency * a.msgs_out as f64;
+                    let comm = comm_secs(a, c, self.wire.as_ref());
                     let t = compute + (1.0 - c.overlap) * comm;
                     if t > t_max {
                         t_max = t;
@@ -539,8 +615,7 @@ impl ClusterSim {
                 let spike = net.spike_factor(self.supersteps);
                 for (w, a) in self.acc.iter().enumerate() {
                     let compute = a.flops as f64 / c.worker_flops;
-                    let comm =
-                        a.bytes_out as f64 / c.bandwidth + c.latency * a.msgs_out as f64;
+                    let comm = comm_secs(a, c, self.wire.as_ref());
                     let t = net.slow_factor(w) * (compute + (1.0 - c.overlap) * comm * spike)
                         + self.wait[w];
                     if t > t_max {
@@ -601,6 +676,23 @@ impl ClusterSim {
 /// Default OS-thread count for [`ClusterSim::exec_batch`].
 fn default_exec_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One worker's superstep communication seconds. Without a wire plan
+/// this is **textually** the original flat expression (and `_intra`
+/// accumulators are provably zero), so the legacy clock is bit-for-bit
+/// unchanged; with one, intra- and inter-host traffic charge their own
+/// bandwidth/latency terms.
+fn comm_secs(a: &WorkerAcc, c: &CostModelConfig, wire: Option<&WirePlan>) -> f64 {
+    match wire {
+        None => a.bytes_out as f64 / c.bandwidth + c.latency * a.msgs_out as f64,
+        Some(w) => {
+            a.bytes_out as f64 / w.eff_bw_inter(c.bandwidth)
+                + w.eff_lat_inter(c.latency) * a.msgs_out as f64
+                + a.bytes_intra as f64 / w.eff_bw_intra(c.bandwidth)
+                + w.eff_lat_intra(c.latency) * a.msgs_intra as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -993,5 +1085,61 @@ mod tests {
         assert_eq!(sim.mem_stats(), MemStats::default());
         assert!(sim.mem().is_some(), "the ledger itself survives a reset");
         assert_eq!(sim.mem().unwrap().static_of(0), 900_000);
+    }
+
+    #[test]
+    fn inactive_wire_plan_is_never_installed() {
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.set_wire(WirePlan::default());
+        assert!(sim.wire().is_none());
+        // send_coded without a plan ships raw bytes, uncounted.
+        sim.send_coded(0, 1, 1000, 500);
+        assert_eq!(sim.comm, CommStats::default());
+        assert_eq!(sim.total_bytes, 1000);
+    }
+
+    #[test]
+    fn hierarchical_links_charge_distinct_terms() {
+        let run = |wire: Option<WirePlan>| {
+            let mut sim = ClusterSim::new(4, cfg());
+            if let Some(w) = wire {
+                sim.set_wire(w);
+                assert!(sim.wire().is_some());
+            }
+            sim.send(0, 1, 1_000_000); // hosts=2 ⇒ same host (intra)
+            sim.send(0, 2, 1_000_000); // cross-host (inter)
+            sim.superstep()
+        };
+        let flat = run(None);
+        // Default link terms: hierarchy re-associates the same arithmetic.
+        let neutral = run(Some(WirePlan { hosts: 2, ..WirePlan::default() }));
+        assert!((neutral - flat).abs() < 1e-12, "neutral {neutral} flat {flat}");
+        // A 10× slower inter-host link slows only the cross-host send.
+        let slow_inter =
+            run(Some(WirePlan { hosts: 2, bw_inter: 1e8, ..WirePlan::default() }));
+        let want = flat + 0.5 * (1_000_000.0 / 1e8 - 1_000_000.0 / 1e9);
+        assert!((slow_inter - want).abs() < 1e-9, "slow {slow_inter} want {want}");
+        // A faster intra-host link speeds the co-located send up.
+        let fast_intra =
+            run(Some(WirePlan { hosts: 2, bw_intra: 1e10, ..WirePlan::default() }));
+        assert!(fast_intra < flat);
+    }
+
+    #[test]
+    fn send_coded_records_compression() {
+        let mut sim = ClusterSim::new(2, cfg());
+        sim.set_wire(WirePlan { codec: Codec::F16, ..WirePlan::default() });
+        sim.send_coded(0, 1, 1000, 500);
+        assert_eq!(sim.comm.payload_bytes, 500);
+        assert_eq!(sim.comm.saved_bytes, 500);
+        assert_eq!(sim.total_bytes, 500, "only compressed bytes ship");
+        // Local sends stay free and uncounted.
+        sim.send_coded(1, 1, 1000, 500);
+        assert_eq!(sim.comm.payload_bytes, 500);
+        assert_eq!(sim.total_bytes, 500);
+        // The plan survives a reset; the counters do not.
+        sim.reset();
+        assert_eq!(sim.comm, CommStats::default());
+        assert!(sim.wire().is_some());
     }
 }

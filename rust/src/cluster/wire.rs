@@ -1,0 +1,587 @@
+//! Wire-level communication model: payload codecs and a hierarchical
+//! aggregation topology (ROADMAP item 4; the paper's 1,024-worker
+//! scaling levers).
+//!
+//! GraphTheta's hybrid parallelism ships two kinds of payload every
+//! NN-TGAR superstep: embedding rows along the master↔mirror routes
+//! (forward value sync, Sum combine, and their backward mirror images)
+//! and whole gradient tensors in the end-of-step Reduce. Both are plain
+//! f32 today; at 1,024 workers the paper keeps communication cheap with
+//! the two levers DistDGL and the distributed-GNN survey also single
+//! out: **communication-volume reduction** (lossy codecs plus
+//! sparsification) and **topology-aware aggregation** (a host-local
+//! reduction before the cross-host hop). A [`WirePlan`] models both:
+//!
+//! * **Codecs** ([`Codec`]): `f16` halves payload width (IEEE 754
+//!   binary16, hand-rolled round-to-nearest-even — no external crates),
+//!   `int8` quarters it (per-row max-abs scale, one f32 of overhead per
+//!   row). Every lossy stream carries a per-slot **error-feedback**
+//!   accumulator: the quantization residual `e ← (x + e) − Q(x + e)` is
+//!   added back into the next payload, so the bias of repeated rounding
+//!   cancels instead of compounding (the residual stays bounded by the
+//!   quantization step — `rust/tests/comm_compression.rs` pins this).
+//! * **Top-k sparsification** ([`WirePlan::topk`]): the gradient stream
+//!   additionally keeps only the `⌈topk · n⌉` largest-magnitude entries
+//!   per tensor, with a deterministic tie-break on index; dropped mass
+//!   lands in the error-feedback residual and is flushed once it grows
+//!   large enough to be selected. Transmitted indices cost 4 modeled
+//!   bytes each, so only small fractions actually save traffic.
+//! * **Hierarchy** ([`WirePlan::hosts`]): workers group into hosts by
+//!   contiguous blocks (`host_of(w) = w · hosts / p`, so neighbouring
+//!   partitions co-locate), every send is classified intra-host vs
+//!   inter-host, and the modeled clock charges the two classes against
+//!   distinct bandwidth/latency terms. The gradient Reduce becomes
+//!   hierarchical: host members reduce onto their host leader (and
+//!   receive the broadcast back) over the fast intra links, and only
+//!   the leaders run the cross-host ring. This is the cost surface that
+//!   rewards co-placement under
+//!   [`SchedulePolicy::LocalityAware`](crate::config::SchedulePolicy::LocalityAware).
+//!
+//! **Invariant, in the style of the net/mem plans:** `comm_codec =
+//! exact` (with or without hierarchy) never touches a numeric value —
+//! only the modeled clock, the traffic classification and the
+//! [`CommStats`](crate::metrics::CommStats) byte accounting move, and
+//! parameters stay bitwise identical to the golden baselines
+//! (`rust/tests/comm_compression.rs`). Lossy codecs are the only thing
+//! allowed to move numerics, and they are deterministic per seed. An
+//! inactive plan is **never installed**
+//! ([`ClusterSim::set_wire`](crate::cluster::ClusterSim::set_wire)
+//! discards it), keeping the default path bit-identical.
+
+use crate::config::ConfigError;
+
+/// Payload codec for route and gradient traffic (`comm_codec` kv key).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Codec {
+    /// Full-width f32 payloads — numerics untouched (the default).
+    #[default]
+    Exact,
+    /// IEEE 754 binary16 with round-to-nearest-even: 2 bytes per value.
+    F16,
+    /// Linear 8-bit quantization against a per-row max-abs scale:
+    /// 1 byte per value plus one f32 scale per row.
+    Int8,
+}
+
+impl Codec {
+    /// Parse the `comm_codec` kv value.
+    pub fn parse(v: &str) -> Result<Codec, ConfigError> {
+        match v {
+            "exact" => Ok(Codec::Exact),
+            "f16" => Ok(Codec::F16),
+            "int8" => Ok(Codec::Int8),
+            _ => Err(ConfigError::bad("comm_codec", v, "exact | f16 | int8")),
+        }
+    }
+
+    /// The kv spelling of this codec.
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Exact => "exact",
+            Codec::F16 => "f16",
+            Codec::Int8 => "int8",
+        }
+    }
+
+    /// Modeled bytes per transmitted value.
+    pub fn value_bytes(self) -> u64 {
+        match self {
+            Codec::Exact => 4,
+            Codec::F16 => 2,
+            Codec::Int8 => 1,
+        }
+    }
+}
+
+/// Communication-layer plan: codec, gradient sparsification and the
+/// host topology of the modeled cluster. Inactive (default) plans are
+/// never installed, so the legacy flat/exact path stays bit-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WirePlan {
+    /// Payload codec applied to route and gradient traffic.
+    pub codec: Codec,
+    /// Gradient top-k fraction in `(0, 1]`: keep the `⌈topk · n⌉`
+    /// largest-magnitude entries per tensor. `0` disables
+    /// sparsification. Applies to the gradient stream only (route
+    /// payloads are dense by construction). Note top-k is lossy even
+    /// under the `exact` codec.
+    pub topk: f64,
+    /// Number of hosts the `p` workers are grouped into (contiguous
+    /// blocks). `1` keeps the flat topology.
+    pub hosts: usize,
+    /// Intra-host bandwidth in bytes/s; `0` inherits the cost model's
+    /// flat [`bandwidth`](crate::config::CostModelConfig::bandwidth).
+    pub bw_intra: f64,
+    /// Inter-host bandwidth in bytes/s; `0` inherits the cost model's
+    /// flat bandwidth.
+    pub bw_inter: f64,
+    /// Intra-host per-message latency in seconds; `0` inherits the
+    /// cost model's flat [`latency`](crate::config::CostModelConfig::latency).
+    pub lat_intra: f64,
+    /// Inter-host per-message latency in seconds; `0` inherits the
+    /// cost model's flat latency.
+    pub lat_inter: f64,
+}
+
+impl Default for WirePlan {
+    fn default() -> WirePlan {
+        WirePlan {
+            codec: Codec::Exact,
+            topk: 0.0,
+            hosts: 1,
+            bw_intra: 0.0,
+            bw_inter: 0.0,
+            lat_intra: 0.0,
+            lat_inter: 0.0,
+        }
+    }
+}
+
+impl WirePlan {
+    /// Whether any knob departs from the do-nothing default. Inactive
+    /// plans are never installed into a [`ClusterSim`](crate::cluster::ClusterSim).
+    pub fn is_active(&self) -> bool {
+        self.codec != Codec::Exact
+            || self.topk > 0.0
+            || self.hosts > 1
+            || self.bw_intra > 0.0
+            || self.bw_inter > 0.0
+            || self.lat_intra > 0.0
+            || self.lat_inter > 0.0
+    }
+
+    /// Whether the gradient stream is numerically lossy (codec or
+    /// top-k). Decides whether the parameter manager carries
+    /// error-feedback state.
+    pub fn grad_lossy(&self) -> bool {
+        self.codec != Codec::Exact || self.topk > 0.0
+    }
+
+    /// Whether route payloads are numerically lossy (codec only —
+    /// top-k never applies to routes).
+    pub fn route_lossy(&self) -> bool {
+        self.codec != Codec::Exact
+    }
+
+    /// Host of worker `w` out of `p`: contiguous blocks, so
+    /// neighbouring partitions co-locate (`w · hosts / p`).
+    pub fn host_of(&self, w: usize, p: usize) -> usize {
+        let h = self.hosts.min(p.max(1));
+        if h <= 1 {
+            return 0;
+        }
+        w.min(p - 1) * h / p
+    }
+
+    /// Whether workers `a` and `b` share a host (out-of-range workers
+    /// classify as inter-host).
+    pub fn same_host(&self, a: usize, b: usize, p: usize) -> bool {
+        a < p && b < p && self.host_of(a, p) == self.host_of(b, p)
+    }
+
+    /// Leader (smallest member) of host `h`: `⌈h · p / hosts⌉`.
+    pub fn host_leader(&self, h: usize, p: usize) -> usize {
+        let hosts = self.hosts.min(p.max(1)).max(1);
+        (h * p).div_ceil(hosts)
+    }
+
+    /// Leader of the host worker `w` belongs to.
+    pub fn leader_of(&self, w: usize, p: usize) -> usize {
+        self.host_leader(self.host_of(w, p), p)
+    }
+
+    /// Effective intra-host bandwidth given the cost model's flat term.
+    pub fn eff_bw_intra(&self, flat: f64) -> f64 {
+        if self.bw_intra > 0.0 {
+            self.bw_intra
+        } else {
+            flat
+        }
+    }
+
+    /// Effective inter-host bandwidth given the cost model's flat term.
+    pub fn eff_bw_inter(&self, flat: f64) -> f64 {
+        if self.bw_inter > 0.0 {
+            self.bw_inter
+        } else {
+            flat
+        }
+    }
+
+    /// Effective intra-host latency given the cost model's flat term.
+    pub fn eff_lat_intra(&self, flat: f64) -> f64 {
+        if self.lat_intra > 0.0 {
+            self.lat_intra
+        } else {
+            flat
+        }
+    }
+
+    /// Effective inter-host latency given the cost model's flat term.
+    pub fn eff_lat_inter(&self, flat: f64) -> f64 {
+        if self.lat_inter > 0.0 {
+            self.lat_inter
+        } else {
+            flat
+        }
+    }
+
+    /// Modeled bytes of a route payload of `rows × d` f32 values under
+    /// this plan's codec (int8 pays one f32 scale per row).
+    pub fn route_bytes(&self, rows: u64, d: u64) -> u64 {
+        match self.codec {
+            Codec::Exact => rows * d * 4,
+            Codec::F16 => rows * d * 2,
+            Codec::Int8 => rows * (d + 4),
+        }
+    }
+
+    /// Modeled bytes of a gradient payload of `numel` values: codec
+    /// width per kept entry, plus a 4-byte index per entry when top-k
+    /// drops any, plus the int8 scale word.
+    pub fn grad_bytes(&self, numel: u64) -> u64 {
+        let kept = if self.topk > 0.0 {
+            ((self.topk * numel as f64).ceil() as u64).clamp(1, numel.max(1))
+        } else {
+            numel
+        };
+        let idx = if kept < numel { 4 } else { 0 };
+        let scale = if self.codec == Codec::Int8 { 4 } else { 0 };
+        kept * (self.codec.value_bytes() + idx) + scale
+    }
+
+    /// Quantize one routed row in place with error feedback: the row
+    /// becomes `Q(row + ef)` and `ef` becomes the new residual.
+    /// A no-op under the exact codec.
+    pub fn codec_row_ef(&self, row: &mut [f32], ef: &mut [f32]) {
+        debug_assert_eq!(row.len(), ef.len());
+        match self.codec {
+            Codec::Exact => {}
+            Codec::F16 => {
+                for (v, e) in row.iter_mut().zip(ef.iter_mut()) {
+                    let y = *v + *e;
+                    let q = f16_round_trip(y);
+                    *e = y - q;
+                    *v = q;
+                }
+            }
+            Codec::Int8 => {
+                let mut max = 0.0f32;
+                for (v, e) in row.iter().zip(ef.iter()) {
+                    max = max.max((v + e).abs());
+                }
+                if max == 0.0 {
+                    for (v, e) in row.iter_mut().zip(ef.iter_mut()) {
+                        *v = 0.0;
+                        *e = 0.0;
+                    }
+                    return;
+                }
+                let s = max / 127.0;
+                for (v, e) in row.iter_mut().zip(ef.iter_mut()) {
+                    let y = *v + *e;
+                    let q = (y / s).round().clamp(-127.0, 127.0) * s;
+                    *e = y - q;
+                    *v = q;
+                }
+            }
+        }
+    }
+
+    /// Quantize one gradient tensor in place: top-k sparsification
+    /// first (largest magnitudes survive, deterministic index
+    /// tie-break), then the codec's quantize–dequantize. Error feedback
+    /// is the caller's job (the parameter manager folds the residual
+    /// into the *next* payload, not this one).
+    pub fn quantize_slice(&self, x: &mut [f32]) {
+        if self.topk > 0.0 && !x.is_empty() {
+            let k = ((self.topk * x.len() as f64).ceil() as usize).clamp(1, x.len());
+            if k < x.len() {
+                for &i in &topk_indices(x, k)[k..] {
+                    x[i as usize] = 0.0;
+                }
+            }
+        }
+        match self.codec {
+            Codec::Exact => {}
+            Codec::F16 => {
+                for v in x.iter_mut() {
+                    *v = f16_round_trip(*v);
+                }
+            }
+            Codec::Int8 => int8_round_trip(x),
+        }
+    }
+}
+
+/// Indices of `x` ordered by descending magnitude with ascending-index
+/// tie-break — the first `k` are the deterministic top-k selection.
+/// (Returns the full permutation so callers can also zero the tail.)
+pub fn topk_indices(x: &[f32], _k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        x[b as usize].abs().total_cmp(&x[a as usize].abs()).then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Quantize–dequantize a slice through the int8 codec: linear against
+/// one max-abs/127 scale for the whole slice.
+pub fn int8_round_trip(x: &mut [f32]) {
+    let max = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if max == 0.0 {
+        return;
+    }
+    let s = max / 127.0;
+    for v in x.iter_mut() {
+        *v = (*v / s).round().clamp(-127.0, 127.0) * s;
+    }
+}
+
+/// Convert an f32 to IEEE 754 binary16 bits, round-to-nearest-even
+/// (overflow saturates to ±inf, NaN payload truncates to a quiet NaN).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN: keep a quiet-NaN marker when any payload bit is set.
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e <= 0 {
+        // Subnormal half (or zero). Below 2^-25 everything rounds to 0.
+        if e < -10 {
+            return sign;
+        }
+        let man = man | 0x0080_0000; // implicit bit
+        let shift = (14 - e) as u32; // 14..=24
+        let half_man = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && (half_man & 1) == 1) {
+            half_man + 1
+        } else {
+            half_man
+        };
+        return sign | rounded as u16;
+    }
+    let half_man = (man >> 13) as u16;
+    let rem = man & 0x1fff;
+    let h = sign | ((e as u16) << 10) | half_man;
+    if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+        // Round up; a mantissa carry correctly rolls into the exponent
+        // (1.111… → next power of two, possibly ±inf).
+        h + 1
+    } else {
+        h
+    }
+}
+
+/// Convert IEEE 754 binary16 bits back to an f32 (exact — every half
+/// value is representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // Subnormal: man × 2^-24 (exact in f32).
+        let v = man as f32 * (1.0 / (1u32 << 24) as f32);
+        return if sign != 0 { -v } else { v };
+    }
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// One f32 → f16 → f32 quantize–dequantize round trip.
+pub fn f16_round_trip(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+impl WirePlan {
+    /// Serialize back to kv pairs, emitting only non-default keys so
+    /// `parse → to_kv → parse` is the identity.
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let d = WirePlan::default();
+        let mut kv = Vec::new();
+        if self.codec != d.codec {
+            kv.push(("comm_codec".to_string(), self.codec.name().to_string()));
+        }
+        if self.topk != d.topk {
+            kv.push(("comm_topk".to_string(), self.topk.to_string()));
+        }
+        if self.hosts != d.hosts {
+            kv.push(("comm_hosts".to_string(), self.hosts.to_string()));
+        }
+        if self.bw_intra != d.bw_intra {
+            kv.push(("comm_bw_intra".to_string(), self.bw_intra.to_string()));
+        }
+        if self.bw_inter != d.bw_inter {
+            kv.push(("comm_bw_inter".to_string(), self.bw_inter.to_string()));
+        }
+        if self.lat_intra != d.lat_intra {
+            kv.push(("comm_lat_intra".to_string(), self.lat_intra.to_string()));
+        }
+        if self.lat_inter != d.lat_inter {
+            kv.push(("comm_lat_inter".to_string(), self.lat_inter.to_string()));
+        }
+        kv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inactive_and_kv_empty() {
+        let w = WirePlan::default();
+        assert!(!w.is_active());
+        assert!(!w.grad_lossy());
+        assert!(!w.route_lossy());
+        assert!(w.to_kv().is_empty());
+    }
+
+    #[test]
+    fn f16_known_values_round_trip_exactly() {
+        // Values exactly representable in binary16 survive the trip.
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, -2.0, 1024.0, 65504.0, -65504.0, 0.25, 3.5] {
+            assert_eq!(f16_round_trip(v), v, "{v}");
+        }
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        // Overflow saturates to ±inf.
+        assert!(f16_round_trip(1.0e6).is_infinite());
+        assert!(f16_round_trip(-1.0e6).is_infinite() && f16_round_trip(-1.0e6) < 0.0);
+        // Tiny values flush toward zero through the subnormal range.
+        assert_eq!(f16_round_trip(1.0e-9), 0.0);
+        // Smallest half subnormal is 2^-24.
+        let tiny = f16_bits_to_f32(0x0001);
+        assert_eq!(tiny, 2.0f32.powi(-24));
+    }
+
+    #[test]
+    fn f16_error_is_within_half_ulp() {
+        for i in 0..2000 {
+            let x = (i as f32 - 1000.0) * 0.37 + 0.001 * i as f32;
+            let q = f16_round_trip(x);
+            let bound = (x.abs() * (1.0 / 1024.0)).max(2.0f32.powi(-24));
+            assert!((q - x).abs() <= bound, "{x} -> {q}");
+        }
+    }
+
+    #[test]
+    fn int8_error_is_within_half_step() {
+        let mut x: Vec<f32> = (0..257).map(|i| (i as f32 * 0.3371).sin() * 8.0).collect();
+        let orig = x.clone();
+        let max = orig.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        int8_round_trip(&mut x);
+        let step = max / 127.0;
+        for (q, v) in x.iter().zip(&orig) {
+            assert!((q - v).abs() <= 0.5 * step + 1e-6, "{v} -> {q}");
+        }
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes_with_index_tiebreak() {
+        let x = [0.5f32, -3.0, 2.0, 2.0, -2.0, 0.1];
+        let idx = topk_indices(&x, 3);
+        // Magnitude order: 3.0 (i1), then the 2.0 triple tie-broken by
+        // index (i2, i3, i4), then 0.5 (i0), 0.1 (i5).
+        assert_eq!(idx, vec![1, 2, 3, 4, 0, 5]);
+        let w = WirePlan { topk: 0.5, ..WirePlan::default() };
+        let mut y = x;
+        w.quantize_slice(&mut y);
+        assert_eq!(y, [0.0, -3.0, 2.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn hosts_partition_workers_into_contiguous_blocks() {
+        let w = WirePlan { hosts: 2, ..WirePlan::default() };
+        let p = 4;
+        assert_eq!((0..p).map(|i| w.host_of(i, p)).collect::<Vec<_>>(), vec![0, 0, 1, 1]);
+        assert_eq!(w.host_leader(0, p), 0);
+        assert_eq!(w.host_leader(1, p), 2);
+        assert!(w.same_host(0, 1, p) && !w.same_host(1, 2, p));
+        // Every worker's leader shares its host and is its smallest member.
+        let w6 = WirePlan { hosts: 4, ..WirePlan::default() };
+        for v in 0..6 {
+            let l = w6.leader_of(v, 6);
+            assert_eq!(w6.host_of(l, 6), w6.host_of(v, 6));
+            assert!(l <= v);
+        }
+        // Flat plan: everyone on host 0.
+        let flat = WirePlan::default();
+        assert!(flat.same_host(0, 3, 4));
+    }
+
+    #[test]
+    fn payload_byte_model() {
+        let exact = WirePlan::default();
+        assert_eq!(exact.route_bytes(10, 16), 640);
+        assert_eq!(exact.grad_bytes(100), 400);
+        let f16 = WirePlan { codec: Codec::F16, ..WirePlan::default() };
+        assert_eq!(f16.route_bytes(10, 16), 320);
+        assert_eq!(f16.grad_bytes(100), 200);
+        let i8p = WirePlan { codec: Codec::Int8, ..WirePlan::default() };
+        assert_eq!(i8p.route_bytes(10, 16), 200);
+        assert_eq!(i8p.grad_bytes(100), 104);
+        // Top-k: kept values + 4-byte indices.
+        let tk = WirePlan { topk: 0.1, ..WirePlan::default() };
+        assert_eq!(tk.grad_bytes(100), 10 * (4 + 4));
+        let tkf = WirePlan { codec: Codec::F16, topk: 0.1, ..WirePlan::default() };
+        assert_eq!(tkf.grad_bytes(100), 10 * (2 + 4));
+    }
+
+    #[test]
+    fn codec_parse_accepts_names_and_rejects_junk() {
+        assert_eq!(Codec::parse("exact").unwrap(), Codec::Exact);
+        assert_eq!(Codec::parse("f16").unwrap(), Codec::F16);
+        assert_eq!(Codec::parse("int8").unwrap(), Codec::Int8);
+        let err = Codec::parse("zstd").unwrap_err().to_string();
+        assert!(err.contains("comm_codec"), "{err}");
+    }
+
+    #[test]
+    fn error_feedback_residual_stays_bounded() {
+        // Repeatedly quantizing a constant row: the residual must stay
+        // on the order of one quantization step, never drift.
+        for codec in [Codec::F16, Codec::Int8] {
+            let w = WirePlan { codec, ..WirePlan::default() };
+            let base: Vec<f32> = (0..32).map(|i| ((i as f32) * 0.77).cos()).collect();
+            let mut ef = vec![0.0f32; 32];
+            let mut sent = vec![0.0f32; 32];
+            let mut acc = vec![0.0f64; 32];
+            for step in 1..=200 {
+                sent.copy_from_slice(&base);
+                w.codec_row_ef(&mut sent, &mut ef);
+                for (a, s) in acc.iter_mut().zip(&sent) {
+                    *a += *s as f64;
+                }
+                // Error feedback: the *mean* transmitted value converges
+                // to the true value even though each payload is coarse.
+                if step == 200 {
+                    for (a, b) in acc.iter().zip(&base) {
+                        assert!((a / 200.0 - *b as f64).abs() < 1e-3, "{codec:?}");
+                    }
+                }
+            }
+            let bound = match codec {
+                Codec::F16 => 1.0 / 512.0,
+                _ => 2.0 / 127.0,
+            };
+            for e in &ef {
+                assert!(e.abs() <= bound, "{codec:?} residual {e}");
+            }
+        }
+    }
+}

@@ -7,6 +7,7 @@
 
 pub use crate::cluster::mem::{EvictPolicy, MemPlan};
 pub use crate::cluster::net::NetPlan;
+pub use crate::cluster::wire::{Codec, WirePlan};
 use std::collections::BTreeMap;
 
 /// A typed kv-config value failure: which key, what value arrived, what
@@ -16,12 +17,16 @@ use std::collections::BTreeMap;
 /// [`config_from_kv`] boundary.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ConfigError {
+    /// The kv-config key whose value was rejected.
     pub key: &'static str,
+    /// The offending value as it appeared in the config.
     pub value: String,
+    /// Human-readable description of the accepted shape.
     pub expected: String,
 }
 
 impl ConfigError {
+    /// Build a typed error for `key` holding `value` (expected shape given).
     pub fn bad(key: &'static str, value: &str, expected: &str) -> ConfigError {
         ConfigError { key, value: value.to_string(), expected: expected.to_string() }
     }
@@ -50,12 +55,18 @@ pub enum ModelKind {
     GatE,
 }
 
+/// Model architecture: encoder kind, dimensions and loss shape.
 #[derive(Clone, Debug)]
 pub struct ModelConfig {
+    /// Which GNN encoder to train.
     pub kind: ModelKind,
+    /// Input feature dimension (taken from the dataset).
     pub in_dim: usize,
+    /// Hidden embedding dimension of every encoder layer.
     pub hidden: usize,
+    /// Output dimension (classes; 1 for binary tasks).
     pub out_dim: usize,
+    /// Number of encoder layers (propagation hops).
     pub layers: usize,
     /// Edge-attribute dim (GAT-E only; 0 disables the edge path).
     pub edge_dim: usize,
@@ -66,6 +77,7 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// A GCN encoder with the given shape.
     pub fn gcn(in_dim: usize, hidden: usize, classes: usize, layers: usize) -> ModelConfig {
         ModelConfig {
             kind: ModelKind::Gcn,
@@ -79,6 +91,7 @@ impl ModelConfig {
         }
     }
 
+    /// A GAT-E encoder with the given shape and edge-attribute dim.
     pub fn gat_e(
         in_dim: usize,
         hidden: usize,
@@ -98,6 +111,7 @@ impl ModelConfig {
         }
     }
 
+    /// Switch to a binary task: BCE loss over a single logit.
     pub fn binary(mut self) -> ModelConfig {
         self.binary = true;
         self.out_dim = 1;
@@ -156,6 +170,7 @@ pub enum StrategyKind {
 }
 
 impl StrategyKind {
+    /// The strategy's kv-config / reporting name.
     pub fn name(&self) -> &'static str {
         match self {
             StrategyKind::GlobalBatch => "global-batch",
@@ -164,19 +179,25 @@ impl StrategyKind {
         }
     }
 
+    /// Shorthand for [`StrategyKind::MiniBatch`].
     pub fn mini(batch_frac: f64) -> StrategyKind {
         StrategyKind::MiniBatch { batch_frac }
     }
 
+    /// Shorthand for [`StrategyKind::ClusterBatch`].
     pub fn cluster(cluster_frac: f64, boundary_hops: usize) -> StrategyKind {
         StrategyKind::ClusterBatch { cluster_frac, boundary_hops }
     }
 }
 
+/// Which optimizer updates the parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OptimizerKind {
+    /// Plain SGD (optionally with weight decay folded into the gradient).
     Sgd,
+    /// Adam with bias correction.
     Adam,
+    /// AdamW: decoupled weight decay.
     AdamW,
 }
 
@@ -184,12 +205,16 @@ pub enum OptimizerKind {
 /// update operations either in a synchronous or an asynchronous mode").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum UpdateMode {
+    /// All workers' gradients must arrive before a version is published.
     Synchronous,
     /// Bounded-staleness asynchronous updates: a gradient computed against
     /// a parameter version lagging the latest by more than `max_staleness`
     /// is rejected at push time and the step is replayed against fresh
     /// parameters (see [`crate::coordinator::Coordinator::run_async`]).
-    Asynchronous { max_staleness: usize },
+    Asynchronous {
+        /// Maximum updates a pushed gradient's version may lag behind.
+        max_staleness: usize,
+    },
 }
 
 /// Placement policy for the pipelined coordinator's phase-task chains
@@ -208,6 +233,7 @@ pub enum SchedulePolicy {
 }
 
 impl SchedulePolicy {
+    /// The policy's kv-config / reporting name.
     pub fn name(&self) -> &'static str {
         match self {
             SchedulePolicy::RoundRobin => "round-robin",
@@ -368,23 +394,36 @@ pub enum SamplingConfig {
     /// GraphTheta's default: no sampling.
     None,
     /// Cap fan-out per hop (GraphSAGE / GraphLearn style). Up to 4 hops.
-    Neighbor { fanout: [usize; 4] },
+    Neighbor {
+        /// Per-hop neighbor cap; `usize::MAX` leaves a hop uncapped.
+        fanout: [usize; 4],
+    },
 }
 
 /// The full training-run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Model architecture.
     pub model: ModelConfig,
+    /// Batch-construction strategy (§2.3).
     pub strategy: StrategyKind,
+    /// Neighbor sampling applied during subgraph construction.
     pub sampling: SamplingConfig,
+    /// Parameter-update optimizer.
     pub optimizer: OptimizerKind,
+    /// Synchronous or bounded-staleness asynchronous updates.
     pub update_mode: UpdateMode,
+    /// Learning rate.
     pub lr: f32,
+    /// Weight decay (L2 for SGD/Adam, decoupled for AdamW).
     pub weight_decay: f32,
     /// Epochs for global-batch; steps otherwise.
     pub epochs: usize,
+    /// Evaluate every this many steps (0 disables interim evals).
     pub eval_every: usize,
+    /// Seed for parameter init and every seeded subsystem.
     pub seed: u64,
+    /// The simulated cluster's cost model.
     pub cost: CostModelConfig,
     /// Execute stage operators through PJRT artifacts instead of native.
     pub use_pjrt: bool,
@@ -415,14 +454,22 @@ pub struct TrainConfig {
     /// A budgeted run that completes moves only the modeled clock,
     /// traffic and [`crate::metrics::MemStats`], never the numerics.
     pub mem: MemPlan,
+    /// Communication wire model: payload codecs, gradient top-k and the
+    /// host topology for hierarchical reduction (inactive by default —
+    /// see [`WirePlan`]). `comm_codec = exact` moves only the modeled
+    /// clock and traffic; lossy codecs are deterministic per seed.
+    pub wire: WirePlan,
 }
 
 impl TrainConfig {
+    /// Start building a config (only `model` is required).
     pub fn builder() -> TrainConfigBuilder {
         TrainConfigBuilder::default()
     }
 }
 
+/// Builder for [`TrainConfig`]; every unset knob takes its documented
+/// default in [`TrainConfigBuilder::build`].
 #[derive(Default)]
 pub struct TrainConfigBuilder {
     model: Option<ModelConfig>,
@@ -444,86 +491,112 @@ pub struct TrainConfigBuilder {
     fault: Option<FaultPlan>,
     net: Option<NetPlan>,
     mem: Option<MemPlan>,
+    wire: Option<WirePlan>,
 }
 
 impl TrainConfigBuilder {
+    /// Set the model architecture (required).
     pub fn model(mut self, m: ModelConfig) -> Self {
         self.model = Some(m);
         self
     }
+    /// Set the batch-construction strategy.
     pub fn strategy(mut self, s: StrategyKind) -> Self {
         self.strategy = Some(s);
         self
     }
+    /// Set neighbor sampling.
     pub fn sampling(mut self, s: SamplingConfig) -> Self {
         self.sampling = Some(s);
         self
     }
+    /// Set the optimizer.
     pub fn optimizer(mut self, o: OptimizerKind) -> Self {
         self.optimizer = Some(o);
         self
     }
+    /// Set the parameter-update mode.
     pub fn update_mode(mut self, u: UpdateMode) -> Self {
         self.update_mode = Some(u);
         self
     }
+    /// Set the learning rate.
     pub fn lr(mut self, lr: f32) -> Self {
         self.lr = Some(lr);
         self
     }
+    /// Set the weight decay.
     pub fn weight_decay(mut self, wd: f32) -> Self {
         self.weight_decay = Some(wd);
         self
     }
+    /// Set epochs (global-batch) / steps (other strategies).
     pub fn epochs(mut self, e: usize) -> Self {
         self.epochs = Some(e);
         self
     }
+    /// Set the interim-evaluation period.
     pub fn eval_every(mut self, e: usize) -> Self {
         self.eval_every = Some(e);
         self
     }
+    /// Set the run seed.
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = Some(s);
         self
     }
+    /// Set the cluster cost model.
     pub fn cost(mut self, c: CostModelConfig) -> Self {
         self.cost = Some(c);
         self
     }
+    /// Execute stage operators through PJRT artifacts.
     pub fn use_pjrt(mut self, b: bool) -> Self {
         self.use_pjrt = b;
         self
     }
+    /// Set the superstep-runner OS-thread count.
     pub fn threads(mut self, t: usize) -> Self {
         self.threads = Some(t);
         self
     }
+    /// Set the pipelined-coordinator width.
     pub fn pipeline_width(mut self, w: usize) -> Self {
         self.pipeline_width = Some(w);
         self
     }
+    /// Set the gradient-accumulation window.
     pub fn accum_window(mut self, a: usize) -> Self {
         self.accum_window = Some(a);
         self
     }
+    /// Set the chain-placement policy.
     pub fn schedule_policy(mut self, s: SchedulePolicy) -> Self {
         self.schedule_policy = Some(s);
         self
     }
+    /// Install a fault-tolerance plan.
     pub fn fault(mut self, f: FaultPlan) -> Self {
         self.fault = Some(f);
         self
     }
+    /// Install an unreliable-network plan.
     pub fn net(mut self, n: NetPlan) -> Self {
         self.net = Some(n);
         self
     }
+    /// Install a memory-budget plan.
     pub fn mem(mut self, m: MemPlan) -> Self {
         self.mem = Some(m);
         self
     }
+    /// Install a communication wire plan.
+    pub fn wire(mut self, w: WirePlan) -> Self {
+        self.wire = Some(w);
+        self
+    }
 
+    /// Finalize, filling every unset knob with its default.
     pub fn build(self) -> TrainConfig {
         TrainConfig {
             model: self.model.expect("model config required"),
@@ -545,6 +618,7 @@ impl TrainConfigBuilder {
             fault: self.fault.unwrap_or_default(),
             net: self.net.unwrap_or_default(),
             mem: self.mem.unwrap_or_default(),
+            wire: self.wire.unwrap_or_default(),
         }
     }
 }
@@ -624,7 +698,9 @@ pub fn config_from_kv(
         "quorum", "rejoin_at", "corrupt_at", "suspect_at", "net_seed", "net_loss",
         "net_timeout", "net_backoff_base", "net_backoff_cap", "net_retries", "net_slowdown",
         "net_spikes", "net_straggler_factor", "mem_seed", "mem_budget_mb",
-        "mem_budget_overrides", "mem_spike_windows", "mem_evict_policy",
+        "mem_budget_overrides", "mem_spike_windows", "mem_evict_policy", "comm_codec",
+        "comm_topk", "comm_hosts", "comm_bw_intra", "comm_bw_inter", "comm_lat_intra",
+        "comm_lat_inter",
     ];
     for k in kv.keys() {
         if !known.contains(&k.as_str()) {
@@ -752,6 +828,45 @@ pub fn config_from_kv(
         )
         .into());
     }
+    let wd = WirePlan::default();
+    let wire = WirePlan {
+        codec: match kv.get("comm_codec") {
+            Some(s) => Codec::parse(s)?,
+            None => wd.codec,
+        },
+        topk: get_f("comm_topk", wd.topk)?,
+        hosts: get_u("comm_hosts", wd.hosts)?,
+        bw_intra: get_f("comm_bw_intra", wd.bw_intra)?,
+        bw_inter: get_f("comm_bw_inter", wd.bw_inter)?,
+        lat_intra: get_f("comm_lat_intra", wd.lat_intra)?,
+        lat_inter: get_f("comm_lat_inter", wd.lat_inter)?,
+    };
+    if !(0.0..=1.0).contains(&wire.topk) {
+        return Err(ConfigError::bad(
+            "comm_topk",
+            &wire.topk.to_string(),
+            "kept fraction in [0, 1] (0 disables sparsification)",
+        )
+        .into());
+    }
+    if wire.hosts == 0 {
+        return Err(ConfigError::bad("comm_hosts", "0", "host count ≥ 1").into());
+    }
+    for (key, v) in [
+        ("comm_bw_intra", wire.bw_intra),
+        ("comm_bw_inter", wire.bw_inter),
+        ("comm_lat_intra", wire.lat_intra),
+        ("comm_lat_inter", wire.lat_inter),
+    ] {
+        if !v.is_finite() || v < 0.0 {
+            return Err(ConfigError::bad(
+                key,
+                &v.to_string(),
+                "finite value ≥ 0 (0 inherits the flat cost model)",
+            )
+            .into());
+        }
+    }
     Ok(b
         .optimizer(opt)
         .update_mode(update_mode)
@@ -759,6 +874,7 @@ pub fn config_from_kv(
         .fault(fault)
         .net(net)
         .mem(mem)
+        .wire(wire)
         .lr(get_f("lr", 0.01)? as f32)
         .weight_decay(get_f("weight_decay", 5e-4)? as f32)
         .epochs(get_u("epochs", 100)?)
@@ -876,23 +992,63 @@ mod tests {
                     net_retries = 7\nnet_slowdown = 1:2.5,3:1.5\nnet_spikes = 2:6:3.5\n\
                     net_straggler_factor = 1.75\nmem_seed = 13\nmem_budget_mb = 1.5\n\
                     mem_budget_overrides = 1:0.75,3:2.5\nmem_spike_windows = 2:6:1.5\n\
-                    mem_evict_policy = none\n";
+                    mem_evict_policy = none\ncomm_codec = int8\ncomm_topk = 0.25\n\
+                    comm_hosts = 4\ncomm_bw_intra = 2000000000\ncomm_bw_inter = 100000000\n\
+                    comm_lat_intra = 0.000001\ncomm_lat_inter = 0.0005\n";
         let c = config_from_kv(&parse_kv(text).unwrap(), 8, 2, 0).unwrap();
         let mut emitted = String::new();
-        for (k, v) in c.fault.to_kv().into_iter().chain(c.net.to_kv()).chain(c.mem.to_kv()) {
+        for (k, v) in c
+            .fault
+            .to_kv()
+            .into_iter()
+            .chain(c.net.to_kv())
+            .chain(c.mem.to_kv())
+            .chain(c.wire.to_kv())
+        {
             emitted.push_str(&format!("{k} = {v}\n"));
         }
         let c2 = config_from_kv(&parse_kv(&emitted).unwrap(), 8, 2, 0).unwrap();
         assert_eq!(c.fault, c2.fault);
         assert_eq!(c.net, c2.net);
         assert_eq!(c.mem, c2.mem);
+        assert_eq!(c.wire, c2.wire);
         assert_eq!(c.mem.budget_mb, 1.5);
         assert_eq!(c.mem.overrides, vec![(1, 0.75), (3, 2.5)]);
         assert_eq!(c.mem.evict, EvictPolicy::None);
+        assert_eq!(c.wire.codec, Codec::Int8);
+        assert_eq!(c.wire.topk, 0.25);
+        assert_eq!(c.wire.hosts, 4);
         // Default plans emit nothing at all.
         assert!(FaultPlan::default().to_kv().is_empty());
         assert!(NetPlan::default().to_kv().is_empty());
         assert!(MemPlan::default().to_kv().is_empty());
+        assert!(WirePlan::default().to_kv().is_empty());
+    }
+
+    #[test]
+    fn wire_plan_via_kv_with_typed_errors() {
+        let c = config_from_kv(&BTreeMap::new(), 8, 2, 0).unwrap();
+        assert!(!c.wire.is_active(), "the wire model is off by default");
+        let kv = parse_kv("comm_codec = f16\ncomm_hosts = 2\ncomm_bw_inter = 100000000\n")
+            .unwrap();
+        let c = config_from_kv(&kv, 8, 2, 0).unwrap();
+        assert!(c.wire.is_active());
+        assert_eq!(c.wire.codec, Codec::F16);
+        assert_eq!(c.wire.hosts, 2);
+        assert_eq!(c.wire.bw_inter, 1e8);
+        // Every malformed value fails loudly, with the key named.
+        for (bad, key) in [
+            ("comm_codec = f8\n", "comm_codec"),
+            ("comm_topk = 1.5\n", "comm_topk"),
+            ("comm_topk = -0.1\n", "comm_topk"),
+            ("comm_hosts = 0\n", "comm_hosts"),
+            ("comm_bw_intra = -1\n", "comm_bw_intra"),
+            ("comm_bw_inter = fast\n", "comm_bw_inter"),
+            ("comm_lat_inter = -0.5\n", "comm_lat_inter"),
+        ] {
+            let err = config_from_kv(&parse_kv(bad).unwrap(), 8, 2, 0).unwrap_err();
+            assert!(err.contains(key), "error {err:?} must name {key}");
+        }
     }
 
     #[test]

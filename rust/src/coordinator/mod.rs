@@ -176,8 +176,11 @@ use std::sync::Arc;
 /// telemetry.
 #[derive(Clone, Debug)]
 pub struct PipelineReport {
+    /// The sequential-compatible training report (overlapped clock).
     pub train: TrainReport,
+    /// Concurrent subgraph trainings in flight (W).
     pub pipeline_width: usize,
+    /// Gradient-accumulation window (A).
     pub accum_window: usize,
     /// Admission rounds executed (`⌈steps / width⌉`); 0 in async mode,
     /// whose sliding window has no rounds.
@@ -192,6 +195,7 @@ pub struct PipelineReport {
     /// (rejected pushes are not applied, so async mode keeps this within
     /// the configured bound).
     pub max_staleness: u64,
+    /// Mean staleness over all applied gradient pushes.
     pub mean_staleness: f64,
     /// Chain placement policy the scheduler used.
     pub policy: SchedulePolicy,
@@ -220,6 +224,7 @@ pub struct Coordinator<'a> {
 }
 
 impl<'a> Coordinator<'a> {
+    /// Build a coordinator over an already-partitioned graph.
     pub fn new(g: &'a Graph, dg: &'a DistGraph, cfg: TrainConfig) -> Coordinator<'a> {
         Coordinator { g, dg, cfg }
     }
@@ -252,6 +257,12 @@ impl<'a> Coordinator<'a> {
             let (stat, mirror) = self.dg.mem_footprint(self.g.feat_dim, self.g.edge_feat_dim);
             sim.set_mem(MemLedger::with_partitions(self.cfg.mem.clone(), stat, mirror));
         }
+        // And the wire model (payload codecs, top-k sparsification, host
+        // topology for hierarchical reduction); an inactive plan is never
+        // installed.
+        if self.cfg.wire.is_active() {
+            sim.set_wire(self.cfg.wire.clone());
+        }
         match self.cfg.update_mode {
             UpdateMode::Synchronous => self.run_sync(sim, backend),
             UpdateMode::Asynchronous { .. } => self.run_async(sim, backend),
@@ -278,6 +289,7 @@ impl<'a> Coordinator<'a> {
             cfg.weight_decay,
             cfg.update_mode,
         );
+        pm.set_wire(&cfg.wire);
         let mut gen = BatchGenerator::new(
             self.g,
             self.dg,
@@ -539,7 +551,7 @@ impl<'a> Coordinator<'a> {
             peak_part_bytes: peak_bytes,
             latest_param_l2,
             fault: fault_stats,
-            comm: cfg.net.is_active().then_some(sim.comm),
+            comm: (cfg.net.is_active() || cfg.wire.is_active()).then_some(sim.comm),
             mem: cfg.mem.is_active().then(|| sim.mem_stats()),
             profile: ex.profile.clone(),
         };
@@ -595,6 +607,7 @@ impl<'a> Coordinator<'a> {
             cfg.weight_decay,
             cfg.update_mode,
         );
+        pm.set_wire(&cfg.wire);
         let mut gen = BatchGenerator::new(
             self.g,
             self.dg,
@@ -858,7 +871,7 @@ impl<'a> Coordinator<'a> {
             peak_part_bytes: peak_bytes,
             latest_param_l2,
             fault: fault_stats,
-            comm: cfg.net.is_active().then_some(sim.comm),
+            comm: (cfg.net.is_active() || cfg.wire.is_active()).then_some(sim.comm),
             mem: cfg.mem.is_active().then(|| sim.mem_stats()),
             profile: ex.profile.clone(),
         };

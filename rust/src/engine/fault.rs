@@ -167,6 +167,7 @@ pub struct FaultController {
     /// Open recovery window: (failure step to regain, clock mark at the
     /// failure).
     recovering: Option<(u64, f64)>,
+    /// Checkpoint/failure/recovery counters for reports.
     pub stats: FaultStats,
 }
 

@@ -13,7 +13,9 @@ use crate::util::rng::Rng;
 
 /// A logical view over the shared distributed graph.
 pub struct GraphView<'a> {
+    /// The global graph.
     pub g: &'a Graph,
+    /// Its partitioned storage.
     pub dg: &'a DistGraph,
     /// The parameter version this view's task pinned (multi-version
     /// training: concurrent tasks may pin different versions).
@@ -23,6 +25,7 @@ pub struct GraphView<'a> {
 }
 
 impl<'a> GraphView<'a> {
+    /// A view pinning `param_version` for task `id`.
     pub fn new(g: &'a Graph, dg: &'a DistGraph, id: u64, param_version: u64) -> GraphView<'a> {
         GraphView { g, dg, id, param_version }
     }

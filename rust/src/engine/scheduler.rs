@@ -38,6 +38,7 @@
 /// A schedulable unit of work.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Task {
+    /// Task identity (chain id ≪ 8 | phase).
     pub id: u64,
     /// Cost estimate (e.g. active-edge count of the subgraph slice).
     pub cost: u64,
@@ -55,6 +56,7 @@ pub struct Schedule {
 }
 
 impl Schedule {
+    /// Latest per-worker finish time.
     pub fn makespan(&self) -> u64 {
         self.finish.iter().copied().max().unwrap_or(0)
     }

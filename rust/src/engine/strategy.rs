@@ -87,6 +87,8 @@ struct Clusters {
 }
 
 impl BatchGenerator {
+    /// Build the plan generator for a strategy (plans for global/cluster
+    /// batches are cached; mini-batches are sampled per step).
     pub fn new(
         g: &Graph,
         dg: &DistGraph,

@@ -65,22 +65,30 @@ pub(crate) fn test_metrics(g: &Graph, model: &ModelConfig, logits: &Tensor) -> (
 /// Outcome of a training run.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
+    /// One training loss per applied update.
     pub losses: Vec<f32>,
+    /// Applied update count the run was configured for.
     pub steps: usize,
     /// Test accuracy of the best-validation model (or the final model when
     /// the dataset has no validation split, as on Amazon/Alipay).
     pub test_accuracy: f64,
+    /// Best interim validation accuracy seen.
     pub best_val_accuracy: f64,
-    /// Binary metrics (Alipay task); 0 when multi-class.
+    /// Binary F1 (Alipay task); 0 when multi-class.
     pub f1: f64,
+    /// Binary AUC (Alipay task); 0 when multi-class.
     pub auc: f64,
-    /// Modeled distributed seconds, split by phase.
+    /// Modeled distributed seconds in forward passes.
     pub sim_forward: f64,
+    /// Modeled distributed seconds in backward passes.
     pub sim_backward: f64,
+    /// Total modeled distributed seconds.
     pub sim_total: f64,
     /// Real single-core wall seconds.
     pub wall_secs: f64,
+    /// Total bytes shipped through the modeled network.
     pub total_bytes: u64,
+    /// Total FLOPs charged to the modeled workers.
     pub total_flops: u64,
     /// Peak live frame bytes over any partition (per-worker memory proxy).
     pub peak_part_bytes: usize,
@@ -92,21 +100,27 @@ pub struct TrainReport {
     /// Checkpoint/failure/recovery accounting — `Some` exactly when the
     /// run's [`crate::config::FaultPlan`] was active.
     pub fault: Option<FaultStats>,
-    /// Retry/timeout/backoff accounting — `Some` exactly when the run's
-    /// [`crate::config::NetPlan`] was active.
+    /// Retry/timeout/backoff and payload/saved-bytes accounting — `Some`
+    /// exactly when the run's [`crate::config::NetPlan`] or
+    /// [`crate::config::WirePlan`] was active.
     pub comm: Option<CommStats>,
     /// Memory-pressure accounting (evictions, spills, deferrals, OOM
     /// kills) — `Some` exactly when the run's
     /// [`crate::config::MemPlan`] was active.
     pub mem: Option<MemStats>,
+    /// Wall-clock seconds per stage (ablation reporting).
     pub profile: StageProfile,
 }
 
 /// High-level trainer over one graph.
 pub struct Trainer<'a> {
+    /// The graph being trained on.
     pub g: &'a Graph,
+    /// The run configuration.
     pub cfg: TrainConfig,
+    /// The partitioned view of `g`.
     pub dg: DistGraph,
+    /// The simulated cluster the run executes on.
     pub sim: ClusterSim,
     backend: Box<dyn StageBackend>,
 }
@@ -135,6 +149,12 @@ impl<'a> Trainer<'a> {
         if cfg.mem.is_active() {
             let (stat, mirror) = dg.mem_footprint(g.feat_dim, g.edge_feat_dim);
             sim.set_mem(MemLedger::with_partitions(cfg.mem.clone(), stat, mirror));
+        }
+        // And the wire model (payload codecs, top-k, host topology): an
+        // inactive plan is never installed, keeping the legacy cost path
+        // byte-identical.
+        if cfg.wire.is_active() {
+            sim.set_wire(cfg.wire.clone());
         }
         let backend: Box<dyn StageBackend> = if cfg.use_pjrt {
             let dir = std::path::Path::new("artifacts");
@@ -167,6 +187,7 @@ impl<'a> Trainer<'a> {
             cfg.weight_decay,
             cfg.update_mode,
         );
+        pm.set_wire(&cfg.wire);
         let mut gen = BatchGenerator::new(
             self.g,
             &self.dg,
@@ -323,7 +344,7 @@ impl<'a> Trainer<'a> {
             peak_part_bytes: peak_bytes,
             latest_param_l2: pm.fetch_latest().1.l2_norm(),
             fault: fault_stats,
-            comm: cfg.net.is_active().then_some(self.sim.comm),
+            comm: (cfg.net.is_active() || cfg.wire.is_active()).then_some(self.sim.comm),
             mem: cfg.mem.is_active().then(|| self.sim.mem_stats()),
             profile: ex.profile.clone(),
         })
@@ -390,13 +411,21 @@ impl<'a> Trainer<'a> {
 /// Timing-only result for scalability sweeps.
 #[derive(Clone, Debug)]
 pub struct TimingReport {
+    /// Applied update count.
     pub steps: usize,
+    /// Modeled distributed seconds in forward passes.
     pub sim_forward: f64,
+    /// Modeled distributed seconds in backward passes.
     pub sim_backward: f64,
+    /// Modeled distributed seconds in gradient reduction.
     pub sim_reduce: f64,
+    /// Total modeled distributed seconds.
     pub sim_total: f64,
+    /// Total bytes shipped through the modeled network.
     pub total_bytes: u64,
+    /// Total FLOPs charged to the modeled workers.
     pub total_flops: u64,
+    /// Wall-clock seconds per stage (ablation reporting).
     pub profile: StageProfile,
 }
 

@@ -9,6 +9,7 @@ use crate::metrics::markdown_table;
 use crate::partition::{Edge1D, Partitioner, VertexCut};
 use crate::storage::DistGraph;
 
+/// Render the Figure 10 table (`fast` shrinks the sweep for CI).
 pub fn run(fast: bool) -> String {
     let g = gen::amazon_like();
     // Enough workers that hub nodes matter for balance (m/p comparable to

@@ -9,6 +9,7 @@ use crate::metrics::markdown_table;
 
 use super::table4::alipay_cost;
 
+/// Render the Figure 8 table (`fast` shrinks the sweep for CI).
 pub fn run(fast: bool) -> String {
     let (n, steps) = if fast { (3000, 2) } else { (12_000, 4) };
     let workers = if fast { vec![64usize, 128, 256] } else { vec![256usize, 512, 1024] };

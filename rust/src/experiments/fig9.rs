@@ -55,6 +55,7 @@ fn scaling_table(
     (markdown_table(&href, &rows), secs_all)
 }
 
+/// Render the Figure 9a table (`fast` shrinks the sweep for CI).
 pub fn run_9a(fast: bool) -> String {
     let g = gen::reddit_like();
     let workers: &[usize] = if fast { &[8, 16, 32] } else { &[8, 16, 32, 64, 128] };
@@ -65,6 +66,7 @@ pub fn run_9a(fast: bool) -> String {
     )
 }
 
+/// Render the Figure 9b table (`fast` shrinks the sweep for CI).
 pub fn run_9b(fast: bool) -> String {
     let g = gen::reddit_like();
     let layers_list: &[usize] = if fast { &[2, 3] } else { &[2, 3, 4, 5] };
@@ -110,6 +112,7 @@ pub fn run_9b(fast: bool) -> String {
     )
 }
 
+/// Render the Figure 9c table (`fast` shrinks the sweep for CI).
 pub fn run_9c(fast: bool) -> String {
     let g = gen::papers_like();
     let workers: &[usize] = if fast { &[8, 16, 32] } else { &[8, 16, 32, 64, 128] };

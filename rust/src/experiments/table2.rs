@@ -12,6 +12,7 @@ use crate::engine::trainer::Trainer;
 use crate::graph::gen;
 use crate::metrics::markdown_table;
 
+/// Render the Table 2 table (`fast` shrinks the sweep for CI).
 pub fn run(fast: bool) -> String {
     let epochs = if fast { 40 } else { 150 };
     let datasets = [("cora", 7usize), ("citeseer", 6), ("pubmed", 3)];

@@ -12,6 +12,7 @@ use crate::engine::trainer::Trainer;
 use crate::graph::gen;
 use crate::metrics::markdown_table;
 
+/// Render the Table 3 table (`fast` shrinks the sweep for CI).
 pub fn run(fast: bool) -> String {
     let (epochs, hidden) = if fast { (30, 32) } else { (80, 64) };
     let datasets: Vec<(&str, crate::graph::Graph, f64)> = vec![

@@ -22,6 +22,7 @@ pub fn alipay_cost() -> CostModelConfig {
     }
 }
 
+/// Render the Table 4 table (`fast` shrinks the sweep for CI).
 pub fn run(fast: bool) -> String {
     let (n, steps, workers) = if fast { (4000, 20, 64) } else { (12_000, 60, 256) };
     let g = gen::alipay_like(n);

@@ -6,6 +6,7 @@ use crate::baselines::graphlearn::{self, GraphLearnConfig, SETTING_LARGE, SETTIN
 use crate::graph::gen;
 use crate::metrics::markdown_table;
 
+/// Render the Table 5 table (sweep is small; `fast` unused).
 pub fn run(_fast: bool) -> String {
     let reddit = gen::reddit_like();
     let papers = gen::papers_like();

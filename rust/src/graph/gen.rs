@@ -15,13 +15,17 @@ use crate::util::rng::Rng;
 /// Parameters for the stochastic-block-model family.
 #[derive(Clone, Debug)]
 pub struct SbmSpec {
+    /// Dataset name carried into reports.
     pub name: String,
+    /// Node count.
     pub n: usize,
+    /// Number of communities (= classes).
     pub communities: usize,
     /// Expected intra-community out-degree per node.
     pub deg_in_comm: f64,
     /// Expected inter-community out-degree per node.
     pub deg_out_comm: f64,
+    /// Feature dimension.
     pub feat_dim: usize,
     /// Feature noise std relative to the unit-norm class centroid.
     pub noise: f32,
@@ -36,7 +40,9 @@ pub struct SbmSpec {
     pub skew: Option<(usize, f64)>,
     /// Fraction of nodes in train / val (rest is test).
     pub train_frac: f64,
+    /// Fraction of nodes in the validation split.
     pub val_frac: f64,
+    /// Generator seed.
     pub seed: u64,
 }
 
@@ -112,22 +118,32 @@ pub fn sbm(spec: &SbmSpec) -> Graph {
 /// attention).
 #[derive(Clone, Debug)]
 pub struct PowerLawSpec {
+    /// Dataset name carried into reports.
     pub name: String,
+    /// Node count.
     pub n: usize,
     /// Edges per new node (density ≈ edges_per_node).
     pub edges_per_node: usize,
+    /// Feature dimension.
     pub feat_dim: usize,
+    /// Edge-feature dimension (0 = none).
     pub edge_feat_dim: usize,
+    /// Number of label classes.
     pub num_classes: usize,
     /// Fraction of positive labels when `num_classes == 2` (Alipay risk is
     /// heavily imbalanced; the paper reports F1 ≈ 13%, AUC ≈ 88%).
     pub positive_frac: f64,
+    /// Feature noise std relative to the class centroid.
     pub noise: f32,
+    /// Fraction of nodes in the training split.
     pub train_frac: f64,
+    /// Fraction of nodes in the validation split.
     pub val_frac: f64,
+    /// Generator seed.
     pub seed: u64,
 }
 
+/// Generate a power-law graph per `spec` (see [`PowerLawSpec`]).
 pub fn power_law(spec: &PowerLawSpec) -> Graph {
     let mut rng = Rng::new(spec.seed);
     let n = spec.n;

@@ -20,6 +20,7 @@ use crate::tensor::Tensor;
 /// state is stored exactly once.
 #[derive(Clone, Debug)]
 pub struct Graph {
+    /// Dataset name carried into reports.
     pub name: String,
     /// Number of nodes.
     pub n: usize,
@@ -27,26 +28,38 @@ pub struct Graph {
     pub m: usize,
 
     // CSR: outgoing edges, edge id == position.
+    /// CSR row offsets (outgoing edges; edge id = position).
     pub csr_offsets: Vec<usize>,
+    /// CSR targets, one per edge.
     pub csr_targets: Vec<u32>,
     // CSC: incoming edges, values are edge ids into the CSR arrays.
+    /// CSC column offsets (incoming edges).
     pub csc_offsets: Vec<usize>,
+    /// CSC sources, aligned with `csc_eids`.
     pub csc_sources: Vec<u32>,
+    /// CSC entries' edge ids into the CSR arrays.
     pub csc_eids: Vec<u32>,
 
     /// Node features `[n, feat_dim]`.
     pub feats: Tensor,
+    /// Feature dimension (columns of `feats`).
     pub feat_dim: usize,
     /// Optional edge features `[m, edge_feat_dim]` (Alipay has 57 dims).
     pub edge_feats: Option<Tensor>,
+    /// Edge-feature dimension (0 = none).
     pub edge_feat_dim: usize,
     /// Per-edge Laplacian/propagation weight (GCN: 1/√(d̂_i·d̂_j)).
     pub edge_weights: Vec<f32>,
 
+    /// Node labels `[n]`.
     pub labels: Vec<u32>,
+    /// Number of label classes.
     pub num_classes: usize,
+    /// Training-split membership per node.
     pub train_mask: Vec<bool>,
+    /// Validation-split membership per node.
     pub val_mask: Vec<bool>,
+    /// Test-split membership per node.
     pub test_mask: Vec<bool>,
 }
 
@@ -68,11 +81,13 @@ impl Graph {
     }
 
     #[inline]
+    /// Outgoing-edge count of `v`.
     pub fn out_degree(&self, v: usize) -> usize {
         self.csr_offsets[v + 1] - self.csr_offsets[v]
     }
 
     #[inline]
+    /// Incoming-edge count of `v`.
     pub fn in_degree(&self, v: usize) -> usize {
         self.csc_offsets[v + 1] - self.csc_offsets[v]
     }
@@ -93,14 +108,17 @@ impl Graph {
         }
     }
 
+    /// Edges per node.
     pub fn density(&self) -> f64 {
         self.m as f64 / self.n as f64
     }
 
+    /// Largest out-degree.
     pub fn max_out_degree(&self) -> usize {
         (0..self.n).map(|v| self.out_degree(v)).max().unwrap_or(0)
     }
 
+    /// Node ids where `mask` is set.
     pub fn labeled_nodes(&self, mask: &[bool]) -> Vec<u32> {
         (0..self.n as u32).filter(|&v| mask[v as usize]).collect()
     }
@@ -116,6 +134,7 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
+    /// Start a builder for a graph of `n` nodes.
     pub fn new(name: &str, n: usize) -> Self {
         GraphBuilder {
             name: name.to_string(),
@@ -126,22 +145,26 @@ impl GraphBuilder {
         }
     }
 
+    /// Declare the edge-feature dimension (use `add_edge_with_feat`).
     pub fn with_edge_feat_dim(mut self, d: usize) -> Self {
         self.edge_feat_dim = d;
         self
     }
 
+    /// Add a directed edge.
     pub fn add_edge(&mut self, src: u32, dst: u32) {
         debug_assert!(self.edge_feat_dim == 0, "use add_edge_with_feat");
         self.edges.push((src, dst));
     }
 
+    /// Add a directed edge with its feature vector.
     pub fn add_edge_with_feat(&mut self, src: u32, dst: u32, feat: &[f32]) {
         assert_eq!(feat.len(), self.edge_feat_dim);
         self.edges.push((src, dst));
         self.edge_feats.extend_from_slice(feat);
     }
 
+    /// Edges added so far.
     pub fn num_edges(&self) -> usize {
         self.edges.len()
     }

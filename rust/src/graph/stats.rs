@@ -4,21 +4,32 @@
 use super::Graph;
 
 #[derive(Clone, Debug)]
+/// Summary statistics of one graph.
 pub struct GraphStats {
+    /// Node count.
     pub n: usize,
+    /// Edge count.
     pub m: usize,
+    /// Edges per node.
     pub density: f64,
+    /// Largest out-degree.
     pub max_out_degree: usize,
+    /// Mean out-degree.
     pub mean_out_degree: f64,
     /// p99 out-degree — the skew indicator the paper calls out for Alipay.
     pub p99_out_degree: usize,
+    /// Feature dimension.
     pub feat_dim: usize,
+    /// Edge-feature dimension.
     pub edge_feat_dim: usize,
+    /// Number of label classes.
     pub num_classes: usize,
+    /// Labeled training nodes.
     pub labeled_train: usize,
 }
 
 impl GraphStats {
+    /// Compute the statistics of `g`.
     pub fn compute(g: &Graph) -> GraphStats {
         let mut degs: Vec<usize> = (0..g.n).map(|v| g.out_degree(v)).collect();
         degs.sort_unstable();
@@ -37,6 +48,7 @@ impl GraphStats {
         }
     }
 
+    /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         format!(
             "n={} m={} density={:.2} deg(max/mean/p99)={}/{:.1}/{} feat={} edge_feat={} classes={} train={}",

@@ -44,6 +44,45 @@
 //! let report = trainer.run().unwrap();
 //! println!("test accuracy = {:.4}", report.test_accuracy);
 //! ```
+//!
+//! ## Module map
+//!
+//! Data flows storage → tgar → engine → coordinator → cluster:
+//!
+//! * [`util`] — xorshift/Philox RNG streams, qcheck property harness.
+//! * [`metrics`] — run statistics ([`metrics::CommStats`],
+//!   [`metrics::MemStats`], …) and markdown table rendering.
+//! * [`config`] — typed [`config::TrainConfig`] plus the `key = value`
+//!   kv format every experiment driver accepts (see `docs/CONFIG.md`).
+//! * [`tensor`] — bit-exact native dense kernels (the oracle backend).
+//! * [`graph`] — in-memory graphs, loaders and synthetic generators.
+//! * [`partition`] — edge-cut partitioning into master/mirror placements.
+//! * [`storage`] — CSR-backed distributed graph storage per partition.
+//! * [`nn`] — GNN layer parameters and the multi-versioned
+//!   [`nn::params::ParameterManager`] (staleness bounds, snapshots,
+//!   gradient codecs).
+//! * [`tgar`] — the NN-TGAR stage executor and its comm plans.
+//! * [`engine`] — sequential trainer, batch generation, fault protocol.
+//! * [`coordinator`] — hybrid-parallel pipelining over the work-stealing
+//!   scheduler (sync rounds / async bounded staleness).
+//! * [`cluster`] — the modeled cluster: clock, byte/flop accounting,
+//!   unreliable-network + memory-ledger + wire-compression plans.
+//! * [`runtime`] — PJRT-backed stage backend loading AOT HLO artifacts.
+//! * [`baselines`] — reference data-parallel baselines.
+//! * [`experiments`] — drivers regenerating the paper's tables.
+//!
+//! ## Determinism contract
+//!
+//! Every run is exactly reproducible from `(config, seed)`: numerics
+//! execute serially in a fixed order regardless of thread count, worker
+//! count or schedule policy, and golden tests pin parameter trajectories
+//! bitwise. Modeled-cost plans (network faults, memory pressure, wire
+//! topology) move only the simulated clock and traffic counters — never
+//! numerics. The one deliberate exception is lossy wire codecs
+//! (`comm_codec = f16 | int8`, `comm_topk`), which change gradients and
+//! routed payloads deterministically per seed.
+
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod metrics;

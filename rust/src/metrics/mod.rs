@@ -32,12 +32,16 @@ pub fn add_net(bytes: u64) {
 /// A snapshot of the thread-local counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Ledger {
+    /// Floating-point operations.
     pub flops: u64,
+    /// Bytes shipped.
     pub bytes: u64,
+    /// Messages sent.
     pub msgs: u64,
 }
 
 impl Ledger {
+    /// Read the current thread-local counters.
     pub fn snapshot() -> Ledger {
         Ledger {
             flops: FLOPS.with(Cell::get),
@@ -55,6 +59,7 @@ impl Ledger {
         }
     }
 
+    /// Accumulate another ledger into this one.
     pub fn add(&mut self, other: &Ledger) {
         self.flops += other.flops;
         self.bytes += other.bytes;
@@ -79,13 +84,18 @@ pub struct StageProfile {
 }
 
 #[derive(Default, Clone, Copy, Debug)]
+/// Wall-clock + ledger accumulation for one named stage.
 pub struct StageStat {
+    /// Wall seconds spent in the stage.
     pub secs: f64,
+    /// Times the stage ran.
     pub calls: u64,
+    /// FLOP/byte/message deltas attributed to the stage.
     pub ledger: Ledger,
 }
 
 impl StageProfile {
+    /// Empty profile.
     pub fn new() -> Self {
         Self::default()
     }
@@ -115,10 +125,12 @@ impl StageProfile {
         s.calls += 1;
     }
 
+    /// Stats of one stage, if it ever ran.
     pub fn get(&self, name: &str) -> Option<&StageStat> {
         self.stages.get(name)
     }
 
+    /// Wall seconds across all stages.
     pub fn total_secs(&self) -> f64 {
         self.stages.values().map(|s| s.secs).sum()
     }
@@ -132,6 +144,7 @@ impl StageProfile {
             .collect()
     }
 
+    /// Accumulate another profile into this one.
     pub fn merge(&mut self, other: &StageProfile) {
         for k in &other.order {
             if !self.stages.contains_key(k) {
@@ -209,6 +222,7 @@ impl OverlapStats {
         }
     }
 
+    /// Accumulate another run's overlap accounting.
     pub fn merge(&mut self, other: &OverlapStats) {
         self.serial_secs += other.serial_secs;
         self.overlapped_secs += other.overlapped_secs;
@@ -245,6 +259,7 @@ impl AsyncStats {
         }
     }
 
+    /// Accumulate another run's async telemetry.
     pub fn merge(&mut self, other: &AsyncStats) {
         self.pushes += other.pushes;
         self.rejected += other.rejected;
@@ -272,6 +287,12 @@ pub struct CommStats {
     /// Modeled seconds spent in exponential backoff (excludes the timeouts
     /// themselves, which are charged separately to the sender's superstep).
     pub backoff_secs: f64,
+    /// Modeled payload bytes actually shipped through the wire codec
+    /// (compressed width; only accumulated while a
+    /// [`crate::cluster::WirePlan`] is installed).
+    pub payload_bytes: u64,
+    /// Bytes the wire codec saved versus raw f32 payloads.
+    pub saved_bytes: u64,
 }
 
 impl CommStats {
@@ -284,12 +305,15 @@ impl CommStats {
         }
     }
 
+    /// Accumulate another run's communication counters.
     pub fn merge(&mut self, other: &CommStats) {
         self.sends += other.sends;
         self.retries += other.retries;
         self.timeouts += other.timeouts;
         self.retrans_bytes += other.retrans_bytes;
         self.backoff_secs += other.backoff_secs;
+        self.payload_bytes += other.payload_bytes;
+        self.saved_bytes += other.saved_bytes;
     }
 }
 
@@ -320,6 +344,7 @@ impl StragglerStats {
         }
     }
 
+    /// Accumulate another run's straggler counters.
     pub fn merge(&mut self, other: &StragglerStats) {
         self.checks += other.checks;
         self.detections += other.detections;
@@ -372,6 +397,7 @@ impl MemStats {
         }
     }
 
+    /// Accumulate another run's memory counters (peak is maxed).
     pub fn merge(&mut self, other: &MemStats) {
         self.peak_bytes = self.peak_bytes.max(other.peak_bytes);
         self.evictions += other.evictions;
@@ -427,6 +453,7 @@ impl FaultStats {
         }
     }
 
+    /// Accumulate another run's fault counters.
     pub fn merge(&mut self, other: &FaultStats) {
         self.checkpoints += other.checkpoints;
         self.failures += other.failures;
@@ -616,10 +643,13 @@ mod tests {
             timeouts: 1,
             retrans_bytes: 64,
             backoff_secs: 0.05,
+            payload_bytes: 128,
+            saved_bytes: 384,
         };
         a.merge(&b);
         assert_eq!((a.sends, a.retries, a.timeouts, a.retrans_bytes), (12, 6, 4, 704));
         assert!((a.backoff_secs - 0.15).abs() < 1e-12);
+        assert_eq!((a.payload_bytes, a.saved_bytes), (128, 384));
     }
 
     #[test]

@@ -15,19 +15,24 @@ use crate::util::rng::Rng;
 /// Dense (fully-connected) parameters: `y = x @ w + b`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DenseParams {
+    /// Weight matrix `[in_dim, out_dim]`.
     pub w: Tensor,
+    /// Bias, one entry per output dim.
     pub b: Vec<f32>,
 }
 
 impl DenseParams {
+    /// Glorot/Xavier-uniform initialized dense layer.
     pub fn glorot(in_dim: usize, out_dim: usize, rng: &mut Rng) -> DenseParams {
         DenseParams { w: Tensor::glorot(in_dim, out_dim, rng), b: vec![0.0; out_dim] }
     }
 
+    /// Same shapes, all zeros (gradient accumulator).
     pub fn zeros_like(&self) -> DenseParams {
         DenseParams { w: Tensor::zeros(self.w.rows, self.w.cols), b: vec![0.0; self.b.len()] }
     }
 
+    /// Parameter count.
     pub fn numel(&self) -> usize {
         self.w.numel() + self.b.len()
     }
@@ -40,12 +45,16 @@ impl DenseParams {
 /// eqs. (16)–(18); see DESIGN.md).
 #[derive(Clone, Debug, PartialEq)]
 pub struct AttParams {
+    /// Attention weights over the source embedding.
     pub a_src: Vec<f32>,
+    /// Attention weights over the destination embedding.
     pub a_dst: Vec<f32>,
+    /// Attention weights over the edge features (GAT-E).
     pub a_edge: Vec<f32>,
 }
 
 impl AttParams {
+    /// Small-uniform initialized attention parameters.
     pub fn init(hidden: usize, edge_dim: usize, rng: &mut Rng) -> AttParams {
         let scale = (1.0 / hidden as f64).sqrt() as f32;
         let mut v = |n: usize| -> Vec<f32> {
@@ -54,6 +63,7 @@ impl AttParams {
         AttParams { a_src: v(hidden), a_dst: v(hidden), a_edge: v(edge_dim) }
     }
 
+    /// Same shapes, all zeros (gradient accumulator).
     pub fn zeros_like(&self) -> AttParams {
         AttParams {
             a_src: vec![0.0; self.a_src.len()],
@@ -62,6 +72,7 @@ impl AttParams {
         }
     }
 
+    /// Parameter count.
     pub fn numel(&self) -> usize {
         self.a_src.len() + self.a_dst.len() + self.a_edge.len()
     }
@@ -70,6 +81,7 @@ impl AttParams {
 /// One encoder layer's parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayerParams {
+    /// The NN-Transform projection of this layer.
     pub proj: DenseParams,
     /// Present only for GAT-E.
     pub att: Option<AttParams>,
@@ -79,7 +91,9 @@ pub struct LayerParams {
 /// The same struct doubles as the gradient accumulator.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelParams {
+    /// Per-layer parameters, input → output order.
     pub layers: Vec<LayerParams>,
+    /// Classification head applied to the last embedding.
     pub decoder: DenseParams,
 }
 
@@ -102,6 +116,7 @@ impl ModelParams {
         ModelParams { layers, decoder }
     }
 
+    /// Same shapes, all zeros (gradient accumulator).
     pub fn zeros_like(&self) -> ModelParams {
         ModelParams {
             layers: self
@@ -116,6 +131,7 @@ impl ModelParams {
         }
     }
 
+    /// Total parameter count across layers and decoder.
     pub fn numel(&self) -> usize {
         self.layers
             .iter()
@@ -124,6 +140,7 @@ impl ModelParams {
             + self.decoder.numel()
     }
 
+    /// Total parameter bytes (f32).
     pub fn bytes(&self) -> usize {
         self.numel() * std::mem::size_of::<f32>()
     }

@@ -18,8 +18,11 @@ struct Slot {
 // `Clone` so the fault-tolerance checkpoint can snapshot the moments
 // alongside the parameters (`ParameterManager::snapshot`).
 #[derive(Clone, Debug)]
+/// First-order optimizer with per-parameter moment slots.
 pub struct Optimizer {
+    /// Update rule.
     pub kind: OptimizerKind,
+    /// Learning rate.
     pub lr: f32,
     /// L2 penalty: coupled (added to gradients) for SGD/Adam, decoupled for
     /// AdamW (Loshchilov & Hutter).
@@ -32,6 +35,8 @@ pub struct Optimizer {
 }
 
 impl Optimizer {
+    /// A fresh optimizer with the reference Adam hyperparameters
+    /// (β₁ = 0.9, β₂ = 0.999, ε = 1e-8).
     pub fn new(kind: OptimizerKind, lr: f32, weight_decay: f32) -> Optimizer {
         Optimizer {
             kind,

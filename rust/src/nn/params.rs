@@ -9,16 +9,27 @@
 //! bounded staleness.
 
 use super::{optim::Optimizer, ModelParams};
+use crate::cluster::WirePlan;
 use crate::config::{OptimizerKind, UpdateMode};
 use crate::util::{hash64, Crc32};
 use std::collections::VecDeque;
 
 // Hand-rolled Display/Error impls: `thiserror` is not in the vendored
 // crate set (sole external dependency is `anyhow`).
+/// Why a parameter fetch or push was refused.
 #[derive(Debug)]
 pub enum ParamError {
+    /// The requested version left the ring: `(requested, oldest, latest)`.
     Evicted(u64, u64, u64),
-    TooStale { requested: u64, latest: u64, max: usize },
+    /// The requested version exceeds the asynchronous staleness bound.
+    TooStale {
+        /// Version the worker asked for.
+        requested: u64,
+        /// Latest published version at the time of the request.
+        latest: u64,
+        /// The configured staleness bound.
+        max: usize,
+    },
 }
 
 impl std::fmt::Display for ParamError {
@@ -36,6 +47,7 @@ impl std::fmt::Display for ParamError {
 
 impl std::error::Error for ParamError {}
 
+/// The multi-versioned parameter store of §4.3 (see module docs).
 pub struct ParameterManager {
     versions: VecDeque<(u64, ModelParams)>,
     latest: u64,
@@ -50,9 +62,15 @@ pub struct ParameterManager {
     stale_max: u64,
     stale_sum: u64,
     stale_n: u64,
+    /// Lossy gradient-stream wire plan (`None` ⇒ exact passthrough).
+    wire: Option<WirePlan>,
+    /// Error-feedback residual the gradient codec carries across steps;
+    /// architecture-shaped, allocated on the first lossy push.
+    ef: Option<ModelParams>,
 }
 
 impl ParameterManager {
+    /// Build a manager holding `init` as version 0.
     pub fn new(
         init: ModelParams,
         kind: OptimizerKind,
@@ -73,9 +91,25 @@ impl ParameterManager {
             stale_max: 0,
             stale_sum: 0,
             stale_n: 0,
+            wire: None,
+            ef: None,
         }
     }
 
+    /// Install the gradient-stream codec from `plan`. Only lossy plans
+    /// (non-exact codec or top-k sparsification) are retained — an exact
+    /// plan keeps the bit-identical passthrough and carries no
+    /// error-feedback state.
+    pub fn set_wire(&mut self, plan: &WirePlan) {
+        if plan.grad_lossy() {
+            self.wire = Some(plan.clone());
+        } else {
+            self.wire = None;
+            self.ef = None;
+        }
+    }
+
+    /// Id of the newest published version.
     pub fn latest_version(&self) -> u64 {
         self.latest
     }
@@ -106,8 +140,18 @@ impl ParameterManager {
     }
 
     /// Push one worker's gradient contribution for the current step
-    /// (the Reduce stage routes per-partition gradients here).
+    /// (the Reduce stage routes per-partition gradients here). When a
+    /// lossy wire plan is installed the push is quantized through the
+    /// error-feedback codec first, so the optimizer consumes exactly
+    /// what the modeled wire delivered.
     pub fn push_grads(&mut self, grads: &ModelParams) {
+        match self.encode_grads(grads) {
+            Some(q) => self.push_raw(&q),
+            None => self.push_raw(grads),
+        }
+    }
+
+    fn push_raw(&mut self, grads: &ModelParams) {
         match self.pending.as_mut() {
             Some(acc) => acc.accumulate(grads),
             None => self.pending = Some(grads.clone()),
@@ -115,6 +159,27 @@ impl ParameterManager {
         self.pending_pushes += 1;
     }
 
+    /// Apply the lossy gradient codec with error feedback: the residual
+    /// from previous pushes is added before quantization and the new
+    /// residual `(x + e) − Q(x + e)` is carried forward. Returns `None`
+    /// when no lossy plan is installed (exact passthrough).
+    fn encode_grads(&mut self, grads: &ModelParams) -> Option<ModelParams> {
+        let w = self.wire.clone()?;
+        let ef = self.ef.get_or_insert_with(|| grads.zeros_like());
+        let mut q = grads.clone();
+        q.accumulate(ef); // x + e
+        let carried = q.clone();
+        q.visit_mut(|_, x| w.quantize_slice(x)); // Q(x + e)
+        *ef = carried;
+        ef.visit_with(&q, |_, e, qv| {
+            for (a, &b) in e.iter_mut().zip(qv) {
+                *a -= b;
+            }
+        });
+        Some(q)
+    }
+
+    /// How many gradient pushes the in-flight step has accumulated.
     pub fn pending_pushes(&self) -> usize {
         self.pending_pushes
     }
@@ -213,14 +278,18 @@ impl ParameterManager {
         self.latest
     }
 
+    /// Number of parameter versions currently live in the ring.
     pub fn live_versions(&self) -> usize {
         self.versions.len()
     }
 
     /// Serialized size of the live state (latest parameters + optimizer
-    /// moments) — what a rejoining worker must fetch before taking work.
+    /// moments + any error-feedback residual) — what a rejoining worker
+    /// must fetch before taking work.
     pub fn state_bytes(&self) -> usize {
-        self.fetch_latest().1.bytes() + self.optimizer.state_bytes()
+        self.fetch_latest().1.bytes()
+            + self.optimizer.state_bytes()
+            + self.ef.as_ref().map_or(0, ModelParams::bytes)
     }
 
     /// Snapshot everything a failure restore needs: the latest parameter
@@ -231,9 +300,9 @@ impl ParameterManager {
     pub fn snapshot(&self) -> ParamSnapshot {
         let (version, params) = self.fetch_latest();
         let stale = (self.stale_max, self.stale_sum, self.stale_n);
-        let crc = snapshot_crc(version, params, &self.optimizer, stale);
+        let crc = snapshot_crc(version, params, &self.optimizer, stale, self.ef.as_ref());
         let (params, optimizer) = (params.clone(), self.optimizer.clone());
-        ParamSnapshot { version, params, optimizer, stale, crc }
+        ParamSnapshot { version, params, optimizer, stale, ef: self.ef.clone(), crc }
     }
 
     /// Roll the manager back to `snap`: the version ring collapses to the
@@ -249,17 +318,22 @@ impl ParameterManager {
         self.pending_pushes = 0;
         self.optimizer = snap.optimizer.clone();
         (self.stale_max, self.stale_sum, self.stale_n) = snap.stale;
+        // The error-feedback residual is training state: a restore that
+        // dropped it would replay quantization error already paid back.
+        self.ef = snap.ef.clone();
     }
 }
 
 /// Fold everything a snapshot stores into a CRC-32: version counter,
 /// every parameter bit (names included, in the optimizer's traversal
-/// order), optimizer moments (sorted slot keys), staleness accounting.
+/// order), optimizer moments (sorted slot keys), staleness accounting,
+/// and the gradient codec's error-feedback residual when present.
 fn snapshot_crc(
     version: u64,
     params: &ModelParams,
     optimizer: &Optimizer,
     stale: (u64, u64, u64),
+    ef: Option<&ModelParams>,
 ) -> u32 {
     let mut crc = Crc32::new();
     crc.update(&version.to_le_bytes());
@@ -273,6 +347,15 @@ fn snapshot_crc(
     crc.update(&stale.0.to_le_bytes());
     crc.update(&stale.1.to_le_bytes());
     crc.update(&stale.2.to_le_bytes());
+    crc.update(&[ef.is_some() as u8]);
+    if let Some(e) = ef {
+        e.visit(|name, p| {
+            crc.update(name.as_bytes());
+            for &x in p {
+                crc.update(&x.to_bits().to_le_bytes());
+            }
+        });
+    }
     crc.finish()
 }
 
@@ -287,6 +370,8 @@ pub struct ParamSnapshot {
     params: ModelParams,
     optimizer: Optimizer,
     stale: (u64, u64, u64),
+    /// Gradient-codec error-feedback residual at snapshot time.
+    ef: Option<ModelParams>,
     /// CRC-32 over the fields above, computed at snapshot time.
     crc: u32,
 }
@@ -297,10 +382,13 @@ impl ParamSnapshot {
         self.version
     }
 
-    /// Serialized size of the checkpoint (parameters + optimizer
-    /// moments) — what the recovery path charges the modeled network for.
+    /// Serialized size of the checkpoint (parameters + optimizer moments
+    /// + error-feedback residual) — what the recovery path charges the
+    /// modeled network for.
     pub fn bytes(&self) -> usize {
-        self.params.bytes() + self.optimizer.state_bytes()
+        self.params.bytes()
+            + self.optimizer.state_bytes()
+            + self.ef.as_ref().map_or(0, ModelParams::bytes)
     }
 
     /// The CRC-32 sealed at snapshot time (checkpoint-identity checks).
@@ -312,7 +400,8 @@ impl ParamSnapshot {
     /// sealed digest. `false` means the snapshot was damaged after it was
     /// taken and must not be restored.
     pub fn verify(&self) -> bool {
-        snapshot_crc(self.version, &self.params, &self.optimizer, self.stale) == self.crc
+        snapshot_crc(self.version, &self.params, &self.optimizer, self.stale, self.ef.as_ref())
+            == self.crc
     }
 
     /// Seeded storage-corruption injection: flip one mantissa bit of one
@@ -568,6 +657,65 @@ mod tests {
         pm.update(1);
         assert_eq!(pm.state_bytes(), pm.snapshot().bytes());
         assert!(pm.state_bytes() > 0);
+    }
+
+    #[test]
+    fn lossy_grad_codec_carries_error_feedback_through_snapshots() {
+        use crate::cluster::{Codec, WirePlan};
+        let cfg = ModelConfig::gcn(4, 4, 2, 1);
+        let mk = || {
+            ParameterManager::new(
+                ModelParams::init(&cfg, 1),
+                OptimizerKind::Sgd,
+                0.1,
+                0.0,
+                UpdateMode::Synchronous,
+            )
+        };
+        let wire = WirePlan { codec: Codec::Int8, ..WirePlan::default() };
+        let mut pm = mk();
+        pm.set_wire(&wire);
+        let mut g = pm.fetch_latest().1.zeros_like();
+        g.decoder.b[0] = 0.31;
+        g.decoder.b[1] = 0.38;
+        // The int8 grid cannot represent 0.31 exactly, but error feedback
+        // keeps the *mean* transmitted value aligned with the true stream.
+        let n = 64;
+        let b_start = pm.fetch_latest().1.decoder.b[0];
+        for _ in 0..n {
+            pm.push_grads(&g);
+            pm.update(1);
+        }
+        let b_end = pm.fetch_latest().1.decoder.b[0];
+        let mean_tx = (b_start - b_end) as f64 / (0.1 * n as f32) as f64;
+        assert!((mean_tx - 0.31).abs() < 1e-2, "EF mean drifted: {mean_tx}");
+        assert!(pm.state_bytes() > mk().state_bytes(), "EF residual counts in state bytes");
+
+        // The residual rides the checkpoint: restoring into a virgin
+        // manager reproduces the next update bit-exactly.
+        let snap = pm.snapshot();
+        assert!(snap.verify());
+        assert_eq!(snap.bytes(), pm.state_bytes());
+        pm.push_grads(&g);
+        pm.update(1);
+        let want = pm.fetch_latest().1.clone();
+        let mut pm2 = mk();
+        pm2.set_wire(&wire);
+        pm2.restore(&snap);
+        pm2.push_grads(&g);
+        pm2.update(1);
+        assert_eq!(pm2.fetch_latest().1, &want);
+
+        // An exact plan is a passthrough and drops the residual.
+        let mut pm3 = mk();
+        pm3.set_wire(&WirePlan { hosts: 4, ..WirePlan::default() });
+        pm3.push_grads(&g);
+        pm3.update(1);
+        let mut pm4 = mk();
+        pm4.push_grads(&g);
+        pm4.update(1);
+        assert_eq!(pm3.fetch_latest().1, pm4.fetch_latest().1);
+        assert_eq!(pm3.state_bytes(), pm4.state_bytes());
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::util::{hash64, hash64_pair};
 /// Node→master and edge→partition assignment.
 #[derive(Clone, Debug)]
 pub struct PartitionPlan {
+    /// Partition count.
     pub p: usize,
     /// `master_of[v]` = partition holding v's master replica.
     pub master_of: Vec<u32>,
@@ -106,7 +107,9 @@ impl PartitionPlan {
 
 /// A partitioning method. Plans must be deterministic.
 pub trait Partitioner {
+    /// Method identifier for reports.
     fn name(&self) -> &'static str;
+    /// Assign every node and edge of `g` to one of `p` partitions.
     fn partition(&self, g: &Graph, p: usize) -> PartitionPlan;
 }
 
@@ -115,10 +118,12 @@ pub trait Partitioner {
 /// destination as the indicator too — see [`Edge1D::by_destination`]).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Edge1D {
+    /// Use each edge's destination master as its partition indicator.
     pub by_dst: bool,
 }
 
 impl Edge1D {
+    /// The destination-indicator variant.
     pub fn by_destination() -> Self {
         Edge1D { by_dst: true }
     }

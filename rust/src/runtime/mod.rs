@@ -21,12 +21,15 @@ use crate::tensor::{ops, Tensor};
 /// Epilogue activation fused into the projection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activation {
+    /// Identity (no activation).
     None,
+    /// Rectified linear unit.
     Relu,
 }
 
 /// Executes the dense stage operators of NN-TGAR.
 pub trait StageBackend {
+    /// Backend identifier for reports ("native", "pjrt").
     fn name(&self) -> &'static str;
 
     /// `y = act(x @ w + b)` — the NN-Transform projection / decoder.

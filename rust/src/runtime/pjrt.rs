@@ -22,27 +22,36 @@ use std::path::Path;
 /// One AOT entry point from the manifest.
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
+    /// Entry-point name (e.g. `proj_r512_i64_o16_relu`).
     pub name: String,
+    /// HLO text file, relative to the artifact directory.
     pub file: String,
+    /// Row-count bucket the executable was specialized for.
     pub rows: usize,
+    /// Input feature dimension.
     pub d_in: usize,
+    /// Output feature dimension.
     pub d_out: usize,
+    /// Fused epilogue activation.
     pub activation: Activation,
 }
 
 /// Parsed `artifacts/manifest.json`.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// All AOT entry points, in manifest order.
     pub entries: Vec<ArtifactEntry>,
 }
 
 impl Manifest {
+    /// Read and parse `manifest.json` from `dir`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading manifest in {}", dir.display()))?;
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
         let arr = v
@@ -91,6 +100,7 @@ pub struct PjrtBackend {
     fallback: NativeBackend,
     /// Calls served by PJRT vs fallen back to native.
     pub hits: u64,
+    /// Calls that fell back to the native backend (no matching bucket).
     pub fallbacks: u64,
 }
 
@@ -127,6 +137,7 @@ impl PjrtBackend {
         self.table.values().map(Vec::len).sum()
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

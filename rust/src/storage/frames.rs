@@ -16,11 +16,14 @@ use std::collections::HashMap;
 #[derive(Default, Debug)]
 pub struct TensorCache {
     pools: HashMap<usize, Vec<Vec<f32>>>,
+    /// Buffers served from the pool.
     pub hits: u64,
+    /// Buffers freshly allocated.
     pub misses: u64,
 }
 
 impl TensorCache {
+    /// Empty cache.
     pub fn new() -> Self {
         Self::default()
     }
@@ -63,22 +66,27 @@ pub struct Frame {
 }
 
 impl Frame {
+    /// Empty frame.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Store tensor `name` at `layer` (replacing any previous one).
     pub fn insert(&mut self, name: &str, layer: usize, t: Tensor) {
         self.slots.insert((name.to_string(), layer), t);
     }
 
+    /// Borrow tensor `name` at `layer`.
     pub fn get(&self, name: &str, layer: usize) -> Option<&Tensor> {
         self.slots.get(&(name.to_string(), layer))
     }
 
+    /// Mutably borrow tensor `name` at `layer`.
     pub fn get_mut(&mut self, name: &str, layer: usize) -> Option<&mut Tensor> {
         self.slots.get_mut(&(name.to_string(), layer))
     }
 
+    /// Remove and return tensor `name` at `layer`.
     pub fn take(&mut self, name: &str, layer: usize) -> Option<Tensor> {
         self.slots.remove(&(name.to_string(), layer))
     }
@@ -105,6 +113,7 @@ impl Frame {
         }
     }
 
+    /// Bytes currently held by this frame's tensors.
     pub fn live_bytes(&self) -> usize {
         self.slots
             .values()

@@ -44,9 +44,11 @@ use std::collections::HashMap;
 /// One partition's local view of the global graph.
 #[derive(Clone, Debug)]
 pub struct PartitionView {
+    /// Partition index.
     pub part: u32,
     /// Local id → global id. Masters occupy `0..n_masters`, mirrors follow.
     pub nodes: Vec<u32>,
+    /// Count of master replicas (they occupy local ids `0..n_masters`).
     pub n_masters: usize,
     /// Global id → local id (the private vertex-ID mapping of §4.2).
     pub lid_of: HashMap<u32, u32>,
@@ -59,6 +61,7 @@ pub struct PartitionView {
     /// Local CSR over the edges assigned to this partition. Local edge id =
     /// position in `csr_targets`; `edge_gids` maps back to global edge ids.
     pub csr_offsets: Vec<usize>,
+    /// CSR targets (local ids), one per local edge.
     pub csr_targets: Vec<u32>,
     /// Source local id per local edge (precomputed — the NN-G stages walk
     /// edges in active-list order, so an O(1) lookup beats re-deriving the
@@ -66,9 +69,12 @@ pub struct PartitionView {
     pub csr_sources_by_edge: Vec<u32>,
     /// Local CSC mirrors the same local edges.
     pub csc_offsets: Vec<usize>,
+    /// CSC sources (local ids).
     pub csc_sources: Vec<u32>,
+    /// CSC entries' local edge ids.
     pub csc_leids: Vec<u32>,
 
+    /// Local edge id → global edge id.
     pub edge_gids: Vec<u32>,
     /// Laplacian weight per local edge (copied from the global graph).
     pub edge_weights: Vec<f32>,
@@ -79,21 +85,25 @@ impl PartitionView {
     pub const NO_LID: u32 = u32::MAX;
 
     #[inline]
+    /// Replica count (masters + mirrors).
     pub fn n_local(&self) -> usize {
         self.nodes.len()
     }
 
     #[inline]
+    /// Mirror replica count.
     pub fn n_mirrors(&self) -> usize {
         self.nodes.len() - self.n_masters
     }
 
     #[inline]
+    /// True when `lid` is a master replica.
     pub fn is_master(&self, lid: u32) -> bool {
         (lid as usize) < self.n_masters
     }
 
     #[inline]
+    /// Local edge count.
     pub fn m_local(&self) -> usize {
         self.csr_targets.len()
     }
@@ -133,7 +143,9 @@ impl PartitionView {
 /// The global graph distributed by a partition plan.
 #[derive(Clone, Debug)]
 pub struct DistGraph {
+    /// The partition plan this distribution was built from.
     pub plan: PartitionPlan,
+    /// One local view per partition.
     pub parts: Vec<PartitionView>,
     /// For each global node: the partitions holding a mirror of it.
     /// (Indexed lookup for the master→mirror sync routes.)
@@ -276,6 +288,7 @@ impl DistGraph {
     }
 
     #[inline]
+    /// Partition count.
     pub fn p(&self) -> usize {
         self.parts.len()
     }

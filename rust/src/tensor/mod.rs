@@ -20,25 +20,32 @@ use crate::util::rng::Rng;
 /// A row-major 2-D f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major elements, `rows * cols` of them.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// All-zero tensor.
     pub fn zeros(rows: usize, cols: usize) -> Tensor {
         Tensor { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Tensor filled with `v`.
     pub fn filled(rows: usize, cols: usize, v: f32) -> Tensor {
         Tensor { rows, cols, data: vec![v; rows * cols] }
     }
 
+    /// Wrap an existing row-major buffer (length must match).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Tensor {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Tensor { rows, cols, data }
     }
 
+    /// Build element-wise from `f(row, col)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Tensor {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
@@ -69,26 +76,31 @@ impl Tensor {
     }
 
     #[inline]
+    /// Element count.
     pub fn numel(&self) -> usize {
         self.rows * self.cols
     }
 
     #[inline]
+    /// Borrow row `i`.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
+    /// Mutably borrow row `i`.
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
+    /// Element at `(i, j)`.
     pub fn at(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.cols + j]
     }
 
     #[inline]
+    /// Set element at `(i, j)`.
     pub fn set(&mut self, i: usize, j: usize, v: f32) {
         self.data[i * self.cols + j] = v;
     }
@@ -153,6 +165,7 @@ impl Tensor {
         out
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Tensor {
         let mut out = Tensor::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -163,6 +176,7 @@ impl Tensor {
         out
     }
 
+    /// Element-wise `self += other`.
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.numel(), other.numel(), "add shape");
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -171,6 +185,7 @@ impl Tensor {
         add_flops(self.numel() as u64);
     }
 
+    /// Element-wise `self - other`.
     pub fn sub(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.numel(), other.numel());
         let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
@@ -178,6 +193,7 @@ impl Tensor {
         Tensor { rows: self.rows, cols: self.cols, data }
     }
 
+    /// Multiply every element by `s`.
     pub fn scale(&mut self, s: f32) {
         for a in &mut self.data {
             *a *= s;
@@ -185,6 +201,7 @@ impl Tensor {
         add_flops(self.numel() as u64);
     }
 
+    /// Element-wise product.
     pub fn hadamard(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.numel(), other.numel());
         let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
@@ -236,6 +253,7 @@ impl Tensor {
         add_flops((idx.len() * self.cols) as u64);
     }
 
+    /// Sum of squared elements.
     pub fn frobenius_sq(&self) -> f32 {
         add_flops(2 * self.numel() as u64);
         self.data.iter().map(|x| x * x).sum()

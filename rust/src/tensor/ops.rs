@@ -125,6 +125,7 @@ pub fn leaky_relu(t: &mut Tensor, alpha: f32) {
     add_flops(t.numel() as u64);
 }
 
+/// Backward of leaky-ReLU given pre-activations.
 pub fn leaky_relu_grad(grad: &Tensor, pre: &Tensor, alpha: f32) -> Tensor {
     let data = grad
         .data

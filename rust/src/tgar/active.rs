@@ -60,6 +60,7 @@ use crate::util::rng::{Rng, StreamKey};
 /// The participation plan for one batch.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ActivePlan {
+    /// Receptive-field depth (model layers).
     pub k: usize,
     /// Global target nodes (loss rows).
     pub targets: Vec<u32>,
@@ -145,6 +146,7 @@ struct PartScratch {
 }
 
 impl PlanScratch {
+    /// Fresh, empty scratch (equivalent to `Default`).
     pub fn new() -> PlanScratch {
         PlanScratch::default()
     }

@@ -98,6 +98,7 @@ impl RouteTable {
     }
 
     #[inline]
+    /// True when this route ships no rows.
     pub fn is_empty(&self) -> bool {
         self.local.is_empty()
     }
@@ -116,7 +117,9 @@ impl RouteTable {
 /// `[layer][partition]` (layer 0 unused — level 0 is raw features).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CommPlan {
+    /// Master→mirror sync routes, `sync[l][q]` = rows partition `q` receives.
     pub sync: Vec<Vec<RouteTable>>,
+    /// Mirror→master partial-aggregate routes, indexed like `sync`.
     pub partial: Vec<Vec<RouteTable>>,
     /// Backward-combine routes. `None` when they would be identical to
     /// `sync` — any model whose Gather never reads destination rows

@@ -36,6 +36,7 @@
 
 use crate::cluster::ClusterSim;
 use crate::config::{ModelConfig, ModelKind};
+use std::collections::HashMap;
 use crate::graph::Graph;
 use crate::metrics::{add_flops, StageProfile};
 use crate::nn::{LayerParams, ModelParams};
@@ -45,13 +46,24 @@ use crate::storage::{DistGraph, PartitionView};
 use crate::tensor::{ops, Tensor};
 use crate::tgar::ActivePlan;
 
+// Error-feedback stream ids: one residual buffer per (stream, layer,
+// partition) triple, so forward and backward quantization errors never
+// cross-contaminate.
+const EF_SYNC: u8 = 0;
+const EF_SUM: u8 = 1;
+const EF_BWD_SYNC: u8 = 2;
+const EF_BWD_SUM: u8 = 3;
+
 /// Result of one training step.
 #[derive(Clone, Debug)]
 pub struct StepResult {
+    /// Global-mean training loss over the plan's targets.
     pub loss: f32,
-    /// Modeled seconds in forward / backward / reduce.
+    /// Modeled seconds in the forward pass.
     pub t_forward: f64,
+    /// Modeled seconds in the backward pass (including loss stage).
     pub t_backward: f64,
+    /// Modeled seconds in the gradient Reduce.
     pub t_reduce: f64,
     /// Peak resident bytes on any partition during the step (the paper's
     /// per-worker memory figure: 5–12 GB on Alipay): live frames at their
@@ -68,16 +80,25 @@ pub struct StepResult {
 
 /// Stage executor bound to one distributed graph.
 pub struct Executor<'a> {
+    /// The global graph (features, labels, edge features).
     pub g: &'a Graph,
+    /// Its partitioned view (masters, mirrors, per-partition CSR).
     pub dg: &'a DistGraph,
+    /// Model shape the stages execute.
     pub model: &'a ModelConfig,
     frames: Vec<Frame>,
     cache: TensorCache,
+    /// Wall-clock seconds per stage (Fig A3 ablation source).
     pub profile: StageProfile,
     leaky_slope: f32,
+    /// Per-route error-feedback residuals for lossy wire codecs, keyed
+    /// by (stream id, layer, partition); reset when the route length
+    /// changes (plan switch).
+    ef: HashMap<(u8, usize, usize), Vec<f32>>,
 }
 
 impl<'a> Executor<'a> {
+    /// Build an executor over `dg` with empty frames and a cold cache.
     pub fn new(g: &'a Graph, dg: &'a DistGraph, model: &'a ModelConfig) -> Executor<'a> {
         let frames = (0..dg.p()).map(|_| Frame::new()).collect();
         Executor {
@@ -88,6 +109,7 @@ impl<'a> Executor<'a> {
             cache: TensorCache::new(),
             profile: StageProfile::new(),
             leaky_slope: 0.2,
+            ef: HashMap::new(),
         }
     }
 
@@ -190,22 +212,36 @@ impl<'a> Executor<'a> {
 
     /// master→mirror sync of `n^k` rows needed by remote Gathers, walking
     /// the precomputed route table: one message per master↔mirror
-    /// partition pair carrying all its rows, zero route derivation.
+    /// partition pair carrying all its rows, zero route derivation. When
+    /// a lossy wire codec is installed the freshly copied mirror rows are
+    /// quantized in place through a per-slot error-feedback buffer, so
+    /// mirrors see exactly what the wire would have delivered.
     fn stage_sync_values(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
         let d = self.dim(k);
-        let bytes = (d * std::mem::size_of::<f32>()) as u64;
+        let wire = sim.wire().filter(|w| w.route_lossy()).cloned();
         for q in 0..self.dg.p() {
             let rt = &plan.comm.sync[k][q];
             if rt.is_empty() {
                 continue;
             }
             let mut n = self.frames[q].take("n", k).unwrap();
+            let mut ef_buf = wire
+                .as_ref()
+                .map(|_| route_ef(&mut self.ef, (EF_SYNC, k, q), rt.len() * d));
+            let mut off = 0;
             for (mq, local, remote) in rt.groups() {
                 let src = self.frames[mq].get("n", k).unwrap();
                 for (&lid, &mlid) in local.iter().zip(remote) {
                     n.row_mut(lid as usize).copy_from_slice(src.row(mlid as usize));
                 }
-                sim.send(mq, q, local.len() as u64 * bytes);
+                if let Some(ef) = ef_buf.as_mut() {
+                    let w = wire.as_ref().unwrap();
+                    for &lid in local {
+                        w.codec_row_ef(n.row_mut(lid as usize), &mut ef[off..off + d]);
+                        off += d;
+                    }
+                }
+                send_payload(sim, mq, q, local.len() as u64, d as u64);
             }
             self.frames[q].insert("n", k, n);
         }
@@ -271,24 +307,49 @@ impl<'a> Executor<'a> {
 
     /// Sum: return mirror partial sums to their masters along the
     /// precomputed `partial` routes (one frame borrow per pair, no row
-    /// copies, no route derivation).
+    /// copies, no route derivation). Under a lossy wire codec each
+    /// partial row passes through a scratch buffer where it is quantized
+    /// (with error feedback) before accumulating into the master, so the
+    /// stored mirror activations stay pristine for the backward.
     fn stage_combine(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
         let d = self.dim(k);
-        let bytes = (d * std::mem::size_of::<f32>()) as u64;
+        let wire = sim.wire().filter(|w| w.route_lossy()).cloned();
+        let mut tmp = vec![0.0f32; d];
         for q in 0..self.dg.p() {
             let rt = &plan.comm.partial[k][q];
+            if rt.is_empty() {
+                continue;
+            }
+            let mut ef_buf = wire
+                .as_ref()
+                .map(|_| route_ef(&mut self.ef, (EF_SUM, k, q), rt.len() * d));
+            let mut off = 0;
             for (mq, local, remote) in rt.groups() {
                 let (fq, fmq) = two_frames(&mut self.frames, q, mq);
                 let acc = fq.get("acc", k).unwrap();
                 let macc = fmq.get_mut("acc", k).unwrap();
                 for (&lid, &mlid) in local.iter().zip(remote) {
                     let src = acc.row(lid as usize);
-                    for (a, &b) in macc.row_mut(mlid as usize).iter_mut().zip(src) {
-                        *a += b;
+                    let dst = macc.row_mut(mlid as usize);
+                    match ef_buf.as_mut() {
+                        None => {
+                            for (a, &b) in dst.iter_mut().zip(src) {
+                                *a += b;
+                            }
+                        }
+                        Some(ef) => {
+                            tmp.copy_from_slice(src);
+                            let w = wire.as_ref().unwrap();
+                            w.codec_row_ef(&mut tmp, &mut ef[off..off + d]);
+                            off += d;
+                            for (a, &b) in dst.iter_mut().zip(&tmp) {
+                                *a += b;
+                            }
+                        }
                     }
                 }
                 add_flops(local.len() as u64 * d as u64);
-                sim.send(q, mq, local.len() as u64 * bytes);
+                send_payload(sim, q, mq, local.len() as u64, d as u64);
             }
         }
         sim.superstep();
@@ -470,22 +531,35 @@ impl<'a> Executor<'a> {
     }
 
     /// Sync `gM` to mirror destinations (reverse of the Sum combine): the
-    /// `partial` route read in the master→mirror direction.
+    /// `partial` route read in the master→mirror direction. Lossy wire
+    /// codecs quantize the copied rows in place, mirroring the forward
+    /// value sync.
     fn stage_bwd_sync(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
         let d = self.dim(k);
-        let bytes = (d * std::mem::size_of::<f32>()) as u64;
+        let wire = sim.wire().filter(|w| w.route_lossy()).cloned();
         for q in 0..self.dg.p() {
             let rt = &plan.comm.partial[k][q];
             if rt.is_empty() {
                 continue;
             }
             let mut gm = self.frames[q].take("gM", k).unwrap();
+            let mut ef_buf = wire
+                .as_ref()
+                .map(|_| route_ef(&mut self.ef, (EF_BWD_SYNC, k, q), rt.len() * d));
+            let mut off = 0;
             for (mq, local, remote) in rt.groups() {
                 let src = self.frames[mq].get("gM", k).unwrap();
                 for (&lid, &mlid) in local.iter().zip(remote) {
                     gm.row_mut(lid as usize).copy_from_slice(src.row(mlid as usize));
                 }
-                sim.send(mq, q, local.len() as u64 * bytes);
+                if let Some(ef) = ef_buf.as_mut() {
+                    let w = wire.as_ref().unwrap();
+                    for &lid in local {
+                        w.codec_row_ef(gm.row_mut(lid as usize), &mut ef[off..off + d]);
+                        off += d;
+                    }
+                }
+                send_payload(sim, mq, q, local.len() as u64, d as u64);
             }
             self.frames[q].insert("gM", k, gm);
         }
@@ -566,21 +640,43 @@ impl<'a> Executor<'a> {
     /// for GAT-E, whose Gather also reads destination projections).
     fn stage_bwd_combine(&mut self, k: usize, plan: &ActivePlan, sim: &mut ClusterSim) {
         let d = self.dim(k);
-        let bytes = (d * std::mem::size_of::<f32>()) as u64;
+        let wire = sim.wire().filter(|w| w.route_lossy()).cloned();
+        let mut tmp = vec![0.0f32; d];
         for q in 0..self.dg.p() {
             let rt = plan.comm.grad(k, q);
+            if rt.is_empty() {
+                continue;
+            }
+            let mut ef_buf = wire
+                .as_ref()
+                .map(|_| route_ef(&mut self.ef, (EF_BWD_SUM, k, q), rt.len() * d));
+            let mut off = 0;
             for (mq, local, remote) in rt.groups() {
                 let (fq, fmq) = two_frames(&mut self.frames, q, mq);
                 let gn = fq.get("gn", k).unwrap();
                 let mgn = fmq.get_mut("gn", k).unwrap();
                 for (&lid, &mlid) in local.iter().zip(remote) {
                     let src = gn.row(lid as usize);
-                    for (a, &b) in mgn.row_mut(mlid as usize).iter_mut().zip(src) {
-                        *a += b;
+                    let dst = mgn.row_mut(mlid as usize);
+                    match ef_buf.as_mut() {
+                        None => {
+                            for (a, &b) in dst.iter_mut().zip(src) {
+                                *a += b;
+                            }
+                        }
+                        Some(ef) => {
+                            tmp.copy_from_slice(src);
+                            let w = wire.as_ref().unwrap();
+                            w.codec_row_ef(&mut tmp, &mut ef[off..off + d]);
+                            off += d;
+                            for (a, &b) in dst.iter_mut().zip(&tmp) {
+                                *a += b;
+                            }
+                        }
                     }
                 }
                 add_flops(local.len() as u64 * d as u64);
-                sim.send(q, mq, local.len() as u64 * bytes);
+                send_payload(sim, q, mq, local.len() as u64, d as u64);
             }
         }
         sim.superstep();
@@ -684,8 +780,14 @@ impl<'a> Executor<'a> {
         }
     }
 
-    /// Reduce: aggregate per-partition gradients (ring all-reduce traffic
-    /// accounted) into a single gradient set.
+    /// Reduce: aggregate per-partition gradients into a single gradient
+    /// set. Traffic follows the installed [`crate::cluster::WirePlan`]:
+    /// a flat ring all-reduce by default; with `comm_hosts > 1` each
+    /// host reduces member↔leader locally (intra-host links) before the
+    /// leaders run a cross-host ring (inter-host links), and lossy
+    /// codecs / top-k shrink the modeled payload. The numeric
+    /// accumulation is identical in every case — partition-order
+    /// summation — so parameters stay bitwise independent of topology.
     pub fn reduce(
         &mut self,
         grads: Vec<ModelParams>,
@@ -694,9 +796,40 @@ impl<'a> Executor<'a> {
         let t_prof = std::time::Instant::now();
         let p = grads.len();
         let bytes = grads[0].bytes() as u64;
-        // Ring all-reduce: each worker ships ~2× the parameter bytes.
-        for w in 0..p {
-            sim.send(w, (w + 1) % p, 2 * bytes);
+        match sim.wire().cloned() {
+            None => {
+                // Ring all-reduce: each worker ships ~2× the parameter bytes.
+                for w in 0..p {
+                    sim.send(w, (w + 1) % p, 2 * bytes);
+                }
+            }
+            Some(wp) => {
+                let enc = wp.grad_bytes(grads[0].numel() as u64);
+                let hosts = wp.hosts.min(p.max(1)).max(1);
+                if hosts > 1 {
+                    // Members ship their block up to the host leader and
+                    // receive the reduced block back — intra-host links.
+                    for w in 0..p {
+                        let leader = wp.leader_of(w, p);
+                        if leader != w {
+                            sim.send_coded(w, leader, bytes, enc);
+                            sim.send_coded(leader, w, bytes, enc);
+                        }
+                    }
+                    // Leaders ring-reduce across hosts — inter-host, ~2×.
+                    for h in 0..hosts {
+                        let l = wp.host_leader(h, p);
+                        let next = wp.host_leader((h + 1) % hosts, p);
+                        if l != next {
+                            sim.send_coded(l, next, 2 * bytes, 2 * enc);
+                        }
+                    }
+                } else {
+                    for w in 0..p {
+                        sim.send_coded(w, (w + 1) % p, 2 * bytes, 2 * enc);
+                    }
+                }
+            }
         }
         let mut total = grads[0].clone();
         for gq in grads.iter().skip(1) {
@@ -996,6 +1129,34 @@ fn fork_backends(be: &dyn StageBackend, p: usize) -> Option<Vec<Box<dyn StageBac
         forks.push(be.fork()?);
     }
     Some(forks)
+}
+
+/// Ship one route payload: raw f32 width through the legacy path when no
+/// wire plan is installed (byte-identical to the seed accounting), or the
+/// codec's wire width — with payload/saved-bytes stats — when one is.
+fn send_payload(sim: &mut ClusterSim, from: usize, to: usize, rows: u64, d: u64) {
+    let raw = rows * d * std::mem::size_of::<f32>() as u64;
+    let enc = match sim.wire() {
+        Some(w) => w.route_bytes(rows, d),
+        None => raw,
+    };
+    sim.send_coded(from, to, raw, enc);
+}
+
+/// Fetch (or lazily create) the error-feedback buffer for one route
+/// stream, resetting it to zeros if the route length changed (the active
+/// plan switched, so slots no longer line up).
+fn route_ef(
+    map: &mut HashMap<(u8, usize, usize), Vec<f32>>,
+    key: (u8, usize, usize),
+    len: usize,
+) -> &mut Vec<f32> {
+    let buf = map.entry(key).or_default();
+    if buf.len() != len {
+        buf.clear();
+        buf.resize(len, 0.0);
+    }
+    buf
 }
 
 /// Mutable access to two distinct frames (sync/combine move rows between

@@ -9,42 +9,54 @@ use std::fmt;
 /// dims and names — all well within f64's exact-integer range).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — deterministic serialization).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
             _ => None,
         }
     }
+    /// The number as usize, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
             _ => None,
         }
     }
+    /// The map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
             _ => None,
         }
     }
+    /// `Obj` field lookup (`None` for other variants or missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|m| m.get(key))
     }
@@ -61,6 +73,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Build an `Obj` from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
@@ -83,8 +96,11 @@ impl From<usize> for Json {
 }
 
 #[derive(Debug, Clone)]
+/// Parse failure: byte position + message.
 pub struct JsonError {
+    /// Byte offset the parser stopped at.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

@@ -32,6 +32,7 @@ pub fn hash64_pair(a: u64, b: u64) -> u64 {
 pub struct Crc32(u32);
 
 impl Crc32 {
+    /// Start a fresh checksum.
     pub fn new() -> Crc32 {
         Crc32(0xFFFF_FFFF)
     }

@@ -137,6 +137,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next raw 64-bit draw from this stream.
     pub fn next_u64(&mut self) -> u64 {
         if self.have {
             self.have = false;

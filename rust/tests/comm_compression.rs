@@ -1,0 +1,263 @@
+//! Communication-compression suite (wire codecs, error feedback,
+//! top-k sparsification, hierarchical reduction).
+//!
+//! The contract under test (see the `cluster` module docs):
+//!
+//! * `comm_codec = exact` — with or without a host topology — is
+//!   **parameter-bitwise-identical** to the no-wire golden baseline;
+//!   only the modeled clock and traffic accounting move.
+//! * Lossy codecs (`f16`, `int8`, top-k) change numerics
+//!   *deterministically per seed*, ship strictly fewer bytes, and stay
+//!   within 1% absolute test accuracy at matched steps (the
+//!   error-feedback accumulators carry the quantization residual into
+//!   the next payload instead of losing it).
+//! * The codec primitives obey their error bounds: f16 round trips are
+//!   relatively bounded, int8 round trips are bounded by half the
+//!   quantization step, and the per-slot error-feedback residual never
+//!   drifts unbounded.
+
+use graphtheta::cluster::wire::{f16_round_trip, int8_round_trip, topk_indices};
+use graphtheta::config::{Codec, ModelConfig, StrategyKind, TrainConfig, WirePlan};
+use graphtheta::engine::trainer::{TrainReport, Trainer};
+use graphtheta::graph::{gen, Graph};
+use graphtheta::util::qcheck::{qcheck, qcheck_cases};
+
+fn base_cfg(g: &Graph, strategy: StrategyKind, epochs: usize) -> TrainConfig {
+    TrainConfig::builder()
+        .model(ModelConfig::gcn(g.feat_dim, 16, g.num_classes, 2))
+        .strategy(strategy)
+        .epochs(epochs)
+        .eval_every(5)
+        .lr(0.05)
+        .seed(7)
+        .build()
+}
+
+fn run_with_wire(g: &Graph, strategy: StrategyKind, epochs: usize, wire: WirePlan) -> TrainReport {
+    let mut cfg = base_cfg(g, strategy, epochs);
+    cfg.wire = wire;
+    let mut t = Trainer::new(g, cfg, 4).unwrap();
+    t.run().unwrap()
+}
+
+fn hier_exact() -> WirePlan {
+    WirePlan { hosts: 2, bw_intra: 2e9, bw_inter: 1e8, lat_inter: 2e-4, ..WirePlan::default() }
+}
+
+#[test]
+fn exact_wire_with_hierarchy_is_parameter_bitwise_identical() {
+    let g = gen::citation_like("cora", 7);
+    for strategy in [StrategyKind::GlobalBatch, StrategyKind::mini(0.3)] {
+        let base = run_with_wire(&g, strategy.clone(), 8, WirePlan::default());
+        let wired = run_with_wire(&g, strategy.clone(), 8, hier_exact());
+
+        // Numerics: bit-identical.
+        assert_eq!(base.losses, wired.losses, "exact wire changed the loss series");
+        assert_eq!(
+            base.latest_param_l2.to_bits(),
+            wired.latest_param_l2.to_bits(),
+            "exact wire changed the parameter trajectory"
+        );
+        assert_eq!(
+            base.test_accuracy.to_bits(),
+            wired.test_accuracy.to_bits(),
+            "exact wire changed test accuracy"
+        );
+        assert_eq!(base.total_flops, wired.total_flops, "exact wire changed FLOP accounting");
+        // The exact codec ships full-width payloads and the hierarchical
+        // pattern conserves total reduce volume (2·B per worker), so the
+        // byte totals agree too.
+        assert_eq!(base.total_bytes, wired.total_bytes, "exact wire changed total bytes");
+
+        // Accounting: the wire plan reports, and distinct inter-host
+        // terms move the modeled clock.
+        assert!(base.comm.is_none(), "inactive wire must not report comm stats");
+        let comm = wired.comm.expect("active wire must report comm stats");
+        assert!(comm.payload_bytes > 0, "hierarchical links recorded no payload");
+        assert_eq!(comm.saved_bytes, 0, "exact codec saved bytes");
+        assert_ne!(
+            base.sim_total.to_bits(),
+            wired.sim_total.to_bits(),
+            "distinct intra/inter-host terms should move the modeled clock"
+        );
+    }
+}
+
+#[test]
+fn lossy_codecs_cut_bytes_within_one_percent_accuracy() {
+    let g = gen::citation_like("cora", 7);
+    let epochs = 12;
+    let base = run_with_wire(&g, StrategyKind::GlobalBatch, epochs, WirePlan::default());
+
+    // Fixed spot-checks for the table configurations…
+    let named = [
+        ("f16", WirePlan { codec: Codec::F16, ..WirePlan::default() }),
+        ("int8", WirePlan { codec: Codec::Int8, ..WirePlan::default() }),
+        ("f16+topk", WirePlan { codec: Codec::F16, topk: 0.25, ..WirePlan::default() }),
+    ];
+    for (name, wire) in named {
+        let r = run_with_wire(&g, StrategyKind::GlobalBatch, epochs, wire);
+        let comm = r.comm.expect("lossy wire must report comm stats");
+        assert!(comm.saved_bytes > 0, "{name}: codec saved no bytes");
+        assert!(
+            r.total_bytes < base.total_bytes,
+            "{name}: lossy codec did not lower traffic ({} vs {})",
+            r.total_bytes,
+            base.total_bytes
+        );
+        assert!(
+            (r.test_accuracy - base.test_accuracy).abs() <= 0.01,
+            "{name}: accuracy drifted past 1% ({:.4} vs {:.4})",
+            r.test_accuracy,
+            base.test_accuracy
+        );
+    }
+
+    // …and a property over random lossy plans (codec × top-k × hosts).
+    qcheck_cases(
+        "random lossy wire plans stay within 1% accuracy at fewer bytes",
+        4,
+        |rng| {
+            let codec = if rng.f64() < 0.5 { Codec::F16 } else { Codec::Int8 };
+            let topk = [0.0, 0.25, 0.5][rng.below(3)];
+            let hosts = [1usize, 2, 4][rng.below(3)];
+            WirePlan { codec, topk, hosts, ..WirePlan::default() }
+        },
+        |wire| {
+            let r = run_with_wire(&g, StrategyKind::GlobalBatch, epochs, wire.clone());
+            if r.total_bytes >= base.total_bytes {
+                return Err(format!(
+                    "traffic not reduced: {} vs {}",
+                    r.total_bytes, base.total_bytes
+                ));
+            }
+            let drift = (r.test_accuracy - base.test_accuracy).abs();
+            if drift > 0.01 {
+                return Err(format!("accuracy drift {drift:.4} > 1%"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lossy_runs_are_deterministic_per_seed() {
+    let g = gen::citation_like("cora", 7);
+    let wire = WirePlan { codec: Codec::Int8, topk: 0.25, ..hier_exact() };
+    let a = run_with_wire(&g, StrategyKind::GlobalBatch, 8, wire.clone());
+    let b = run_with_wire(&g, StrategyKind::GlobalBatch, 8, wire);
+    assert_eq!(a.losses, b.losses, "lossy loss series not deterministic");
+    assert_eq!(
+        a.latest_param_l2.to_bits(),
+        b.latest_param_l2.to_bits(),
+        "lossy parameter trajectory not deterministic"
+    );
+    assert_eq!(a.sim_total.to_bits(), b.sim_total.to_bits(), "lossy clock not deterministic");
+    assert_eq!(a.total_bytes, b.total_bytes, "lossy traffic not deterministic");
+    let (ca, cb) = (a.comm.unwrap(), b.comm.unwrap());
+    assert_eq!(ca.payload_bytes, cb.payload_bytes, "payload accounting not deterministic");
+    assert_eq!(ca.saved_bytes, cb.saved_bytes, "savings accounting not deterministic");
+}
+
+#[test]
+fn f16_round_trip_error_is_relatively_bounded() {
+    qcheck(
+        "f16 round trip within 2^-11 relative (+ subnormal absolute slack)",
+        |rng| (0..64).map(|_| rng.range_f32(-64.0, 64.0)).collect::<Vec<f32>>(),
+        |xs| {
+            for &x in xs {
+                let q = f16_round_trip(x);
+                let err = (q - x).abs();
+                let bound = x.abs() / 2048.0 + 6.0e-8;
+                if err > bound {
+                    return Err(format!("x = {x}: err {err} > bound {bound}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn int8_round_trip_error_is_bounded_by_half_a_step() {
+    qcheck(
+        "int8 round trip within s/2 of the input",
+        |rng| (0..48).map(|_| rng.range_f32(-10.0, 10.0)).collect::<Vec<f32>>(),
+        |xs| {
+            let max = xs.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let mut q = xs.clone();
+            int8_round_trip(&mut q);
+            let half_step = max / 254.0 + 1e-6;
+            for (x, y) in xs.iter().zip(&q) {
+                if (x - y).abs() > half_step {
+                    return Err(format!("x = {x} → {y}: err beyond half step {half_step}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn error_feedback_residual_never_drifts_unbounded() {
+    for codec in [Codec::F16, Codec::Int8] {
+        qcheck_cases(
+            "EF residual stays bounded under repeated quantization",
+            16,
+            |rng| (0..32).map(|_| rng.range_f32(-2.0, 2.0)).collect::<Vec<f32>>(),
+            |base| {
+                let plan = WirePlan { codec, ..WirePlan::default() };
+                let bound = base.iter().fold(0.0f32, |m, v| m.max(v.abs())) + 1e-6;
+                let mut ef = vec![0.0f32; base.len()];
+                let mut row = vec![0.0f32; base.len()];
+                for step in 0..2000 {
+                    row.copy_from_slice(base);
+                    plan.codec_row_ef(&mut row, &mut ef);
+                    for &e in &ef {
+                        if !(e.abs() <= bound) {
+                            return Err(format!(
+                                "{:?} step {step}: residual {e} exceeds {bound}",
+                                codec
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn topk_selection_is_deterministic_and_keeps_largest_magnitudes() {
+    qcheck(
+        "top-k keeps the k largest magnitudes, identically across calls",
+        |rng| (0..40).map(|_| rng.range_f32(-5.0, 5.0)).collect::<Vec<f32>>(),
+        |xs| {
+            let plan = WirePlan { topk: 0.25, ..WirePlan::default() };
+            let k = (0.25f64 * xs.len() as f64).ceil() as usize;
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            plan.quantize_slice(&mut a);
+            plan.quantize_slice(&mut b);
+            if a != b {
+                return Err("two identical quantize calls disagreed".into());
+            }
+            let survivors = a.iter().filter(|v| **v != 0.0).count();
+            if survivors > k {
+                return Err(format!("{survivors} survivors, expected ≤ {k}"));
+            }
+            // Every survivor must outrank (or tie) every zeroed entry.
+            let perm = topk_indices(xs, k);
+            let cutoff = xs[perm[k - 1] as usize].abs();
+            for (i, v) in a.iter().enumerate() {
+                if *v != 0.0 && xs[i].abs() < cutoff && xs[i] != 0.0 {
+                    // A kept entry strictly below the cutoff means the
+                    // selection was not the k largest.
+                    return Err(format!("kept {} below cutoff {cutoff}", xs[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
