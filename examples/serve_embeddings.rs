@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
     println!("|-------|-------------------|----------------------|----------------|");
     for &bs in &batch_sizes {
         let reqs = 20usize;
+        // detlint: allow(wall-clock): real serving latency column, printed beside the modeled one
         let t0 = std::time::Instant::now();
         let sim0 = sim.clock;
         for _ in 0..reqs {

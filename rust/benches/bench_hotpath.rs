@@ -424,6 +424,29 @@ mod head_only {
             st.replay_secs * 1e3
         );
     }
+
+    /// detlint full-tree scan (ISSUE 10): the static-analysis pass runs
+    /// as a blocking CI step, so it must stay fast — target < 2 s for the
+    /// whole tree — and the tree it scans must be clean.
+    pub fn detlint_scan(results: &mut Results, smoke: bool) {
+        let repo = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ sits under the repo root")
+            .to_path_buf();
+        let mut report = None;
+        bench(results, "detlint full-tree scan", if smoke { 1 } else { 5 }, || {
+            report = Some(graphtheta::lint::lint_tree(&repo).expect("tree scan"));
+        });
+        let report = report.unwrap();
+        assert!(
+            report.findings.is_empty(),
+            "determinism contract violations:\n{}",
+            report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+        );
+        let row = results.last().unwrap();
+        assert!(row.2 < 2_000.0, "detlint scan took {:.0} ms (target < 2 s)", row.2);
+        println!("  ↳ {} files scanned, clean", report.files);
+    }
 }
 
 /// Seed-compat stubs: the baseline library predates these subsystems.
@@ -467,6 +490,10 @@ mod head_only {
 
     pub fn async_rows(_results: &mut Results, _smoke: bool, _g: &Graph) {
         println!("[seed-compat: async rows skipped]");
+    }
+
+    pub fn detlint_scan(_results: &mut Results, _smoke: bool) {
+        println!("[seed-compat: detlint scan skipped]");
     }
 }
 
@@ -606,6 +633,8 @@ fn main() {
     head_only::pipelined_sweep(&mut results, smoke, &g);
     println!();
     head_only::async_rows(&mut results, smoke, &g);
+    println!();
+    head_only::detlint_scan(&mut results, smoke);
 
     // Smoke numbers are single-shot noise — never let them into the
     // checked-in trajectory file.

@@ -1,0 +1,39 @@
+//! `detlint` — the determinism-contract lint binary.
+//!
+//! Run as `cargo run --bin detlint` (CI runs it `--release`). Walks
+//! `rust/src`, `rust/tests`, `rust/benches` and `examples/`, applies the
+//! rules in [`graphtheta::lint`], prints each finding as
+//! `file:line · rule · message`, and exits non-zero if anything fired.
+//! The contract itself is written down in `docs/DETERMINISM.md`.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    // The crate manifest lives at <repo>/rust; the scan roots sit one
+    // level up (examples/ and docs/ are at the repository root).
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let repo = manifest.parent().unwrap_or(manifest);
+    match graphtheta::lint::lint_tree(repo) {
+        Ok(report) => {
+            for f in &report.findings {
+                println!("{f}");
+            }
+            if report.findings.is_empty() {
+                println!("detlint: clean ({} files scanned)", report.files);
+                ExitCode::SUCCESS
+            } else {
+                println!(
+                    "detlint: {} finding(s) across {} files scanned",
+                    report.findings.len(),
+                    report.files
+                );
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("detlint: scan failed: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

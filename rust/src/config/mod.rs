@@ -599,6 +599,7 @@ impl TrainConfigBuilder {
     /// Finalize, filling every unset knob with its default.
     pub fn build(self) -> TrainConfig {
         TrainConfig {
+            // detlint: allow(panic-discipline): builder misuse is a programmer error; kv parsing goes through config_from_kv, which supplies the model
             model: self.model.expect("model config required"),
             strategy: self.strategy.unwrap_or(StrategyKind::GlobalBatch),
             sampling: self.sampling.unwrap_or(SamplingConfig::None),
@@ -1143,5 +1144,70 @@ mod tests {
         let m = ModelConfig::gat_e(72, 32, 2, 2, 57).binary();
         assert!(m.binary);
         assert_eq!(m.out_dim, 1);
+    }
+
+    /// Every key in `config_from_kv`'s `known` list parses and lands in the
+    /// built config. `detlint`'s kv-doc-sync rule requires each known key to
+    /// appear both in `docs/CONFIG.md` and in a test; this test is the
+    /// canonical reference for all of them (two conf strings, because
+    /// `batch_frac`/`fanout` ride the mini-batch strategy and `max_staleness`
+    /// requires `update_mode = async`).
+    #[test]
+    fn every_known_key_parses_and_applies() {
+        let text = "model = gcn\nhidden = 24\nlayers = 3\nstrategy = cluster\n\
+                    cluster_frac = 0.2\nboundary_hops = 1\noptimizer = adamw\nlr = 0.05\n\
+                    weight_decay = 0.001\nepochs = 7\neval_every = 2\nseed = 9\n\
+                    backend = pjrt\nbinary = true\nthreads = 2\npipeline_width = 2\n\
+                    accum_window = 3\nupdate_mode = async\nmax_staleness = 4\n\
+                    schedule_policy = locality\ncheckpoint_every = 5\nfail_at = 6:1\n\
+                    quorum = 2\nrejoin_at = 8:1\ncorrupt_at = 4\nsuspect_at = 3:0\n\
+                    net_seed = 11\nnet_loss = 0.1\nnet_timeout = 0.002\n\
+                    net_backoff_base = 0.001\nnet_backoff_cap = 0.016\nnet_retries = 5\n\
+                    net_slowdown = 1:2.0\nnet_spikes = 2:6:3.0\nnet_straggler_factor = 1.5\n\
+                    mem_seed = 13\nmem_budget_mb = 1.5\nmem_budget_overrides = 1:0.75\n\
+                    mem_spike_windows = 2:6:1.5\nmem_evict_policy = none\ncomm_codec = f16\n\
+                    comm_topk = 0.5\ncomm_hosts = 2\ncomm_bw_intra = 2000000000\n\
+                    comm_bw_inter = 100000000\ncomm_lat_intra = 0.000001\n\
+                    comm_lat_inter = 0.0005\n";
+        let c = config_from_kv(&parse_kv(text).unwrap(), 8, 2, 0).unwrap();
+        assert_eq!(c.model.kind, ModelKind::Gcn);
+        assert_eq!((c.model.hidden, c.model.layers), (24, 3));
+        assert!(c.model.binary, "binary = true flips the head");
+        assert_eq!(c.model.out_dim, 1);
+        assert_eq!(c.strategy, StrategyKind::cluster(0.2, 1));
+        assert_eq!(c.optimizer, OptimizerKind::AdamW);
+        assert!((c.lr - 0.05).abs() < 1e-9);
+        assert!((c.weight_decay - 0.001).abs() < 1e-9);
+        assert_eq!((c.epochs, c.eval_every, c.seed), (7, 2, 9));
+        assert!(c.use_pjrt, "backend = pjrt sets the flag");
+        assert_eq!((c.threads, c.pipeline_width, c.accum_window), (2, 2, 3));
+        assert_eq!(c.update_mode, UpdateMode::Asynchronous { max_staleness: 4 });
+        assert_eq!(c.schedule_policy, SchedulePolicy::LocalityAware);
+        assert_eq!(c.fault.checkpoint_every, 5);
+        assert_eq!(c.fault.fail_at, vec![(6, 1)]);
+        assert_eq!(c.fault.quorum, 2);
+        assert_eq!(c.fault.rejoin_at, vec![(8, 1)]);
+        assert_eq!(c.fault.corrupt_at, vec![4]);
+        assert_eq!(c.fault.suspect_at, vec![(3, 0)]);
+        assert_eq!((c.net.seed, c.net.max_retries), (11, 5));
+        assert_eq!((c.net.loss, c.net.timeout), (0.1, 0.002));
+        assert_eq!((c.net.backoff_base, c.net.backoff_cap), (0.001, 0.016));
+        assert_eq!(c.net.slowdown, vec![(1, 2.0)]);
+        assert_eq!(c.net.spikes, vec![(2, 6, 3.0)]);
+        assert_eq!(c.net.straggler_factor, 1.5);
+        assert_eq!((c.mem.seed, c.mem.budget_mb), (13, 1.5));
+        assert_eq!(c.mem.overrides, vec![(1, 0.75)]);
+        assert_eq!(c.mem.spikes, vec![(2, 6, 1.5)]);
+        assert_eq!(c.mem.evict, EvictPolicy::None);
+        assert_eq!(c.wire.codec, Codec::F16);
+        assert_eq!((c.wire.topk, c.wire.hosts), (0.5, 2));
+        assert_eq!((c.wire.bw_intra, c.wire.bw_inter), (2e9, 1e8));
+        assert_eq!((c.wire.lat_intra, c.wire.lat_inter), (1e-6, 5e-4));
+        // Strategy-gated keys: batch_frac and fanout ride mini-batch.
+        let text = "strategy = mini\nbatch_frac = 0.125\nfanout = 10,5\n";
+        let c = config_from_kv(&parse_kv(text).unwrap(), 8, 2, 0).unwrap();
+        assert_eq!(c.strategy, StrategyKind::mini(0.125));
+        let want = SamplingConfig::Neighbor { fanout: [10, 5, usize::MAX, usize::MAX] };
+        assert_eq!(c.sampling, want);
     }
 }

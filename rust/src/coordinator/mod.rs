@@ -277,6 +277,7 @@ impl<'a> Coordinator<'a> {
         sim: &mut ClusterSim,
         backend: &mut dyn StageBackend,
     ) -> Result<PipelineReport> {
+        // detlint: allow(wall-clock): wall-time half of the report; the modeled clock is sim.clock
         let t_wall = std::time::Instant::now();
         let cfg = self.cfg.clone();
         let width = cfg.pipeline_width.max(1);
@@ -596,6 +597,7 @@ impl<'a> Coordinator<'a> {
         let UpdateMode::Asynchronous { .. } = self.cfg.update_mode else {
             anyhow::bail!("run_async requires UpdateMode::Asynchronous");
         };
+        // detlint: allow(wall-clock): wall-time half of the report; the modeled clock is sim.clock
         let t_wall = std::time::Instant::now();
         let cfg = self.cfg.clone();
         let width = cfg.pipeline_width.max(1);

@@ -483,6 +483,7 @@ impl FaultController {
                     let to = (0..p)
                         .filter(|&w| self.alive[w])
                         .min_by_key(|&w| (load[w], w))
+                        // detlint: allow(panic-discipline): quorum/min_survivors guards above ensure a live worker
                         .expect("quorum/survivor guards keep at least one worker");
                     load[to] += 1;
                     sim.reassign(part, to);
@@ -520,6 +521,7 @@ impl FaultController {
         // recovery barrier superstep are the modeled restore cost.
         let bytes = snap.bytes() as u64;
         self.master.broadcast(Command::Restore { step: restore }, sim);
+        // detlint: allow(panic-discipline): the quorum abort above guarantees at least one survivor
         let holder = (0..p).find(|&w| self.alive[w]).expect("a survivor exists");
         for w in 0..p {
             if self.alive[w] && w != holder {

@@ -177,6 +177,7 @@ impl<'a> Trainer<'a> {
 
     /// Run the full training loop.
     pub fn run(&mut self) -> Result<TrainReport> {
+        // detlint: allow(wall-clock): wall-time half of the report; the modeled clock is sim.clock
         let t_wall = std::time::Instant::now();
         let cfg = self.cfg.clone();
         let model = cfg.model.clone();

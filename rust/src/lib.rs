@@ -50,6 +50,9 @@
 //! Data flows storage → tgar → engine → coordinator → cluster:
 //!
 //! * [`util`] — xorshift/Philox RNG streams, qcheck property harness.
+//! * [`lint`] — `detlint`, the static-analysis pass enforcing the
+//!   determinism contract (`docs/DETERMINISM.md`) as machine-checkable
+//!   rules; run via `cargo run --bin detlint`.
 //! * [`metrics`] — run statistics ([`metrics::CommStats`],
 //!   [`metrics::MemStats`], …) and markdown table rendering.
 //! * [`config`] — typed [`config::TrainConfig`] plus the `key = value`
@@ -85,6 +88,7 @@
 #![warn(missing_docs)]
 
 pub mod util;
+pub mod lint;
 pub mod metrics;
 pub mod config;
 pub mod tensor;

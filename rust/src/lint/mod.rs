@@ -1,0 +1,1164 @@
+//! `detlint` — a project-specific static-analysis pass that enforces the
+//! determinism contract (`docs/DETERMINISM.md`) as machine-checkable rules.
+//!
+//! Every guarantee this reproduction makes — bitwise golden oracles for the
+//! NN-TGAR hot path, parameter-identical recovery under faults, the 1%
+//! accuracy pins for lossy codecs — rests on runs being exactly reproducible
+//! from `(config, seed)`. The contract used to live in ROADMAP prose and
+//! relational tests only; nothing stopped the next change from iterating a
+//! `HashMap` in a numeric path or reading the wall clock where the modeled
+//! clock is authoritative. This module is the hand-rolled line/token scanner
+//! (in the spirit of [`crate::util::qcheck`]) that closes that gap. It has
+//! zero dependencies and is driven by the `detlint` binary
+//! (`cargo run --bin detlint`), which walks `rust/src`, `rust/tests`,
+//! `rust/benches` and `examples/` and exits non-zero on any finding.
+//!
+//! ## Rules
+//!
+//! 1. [`Rule::UnorderedIter`] — no iteration over `HashMap`/`HashSet`
+//!    (`.iter()`, `.keys()`, `.values()`, `.drain()`, `for … in &map`, …)
+//!    in non-test code. Hash iteration order is randomized per process, so
+//!    any fold, tie-break or serialization driven by it is nondeterministic
+//!    run-to-run. Order-insensitive sinks that never *iterate* — keyed-slot
+//!    access, `len()`, membership tests — are naturally out of scope; a
+//!    genuinely order-insensitive iteration (e.g. an integer sum, or keys
+//!    collected and then sorted) must carry an allow marker stating why.
+//! 2. [`Rule::WallClock`] — `Instant::now`/`SystemTime` are forbidden in
+//!    modeled-clock code (`rust/src`, `examples/`). The modeled cluster owns
+//!    time; wall-clock reads are blessed only in the [`crate::metrics`]
+//!    stage-profile timer and at explicitly marked wall-time reporting sites.
+//!    Benches measure real elapsed time by design and are exempt.
+//! 3. [`Rule::RngDiscipline`] — randomness flows only through the splittable
+//!    Philox streams: `StreamKey::root/child` and `Rng::new/split/split_next`.
+//!    Struct-literal construction of `Rng`/`StreamKey` outside
+//!    `util/rng.rs`, or any reintroduction of a sequential `fork` (removed
+//!    by PR 7), is a hard error.
+//! 4. [`Rule::KvDocSync`] — every kv key accepted by
+//!    `config::config_from_kv` must be documented in `docs/CONFIG.md` and
+//!    exercised by a test, and every documented key must still exist (stale
+//!    doc keys are errors too).
+//! 5. [`Rule::PanicDiscipline`] — `unwrap()/expect()/panic!` are forbidden
+//!    in the typed-error paths (`engine/fault.rs`, `cluster/*`,
+//!    `config/mod.rs`): those modules promise `FaultError`/`ConfigError`
+//!    results, and a panic there turns a modeled failure into a real one.
+//!
+//! ## Allow markers
+//!
+//! A violation that is deliberate carries a justification marker on the same
+//! line (or on a comment line directly above it):
+//!
+//! ```text
+//! // detlint: allow(unordered-iter): integer sum, order-insensitive
+//! ```
+//!
+//! The reason is mandatory. Markers are themselves checked: a marker with an
+//! unknown rule name, an empty reason, or no matching violation on its
+//! target line is a finding (`allow-marker`), so stale markers cannot
+//! accumulate and every suppression stays justified.
+//!
+//! Test code (`rust/tests`, `#[cfg(test)]` regions) is exempt from rules
+//! 1–3 and 5: tests may use ambient hash order and the wall clock freely,
+//! because nothing numeric in a run depends on them. Fixture files under a
+//! `fixtures/` directory are skipped entirely — they exist to *trip* the
+//! rules (`rust/tests/detlint_fixtures.rs`).
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The lint rules. `Marker` is the meta-rule diagnosing the allow markers
+/// themselves (bad grammar, unknown rule, unused suppression).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// Iteration over a `HashMap`/`HashSet` in non-test code.
+    UnorderedIter,
+    /// `Instant::now`/`SystemTime` outside the blessed profiling wrappers.
+    WallClock,
+    /// `Rng`/`StreamKey` constructed outside the splittable-stream API, or
+    /// a reintroduced sequential `fork`.
+    RngDiscipline,
+    /// kv key drift between `config/mod.rs`, `docs/CONFIG.md` and the tests.
+    KvDocSync,
+    /// `unwrap()/expect()/panic!` in a typed-error path.
+    PanicDiscipline,
+    /// A malformed, unknown-rule, reason-less or unused allow marker.
+    Marker,
+}
+
+impl Rule {
+    /// Stable rule name, as written in allow markers and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::UnorderedIter => "unordered-iter",
+            Rule::WallClock => "wall-clock",
+            Rule::RngDiscipline => "rng-discipline",
+            Rule::KvDocSync => "kv-doc-sync",
+            Rule::PanicDiscipline => "panic-discipline",
+            Rule::Marker => "allow-marker",
+        }
+    }
+
+    /// Parse a marker rule name. `allow-marker` and `kv-doc-sync` are not
+    /// suppressible, so they are not addressable from markers.
+    pub fn from_name(s: &str) -> Option<Rule> {
+        match s {
+            "unordered-iter" => Some(Rule::UnorderedIter),
+            "wall-clock" => Some(Rule::WallClock),
+            "rng-discipline" => Some(Rule::RngDiscipline),
+            "panic-discipline" => Some(Rule::PanicDiscipline),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One lint finding, rendered as `file:line · rule · message`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Repo-relative path with `/` separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The rule that fired.
+    pub rule: Rule,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} · {} · {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// How a file participates in the scan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileKind {
+    /// Library/binary source under `rust/src` — all rules apply.
+    Src,
+    /// Integration tests under `rust/tests` — exempt from per-file rules,
+    /// but their text feeds the kv-key test-reference corpus.
+    Test,
+    /// Benches under `rust/benches` — wall-clock is their job; rules 1 and
+    /// 3 still apply.
+    Bench,
+    /// Examples under `examples/` — modeled-clock code; rules 1–3 apply.
+    Example,
+}
+
+/// Result of a full-tree scan.
+#[derive(Debug)]
+pub struct LintReport {
+    /// All findings, sorted by `(file, line, rule)`.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Source preprocessing: split each line into code and comment, strip string
+// literals from the code half, and mark `#[cfg(test)]` regions.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct SrcLine {
+    /// Code with string/char literals replaced by a single space.
+    code: String,
+    /// Line-comment text (after `//`), if any.
+    comment: String,
+    /// True when the line lies in a `#[cfg(test)]` region.
+    test: bool,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn split_source(text: &str) -> Vec<SrcLine> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        Block(u32),
+        Str,
+        RawStr(u32),
+    }
+    let b: Vec<char> = text.chars().collect();
+    let mut lines: Vec<SrcLine> = Vec::new();
+    let mut cur = SrcLine::default();
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && b.get(i + 1) == Some(&'/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                    st = St::Block(1);
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.code.push(' ');
+                    i += 1;
+                } else if c == 'r' && (i == 0 || !is_ident(b[i - 1])) {
+                    // Possible raw string: r"…" or r#"…"#.
+                    let mut j = i + 1;
+                    let mut hashes = 0u32;
+                    while b.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if b.get(j) == Some(&'"') {
+                        st = St::RawStr(hashes);
+                        cur.code.push(' ');
+                        i = j + 1;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if b.get(i + 1) == Some(&'\\') {
+                        // Escaped char literal: skip to the closing quote.
+                        let mut j = i + 2;
+                        while j < b.len() && b[j] != '\'' {
+                            j += 1;
+                        }
+                        cur.code.push(' ');
+                        i = j + 1;
+                    } else if b.get(i + 2) == Some(&'\'') {
+                        cur.code.push(' ');
+                        i += 3;
+                    } else {
+                        // Lifetime tick.
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '*' && b.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // A backslash-newline continuation must not swallow the
+                    // newline, or line numbers drift.
+                    if b.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut k = 0u32;
+                    while k < h && b.get(j) == Some(&'#') {
+                        k += 1;
+                        j += 1;
+                    }
+                    if k == h {
+                        st = St::Code;
+                        i = j;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    mark_test_regions(&mut lines);
+    lines
+}
+
+/// Mark every line inside a `#[cfg(test)]`-attributed item (tracked by brace
+/// depth, so the trailing `mod tests { … }` of a file is covered exactly).
+fn mark_test_regions(lines: &mut [SrcLine]) {
+    let mut depth: i64 = 0;
+    let mut pending: Option<i64> = None; // depth where a cfg(test) attr waits
+    let mut region: Option<i64> = None; // depth that closes the region
+    for l in lines.iter_mut() {
+        if region.is_some() {
+            l.test = true;
+        }
+        if region.is_none() && l.code.contains("cfg(test") {
+            pending = Some(depth);
+            l.test = true;
+        }
+        for c in l.code.chars() {
+            match c {
+                '{' => {
+                    if region.is_none() && pending == Some(depth) {
+                        region = Some(depth);
+                        pending = None;
+                        l.test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if region == Some(depth) {
+                        region = None;
+                    }
+                }
+                ';' => {
+                    if region.is_none() && pending == Some(depth) {
+                        // Attribute on a braceless item (`use`, type alias).
+                        pending = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Allow markers.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct AllowMarker {
+    rule: Rule,
+    /// 0-based line index of the marker comment.
+    line: usize,
+    /// 0-based line index the marker suppresses.
+    target: usize,
+    used: bool,
+}
+
+fn parse_markers(label: &str, lines: &[SrcLine], findings: &mut Vec<Finding>) -> Vec<AllowMarker> {
+    let mut out = Vec::new();
+    for (idx, l) in lines.iter().enumerate() {
+        if l.test {
+            continue;
+        }
+        let c = l.comment.trim();
+        let Some(rest) = c.strip_prefix("detlint:") else {
+            continue;
+        };
+        let mut bad = |msg: String| {
+            findings.push(Finding {
+                file: label.to_string(),
+                line: idx + 1,
+                rule: Rule::Marker,
+                msg,
+            });
+        };
+        let Some(body) = rest.trim_start().strip_prefix("allow(") else {
+            bad("marker grammar is `allow(<rule>): <reason>`".to_string());
+            continue;
+        };
+        let Some(close) = body.find(')') else {
+            bad("unterminated allow marker (missing `)`)".to_string());
+            continue;
+        };
+        let rule_name = body[..close].trim();
+        let Some(rule) = Rule::from_name(rule_name) else {
+            bad(format!("unknown rule `{rule_name}` in allow marker"));
+            continue;
+        };
+        let Some(reason) = body[close + 1..].trim_start().strip_prefix(':') else {
+            bad(format!("allow marker for `{rule_name}` needs a `: <reason>`"));
+            continue;
+        };
+        if reason.trim().is_empty() {
+            bad(format!("allow marker for `{rule_name}` has an empty reason"));
+            continue;
+        }
+        // A trailing marker suppresses its own line; a standalone comment
+        // marker suppresses the next line carrying code.
+        let target = if !l.code.trim().is_empty() {
+            idx
+        } else {
+            match lines.iter().enumerate().skip(idx + 1).find(|(_, n)| !n.code.trim().is_empty()) {
+                Some((j, _)) => j,
+                None => {
+                    bad("allow marker at end of file suppresses nothing".to_string());
+                    continue;
+                }
+            }
+        };
+        out.push(AllowMarker { rule, line: idx, target, used: false });
+    }
+    out
+}
+
+fn emit(
+    findings: &mut Vec<Finding>,
+    markers: &mut [AllowMarker],
+    label: &str,
+    idx: usize,
+    rule: Rule,
+    msg: String,
+) {
+    for m in markers.iter_mut() {
+        if m.target == idx && m.rule == rule {
+            m.used = true;
+            return;
+        }
+    }
+    findings.push(Finding { file: label.to_string(), line: idx + 1, rule, msg });
+}
+
+// ---------------------------------------------------------------------------
+// Token helpers.
+// ---------------------------------------------------------------------------
+
+/// True when `code[at .. at+len]` is a whole token (not part of an ident).
+fn token_boundary(code: &str, at: usize, len: usize) -> bool {
+    let b = code.as_bytes();
+    let before = at == 0 || !is_ident(b[at - 1] as char);
+    let end = at + len;
+    let after = end >= b.len() || !is_ident(b[end] as char);
+    before && after
+}
+
+/// Trailing identifier of `s` (e.g. the receiver of a method call), looking
+/// through a trailing index expression like `name[q]`. Returns `None` when
+/// the tail is not a plain identifier (call results, literals, …).
+fn trailing_receiver(s: &str) -> Option<String> {
+    let s = s.trim_end();
+    let b = s.as_bytes();
+    let mut i = s.len();
+    while i > 0 && b[i - 1] == b']' {
+        let mut depth = 0i32;
+        while i > 0 {
+            i -= 1;
+            match b[i] {
+                b']' => depth += 1,
+                b'[' => depth -= 1,
+                _ => {}
+            }
+            if depth == 0 {
+                break;
+            }
+        }
+    }
+    let end = i;
+    while i > 0 && is_ident(b[i - 1] as char) {
+        i -= 1;
+    }
+    if i == end {
+        return None;
+    }
+    let name = &s[i..end];
+    if name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+fn trailing_ident(s: &str) -> Option<String> {
+    let name = trailing_receiver(s)?;
+    const KEYWORDS: [&str; 8] = ["let", "mut", "pub", "ref", "in", "if", "return", "static"];
+    if KEYWORDS.contains(&name.as_str()) {
+        return None;
+    }
+    Some(name)
+}
+
+/// Given a `HashMap`/`HashSet` type token at byte `at`, recover the name it
+/// is bound to: `name: HashMap<…>`, `name: Vec<HashMap<…>>`,
+/// `name: &mut HashMap<…>`, `let name = HashMap::new()`, ….
+fn binding_name(code: &str, at: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let mut i = at;
+    // Absorb a path prefix like `std::collections::`.
+    while i > 0 && (is_ident(b[i - 1] as char) || b[i - 1] == b':') {
+        i -= 1;
+    }
+    let mut pre = code[..i].trim_end();
+    // Unwrap generic wrappers and reference sigils.
+    for _ in 0..8 {
+        if let Some(p) = pre.strip_suffix('<') {
+            let p = p.trim_end();
+            let q = p.trim_end_matches(is_ident);
+            if q.len() == p.len() {
+                return None; // `<` not preceded by a wrapper ident: comparison
+            }
+            pre = q.trim_end();
+        } else if let Some(p) = pre.strip_suffix("mut") {
+            if p.ends_with(|c: char| is_ident(c)) {
+                break;
+            }
+            pre = p.trim_end();
+        } else if let Some(p) = pre.strip_suffix('&') {
+            pre = p.trim_end();
+        } else if let Some(p) = pre.strip_suffix(',') {
+            pre = p.trim_end();
+        } else {
+            break;
+        }
+    }
+    if let Some(p) = pre.strip_suffix(':') {
+        if p.ends_with(':') {
+            return None;
+        }
+        return trailing_ident(p);
+    }
+    if pre.ends_with('=') {
+        let before = &pre[..pre.len() - 1];
+        if before.ends_with(['=', '<', '>', '!', '+', '-', '*', '/']) {
+            return None;
+        }
+        return trailing_ident(before);
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Per-file rules.
+// ---------------------------------------------------------------------------
+
+const ITER_METHODS: [&str; 10] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".retain(",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+];
+
+/// Names in this file bound to `HashMap`/`HashSet` outside test regions.
+fn hash_container_names(lines: &[SrcLine]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for l in lines.iter().filter(|l| !l.test) {
+        for tok in ["HashMap", "HashSet"] {
+            let mut from = 0usize;
+            while let Some(p) = l.code[from..].find(tok) {
+                let at = from + p;
+                from = at + tok.len();
+                if !token_boundary(&l.code, at, tok.len()) {
+                    continue;
+                }
+                if let Some(n) = binding_name(&l.code, at) {
+                    names.insert(n);
+                }
+            }
+        }
+    }
+    names
+}
+
+/// The receiver of a method whose `.` sits at byte `at` of line `idx` —
+/// following a leading-dot chain back to the previous code line.
+fn receiver_at(lines: &[SrcLine], idx: usize, at: usize) -> Option<String> {
+    let head = lines[idx].code[..at].trim_end();
+    if head.is_empty() {
+        let prev = lines[..idx].iter().rev().find(|l| !l.code.trim().is_empty())?;
+        return trailing_receiver(&prev.code);
+    }
+    trailing_receiver(head)
+}
+
+/// `for x in &name {` / `for x in name {` → `name` (method-call iterables
+/// are handled by the method scan).
+fn for_in_target(code: &str) -> Option<String> {
+    let f = code.find("for ")?;
+    if !token_boundary(code, f, 3) {
+        return None;
+    }
+    let in_rel = code[f..].find(" in ")?;
+    let rest = code[f + in_rel + 4..].trim();
+    let expr = rest.strip_suffix('{').unwrap_or(rest).trim_end();
+    let expr = expr.trim_start_matches('&');
+    let expr = expr.strip_prefix("mut ").unwrap_or(expr).trim();
+    if expr.contains('(') {
+        return None;
+    }
+    trailing_receiver(expr)
+}
+
+fn panic_scoped(label: &str) -> bool {
+    label.ends_with("engine/fault.rs")
+        || label.contains("src/cluster/")
+        || label.ends_with("config/mod.rs")
+}
+
+/// Lint one file's text. `label` is the repo-relative path (with `/`), which
+/// scopes the path-sensitive rules; fixture tests pass synthetic labels.
+pub fn lint_source(label: &str, text: &str, kind: FileKind) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    if kind == FileKind::Test {
+        return findings;
+    }
+    let lines = split_source(text);
+    let mut markers = parse_markers(label, &lines, &mut findings);
+    let names = hash_container_names(&lines);
+    let is_rng_home = label.ends_with("util/rng.rs");
+    let is_metrics_home = label.ends_with("metrics/mod.rs");
+
+    for (idx, l) in lines.iter().enumerate() {
+        // Rule 3a applies even to test code: `fork` must never come back.
+        if is_rng_home {
+            let mut from = 0usize;
+            while let Some(p) = l.code[from..].find("fn fork") {
+                let at = from + p;
+                from = at + 7;
+                if token_boundary(&l.code, at + 3, 4) {
+                    emit(
+                        &mut findings,
+                        &mut markers,
+                        label,
+                        idx,
+                        Rule::RngDiscipline,
+                        "sequential `fork` was removed by PR 7; use `split`/`split_next` \
+                         (counter-based, order-free)"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+        if l.test {
+            continue;
+        }
+
+        // Rule 1: unordered iteration.
+        for pat in ITER_METHODS {
+            let mut from = 0usize;
+            while let Some(p) = l.code[from..].find(pat) {
+                let at = from + p;
+                from = at + pat.len();
+                if let Some(recv) = receiver_at(&lines, idx, at) {
+                    if names.contains(&recv) {
+                        emit(
+                            &mut findings,
+                            &mut markers,
+                            label,
+                            idx,
+                            Rule::UnorderedIter,
+                            format!(
+                                "hash-order iteration over `{recv}` — sort the keys, switch \
+                                 to BTreeMap, or justify with an allow marker"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        if let Some(t) = for_in_target(&l.code) {
+            if names.contains(&t) {
+                emit(
+                    &mut findings,
+                    &mut markers,
+                    label,
+                    idx,
+                    Rule::UnorderedIter,
+                    format!(
+                        "hash-order iteration over `{t}` — sort the keys, switch to \
+                         BTreeMap, or justify with an allow marker"
+                    ),
+                );
+            }
+        }
+
+        // Rule 2: wall clock in modeled-clock code.
+        if matches!(kind, FileKind::Src | FileKind::Example) && !is_metrics_home {
+            for pat in ["Instant::now", "SystemTime"] {
+                if l.code.contains(pat) {
+                    emit(
+                        &mut findings,
+                        &mut markers,
+                        label,
+                        idx,
+                        Rule::WallClock,
+                        format!(
+                            "`{pat}` in modeled-clock code — the cluster clock is \
+                             authoritative; wall time is blessed only in metrics profiling \
+                             or behind an allow marker"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // Rule 3b/3c: stream construction and fork calls outside the home.
+        if !is_rng_home {
+            for tok in ["Rng", "StreamKey"] {
+                let mut from = 0usize;
+                while let Some(p) = l.code[from..].find(tok) {
+                    let at = from + p;
+                    from = at + tok.len();
+                    if !token_boundary(&l.code, at, tok.len()) {
+                        continue;
+                    }
+                    let after = l.code[at + tok.len()..].trim_start();
+                    let literal = after.starts_with('{');
+                    let decl = l.code.contains("->") || l.code.contains("impl");
+                    if literal && !decl {
+                        emit(
+                            &mut findings,
+                            &mut markers,
+                            label,
+                            idx,
+                            Rule::RngDiscipline,
+                            format!(
+                                "`{tok}` struct literal — construct streams via \
+                                 StreamKey::root/child and Rng::new/split/split_next"
+                            ),
+                        );
+                    }
+                }
+            }
+            if let Some(p) = l.code.find(".fork(") {
+                if let Some(recv) = receiver_at(&lines, idx, p) {
+                    if recv.to_ascii_lowercase().contains("rng") {
+                        emit(
+                            &mut findings,
+                            &mut markers,
+                            label,
+                            idx,
+                            Rule::RngDiscipline,
+                            format!(
+                                "`{recv}.fork()` — sequential forking was removed by PR 7; \
+                                 derive streams with split/split_next"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+
+        // Rule 5: panic discipline in typed-error paths.
+        if kind == FileKind::Src && panic_scoped(label) {
+            for pat in
+                [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("]
+            {
+                let mut from = 0usize;
+                while let Some(p) = l.code[from..].find(pat) {
+                    let at = from + p;
+                    from = at + pat.len();
+                    emit(
+                        &mut findings,
+                        &mut markers,
+                        label,
+                        idx,
+                        Rule::PanicDiscipline,
+                        format!(
+                            "`{}` in a typed-error path — return FaultError/ConfigError, \
+                             or justify the invariant with an allow marker",
+                            pat.trim_end_matches('(')
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    for m in &markers {
+        if !m.used {
+            findings.push(Finding {
+                file: label.to_string(),
+                line: m.line + 1,
+                rule: Rule::Marker,
+                msg: format!(
+                    "unused allow marker for `{}` — no matching violation on its target \
+                     line; remove the marker or restore the justified code",
+                    m.rule
+                ),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: kv-key doc sync (cross-file).
+// ---------------------------------------------------------------------------
+
+/// Keys of the `known` array in `config_from_kv`, with their line numbers.
+fn known_kv_keys(config_src: &str) -> Option<Vec<(String, usize)>> {
+    let start = config_src.find("let known = [")?;
+    let open = start + "let known = [".len();
+    let end = open + config_src[open..].find(']')?;
+    let slice = &config_src[open..end];
+    let base_line = config_src[..open].matches('\n').count() + 1;
+    let mut out = Vec::new();
+    let mut rest = slice;
+    let mut consumed = 0usize;
+    while let Some(q0) = rest.find('"') {
+        let after = &rest[q0 + 1..];
+        let q1 = after.find('"')?;
+        let key = &after[..q1];
+        let line = base_line + slice[..consumed + q0].matches('\n').count();
+        out.push((key.to_string(), line));
+        let step = q0 + 1 + q1 + 1;
+        consumed += step;
+        rest = &rest[step..];
+    }
+    Some(out)
+}
+
+/// Backticked keys in the first column of the CONFIG.md tables.
+fn doc_kv_keys(docs_md: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (i, line) in docs_md.lines().enumerate() {
+        let t = line.trim();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let mut cells = t.split('|');
+        cells.next(); // leading empty cell
+        let Some(first) = cells.next() else {
+            continue;
+        };
+        let cell = first.trim();
+        let Some(body) = cell.strip_prefix('`') else {
+            continue;
+        };
+        let Some(close) = body.find('`') else {
+            continue;
+        };
+        let key = &body[..close];
+        let key_char = |c: char| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_';
+        if !key.is_empty() && key.chars().all(key_char) {
+            out.push((key.to_string(), i + 1));
+        }
+    }
+    out
+}
+
+/// Cross-check config keys against the docs and the test corpus.
+///
+/// `corpus` is the concatenated raw text of `rust/tests` plus the
+/// `#[cfg(test)]` regions of `rust/src` — a key is considered exercised when
+/// it appears there as `key =` (kv text) or `"key"` (a string literal).
+pub fn kv_doc_sync(
+    config_label: &str,
+    config_src: &str,
+    docs_label: &str,
+    docs_md: &str,
+    corpus: &str,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let Some(known) = known_kv_keys(config_src) else {
+        findings.push(Finding {
+            file: config_label.to_string(),
+            line: 1,
+            rule: Rule::KvDocSync,
+            msg: "could not locate the `known` kv-key array in config_from_kv".to_string(),
+        });
+        return findings;
+    };
+    let docs = doc_kv_keys(docs_md);
+    let doc_set: BTreeSet<&str> = docs.iter().map(|(k, _)| k.as_str()).collect();
+    let known_set: BTreeSet<&str> = known.iter().map(|(k, _)| k.as_str()).collect();
+    for (key, line) in &known {
+        if !doc_set.contains(key.as_str()) {
+            findings.push(Finding {
+                file: config_label.to_string(),
+                line: *line,
+                rule: Rule::KvDocSync,
+                msg: format!("kv key `{key}` is not documented in {docs_label}"),
+            });
+        }
+        let as_kv = format!("{key} =");
+        let as_str = format!("\"{key}\"");
+        if !corpus.contains(&as_kv) && !corpus.contains(&as_str) {
+            findings.push(Finding {
+                file: config_label.to_string(),
+                line: *line,
+                rule: Rule::KvDocSync,
+                msg: format!("kv key `{key}` has no round-trip test reference"),
+            });
+        }
+    }
+    for (key, line) in &docs {
+        if !known_set.contains(key.as_str()) {
+            findings.push(Finding {
+                file: docs_label.to_string(),
+                line: *line,
+                rule: Rule::KvDocSync,
+                msg: format!("documented key `{key}` is not parsed by config_from_kv (stale doc)"),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Tree walk.
+// ---------------------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            if p.file_name().is_some_and(|n| n == "fixtures") {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_label(repo: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(repo).unwrap_or(p);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+/// Scan the whole tree rooted at `repo` (the repository root, one level
+/// above `rust/`): `rust/src`, `rust/tests`, `rust/benches`, `examples/`,
+/// plus the cross-file kv-key sync against `docs/CONFIG.md`.
+pub fn lint_tree(repo: &Path) -> io::Result<LintReport> {
+    let roots = [
+        ("rust/src", FileKind::Src),
+        ("rust/tests", FileKind::Test),
+        ("rust/benches", FileKind::Bench),
+        ("examples", FileKind::Example),
+    ];
+    let mut findings = Vec::new();
+    let mut files = 0usize;
+    let mut corpus = String::new();
+    let mut config_src: Option<String> = None;
+    for (rel, kind) in roots {
+        let dir = repo.join(rel);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut paths = Vec::new();
+        collect_rs(&dir, &mut paths)?;
+        for p in paths {
+            let label = rel_label(repo, &p);
+            let text = fs::read_to_string(&p)?;
+            files += 1;
+            match kind {
+                FileKind::Test => {
+                    corpus.push_str(&text);
+                    corpus.push('\n');
+                }
+                FileKind::Src => {
+                    // Test-region text feeds the kv-key reference corpus.
+                    let lines = split_source(&text);
+                    for (raw, l) in text.lines().zip(&lines) {
+                        if l.test {
+                            corpus.push_str(raw);
+                            corpus.push('\n');
+                        }
+                    }
+                }
+                _ => {}
+            }
+            if label.ends_with("src/config/mod.rs") {
+                config_src = Some(text.clone());
+            }
+            findings.extend(lint_source(&label, &text, kind));
+        }
+    }
+    let docs_path = repo.join("docs/CONFIG.md");
+    match (config_src, fs::read_to_string(&docs_path)) {
+        (Some(cfg), Ok(docs)) => {
+            findings.extend(kv_doc_sync(
+                "rust/src/config/mod.rs",
+                &cfg,
+                "docs/CONFIG.md",
+                &docs,
+                &corpus,
+            ));
+        }
+        (Some(_), Err(_)) => findings.push(Finding {
+            file: "docs/CONFIG.md".to_string(),
+            line: 1,
+            rule: Rule::KvDocSync,
+            msg: "docs/CONFIG.md is missing — kv keys cannot be cross-checked".to_string(),
+        }),
+        (None, _) => findings.push(Finding {
+            file: "rust/src/config/mod.rs".to_string(),
+            line: 1,
+            rule: Rule::KvDocSync,
+            msg: "rust/src/config/mod.rs not found under the scanned roots".to_string(),
+        }),
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.msg.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.msg.as_str()))
+    });
+    Ok(LintReport { findings, files })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitter_strips_strings_and_comments() {
+        let src = "let x = \"HashMap.iter()\"; // HashMap comment\nlet y = 1;\n";
+        let lines = split_source(src);
+        assert!(!lines[0].code.contains("HashMap"));
+        assert!(lines[0].comment.contains("HashMap comment"));
+        assert_eq!(lines[1].code.trim(), "let y = 1;");
+    }
+
+    #[test]
+    fn splitter_handles_raw_strings_char_literals_and_continuations() {
+        let src = "let r = r#\"HashMap \" inner\"#;\nlet c = 'x';\nlet l: &'static str = \"a\\\n b\";\nlet z = 0;\n";
+        let lines = split_source(src);
+        assert!(!lines[0].code.contains("HashMap"));
+        assert!(lines[1].code.contains("let c ="));
+        // The backslash-newline string continuation must keep line counts:
+        // the literal spans lines 3–4, so `let z` lands on line 5.
+        assert_eq!(lines.len(), 5);
+        assert!(lines[4].code.contains("let z"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_tracked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n";
+        let lines = split_source(src);
+        let flags: Vec<bool> = lines.iter().map(|l| l.test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn binding_names_cover_annotation_assignment_and_wrappers() {
+        let cases = [
+            (
+                "let mut weight_to: std::collections::HashMap<u32, f32> = Default::default();",
+                "weight_to",
+            ),
+            ("    ef: HashMap<(u8, usize, usize), Vec<f32>>,", "ef"),
+            ("present: Vec<HashMap<u32, ()>>,", "present"),
+            ("fn route(map: &mut HashMap<u32, f32>) {", "map"),
+            ("let pool = HashMap::new();", "pool"),
+        ];
+        for (code, want) in cases {
+            let lines = split_source(code);
+            let names = hash_container_names(&lines);
+            assert!(names.contains(want), "{code}: got {names:?}, want {want}");
+        }
+    }
+
+    #[test]
+    fn unordered_iter_fires_and_markers_suppress() {
+        let bad = "fn f() {\n    let m: std::collections::HashMap<u32, f32> = Default::default();\n    for (k, v) in m.iter() {\n        let _ = (k, v);\n    }\n}\n";
+        let f = lint_source("rust/src/x.rs", bad, FileKind::Src);
+        assert!(f.iter().any(|x| x.rule == Rule::UnorderedIter), "{f:?}");
+        let ok = bad.replace(
+            "m.iter() {",
+            "m.iter() { // detlint: allow(unordered-iter): test fixture, order-free\n",
+        );
+        let f = lint_source("rust/src/x.rs", &ok, FileKind::Src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn continuation_chain_resolves_receiver_from_previous_line() {
+        let src = "struct S { slots: std::collections::HashMap<u32, u32> }\nimpl S {\n    fn b(&self) -> usize {\n        self.slots\n            .keys()\n            .count()\n    }\n}\n";
+        let f = lint_source("rust/src/x.rs", src, FileKind::Src);
+        assert!(f.iter().any(|x| x.rule == Rule::UnorderedIter && x.line == 5), "{f:?}");
+    }
+
+    #[test]
+    fn unused_and_malformed_markers_are_findings() {
+        let src = "// detlint: allow(unordered-iter): nothing here violates\nlet x = 1;\n";
+        let f = lint_source("rust/src/x.rs", src, FileKind::Src);
+        assert!(f.iter().any(|x| x.rule == Rule::Marker && x.msg.contains("unused")), "{f:?}");
+        let src = "// detlint: allow(no-such-rule): hm\nlet x = 1;\n";
+        let f = lint_source("rust/src/x.rs", src, FileKind::Src);
+        assert!(f.iter().any(|x| x.rule == Rule::Marker && x.msg.contains("unknown")), "{f:?}");
+        let src = "// detlint: allow(wall-clock):\nlet t = std::time::Instant::now();\n";
+        let f = lint_source("rust/src/x.rs", src, FileKind::Src);
+        assert!(f.iter().any(|x| x.rule == Rule::Marker && x.msg.contains("empty")), "{f:?}");
+    }
+
+    #[test]
+    fn wall_clock_scoping() {
+        let src = "fn f() { let t = std::time::Instant::now(); let _ = t; }\n";
+        assert!(!lint_source("rust/src/a.rs", src, FileKind::Src).is_empty());
+        // Benches measure wall time by design.
+        assert!(lint_source("rust/benches/b.rs", src, FileKind::Bench).is_empty());
+        // The metrics stage profiler is the blessed wrapper.
+        assert!(lint_source("rust/src/metrics/mod.rs", src, FileKind::Src).is_empty());
+    }
+
+    #[test]
+    fn rng_discipline_catches_fork_and_literals() {
+        let f =
+            lint_source("rust/src/util/rng.rs", "    pub fn fork(&mut self) {}\n", FileKind::Src);
+        assert!(f.iter().any(|x| x.rule == Rule::RngDiscipline), "{f:?}");
+        let f =
+            lint_source("rust/src/a.rs", "let k = StreamKey { k0: 1, k1: 2 };\n", FileKind::Src);
+        assert!(f.iter().any(|x| x.rule == Rule::RngDiscipline), "{f:?}");
+        let f = lint_source("rust/src/a.rs", "let r2 = rng.fork();\n", FileKind::Src);
+        assert!(f.iter().any(|x| x.rule == Rule::RngDiscipline), "{f:?}");
+        // A non-RNG fork (stage backends) is fine.
+        let f = lint_source("rust/src/a.rs", "let b2 = be.fork();\n", FileKind::Src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn panic_discipline_is_path_scoped() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert!(!lint_source("rust/src/cluster/mod.rs", src, FileKind::Src).is_empty());
+        assert!(!lint_source("rust/src/engine/fault.rs", src, FileKind::Src).is_empty());
+        assert!(lint_source("rust/src/tensor/mod.rs", src, FileKind::Src).is_empty());
+    }
+
+    #[test]
+    fn kv_sync_flags_drift_in_both_directions() {
+        let cfg = "    let known = [\n        \"alpha\", \"beta\",\n    ];\n";
+        let docs = "| Key | Type |\n|-----|------|\n| `alpha` | int |\n| `gamma` | int |\n";
+        let corpus = "alpha = 1\n\"beta\"\n";
+        let f = kv_doc_sync("cfg.rs", cfg, "docs.md", docs, corpus);
+        assert!(f.iter().any(|x| x.msg.contains("`beta`") && x.msg.contains("not documented")));
+        assert!(f.iter().any(|x| x.msg.contains("`gamma`") && x.msg.contains("stale")));
+        // beta is exercised (string literal), alpha as kv text: no
+        // missing-test findings for either.
+        assert!(!f.iter().any(|x| x.msg.contains("no round-trip")), "{f:?}");
+    }
+}

@@ -53,6 +53,7 @@ impl Optimizer {
     /// Bytes of moment state a checkpoint must persist (0 for SGD; two
     /// f32 moments per parameter once Adam/AdamW touched a slot).
     pub fn state_bytes(&self) -> usize {
+        // detlint: allow(unordered-iter): integer sum over slots, order-insensitive
         self.slots.values().map(|s| (s.m.len() + s.v.len()) * std::mem::size_of::<f32>()).sum()
     }
 
@@ -61,6 +62,7 @@ impl Optimizer {
     /// digest is independent of `HashMap` iteration order.
     pub fn fold_state(&self, crc: &mut crate::util::Crc32) {
         crc.update(&self.t.to_le_bytes());
+        // detlint: allow(unordered-iter): keys are collected and sorted before folding
         let mut keys: Vec<&String> = self.slots.keys().collect();
         keys.sort_unstable();
         for k in keys {

@@ -5,7 +5,12 @@
 //!
 //! This is the standard two-phase method: local node moves maximizing
 //! modularity gain, then graph aggregation; repeated for `levels` rounds.
-//! Deterministic: nodes are scanned in index order.
+//! Deterministic: nodes are scanned in index order, candidate communities
+//! in ascending community-id order (`BTreeMap`), and equal-gain ties break
+//! to the lowest community id — so labels are bit-identical across runs
+//! and processes (see `docs/DETERMINISM.md`). A `HashMap` here would leak
+//! its per-process random hash order into the tie-break and into the f32
+//! accumulation order of the aggregated graph.
 
 use crate::graph::Graph;
 
@@ -59,7 +64,9 @@ fn one_level(adj: &[Vec<(u32, f32)>]) -> Vec<u32> {
     while improved && sweeps < 10 {
         improved = false;
         sweeps += 1;
-        let mut weight_to: std::collections::HashMap<u32, f32> = std::collections::HashMap::new();
+        // Sorted-key map: candidates are visited in ascending community id,
+        // so the `tie` branch below deterministically keeps the lowest id.
+        let mut weight_to: std::collections::BTreeMap<u32, f32> = std::collections::BTreeMap::new();
         for v in 0..n {
             weight_to.clear();
             for &(u, w) in &adj[v] {
@@ -102,7 +109,9 @@ fn compact(assign: &[u32]) -> (Vec<u32>, usize) {
 
 /// Build the community-level weighted graph from a *compacted* assignment.
 fn aggregate(adj: &[Vec<(u32, f32)>], compacted: &[u32], k: usize) -> Vec<Vec<(u32, f32)>> {
-    let mut maps: Vec<std::collections::HashMap<u32, f32>> = vec![Default::default(); k];
+    // BTreeMap so each super node's adjacency comes out sorted by neighbor
+    // id: the next level's f32 weight accumulation order is then fixed.
+    let mut maps: Vec<std::collections::BTreeMap<u32, f32>> = vec![Default::default(); k];
     for (v, nbrs) in adj.iter().enumerate() {
         let cv = compacted[v];
         for &(u, w) in nbrs {
@@ -181,6 +190,56 @@ mod tests {
     fn deterministic() {
         let g = gen::citation_like("pubmed", 3);
         assert_eq!(louvain_communities(&g, 2), louvain_communities(&g, 2));
+    }
+
+    #[test]
+    fn labels_bit_identical_across_repeated_runs() {
+        // Regression for the hash-order tie-break (PR 10): with a HashMap
+        // candidate scan, equal-gain ties resolved in per-process random
+        // hash order, so labels could differ run to run. The BTreeMap scan
+        // pins them — repeated fresh runs (fresh maps, fresh allocation
+        // pattern) must agree bit-for-bit, at every level depth.
+        for g in [gen::citation_like("cora", 7), gen::reddit_like()] {
+            for levels in 1..=3usize {
+                let first = louvain_communities(&g, levels);
+                for _ in 0..3 {
+                    assert_eq!(
+                        louvain_communities(&g, levels),
+                        first,
+                        "labels moved across runs ({} levels={levels})",
+                        g.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn equal_gain_ties_break_to_lowest_community_id() {
+        // Two symmetric triangles bridged by node 6, which touches node 0
+        // (low-id triangle) and node 3 (high-id triangle) with equal
+        // weight. Its modularity gains toward both communities are equal
+        // by symmetry, so the tie-break decides: lowest community id wins,
+        // i.e. node 6 must land with the {0,1,2} triangle.
+        let mut b = crate::graph::GraphBuilder::new("bridge", 7);
+        for &(s, d) in &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5), (6, 0), (6, 3)] {
+            b.add_edge(s, d);
+        }
+        let g = b.build(
+            crate::tensor::Tensor::zeros(7, 1),
+            vec![0; 7],
+            1,
+            (vec![true; 7], vec![false; 7], vec![false; 7]),
+        );
+        let comm = louvain_communities(&g, 1);
+        assert_eq!(comm[0], comm[1]);
+        assert_eq!(comm[0], comm[2]);
+        assert_eq!(comm[3], comm[4]);
+        assert_eq!(comm[3], comm[5]);
+        assert_eq!(
+            comm[6], comm[0],
+            "equal-gain bridge node must join the lowest community id, got {comm:?}"
+        );
     }
 
     #[test]

@@ -126,6 +126,7 @@ impl PjrtBackend {
             let key = (entry.d_in, entry.d_out, entry.activation == Activation::Relu);
             table.entry(key).or_default().push(Compiled { exe, rows: entry.rows });
         }
+        // detlint: allow(unordered-iter): each bucket is sorted in place; visit order is moot
         for v in table.values_mut() {
             v.sort_by_key(|c| c.rows);
         }
@@ -134,6 +135,7 @@ impl PjrtBackend {
 
     /// Number of compiled (shape-specialized) executables.
     pub fn executables(&self) -> usize {
+        // detlint: allow(unordered-iter): integer count, order-insensitive
         self.table.values().map(Vec::len).sum()
     }
 

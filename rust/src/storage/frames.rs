@@ -50,7 +50,7 @@ impl TensorCache {
     /// Bytes currently parked in the pool.
     pub fn pooled_bytes(&self) -> usize {
         self.pools
-            .iter()
+            .iter() // detlint: allow(unordered-iter): integer sum over buckets, order-insensitive
             .map(|(len, bufs)| len * bufs.len() * std::mem::size_of::<f32>())
             .sum()
     }
@@ -92,13 +92,19 @@ impl Frame {
     }
 
     /// Release every tensor of `layer` back into the cache.
+    ///
+    /// Keys are sorted before the buffers go back, so the pool's LIFO
+    /// stacking (and therefore which buffer a later `take` reuses) is
+    /// identical run to run — allocation patterns stay reproducible for
+    /// the memory ledger.
     pub fn release(&mut self, layer: usize, cache: &mut TensorCache) {
-        let keys: Vec<_> = self
+        let mut keys: Vec<_> = self
             .slots
-            .keys()
+            .keys() // detlint: allow(unordered-iter): keys are collected and sorted below
             .filter(|(_, l)| *l == layer)
             .cloned()
             .collect();
+        keys.sort();
         for k in keys {
             if let Some(t) = self.slots.remove(&k) {
                 cache.put(t);
@@ -106,17 +112,26 @@ impl Frame {
         }
     }
 
-    /// Release everything (end of a training step).
+    /// Release everything (end of a training step), in sorted slot order
+    /// for the same pool-determinism reason as [`Frame::release`].
     pub fn clear(&mut self, cache: &mut TensorCache) {
-        for (_, t) in self.slots.drain() {
-            cache.put(t);
+        let mut keys: Vec<_> = self
+            .slots
+            .keys() // detlint: allow(unordered-iter): keys are collected and sorted below
+            .cloned()
+            .collect();
+        keys.sort();
+        for k in keys {
+            if let Some(t) = self.slots.remove(&k) {
+                cache.put(t);
+            }
         }
     }
 
     /// Bytes currently held by this frame's tensors.
     pub fn live_bytes(&self) -> usize {
         self.slots
-            .values()
+            .values() // detlint: allow(unordered-iter): integer sum, order-insensitive
             .map(|t| t.numel() * std::mem::size_of::<f32>())
             .sum()
     }

@@ -182,12 +182,12 @@ impl DistGraph {
         let mut parts = Vec::with_capacity(p);
         for q in 0..p {
             let mut masters: Vec<u32> = present[q]
-                .keys()
+                .keys() // detlint: allow(unordered-iter): collected then sort_unstable'd below
                 .copied()
                 .filter(|&v| plan.master_of[v as usize] as usize == q)
                 .collect();
             let mut mirrors: Vec<u32> = present[q]
-                .keys()
+                .keys() // detlint: allow(unordered-iter): collected then sort_unstable'd below
                 .copied()
                 .filter(|&v| plan.master_of[v as usize] as usize != q)
                 .collect();

@@ -94,6 +94,16 @@ pub struct Executor<'a> {
     /// Per-route error-feedback residuals for lossy wire codecs, keyed
     /// by (stream id, layer, partition); reset when the route length
     /// changes (plan switch).
+    ///
+    /// Determinism audit (PR 10): this map is *keyed-slot access only* —
+    /// every read/write goes through [`route_ef`]'s `entry()`, it is never
+    /// iterated and never serialized, so its hash order cannot reach
+    /// numerics. The error-feedback state that *does* ride in CRC-sealed
+    /// `ParamSnapshot`s is the model-shaped residual in
+    /// [`crate::nn::params::ParameterManager`], which is visited in fixed
+    /// parameter-traversal order (and the optimizer folds its slots
+    /// sorted-key) — see `docs/DETERMINISM.md` and the
+    /// `snapshot_crc_is_byte_stable_across_managers` test.
     ef: HashMap<(u8, usize, usize), Vec<f32>>,
 }
 
@@ -420,8 +430,11 @@ impl<'a> Executor<'a> {
         }
     }
 
-    // Work around borrow rules for profiling whole stages.
+    // Work around borrow rules for profiling whole stages. This is the
+    // executor's blessed profile block: wall time feeds StageProfile
+    // reporting only, never the modeled clock or any numeric path.
     fn profile_scope_owned<R>(&mut self, name: &str, f: impl FnOnce(&mut Self) -> R) -> R {
+        // detlint: allow(wall-clock): blessed profile block, StageProfile reporting only
         let t0 = std::time::Instant::now();
         let r = f(self);
         self.profile.add_secs(name, t0.elapsed().as_secs_f64());
@@ -793,6 +806,7 @@ impl<'a> Executor<'a> {
         grads: Vec<ModelParams>,
         sim: &mut ClusterSim,
     ) -> ModelParams {
+        // detlint: allow(wall-clock): StageProfile wall-time row; the modeled clock is sim's
         let t_prof = std::time::Instant::now();
         let p = grads.len();
         let bytes = grads[0].bytes() as u64;

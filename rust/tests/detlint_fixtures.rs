@@ -1,0 +1,154 @@
+//! Fixture suite for `detlint` (`rust/src/lint`): every rule must fire on
+//! its bad fixture, the fully-markered fixture must come out clean, and
+//! removing any single allow marker must make the lint fail again. The
+//! fixtures live under `rust/tests/fixtures/detlint/` — a `fixtures/`
+//! directory, so the tree walker never scans them as real sources.
+//!
+//! The determinism contract the rules enforce is `docs/DETERMINISM.md`.
+
+use graphtheta::lint::{kv_doc_sync, lint_source, lint_tree, FileKind, Rule};
+use std::path::Path;
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/detlint").join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+#[test]
+fn unordered_iter_fires_on_bad_fixture() {
+    let text = fixture("bad_unordered_iter.rs");
+    let f = lint_source("rust/src/fixture.rs", &text, FileKind::Src);
+    assert!(!f.is_empty(), "fixture must trip the lint");
+    assert!(f.iter().all(|x| x.rule == Rule::UnorderedIter), "{f:?}");
+    // Both the HashMap for-loop and the HashSet method chain are caught.
+    assert!(f.len() >= 2, "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("`m`")), "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("`seen`")), "{f:?}");
+    // Findings render as `file:line · rule · message`.
+    let shown = f[0].to_string();
+    assert!(shown.contains("rust/src/fixture.rs:") && shown.contains(" · unordered-iter · "));
+}
+
+#[test]
+fn wall_clock_fires_on_bad_fixture() {
+    let text = fixture("bad_wall_clock.rs");
+    let f = lint_source("rust/src/fixture.rs", &text, FileKind::Src);
+    assert!(f.len() >= 2, "Instant::now and SystemTime both fire: {f:?}");
+    assert!(f.iter().all(|x| x.rule == Rule::WallClock), "{f:?}");
+    // Benches are wall-clock territory by design: same text, no findings.
+    assert!(lint_source("rust/benches/fixture.rs", &text, FileKind::Bench).is_empty());
+    // Examples run on the modeled clock: the rule applies.
+    assert!(!lint_source("examples/fixture.rs", &text, FileKind::Example).is_empty());
+}
+
+#[test]
+fn rng_discipline_fires_on_bad_fixture() {
+    let text = fixture("bad_rng.rs");
+    let f = lint_source("rust/src/fixture.rs", &text, FileKind::Src);
+    assert!(f.iter().all(|x| x.rule == Rule::RngDiscipline), "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("struct literal")), "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("fork")), "{f:?}");
+}
+
+#[test]
+fn panic_discipline_fires_only_in_typed_error_paths() {
+    let text = fixture("bad_panic.rs");
+    // In a typed-error path (cluster/*): every panic pattern fires.
+    let f = lint_source("rust/src/cluster/fixture.rs", &text, FileKind::Src);
+    assert!(f.len() >= 3, "unwrap, panic! and expect all fire: {f:?}");
+    assert!(f.iter().all(|x| x.rule == Rule::PanicDiscipline), "{f:?}");
+    // The same text outside the scoped paths is not a rule-5 matter.
+    let f = lint_source("rust/src/runtime/fixture.rs", &text, FileKind::Src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn markered_fixture_is_clean_and_every_marker_is_load_bearing() {
+    let text = fixture("ok_markers.rs");
+    // cluster/ label so the panic-discipline marker is exercised too.
+    let label = "rust/src/cluster/fixture.rs";
+    let f = lint_source(label, &text, FileKind::Src);
+    assert!(f.is_empty(), "all violations are justified: {f:?}");
+    // Strip each marker line in turn: the lint must fail again each time —
+    // no marker is decorative, and none shadows another.
+    let markers: Vec<usize> = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| l.trim_start().starts_with("// detlint: allow("))
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(markers.len(), 4, "one marker per suppressible rule");
+    for &skip in &markers {
+        let stripped: String = text
+            .lines()
+            .enumerate()
+            .filter(|(i, _)| *i != skip)
+            .map(|(_, l)| format!("{l}\n"))
+            .collect();
+        let f = lint_source(label, &stripped, FileKind::Src);
+        assert_eq!(f.len(), 1, "dropping marker line {} exposes its violation: {f:?}", skip + 1);
+    }
+}
+
+#[test]
+fn malformed_and_unused_markers_are_findings() {
+    // A marker pointing at clean code is itself a violation.
+    let unused = "// detlint: allow(wall-clock): nothing here needs this\nlet x = 1;\n";
+    let f = lint_source("rust/src/fixture.rs", unused, FileKind::Src);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, Rule::Marker);
+    assert!(f[0].msg.contains("unused"), "{f:?}");
+    // Grammar violations: missing reason, unknown rule, unsuppressible rule.
+    for bad in [
+        "// detlint: allow(wall-clock)\nlet t = std::time::Instant::now();\n",
+        "// detlint: allow(wall-clock):\nlet t = std::time::Instant::now();\n",
+        "// detlint: allow(speed): because\nlet x = 1;\n",
+        "// detlint: allow(kv-doc-sync): cross-file rules are not suppressible\nlet x = 1;\n",
+        "// detlint: suppress wall-clock\nlet x = 1;\n",
+    ] {
+        let f = lint_source("rust/src/fixture.rs", bad, FileKind::Src);
+        assert!(f.iter().any(|x| x.rule == Rule::Marker), "{bad:?} → {f:?}");
+    }
+}
+
+#[test]
+fn kv_doc_sync_catches_drift_in_both_directions() {
+    let config = fixture("kv_config.rs");
+    let docs = fixture("kv_docs.md");
+    // `alpha` is exercised as kv text, `beta` as a string literal; `gamma`
+    // is referenced nowhere.
+    let corpus = "alpha = 1\nassert!(err.contains(\"beta\"));\n";
+    let f = kv_doc_sync("fix/kv_config.rs", &config, "fix/kv_docs.md", &docs, corpus);
+    assert!(f.iter().all(|x| x.rule == Rule::KvDocSync), "{f:?}");
+    let msgs: Vec<&str> = f.iter().map(|x| x.msg.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("`beta`") && m.contains("not documented")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("`gamma`") && m.contains("not documented")), "{msgs:?}");
+    assert!(
+        msgs.iter().any(|m| m.contains("`gamma`") && m.contains("no round-trip test")),
+        "{msgs:?}"
+    );
+    assert!(msgs.iter().any(|m| m.contains("`delta`") && m.contains("stale")), "{msgs:?}");
+    assert_eq!(f.len(), 4, "alpha is fully synced, nothing else fires: {f:?}");
+    // Drift findings land on the right files.
+    assert!(f.iter().any(|x| x.file == "fix/kv_docs.md"), "{f:?}");
+}
+
+/// The real tree must be clean — this is the same scan `cargo run --bin
+/// detlint` performs, so CI enforces the contract even where the dedicated
+/// step is not wired.
+#[test]
+fn repository_tree_is_detlint_clean() {
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf();
+    let report = lint_tree(&repo).expect("tree scan");
+    assert!(report.files > 50, "walker found the sources ({} files)", report.files);
+    assert!(
+        report.findings.is_empty(),
+        "determinism contract violations:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

@@ -1,0 +1,15 @@
+// detlint fixture: panics in a typed-error path. The fixture test lints
+// this text under a `rust/src/cluster/...` label, where FaultError/
+// ConfigError returns are required. Never compiled.
+
+pub fn survivor(alive: &[bool]) -> usize {
+    let holder = alive.iter().position(|&a| a).unwrap();
+    if holder > alive.len() {
+        panic!("impossible");
+    }
+    holder
+}
+
+pub fn budget(v: Option<u64>) -> u64 {
+    v.expect("budget must be installed")
+}

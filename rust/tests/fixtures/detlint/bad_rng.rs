@@ -1,0 +1,9 @@
+// detlint fixture: stream construction outside the splittable API, plus a
+// reintroduced sequential fork. Never compiled.
+
+pub fn hand_rolled_stream() -> u64 {
+    let rng = Rng { hi: 0xdead, lo: 0xbeef };
+    let child_rng = rng;
+    let forked = child_rng.fork();
+    forked.next_u64()
+}

@@ -1,0 +1,15 @@
+// detlint fixture: hash-order iteration in non-test code. Never compiled;
+// `rust/tests/detlint_fixtures.rs` feeds this text to `lint_source`.
+use std::collections::{HashMap, HashSet};
+
+fn sum_values(m: &HashMap<String, f32>) -> f32 {
+    let mut total = 0.0;
+    for (_k, v) in m.iter() {
+        total += v; // f32 sum in hash order: run-to-run nondeterministic
+    }
+    total
+}
+
+fn first_seen(seen: &HashSet<u32>) -> Option<u32> {
+    seen.iter().next().copied()
+}

@@ -1,0 +1,11 @@
+// detlint fixture: wall clock in modeled-clock code. Never compiled.
+
+pub fn elapsed_ms() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+pub fn epoch_secs() -> u64 {
+    use std::time::SystemTime;
+    SystemTime::now().duration_since(SystemTime::UNIX_EPOCH).unwrap().as_secs()
+}

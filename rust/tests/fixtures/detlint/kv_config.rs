@@ -1,0 +1,10 @@
+// detlint fixture: a config_from_kv-shaped `known` array with keys that
+// drift from the docs/corpus fixtures. Never compiled.
+
+pub fn config_from_kv() {
+    let known = [
+        "alpha", "beta",
+        "gamma",
+    ];
+    let _ = known;
+}

@@ -1,0 +1,16 @@
+// detlint fixture: one violation per suppressible rule, each justified by
+// an allow marker — `lint_source` must return no findings. The fixture test
+// also strips each marker line in turn and asserts the lint fails again,
+// proving every marker is load-bearing. Never compiled.
+use std::collections::HashMap;
+
+pub fn justified(m: &HashMap<String, u64>, guarded: Option<u64>) -> u64 {
+    // detlint: allow(unordered-iter): integer sum over buckets, order-insensitive
+    let total: u64 = m.values().sum();
+    // detlint: allow(wall-clock): fixture exercising the marker path
+    let _t0 = std::time::Instant::now();
+    // detlint: allow(rng-discipline): fixture constructs a stream by hand on purpose
+    let _rng = Rng { hi: 1, lo: 2 };
+    // detlint: allow(panic-discipline): fixture invariant, checked by the caller
+    total + guarded.expect("fixture")
+}

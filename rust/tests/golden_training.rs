@@ -16,6 +16,9 @@
 //! xoshiro RNG was replaced by the splittable counter-based generator
 //! re-blessed the concrete values without editing this file — see
 //! ROADMAP.md, Notes for builders.
+//!
+//! The contract this suite pins is codified in `docs/DETERMINISM.md`;
+//! `detlint` (`cargo run --bin detlint`) enforces its source-level rules.
 
 use graphtheta::config::{ModelConfig, SchedulePolicy, StrategyKind, TrainConfig};
 use graphtheta::engine::trainer::{TrainReport, Trainer};

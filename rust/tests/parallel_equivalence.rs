@@ -4,7 +4,8 @@
 //! not the modeled distributed clock, not the traffic totals. This is the
 //! invariant that lets `ClusterSim::exec_batch` default to parallel
 //! everywhere (tests, experiments, benches) without perturbing any
-//! reproduced number.
+//! reproduced number. The broader contract is `docs/DETERMINISM.md`;
+//! nightly CI re-runs this suite under ThreadSanitizer.
 
 use graphtheta::cluster::ClusterSim;
 use graphtheta::config::{CostModelConfig, ModelConfig, SamplingConfig};

@@ -21,6 +21,9 @@
 //! OS-thread counts (the serial gate in `run_layer` is purely a size
 //! heuristic now). Goldens downstream of sampling were re-blessed once
 //! when the splittable RNG landed — see ROADMAP.md, Notes for builders.
+//!
+//! The contract behind the one-draw rule is `docs/DETERMINISM.md`;
+//! nightly CI re-runs this suite under ThreadSanitizer.
 
 use graphtheta::config::SamplingConfig;
 use graphtheta::engine::strategy::restrict_to_clusters;
